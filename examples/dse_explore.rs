@@ -1,0 +1,100 @@
+//! Design-space exploration through the AOT-compiled JAX/Pallas analytic
+//! model (PJRT), including the t_BYTE "extra metal layer" ablation (A2) and
+//! the PVT Monte Carlo sensitivity analysis (A3) — then cross-validates the
+//! winning design against the discrete-event simulator.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example dse_explore
+//! ```
+
+use ddrnand::config::SsdConfig;
+use ddrnand::coordinator::campaign::Campaign;
+use ddrnand::dse::{evaluate, pareto_front, rank, Space};
+use ddrnand::host::trace::RequestKind;
+use ddrnand::iface::timing::IfaceParams;
+use ddrnand::runtime::{iface_params_row, Runtime, MC_S};
+use ddrnand::util::prng::Prng;
+
+fn main() {
+    let dir = Runtime::default_dir();
+    let runtime = if Runtime::artifacts_present(&dir) {
+        println!("loading AOT artifacts from {} ...", dir.display());
+        let rt = Runtime::load(&dir).expect("artifact load");
+        println!("PJRT compile: {:.1} ms (one-off; reused for every batch)\n", rt.compile_ms);
+        Some(rt)
+    } else {
+        println!("artifacts missing — run `make artifacts` for the PJRT path; using native model\n");
+        None
+    };
+
+    // A2: sweep t_BYTE to model the "extra metal layer" discussion (§5.1).
+    let space = Space {
+        t_byte_sweep: vec![12.0, 10.0, 8.0, 6.0, 4.0],
+        ..Space::default()
+    };
+    let (cands, backend) = evaluate(&space, runtime.as_ref()).expect("evaluate");
+    println!("evaluated {} candidates via {backend:?}", cands.len());
+
+    let ranked = rank(cands);
+    println!("\ntop designs by bandwidth-per-area merit:");
+    for c in ranked.iter().take(8) {
+        println!(
+            "  {:<9} {} {}ch x {:>2}way t_BYTE={:>2}ns  read={:>7.2} write={:>6.2} MB/s  merit={:.2}",
+            c.iface.name(),
+            c.cell.name(),
+            c.channels,
+            c.ways,
+            c.t_byte_ns.unwrap_or(12.0),
+            c.read_bw,
+            c.write_bw,
+            c.merit()
+        );
+    }
+    let front = pareto_front(&ranked);
+    println!("\nPareto front: {} of {} designs", front.len(), ranked.len());
+
+    // A3: PVT Monte Carlo through the mc artifact.
+    if let Some(rt) = &runtime {
+        let mut rng = Prng::new(0xA3);
+        let z: Vec<f32> = (0..MC_S * 4).map(|_| rng.next_gaussian() as f32).collect();
+        let corner = iface_params_row(&IfaceParams::default());
+        println!("\nA3 — PVT violation probability vs clock margin (10%/5% chip/board sigma):");
+        println!("  margin   CONV    SYNC_ONLY  PROPOSED");
+        for margin in [1.0, 1.02, 1.05, 1.10, 1.20] {
+            let p = rt
+                .mc_batch(&[corner], &z, [0.10, 0.05, margin])
+                .expect("mc")[0];
+            println!("  {margin:<6}  {:.4}  {:.4}     {:.4}", p[0], p[1], p[2]);
+        }
+        println!("  (CONV's three varying paths need real margin; DVS designs barely care)");
+    }
+
+    // Cross-validate the best stock design (t_BYTE = 12) against the DES.
+    let best = ranked
+        .iter()
+        .find(|c| c.t_byte_ns == Some(12.0))
+        .expect("stock design in ranking");
+    let cfg = SsdConfig {
+        iface: best.iface,
+        cell: best.cell,
+        channels: best.channels,
+        ways: best.ways,
+        blocks_per_chip: 256,
+        ..SsdConfig::default()
+    };
+    println!(
+        "\ncross-validating winner ({} {} {}ch x {}way) against the DES:",
+        best.iface.name(),
+        best.cell.name(),
+        best.channels,
+        best.ways
+    );
+    for (mode, predicted) in [(RequestKind::Read, best.read_bw), (RequestKind::Write, best.write_bw)] {
+        let des = Campaign::new(cfg.clone(), mode, 300).run().bandwidth_mbps;
+        println!(
+            "  {:<5}: analytic {predicted:.2} MB/s, DES {des:.2} MB/s ({:+.1}%)",
+            mode.name(),
+            (des - predicted) / predicted * 100.0
+        );
+    }
+}

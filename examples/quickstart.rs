@@ -1,0 +1,58 @@
+//! Quickstart: simulate one SSD design and print its report.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use ddrnand::config::SsdConfig;
+use ddrnand::coordinator::campaign::Campaign;
+use ddrnand::host::trace::RequestKind;
+use ddrnand::iface::timing::InterfaceKind;
+use ddrnand::nand::datasheet::CellType;
+use ddrnand::report;
+
+fn main() {
+    // A 1-channel, 8-way SLC SSD with the paper's proposed DDR interface.
+    let cfg = SsdConfig {
+        iface: InterfaceKind::Proposed,
+        cell: CellType::Slc,
+        channels: 1,
+        ways: 8,
+        ..SsdConfig::default()
+    };
+
+    println!("quickstart: {:?} {} {}ch x {}way", cfg.iface, cfg.cell, cfg.channels, cfg.ways);
+    println!(
+        "interface operating point: {} MHz ({} data edges/clock)\n",
+        cfg.params.operating_freq_mhz(cfg.iface),
+        cfg.iface.beats_per_cycle(),
+    );
+
+    // The paper's workload: sequential 64 KiB requests.
+    for mode in [RequestKind::Write, RequestKind::Read] {
+        let rep = Campaign::new(cfg.clone(), mode, 200).run();
+        println!("{}", report::summarize(&rep));
+    }
+
+    // Compare against the conventional interface in one line each.
+    println!("\nvs CONV on the same hardware:");
+    for mode in [RequestKind::Write, RequestKind::Read] {
+        let conv = Campaign::new(
+            SsdConfig {
+                iface: InterfaceKind::Conv,
+                ..cfg.clone()
+            },
+            mode,
+            200,
+        )
+        .run();
+        let prop = Campaign::new(cfg.clone(), mode, 200).run();
+        println!(
+            "  {:<5}: PROPOSED {:.2} MB/s vs CONV {:.2} MB/s -> {:.2}x",
+            mode.name(),
+            prop.bandwidth_mbps,
+            conv.bandwidth_mbps,
+            prop.bandwidth_mbps / conv.bandwidth_mbps
+        );
+    }
+}

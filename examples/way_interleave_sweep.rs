@@ -1,0 +1,58 @@
+//! Fig. 8 scenario: how way interleaving amplifies the DDR interface's
+//! advantage (the paper's central interaction effect).
+//!
+//! ```bash
+//! cargo run --release --example way_interleave_sweep
+//! ```
+
+use ddrnand::analytic;
+use ddrnand::config::SsdConfig;
+use ddrnand::coordinator::campaign::Campaign;
+use ddrnand::coordinator::pool::ThreadPool;
+use ddrnand::host::trace::RequestKind;
+use ddrnand::iface::timing::InterfaceKind;
+use ddrnand::nand::datasheet::CellType;
+use ddrnand::report::Table;
+
+fn main() {
+    let pool = ThreadPool::new(0);
+    let ways = [1u16, 2, 4, 8, 16];
+
+    for mode in [RequestKind::Write, RequestKind::Read] {
+        let mut jobs = Vec::new();
+        for &w in &ways {
+            for iface in InterfaceKind::ALL {
+                let cfg = SsdConfig {
+                    iface,
+                    cell: CellType::Slc,
+                    ways: w,
+                    blocks_per_chip: 512,
+                    ..SsdConfig::default()
+                };
+                jobs.push(move || {
+                    let des = Campaign::new(cfg.clone(), mode, 300).run().bandwidth_mbps;
+                    let ana = analytic::evaluate(&cfg, mode).0;
+                    (w, iface, des, ana)
+                });
+            }
+        }
+        let results = pool.run_all(jobs);
+        let mut t = Table::new(vec!["ways", "iface", "DES MB/s", "analytic MB/s", "gap"]);
+        for (w, iface, des, ana) in results {
+            t.row(vec![
+                w.to_string(),
+                iface.name().to_string(),
+                format!("{des:.2}"),
+                format!("{ana:.2}"),
+                format!("{:+.1}%", (des - ana) / ana * 100.0),
+            ]);
+        }
+        println!("SLC {} — DES vs analytic model:\n{}", mode.name(), t.render());
+    }
+
+    println!(
+        "Observation (paper §5.3.1): CONV's read bandwidth saturates by 2-way while\n\
+         PROPOSED keeps scaling to 4-way; in write mode PROPOSED sustains interleave\n\
+         gains through 16-way because each page occupies the bus for half as long."
+    );
+}

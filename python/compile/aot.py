@@ -1,0 +1,98 @@
+"""AOT lowering: JAX/Pallas model -> HLO text artifacts for the Rust runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax >=
+0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` crate) rejects; the text parser reassigns
+ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (from python/).
+
+Artifacts:
+    perf.hlo.txt    f32[PERF_N, 12]             -> (f32[PERF_N, 4],)
+    timing.hlo.txt  f32[TIMING_N, 10]           -> (f32[TIMING_N, 4],)
+    mc.hlo.txt      f32[MC_N,10] f32[MC_S,4] f32[3] -> (f32[MC_N, 3],)
+    manifest.txt    shape/layout contract consumed by rust/src/runtime
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels.ref import PERF_COLS, TIMING_COLS
+
+# Fixed grid sizes — the Rust runtime pads batches up to these.
+PERF_N = 4096
+TIMING_N = 1024
+MC_N = 256
+MC_S = 2048
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned on parse)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all():
+    f32 = jnp.float32
+    spec = jax.ShapeDtypeStruct
+    return {
+        "perf.hlo.txt": to_hlo_text(
+            jax.jit(model.perf_model).lower(spec((PERF_N, PERF_COLS), f32))
+        ),
+        "timing.hlo.txt": to_hlo_text(
+            jax.jit(model.timing_model).lower(spec((TIMING_N, TIMING_COLS), f32))
+        ),
+        "mc.hlo.txt": to_hlo_text(
+            jax.jit(model.mc_model).lower(
+                spec((MC_N, TIMING_COLS), f32),
+                spec((MC_S, 4), f32),
+                spec((3,), f32),
+            )
+        ),
+    }
+
+
+def manifest() -> str:
+    return "\n".join(
+        [
+            "# ddrnand AOT artifact manifest (shapes are f32, row-major)",
+            f"perf.hlo.txt in={PERF_N}x{PERF_COLS} out={PERF_N}x4",
+            f"timing.hlo.txt in={TIMING_N}x{TIMING_COLS} out={TIMING_N}x4",
+            f"mc.hlo.txt in={MC_N}x{TIMING_COLS},{MC_S}x4,3 out={MC_N}x3",
+            "",
+        ]
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="legacy single-file alias (writes perf)")
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    if args.out is not None:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    artifacts = lower_all()
+    for name, text in artifacts.items():
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>9} chars to {path}")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write(manifest())
+    print(f"wrote manifest to {out_dir}/manifest.txt")
+
+
+if __name__ == "__main__":
+    main()

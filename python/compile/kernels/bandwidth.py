@@ -1,0 +1,63 @@
+"""Pallas kernel: steady-state SSD bandwidth + energy over a design grid.
+
+The hot spot of the analytic model: evaluate the way-interleaving saturation
+equations for every design point in a (possibly large) grid. Elementwise
+over rows, so the TPU mapping is pure VPU work; ``BlockSpec`` tiles rows
+into VMEM-sized blocks (see DESIGN.md SHardware-Adaptation).
+
+Runs with ``interpret=True`` so the lowered HLO executes on any PJRT
+backend, including the Rust CPU client.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import PERF_COLS, PERF_OUTS
+
+# Rows per VMEM block: 256 rows x 12 cols x 4 B = 12 KiB in, 4 KiB out.
+BLOCK_ROWS = 256
+
+
+def _perf_kernel(pts_ref, out_ref):
+    p = pts_ref[...]  # [B, 12]
+    data_byte = p[:, 0]
+    cmd = p[:, 1]
+    ecc = p[:, 2]
+    status = p[:, 3]
+    t_r = p[:, 4]
+    t_prog = p[:, 5]
+    page = p[:, 6]
+    xfer = p[:, 7]
+    ways = p[:, 8]
+    channels = p[:, 9]
+    sata = p[:, 10]
+    power = p[:, 11]
+
+    o_r = cmd + xfer * data_byte + ecc
+    read_period = jnp.maximum(o_r, (o_r + t_r) / ways)
+    read_bw = jnp.minimum(page / read_period * 1e3 * channels, sata)
+
+    o_w = o_r + status
+    write_period = jnp.maximum(o_w, (o_w + t_prog) / ways)
+    write_bw = jnp.minimum(page / write_period * 1e3 * channels, sata)
+
+    out_ref[...] = jnp.stack(
+        [read_bw, write_bw, power / read_bw, power / write_bw], axis=-1
+    )
+
+
+def perf_grid(points):
+    """Evaluate the perf model for a [N, 12] grid; N must be a multiple of
+    BLOCK_ROWS (aot.py and the Rust runtime pad)."""
+    n, cols = points.shape
+    assert cols == PERF_COLS, f"want {PERF_COLS} columns, got {cols}"
+    assert n % BLOCK_ROWS == 0, f"N={n} must be a multiple of {BLOCK_ROWS}"
+    return pl.pallas_call(
+        _perf_kernel,
+        grid=(n // BLOCK_ROWS,),
+        in_specs=[pl.BlockSpec((BLOCK_ROWS, PERF_COLS), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, PERF_OUTS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, PERF_OUTS), points.dtype),
+        interpret=True,
+    )(points)

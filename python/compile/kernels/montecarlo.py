@@ -1,0 +1,71 @@
+"""Pallas kernel: PVT Monte Carlo setup-violation analysis.
+
+For each design point, jitter the read-path delays with pre-drawn standard
+normals and count setup violations at a clock period of nominal t_P,min x
+margin. This quantifies the paper's PVT-desensitization argument (S2.3.3 /
+ref. [23]): CONV accumulates three varying on-chip paths, the DVS designs
+only the board skew.
+
+The sample axis is the inner loop: each kernel block loads its rows once and
+streams all S samples against them (S x N compare/accumulate — the compute-
+dense kernel of the three).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import TIMING_COLS, TIMING_OUTS
+
+BLOCK_ROWS = 64
+
+
+def _mc_kernel(params_ref, z_ref, sig_ref, out_ref):
+    p = params_ref[...]  # [B, 10]
+    z = z_ref[...]  # [S, 4]
+    chip_sigma = sig_ref[0]
+    board_sigma = sig_ref[1]
+    margin = sig_ref[2]
+
+    t_s = p[:, 2:3]
+    t_h = p[:, 3:4]
+    alpha = p[:, 7:8]
+
+    # Nominal operating points (x margin).
+    conv_tp = jnp.maximum((p[:, 0] + p[:, 5] + p[:, 1] + p[:, 2]) / (1.0 + p[:, 7]), p[:, 6])
+    sync_tp = jnp.maximum(p[:, 2] + p[:, 3] + p[:, 4], p[:, 6])
+    prop_tp = jnp.maximum(2.0 * (p[:, 2] + p[:, 3] + p[:, 4]), p[:, 6])
+
+    # Jittered paths: [B, S].
+    t_out = p[:, 0:1] * (1.0 + chip_sigma * z[None, :, 0])
+    t_in = p[:, 1:2] * (1.0 + chip_sigma * z[None, :, 1])
+    t_rea = p[:, 5:6] * (1.0 + chip_sigma * z[None, :, 2])
+    t_diff = p[:, 4:5] * (1.0 + board_sigma * z[None, :, 3])
+
+    conv_ok = t_out + t_rea + t_in + t_s <= (1.0 + alpha) * (conv_tp * margin)[:, None]
+    sync_ok = t_s + t_h + t_diff <= (sync_tp * margin)[:, None]
+    prop_ok = 2.0 * (t_s + t_h + t_diff) <= (prop_tp * margin)[:, None]
+
+    viol = lambda ok: 1.0 - jnp.mean(ok.astype(jnp.float32), axis=1)
+    out_ref[...] = jnp.stack([viol(conv_ok), viol(sync_ok), viol(prop_ok)], axis=-1)
+
+
+def montecarlo_grid(params, z, sigmas):
+    """params: [N, 10]; z: [S, 4] standard normals; sigmas: [3] =
+    (chip_sigma, board_sigma, margin). Returns [N, 3] violation fractions."""
+    n, cols = params.shape
+    s, zc = z.shape
+    assert cols == TIMING_COLS and zc == 4
+    assert n % BLOCK_ROWS == 0, f"N={n} must be a multiple of {BLOCK_ROWS}"
+    return pl.pallas_call(
+        _mc_kernel,
+        grid=(n // BLOCK_ROWS,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, TIMING_COLS), lambda i: (i, 0)),
+            pl.BlockSpec((s, 4), lambda i: (0, 0)),
+            pl.BlockSpec((3,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, TIMING_OUTS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, TIMING_OUTS), jnp.float32),
+        interpret=True,
+    )(params, z, sigmas)

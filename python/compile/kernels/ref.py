@@ -1,0 +1,113 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth at build time (pytest compares every
+kernel against them), and they mirror ``rust/src/analytic/mod.rs`` formula
+for formula — the Rust integration test ``analytic_vs_hlo`` closes the loop
+by comparing the AOT artifact against the Rust mirror.
+
+Column layouts are shared by kernels, refs, aot.py and the Rust runtime:
+
+``PERF_COLS`` (design-point matrix, [N, 12])::
+
+    0 data_byte_ns   per-byte bus data time
+    1 cmd_ns         command+address+controller overhead phase
+    2 ecc_ns         ECC page latency
+    3 status_ns      post-program status phase
+    4 t_r_ns         array read fetch (t_R)
+    5 t_prog_ns      array program (t_PROG)
+    6 page_bytes     main page bytes
+    7 transfer_bytes page+spare bytes moved on the bus
+    8 ways           way-interleaving degree
+    9 channels       channel count
+    10 sata_mbps     host link cap
+    11 controller_mw controller power for the energy metric
+
+``TIMING_COLS`` ([N, 10])::
+
+    0 t_out_ns  1 t_in_ns  2 t_s_ns  3 t_h_ns  4 t_diff_ns
+    5 t_rea_ns  6 t_byte_ns  7 alpha  8 t_ios_ns  9 t_ioh_ns
+"""
+
+import jax.numpy as jnp
+
+PERF_COLS = 12
+TIMING_COLS = 10
+PERF_OUTS = 4  # read_bw, write_bw, read_nj_per_b, write_nj_per_b
+TIMING_OUTS = 3  # tp_min for CONV, SYNC_ONLY, PROPOSED
+
+
+def perf_ref(points):
+    """Steady-state bandwidth + energy model. points: [N, 12] -> [N, 4]."""
+    data_byte = points[:, 0]
+    cmd = points[:, 1]
+    ecc = points[:, 2]
+    status = points[:, 3]
+    t_r = points[:, 4]
+    t_prog = points[:, 5]
+    page = points[:, 6]
+    xfer = points[:, 7]
+    ways = points[:, 8]
+    channels = points[:, 9]
+    sata = points[:, 10]
+    power = points[:, 11]
+
+    o_r = cmd + xfer * data_byte + ecc
+    read_period = jnp.maximum(o_r, (o_r + t_r) / ways)
+    read_bw = jnp.minimum(page / read_period * 1e3 * channels, sata)
+
+    o_w = o_r + status
+    write_period = jnp.maximum(o_w, (o_w + t_prog) / ways)
+    write_bw = jnp.minimum(page / write_period * 1e3 * channels, sata)
+
+    return jnp.stack(
+        [read_bw, write_bw, power / read_bw, power / write_bw], axis=-1
+    )
+
+
+def timing_ref(params):
+    """Minimum clock periods, Eqs. (6)/(9) + SYNC_ONLY. [N, 10] -> [N, 3]."""
+    t_out = params[:, 0]
+    t_in = params[:, 1]
+    t_s = params[:, 2]
+    t_h = params[:, 3]
+    t_diff = params[:, 4]
+    t_rea = params[:, 5]
+    t_byte = params[:, 6]
+    alpha = params[:, 7]
+
+    conv = jnp.maximum((t_out + t_rea + t_in + t_s) / (1.0 + alpha), t_byte)
+    sync = jnp.maximum(t_s + t_h + t_diff, t_byte)
+    prop = jnp.maximum(2.0 * (t_s + t_h + t_diff), t_byte)
+    return jnp.stack([conv, sync, prop], axis=-1)
+
+
+def operating_freq_mhz(tp_min_ns):
+    """The paper's frequency rule (S5.2): floor to whole MHz."""
+    return jnp.floor(1000.0 / tp_min_ns)
+
+
+def montecarlo_ref(params, z, chip_sigma, board_sigma, margin):
+    """Setup-violation probability per design point under PVT jitter.
+
+    params: [N, 10] (TIMING_COLS); z: [S, 4] standard normals jittering
+    (t_out, t_in, t_rea, t_diff); margin: run each interface at its nominal
+    t_P,min x margin. Returns [N, 3] violation fractions.
+    """
+    t_out = params[:, 0:1] * (1.0 + chip_sigma * z[None, :, 0])  # [N, S]
+    t_in = params[:, 1:2] * (1.0 + chip_sigma * z[None, :, 1])
+    t_rea = params[:, 5:6] * (1.0 + chip_sigma * z[None, :, 2])
+    t_diff = params[:, 4:5] * (1.0 + board_sigma * z[None, :, 3])
+    t_s = params[:, 2:3]
+    t_h = params[:, 3:4]
+    alpha = params[:, 7:8]
+
+    tp = timing_ref(params) * margin  # [N, 3]
+
+    conv_ok = t_out + t_rea + t_in + t_s <= (1.0 + alpha) * tp[:, 0:1]
+    sync_ok = t_s + t_h + t_diff <= tp[:, 1:2]
+    prop_ok = 2.0 * (t_s + t_h + t_diff) <= tp[:, 2:3]
+
+    def viol(ok):
+        return 1.0 - jnp.mean(ok.astype(jnp.float32), axis=1)
+
+    return jnp.stack([viol(conv_ok), viol(sync_ok), viol(prop_ok)], axis=-1)

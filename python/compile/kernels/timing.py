@@ -1,0 +1,45 @@
+"""Pallas kernel: interface minimum-clock-period equations (Eqs. 6/8/9).
+
+Evaluates t_P,min for CONV / SYNC_ONLY / PROPOSED over a grid of Table 2
+parameter corners (used by the DSE for alpha / t_BYTE / t_DIFF sweeps).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import TIMING_COLS, TIMING_OUTS
+
+BLOCK_ROWS = 256
+
+
+def _timing_kernel(params_ref, out_ref):
+    p = params_ref[...]
+    t_out = p[:, 0]
+    t_in = p[:, 1]
+    t_s = p[:, 2]
+    t_h = p[:, 3]
+    t_diff = p[:, 4]
+    t_rea = p[:, 5]
+    t_byte = p[:, 6]
+    alpha = p[:, 7]
+
+    conv = jnp.maximum((t_out + t_rea + t_in + t_s) / (1.0 + alpha), t_byte)
+    sync = jnp.maximum(t_s + t_h + t_diff, t_byte)
+    prop = jnp.maximum(2.0 * (t_s + t_h + t_diff), t_byte)
+    out_ref[...] = jnp.stack([conv, sync, prop], axis=-1)
+
+
+def timing_grid(params):
+    """[N, 10] Table 2 corners -> [N, 3] t_P,min in ns."""
+    n, cols = params.shape
+    assert cols == TIMING_COLS, f"want {TIMING_COLS} columns, got {cols}"
+    assert n % BLOCK_ROWS == 0, f"N={n} must be a multiple of {BLOCK_ROWS}"
+    return pl.pallas_call(
+        _timing_kernel,
+        grid=(n // BLOCK_ROWS,),
+        in_specs=[pl.BlockSpec((BLOCK_ROWS, TIMING_COLS), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, TIMING_OUTS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, TIMING_OUTS), params.dtype),
+        interpret=True,
+    )(params)

@@ -1,0 +1,41 @@
+"""Layer-2 JAX model: the analytic SSD design-space model.
+
+Composes the Layer-1 Pallas kernels into the entry points that aot.py
+lowers to HLO text for the Rust runtime:
+
+* ``perf_model``   — design grid [N, 12] -> [N, 4] (read/write BW, energy)
+* ``timing_model`` — Table 2 corners [N, 10] -> [N, 4]
+  (t_P,min x 3 interfaces + CONV-vs-PROPOSED frequency headroom)
+* ``mc_model``     — PVT Monte Carlo [N, 10] x [S, 4] -> [N, 3]
+
+Python runs ONCE at build time (`make artifacts`); the Rust coordinator
+executes the lowered HLO via PJRT on its DSE hot path.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels.bandwidth import perf_grid
+from compile.kernels.montecarlo import montecarlo_grid
+from compile.kernels.timing import timing_grid
+
+
+def perf_model(points):
+    """Bandwidth/energy over a design grid (see ref.PERF_COLS)."""
+    return (perf_grid(points),)
+
+
+def timing_model(params):
+    """t_P,min per interface plus the PROPOSED-over-CONV frequency gain.
+
+    Returns [N, 4]: (conv, sync_only, proposed, conv/proposed ratio). The
+    ratio column is the headroom the DDR design buys at each corner — the
+    quantity DESIGN.md's A1/A2 ablations sweep.
+    """
+    tp = timing_grid(params)
+    gain = tp[:, 0] / tp[:, 2]
+    return (jnp.concatenate([tp, gain[:, None]], axis=-1),)
+
+
+def mc_model(params, z, sigmas):
+    """PVT violation probabilities (see kernels/montecarlo.py)."""
+    return (montecarlo_grid(params, z, sigmas),)

@@ -1,0 +1,187 @@
+"""Kernel-vs-reference correctness: the CORE build-time signal.
+
+Every Pallas kernel must agree with its pure-jnp oracle; hypothesis sweeps
+the parameter space (shapes are fixed by BlockSpec multiples, values vary).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bandwidth, montecarlo, timing
+from compile.kernels.ref import (
+    PERF_COLS,
+    TIMING_COLS,
+    montecarlo_ref,
+    perf_ref,
+    timing_ref,
+)
+
+RNG = np.random.default_rng(0xDD12)
+
+
+def random_perf_points(n, rng=RNG):
+    """Physically-plausible design points (strictly positive params)."""
+    pts = np.empty((n, PERF_COLS), dtype=np.float32)
+    pts[:, 0] = rng.uniform(1.0, 30.0, n)  # data_byte_ns
+    pts[:, 1] = rng.uniform(100.0, 5000.0, n)  # cmd_ns
+    pts[:, 2] = rng.uniform(0.0, 20000.0, n)  # ecc_ns
+    pts[:, 3] = rng.uniform(0.0, 5000.0, n)  # status_ns
+    pts[:, 4] = rng.uniform(10_000.0, 100_000.0, n)  # t_r_ns
+    pts[:, 5] = rng.uniform(100_000.0, 1_000_000.0, n)  # t_prog_ns
+    pts[:, 6] = rng.choice([2048.0, 4096.0, 8192.0], n)  # page
+    pts[:, 7] = pts[:, 6] * rng.uniform(1.0, 1.1, n)  # transfer
+    pts[:, 8] = rng.choice([1.0, 2.0, 4.0, 8.0, 16.0, 32.0], n)  # ways
+    pts[:, 9] = rng.choice([1.0, 2.0, 4.0, 8.0], n)  # channels
+    pts[:, 10] = rng.choice([150.0, 300.0, 600.0], n)  # sata
+    pts[:, 11] = rng.uniform(10.0, 100.0, n)  # power mW
+    return pts
+
+
+def random_timing_params(n, rng=RNG):
+    p = np.empty((n, TIMING_COLS), dtype=np.float32)
+    p[:, 0] = rng.uniform(1.0, 15.0, n)  # t_out
+    p[:, 1] = rng.uniform(0.5, 5.0, n)  # t_in
+    p[:, 2] = rng.uniform(0.1, 1.0, n)  # t_s
+    p[:, 3] = rng.uniform(0.01, 0.5, n)  # t_h
+    p[:, 4] = rng.uniform(1.0, 8.0, n)  # t_diff
+    p[:, 5] = rng.uniform(5.0, 40.0, n)  # t_rea
+    p[:, 6] = rng.uniform(4.0, 20.0, n)  # t_byte
+    p[:, 7] = rng.uniform(0.0, 0.5, n)  # alpha
+    p[:, 8] = rng.uniform(1.0, 4.0, n)  # t_ios
+    p[:, 9] = rng.uniform(1.0, 4.0, n)  # t_ioh
+    return p
+
+
+class TestPerfKernel:
+    def test_matches_ref_bulk(self):
+        pts = jnp.asarray(random_perf_points(1024))
+        np.testing.assert_allclose(
+            bandwidth.perf_grid(pts), perf_ref(pts), rtol=1e-6
+        )
+
+    def test_single_block(self):
+        pts = jnp.asarray(random_perf_points(bandwidth.BLOCK_ROWS))
+        np.testing.assert_allclose(
+            bandwidth.perf_grid(pts), perf_ref(pts), rtol=1e-6
+        )
+
+    def test_rejects_bad_shapes(self):
+        with pytest.raises(AssertionError):
+            bandwidth.perf_grid(jnp.zeros((100, PERF_COLS), jnp.float32))
+        with pytest.raises(AssertionError):
+            bandwidth.perf_grid(jnp.zeros((256, 7), jnp.float32))
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**32 - 1), blocks=st.integers(1, 4))
+    def test_matches_ref_hypothesis(self, seed, blocks):
+        rng = np.random.default_rng(seed)
+        pts = jnp.asarray(random_perf_points(blocks * bandwidth.BLOCK_ROWS, rng))
+        np.testing.assert_allclose(
+            bandwidth.perf_grid(pts), perf_ref(pts), rtol=1e-5
+        )
+
+    def test_paper_anchor_slc_conv(self):
+        """SLC CONV 1-way, the paper's calibration anchor (Table 3)."""
+        pt = np.zeros((bandwidth.BLOCK_ROWS, PERF_COLS), np.float32)
+        pt[:] = [
+            20.0,  # data_byte (50 MHz SDR)
+            2400.0,  # cmd (120 cycles)
+            3500.0,  # ecc
+            2040.0,  # status
+            25_000.0,  # t_r
+            215_000.0,  # t_prog
+            2048.0,
+            2112.0,
+            1.0,
+            1.0,
+            300.0,
+            22.5,
+        ]
+        out = np.asarray(bandwidth.perf_grid(jnp.asarray(pt)))[0]
+        assert abs(out[0] - 27.8) < 0.5, f"read={out[0]}"  # paper: 27.78
+        assert abs(out[1] - 7.72) < 0.15, f"write={out[1]}"  # paper: 7.77
+        assert abs(out[2] - 22.5 / out[0]) < 1e-4  # energy identity
+
+    def test_sata_cap_binds(self):
+        pt = random_perf_points(bandwidth.BLOCK_ROWS)
+        pt[:, 8] = 32  # many ways
+        pt[:, 9] = 8  # many channels
+        pt[:, 10] = 300.0
+        out = np.asarray(bandwidth.perf_grid(jnp.asarray(pt)))
+        assert (out[:, 0] <= 300.0 + 1e-3).all()
+
+
+class TestTimingKernel:
+    def test_matches_ref(self):
+        p = jnp.asarray(random_timing_params(512))
+        np.testing.assert_allclose(timing.timing_grid(p), timing_ref(p), rtol=1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**32 - 1))
+    def test_matches_ref_hypothesis(self, seed):
+        rng = np.random.default_rng(seed)
+        p = jnp.asarray(random_timing_params(timing.BLOCK_ROWS, rng))
+        np.testing.assert_allclose(timing.timing_grid(p), timing_ref(p), rtol=1e-5)
+
+    def test_paper_table2_values(self):
+        """S5.2: CONV 19.81 ns, PROPOSED 12 ns at the Table 2 corner."""
+        p = np.zeros((timing.BLOCK_ROWS, TIMING_COLS), np.float32)
+        p[:] = [7.82, 1.65, 0.25, 0.02, 4.69, 20.0, 12.0, 0.5, 2.75, 2.75]
+        tp = np.asarray(timing.timing_grid(jnp.asarray(p)))[0]
+        assert abs(tp[0] - 19.81) < 0.01, f"conv={tp[0]}"
+        assert abs(tp[2] - 12.0) < 1e-5, f"proposed={tp[2]}"
+        # Operating frequencies per the paper's floor rule.
+        assert np.floor(1000.0 / tp[0]) == 50
+        assert np.floor(1000.0 / tp[2]) == 83
+
+    def test_tbyte_floor(self):
+        p = random_timing_params(timing.BLOCK_ROWS)
+        p[:, 4] = 0.0  # perfect board
+        p[:, 2] = 0.01
+        p[:, 3] = 0.01
+        tp = np.asarray(timing.timing_grid(jnp.asarray(p)))
+        np.testing.assert_allclose(tp[:, 2], p[:, 6], rtol=1e-6)
+
+
+class TestMonteCarloKernel:
+    def _run(self, n=montecarlo.BLOCK_ROWS, s=512, seed=1, sigmas=(0.1, 0.05, 1.0)):
+        rng = np.random.default_rng(seed)
+        p = jnp.asarray(random_timing_params(n, rng))
+        z = jnp.asarray(rng.standard_normal((s, 4)).astype(np.float32))
+        sig = jnp.asarray(np.array(sigmas, np.float32))
+        got = montecarlo.montecarlo_grid(p, z, sig)
+        want = montecarlo_ref(p, z, sigmas[0], sigmas[1], sigmas[2])
+        return np.asarray(got), np.asarray(want)
+
+    def test_matches_ref(self):
+        got, want = self._run()
+        np.testing.assert_allclose(got, want, atol=1e-6)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**32 - 1))
+    def test_matches_ref_hypothesis(self, seed):
+        got, want = self._run(seed=seed)
+        np.testing.assert_allclose(got, want, atol=1e-6)
+
+    def test_probabilities_in_range(self):
+        got, _ = self._run()
+        assert (got >= 0.0).all() and (got <= 1.0).all()
+
+    def test_conv_more_sensitive_at_table2(self):
+        """The paper's PVT claim: at a tight margin, CONV violates more."""
+        p = np.zeros((montecarlo.BLOCK_ROWS, TIMING_COLS), np.float32)
+        p[:] = [7.82, 1.65, 0.25, 0.02, 4.69, 20.0, 12.0, 0.5, 2.75, 2.75]
+        rng = np.random.default_rng(7)
+        z = jnp.asarray(rng.standard_normal((4096, 4)).astype(np.float32))
+        sig = jnp.asarray(np.array([0.10, 0.05, 1.0], np.float32))
+        out = np.asarray(montecarlo.montecarlo_grid(jnp.asarray(p), z, sig))[0]
+        # At margin 1.0 CONV sits exactly on its constraint -> ~half the
+        # jittered corners violate; PROPOSED has t_BYTE slack -> none.
+        assert out[0] > 0.2, f"conv={out[0]}"
+        assert out[2] < 0.05, f"proposed={out[2]}"
+
+    def test_zero_sigma_no_violations_with_margin(self):
+        got, _ = self._run(sigmas=(0.0, 0.0, 1.001))
+        assert (got == 0.0).all()

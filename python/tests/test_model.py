@@ -1,0 +1,60 @@
+"""L2 model composition and AOT lowering checks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+from compile.kernels.ref import PERF_COLS, TIMING_COLS
+
+
+class TestModelShapes:
+    def test_perf_model(self):
+        pts = jnp.ones((aot.PERF_N, PERF_COLS), jnp.float32)
+        (out,) = model.perf_model(pts)
+        assert out.shape == (aot.PERF_N, 4)
+
+    def test_timing_model_headroom_column(self):
+        p = jnp.ones((aot.TIMING_N, TIMING_COLS), jnp.float32)
+        p = p.at[:, 7].set(0.5)  # alpha
+        (out,) = model.timing_model(p)
+        assert out.shape == (aot.TIMING_N, 4)
+        conv, prop, gain = out[:, 0], out[:, 2], out[:, 3]
+        np.testing.assert_allclose(gain, conv / prop, rtol=1e-6)
+
+    def test_mc_model(self):
+        p = jnp.ones((aot.MC_N, TIMING_COLS), jnp.float32)
+        z = jnp.zeros((aot.MC_S, 4), jnp.float32)
+        sig = jnp.asarray([0.1, 0.05, 1.1], jnp.float32)
+        (out,) = model.mc_model(p, z, sig)
+        assert out.shape == (aot.MC_N, 3)
+
+
+class TestAotLowering:
+    def test_lowers_to_hlo_text(self):
+        arts = aot.lower_all()
+        assert set(arts) == {"perf.hlo.txt", "timing.hlo.txt", "mc.hlo.txt"}
+        for name, text in arts.items():
+            assert "HloModule" in text, f"{name} is not HLO text"
+            assert "ENTRY" in text, f"{name} lacks an entry computation"
+            # No Mosaic custom-calls: interpret=True must fully lower.
+            assert "tpu_custom_call" not in text, f"{name} has TPU custom call"
+
+    def test_manifest_mentions_every_artifact(self):
+        m = aot.manifest()
+        for name in ("perf.hlo.txt", "timing.hlo.txt", "mc.hlo.txt"):
+            assert name in m
+
+
+class TestLoweredNumerics:
+    """The lowered (jit) path must equal the eager path — guards against
+    lowering-order bugs before the artifact ships to Rust."""
+
+    def test_perf_jit_equals_eager(self):
+        rng = np.random.default_rng(3)
+        from tests.test_kernels import random_perf_points
+
+        pts = jnp.asarray(random_perf_points(aot.PERF_N, rng))
+        eager = model.perf_model(pts)[0]
+        jitted = jax.jit(model.perf_model)(pts)[0]
+        np.testing.assert_allclose(eager, jitted, rtol=1e-6)

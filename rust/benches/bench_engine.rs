@@ -1,0 +1,132 @@
+//! §Perf microbenchmarks: DES engine event throughput, event-queue ops,
+//! full-SSD simulation events/s, sweep scaling across threads, and the
+//! PJRT analytic-batch latency. Numbers recorded in EXPERIMENTS.md §Perf.
+//!
+//! Run: `cargo bench --bench bench_engine`
+
+use ddrnand::bench::{bench, throughput};
+use ddrnand::config::SsdConfig;
+use ddrnand::coordinator::campaign::Campaign;
+use ddrnand::coordinator::pool::ThreadPool;
+use ddrnand::host::trace::RequestKind;
+use ddrnand::iface::timing::InterfaceKind;
+use ddrnand::sim::{Engine, EventQueue, Model, Scheduler};
+use ddrnand::util::time::Ps;
+
+/// Ping-pong model: minimal per-event work to measure engine overhead.
+struct PingPong {
+    left: u64,
+}
+impl Model for PingPong {
+    type Ev = u32;
+    fn handle(&mut self, sched: &mut Scheduler<u32>, ev: u32) {
+        if self.left > 0 {
+            self.left -= 1;
+            sched.after(Ps::ns(10), ev ^ 1);
+        }
+    }
+}
+
+fn main() {
+    // 1. Raw event-queue ops.
+    let r = bench("event queue: 100k push+pop (heap)", 3, 20, || {
+        let mut q = EventQueue::new();
+        for i in 0..100_000u32 {
+            q.push(Ps::ns(((i * 2_654_435_761u32) % 1_000_000) as i64), i);
+        }
+        while q.pop().is_some() {}
+    });
+    println!("{}", r.report());
+
+    // 2. Engine dispatch overhead.
+    println!(
+        "{}",
+        throughput("DES engine: ping-pong events", || {
+            let n = 5_000_000u64;
+            let mut m = PingPong { left: n };
+            let mut s = Scheduler::new();
+            s.at(Ps::ZERO, 0u32);
+            let t0 = std::time::Instant::now();
+            let res = Engine::run(&mut m, &mut s, Ps::MAX);
+            (res.events, t0.elapsed().as_secs_f64())
+        })
+    );
+
+    // 3. Full-SSD simulation throughput.
+    for (iface, ways, label) in [
+        (InterfaceKind::Proposed, 16u16, "PROPOSED 16-way SLC write"),
+        (InterfaceKind::Conv, 4, "CONV 4-way SLC write"),
+    ] {
+        println!(
+            "{}",
+            throughput(&format!("full SSD sim: {label}"), || {
+                let cfg = SsdConfig {
+                    iface,
+                    ways,
+                    blocks_per_chip: 512,
+                    ..SsdConfig::default()
+                };
+                let t0 = std::time::Instant::now();
+                let rep = Campaign::new(cfg, RequestKind::Write, 2000).run();
+                (rep.events, t0.elapsed().as_secs_f64())
+            })
+        );
+    }
+
+    // 4. Sweep scaling across worker threads.
+    let sweep = |threads| {
+        let pool = ThreadPool::new(threads);
+        let jobs: Vec<_> = (0..16)
+            .map(|i| {
+                move || {
+                    let cfg = SsdConfig {
+                        iface: InterfaceKind::Proposed,
+                        ways: 1 + (i % 16) as u16,
+                        blocks_per_chip: 512,
+                        ..SsdConfig::default()
+                    };
+                    Campaign::new(cfg, RequestKind::Write, 300).run().events
+                }
+            })
+            .collect();
+        let t0 = std::time::Instant::now();
+        let ev: u64 = pool.run_all(jobs).iter().sum();
+        (ev, t0.elapsed().as_secs_f64())
+    };
+    for threads in [1usize, 4, 0] {
+        let (ev, secs) = sweep(threads);
+        println!(
+            "sweep scaling: {:>2} threads  16 sims  {:>9} events  {:.2}s",
+            if threads == 0 { num_cpus() } else { threads },
+            ev,
+            secs
+        );
+    }
+
+    // 5. PJRT analytic batch.
+    let dir = ddrnand::runtime::Runtime::default_dir();
+    if ddrnand::runtime::Runtime::artifacts_present(&dir) {
+        let rt = ddrnand::runtime::Runtime::load(&dir).unwrap();
+        let points: Vec<_> = (0..4096)
+            .map(|i| {
+                let cfg = SsdConfig {
+                    ways: 1 + (i % 16) as u16,
+                    ..SsdConfig::default()
+                };
+                ddrnand::analytic::DesignPoint::from_config(&cfg)
+            })
+            .collect();
+        let r = bench("PJRT perf batch (4096 design points)", 3, 30, || {
+            std::hint::black_box(rt.perf_batch(&points).unwrap());
+        });
+        println!("{}", r.report());
+        println!(
+            "  -> {:.2}M design points/s through the AOT artifact",
+            4096.0 / r.summary.mean / 1e3
+        );
+    }
+}
+
+fn num_cpus() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}

@@ -1,0 +1,57 @@
+//! E4 — Fig. 10 / Table 5: controller energy per transferred byte (nJ/B)
+//! for SLC designs across way degrees, all three interfaces.
+//!
+//! The paper's qualitative claim to reproduce: PROPOSED costs *more* energy
+//! per byte at low interleaving but becomes the *cheapest* at high degrees
+//! (write: by 16-way; read: from 4-way on).
+//!
+//! Run: `cargo bench --bench bench_fig10_table5`
+
+use ddrnand::coordinator::experiments::{render_cells, run_table5};
+use ddrnand::coordinator::pool::ThreadPool;
+use ddrnand::host::trace::RequestKind;
+use ddrnand::iface::timing::InterfaceKind;
+
+fn main() {
+    let requests: usize = std::env::var("REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(400);
+    let pool = ThreadPool::new(0);
+    let cells = run_table5(requests, &pool);
+    println!(
+        "{}",
+        render_cells(
+            "E4 / Fig. 10 + Table 5 — controller energy per byte (nJ/B, SLC)",
+            &cells,
+            true
+        )
+    );
+
+    // Crossover verification.
+    let e = |iface, ways, mode| {
+        cells
+            .iter()
+            .find(|c| c.iface == iface && c.ways == ways && c.mode == mode)
+            .map(|c| c.report.energy_nj_per_byte)
+            .unwrap()
+    };
+    for mode in [RequestKind::Write, RequestKind::Read] {
+        let p1 = e(InterfaceKind::Proposed, 1, mode);
+        let c1 = e(InterfaceKind::Conv, 1, mode);
+        let p16 = e(InterfaceKind::Proposed, 16, mode);
+        let c16 = e(InterfaceKind::Conv, 16, mode);
+        let s16 = e(InterfaceKind::SyncOnly, 16, mode);
+        println!(
+            "{:<5}: 1-way PROPOSED {:.2} vs CONV {:.2} nJ/B ({}); 16-way PROPOSED {:.2} vs CONV {:.2} vs SYNC {:.2} ({})",
+            mode.name(),
+            p1,
+            c1,
+            if p1 > c1 { "PROPOSED costlier, as in paper" } else { "UNEXPECTED" },
+            p16,
+            c16,
+            s16,
+            if p16 < c16 && p16 < s16 { "PROPOSED cheapest, as in paper" } else { "UNEXPECTED" },
+        );
+    }
+}

@@ -1,0 +1,64 @@
+//! E2 — Fig. 8 / Table 3: single-channel way-interleaving sweep across
+//! {1,2,4,8,16} ways × {SLC,MLC} × {write,read} × {CONV,SYNC_ONLY,PROPOSED}.
+//!
+//! Prints the same rows the paper reports, with paper-vs-measured deltas
+//! and the P/S, P/C geomean ratio columns.
+//!
+//! Run: `cargo bench --bench bench_fig8_table3` (env `REQUESTS=n` to scale)
+
+use ddrnand::coordinator::experiments::{headline, render_cells, run_table3};
+use ddrnand::coordinator::pool::ThreadPool;
+use ddrnand::host::trace::RequestKind;
+use ddrnand::iface::timing::InterfaceKind;
+use ddrnand::nand::datasheet::CellType;
+use ddrnand::util::stats::geomean;
+
+fn main() {
+    let requests: usize = std::env::var("REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(400);
+    let pool = ThreadPool::new(0);
+    let t0 = std::time::Instant::now();
+    let cells = run_table3(requests, &pool);
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!(
+        "{}",
+        render_cells("E2 / Fig. 8 + Table 3 — way-interleaving sweep (MB/s)", &cells, false)
+    );
+
+    // The paper's ratio columns (geometric means, per Table 3 footnote).
+    println!("ratio columns (geomean across way degrees):");
+    for cell in [CellType::Slc, CellType::Mlc] {
+        for mode in [RequestKind::Write, RequestKind::Read] {
+            let get = |iface| {
+                cells
+                    .iter()
+                    .filter(|c| c.cell == cell && c.mode == mode && c.iface == iface)
+                    .map(|c| c.report.bandwidth_mbps)
+                    .collect::<Vec<_>>()
+            };
+            let conv = get(InterfaceKind::Conv);
+            let sync = get(InterfaceKind::SyncOnly);
+            let prop = get(InterfaceKind::Proposed);
+            let ps: Vec<f64> = prop.iter().zip(&sync).map(|(p, s)| p / s).collect();
+            let pc: Vec<f64> = prop.iter().zip(&conv).map(|(p, c)| p / c).collect();
+            println!(
+                "  {cell} {:<5}: P/S={:.2}  P/C={:.2}",
+                mode.name(),
+                geomean(&ps),
+                geomean(&pc)
+            );
+        }
+    }
+    println!();
+    println!("{}", headline(&cells));
+    let events: u64 = cells.iter().map(|c| c.report.events).sum();
+    println!(
+        "bench wall-clock: {wall:.2}s for {} simulations ({} DES events, {:.1}M events/s aggregate)",
+        cells.len(),
+        events,
+        events as f64 / wall / 1e6
+    );
+}

@@ -1,0 +1,42 @@
+//! E3 — Fig. 9 / Table 4: constant-capacity channel/way sweep
+//! ((1ch,16w), (2ch,8w), (4ch,4w)) × {SLC,MLC} × {write,read} × 3 ifaces.
+//! The (4,4) read configs should hit the SATA2 300 MB/s cap ("max").
+//!
+//! Run: `cargo bench --bench bench_fig9_table4`
+
+use ddrnand::coordinator::experiments::{render_cells, run_table4};
+use ddrnand::coordinator::pool::ThreadPool;
+use ddrnand::host::trace::RequestKind;
+
+fn main() {
+    let requests: usize = std::env::var("REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(400);
+    let pool = ThreadPool::new(0);
+    let t0 = std::time::Instant::now();
+    let cells = run_table4(requests, &pool);
+    println!(
+        "{}",
+        render_cells(
+            "E3 / Fig. 9 + Table 4 — channel/way configurations at constant capacity (MB/s)",
+            &cells,
+            false
+        )
+    );
+
+    // SATA saturation check: the paper marks (4,4) reads as "max".
+    for c in cells.iter().filter(|c| {
+        c.channels == 4 && c.mode == RequestKind::Read && c.paper.is_none()
+    }) {
+        let frac = c.report.bandwidth_mbps / 300.0;
+        println!(
+            "SATA saturation: {} {} (4ch,4way) read = {:.2} MB/s = {:.1}% of the SATA2 cap",
+            c.cell.name(),
+            c.iface.name(),
+            c.report.bandwidth_mbps,
+            frac * 100.0
+        );
+    }
+    println!("\nbench wall-clock: {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,74 @@
+//! E1 — Table 2 / §5.2: operating-frequency determination, plus the A1
+//! α-sweep ablation and the timing-kernel wall-clock (native vs PJRT).
+//!
+//! Run: `cargo bench --bench bench_table2`
+
+use ddrnand::analytic;
+use ddrnand::bench::bench;
+use ddrnand::coordinator::experiments::table2_text;
+use ddrnand::iface::timing::{IfaceParams, InterfaceKind};
+use ddrnand::runtime::{iface_params_row, Runtime};
+
+fn main() {
+    println!("{}", table2_text());
+
+    // A1 ablation: α sweep on Eq. (6).
+    println!("A1 — alpha sweep (Eq. 6), CONV t_P,min and frequency:");
+    for i in 0..=5 {
+        let alpha = i as f64 * 0.1;
+        let p = IfaceParams {
+            alpha,
+            ..IfaceParams::default()
+        };
+        println!(
+            "  alpha={alpha:.1}  t_P,min={:6.2} ns  f={:>2} MHz  (PROPOSED stays {} MHz)",
+            p.conv_tp_min_ns(),
+            p.operating_freq_mhz(InterfaceKind::Conv),
+            p.operating_freq_mhz(InterfaceKind::Proposed),
+        );
+    }
+    println!();
+
+    // Wall-clock: native equation evaluation over a big grid.
+    let corners: Vec<[f64; 10]> = (0..1024)
+        .map(|i| {
+            let p = IfaceParams {
+                alpha: (i % 6) as f64 * 0.1,
+                t_byte_ns: 4.0 + (i % 17) as f64,
+                ..IfaceParams::default()
+            };
+            iface_params_row(&p)
+        })
+        .collect();
+
+    let r = bench("timing equations, native (1024 corners)", 3, 30, || {
+        for c in &corners {
+            let p = IfaceParams {
+                t_out_ns: c[0],
+                t_in_ns: c[1],
+                t_s_ns: c[2],
+                t_h_ns: c[3],
+                t_diff_ns: c[4],
+                t_rea_ns: c[5],
+                t_byte_ns: c[6],
+                alpha: c[7],
+                t_ios_ns: c[8],
+                t_ioh_ns: c[9],
+            };
+            std::hint::black_box(analytic::tp_min_ns(&p));
+        }
+    });
+    println!("{}", r.report());
+
+    let dir = Runtime::default_dir();
+    if Runtime::artifacts_present(&dir) {
+        let rt = Runtime::load(&dir).expect("load artifacts");
+        println!("(PJRT compile: {:.1} ms one-off)", rt.compile_ms);
+        let r = bench("timing equations, PJRT HLO (1024 corners)", 3, 30, || {
+            std::hint::black_box(rt.timing_batch(&corners).unwrap());
+        });
+        println!("{}", r.report());
+    } else {
+        println!("artifacts missing; skipping PJRT timing bench (run `make artifacts`)");
+    }
+}

@@ -1,0 +1,378 @@
+//! Closed-form analytic SSD performance model.
+//!
+//! Mirrors the steady state of the DES: per-page bus occupancy plus
+//! Amdahl-style way-interleaving saturation (§5.3.1's analysis). The same
+//! formulas are implemented as the Pallas kernels in
+//! `python/compile/kernels/{timing,bandwidth,energy}.py`; integration tests
+//! load the AOT artifact and assert this module and the HLO agree bit-for-
+//! bit (f32-for-f32), and `tests/analytic_vs_des.rs` asserts the DES agrees
+//! within tolerance.
+//!
+//! The DES remains ground truth: it additionally models queue depth, SATA
+//! serialization, status polling and FTL effects. The analytic model is the
+//! fast surrogate used for design-space exploration.
+
+use crate::config::SsdConfig;
+use crate::energy::PowerModel;
+use crate::host::trace::RequestKind;
+use crate::iface::timing::IfaceParams;
+
+/// Plain-f64 design point, decoupled from the simulator types so the exact
+/// same numbers can be fed to the AOT-compiled kernel.
+#[derive(Debug, Clone, Copy)]
+pub struct DesignPoint {
+    /// Per-byte data time on the bus (ns).
+    pub data_byte_ns: f64,
+    /// Command+address+controller-overhead phase (ns).
+    pub cmd_ns: f64,
+    /// ECC page latency (ns).
+    pub ecc_ns: f64,
+    /// Status phase for programs (ns).
+    pub status_ns: f64,
+    /// Array read fetch t_R (ns).
+    pub t_r_ns: f64,
+    /// Array program t_PROG (ns).
+    pub t_prog_ns: f64,
+    /// Main page bytes.
+    pub page_bytes: f64,
+    /// Page + spare bytes (what the bus actually moves).
+    pub transfer_bytes: f64,
+    /// Way-interleaving degree.
+    pub ways: f64,
+    /// Channel count.
+    pub channels: f64,
+    /// Host-link cap (MB/s).
+    pub sata_mbps: f64,
+    /// Controller power (mW) for the energy metric.
+    pub controller_mw: f64,
+}
+
+impl DesignPoint {
+    /// Build the design point corresponding to an [`SsdConfig`], using the
+    /// same derived constants as the DES.
+    pub fn from_config(cfg: &SsdConfig) -> DesignPoint {
+        let nand = cfg.nand_timing();
+        let bus = crate::iface::bus::BusTiming::from_params(&cfg.params, cfg.iface);
+        let ecc = crate::controller::ecc::EccModel::for_cell(cfg.cell);
+        DesignPoint {
+            data_byte_ns: bus.t_data_byte.as_ns_f64(),
+            cmd_ns: bus.read_cmd().as_ns_f64(),
+            ecc_ns: ecc.page_latency(nand.page_bytes).as_ns_f64(),
+            status_ns: (bus.status_poll() + cfg.program_status_overhead).as_ns_f64(),
+            t_r_ns: nand.t_r.as_ns_f64(),
+            t_prog_ns: nand.t_prog.as_ns_f64(),
+            page_bytes: nand.page_bytes as f64,
+            transfer_bytes: nand.transfer_bytes() as f64,
+            ways: cfg.ways as f64,
+            channels: cfg.channels as f64,
+            sata_mbps: cfg.sata.bandwidth_mbps,
+            controller_mw: PowerModel::for_interface(cfg.iface).controller_mw,
+        }
+    }
+}
+
+
+/// Steady-state read bandwidth in MB/s.
+///
+/// Per-page bus occupancy `O = cmd + transfer + ecc`; per-way cycle
+/// `O + t_R`. With `w` ways multiplexing the bus, the page period is
+/// `max(O, (O + t_R)/w)` (bus-saturated vs. interleave-limited), scaled by
+/// channels and capped by the host link.
+pub fn read_bandwidth_mbps(p: &DesignPoint) -> f64 {
+    let o = p.cmd_ns + p.transfer_bytes * p.data_byte_ns + p.ecc_ns;
+    let cycle = o + p.t_r_ns;
+    let period = o.max(cycle / p.ways);
+    let per_channel = p.page_bytes / period * 1e3; // bytes/ns -> MB/s
+    (per_channel * p.channels).min(p.sata_mbps)
+}
+
+/// Steady-state write bandwidth in MB/s. Same shape with `t_PROG` and the
+/// post-program status phase.
+pub fn write_bandwidth_mbps(p: &DesignPoint) -> f64 {
+    let o = p.cmd_ns + p.transfer_bytes * p.data_byte_ns + p.ecc_ns + p.status_ns;
+    let cycle = o + p.t_prog_ns;
+    let period = o.max(cycle / p.ways);
+    let per_channel = p.page_bytes / period * 1e3;
+    (per_channel * p.channels).min(p.sata_mbps)
+}
+
+/// Bandwidth for either mode.
+pub fn bandwidth_mbps(p: &DesignPoint, mode: RequestKind) -> f64 {
+    match mode {
+        RequestKind::Read => read_bandwidth_mbps(p),
+        RequestKind::Write => write_bandwidth_mbps(p),
+    }
+}
+
+/// Controller energy per byte (nJ/B) — the Table 5 metric.
+pub fn energy_nj_per_byte(p: &DesignPoint, mode: RequestKind) -> f64 {
+    p.controller_mw / bandwidth_mbps(p, mode)
+}
+
+/// Convenience: evaluate a full config.
+pub fn evaluate(cfg: &SsdConfig, mode: RequestKind) -> (f64, f64) {
+    let p = DesignPoint::from_config(cfg);
+    (bandwidth_mbps(&p, mode), energy_nj_per_byte(&p, mode))
+}
+
+/// Minimum clock periods of all three interfaces (ns) — Eqs. (6), (8)/(9);
+/// re-exported here so the analytic module is self-contained for the DSE.
+pub fn tp_min_ns(params: &IfaceParams) -> [f64; 3] {
+    [
+        params.conv_tp_min_ns(),
+        params.sync_only_tp_min_ns(),
+        params.proposed_tp_min_board_ns(),
+    ]
+}
+
+/// Paper Table 3 (SLC/MLC × write/read × way degree × interface), used by
+/// calibration tests and the benchmark harness for paper-vs-measured
+/// deltas. Values in MB/s.
+pub mod paper {
+    use crate::iface::timing::InterfaceKind;
+    use crate::nand::datasheet::CellType;
+    use crate::host::trace::RequestKind;
+
+    pub const WAYS: [u16; 5] = [1, 2, 4, 8, 16];
+
+    /// (cell, mode, [way-row][CONV, SYNC_ONLY, PROPOSED])
+    pub const TABLE3: [(CellType, RequestKind, [[f64; 3]; 5]); 4] = [
+        (
+            CellType::Slc,
+            RequestKind::Write,
+            [
+                [7.77, 8.38, 8.50],
+                [15.22, 16.59, 17.52],
+                [28.94, 31.90, 34.30],
+                [39.78, 55.36, 63.00],
+                [39.76, 60.44, 97.35],
+            ],
+        ),
+        (
+            CellType::Slc,
+            RequestKind::Read,
+            [
+                [27.78, 36.66, 47.89],
+                [42.78, 67.16, 70.47],
+                [42.75, 67.13, 117.68],
+                [42.72, 67.11, 117.64],
+                [42.69, 67.11, 117.59],
+            ],
+        ),
+        (
+            CellType::Mlc,
+            RequestKind::Write,
+            [
+                [4.43, 4.55, 4.65],
+                [8.36, 8.85, 9.24],
+                [15.24, 16.75, 18.13],
+                [25.86, 29.72, 34.08],
+                [32.45, 45.99, 57.23],
+            ],
+        ),
+        (
+            CellType::Mlc,
+            RequestKind::Read,
+            [
+                [26.04, 33.58, 42.69],
+                [41.59, 60.41, 77.19],
+                [41.55, 64.76, 101.61],
+                [41.52, 64.75, 110.56],
+                [41.50, 64.73, 110.52],
+            ],
+        ),
+    ];
+
+    /// Table 4: constant-capacity channel/way sweep. Rows: (1,16), (2,8),
+    /// (4,4); `None` = "max" (SATA-saturated).
+    pub const CHANNEL_CONFIGS: [(u16, u16); 3] = [(1, 16), (2, 8), (4, 4)];
+    pub const TABLE4: [(CellType, RequestKind, [[Option<f64>; 3]; 3]); 4] = [
+        (
+            CellType::Slc,
+            RequestKind::Write,
+            [
+                [Some(39.76), Some(60.44), Some(97.35)],
+                [Some(74.07), Some(101.99), Some(114.83)],
+                [Some(103.76), Some(115.68), Some(123.52)],
+            ],
+        ),
+        (
+            CellType::Slc,
+            RequestKind::Read,
+            [
+                [Some(42.69), Some(67.11), Some(117.59)],
+                [Some(81.44), Some(126.70), Some(224.82)],
+                [Some(155.35), Some(237.61), None],
+            ],
+        ),
+        (
+            CellType::Mlc,
+            RequestKind::Write,
+            [
+                [Some(32.45), Some(45.99), Some(57.23)],
+                [Some(48.72), Some(56.83), Some(64.75)],
+                [Some(57.46), Some(63.55), Some(68.49)],
+            ],
+        ),
+        (
+            CellType::Mlc,
+            RequestKind::Read,
+            [
+                [Some(41.50), Some(64.73), Some(110.52)],
+                [Some(79.32), Some(122.48), Some(201.42)],
+                [Some(150.94), Some(230.17), None],
+            ],
+        ),
+    ];
+
+    /// Table 5: SLC energy (nJ/B). Rows are way degrees 1..16.
+    pub const TABLE5: [(RequestKind, [[f64; 3]; 5]); 2] = [
+        (
+            RequestKind::Write,
+            [
+                [2.90, 5.01, 5.47],
+                [1.48, 2.53, 2.65],
+                [0.78, 1.32, 1.36],
+                [0.57, 0.76, 0.74],
+                [0.57, 0.69, 0.48],
+            ],
+        ),
+        (
+            RequestKind::Read,
+            [
+                [0.81, 1.15, 0.97],
+                [0.53, 0.63, 0.66],
+                [0.53, 0.63, 0.40],
+                [0.53, 0.63, 0.40],
+                [0.53, 0.63, 0.40],
+            ],
+        ),
+    ];
+
+    pub fn iface_index(kind: InterfaceKind) -> usize {
+        match kind {
+            InterfaceKind::Conv => 0,
+            InterfaceKind::SyncOnly => 1,
+            InterfaceKind::Proposed => 2,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SsdConfig;
+    use crate::iface::timing::InterfaceKind;
+    use crate::nand::datasheet::CellType;
+
+    fn cfg(iface: InterfaceKind, cell: CellType, ways: u16) -> SsdConfig {
+        SsdConfig {
+            iface,
+            cell,
+            ways,
+            ..SsdConfig::default()
+        }
+    }
+
+    /// The analytic model should reproduce the paper's Table 3 1-way
+    /// anchors closely (these calibrate t_R/t_PROG/ECC).
+    #[test]
+    fn slc_one_way_anchors() {
+        let read = |i| evaluate(&cfg(i, CellType::Slc, 1), RequestKind::Read).0;
+        let write = |i| evaluate(&cfg(i, CellType::Slc, 1), RequestKind::Write).0;
+        assert!((read(InterfaceKind::Conv) - 27.78).abs() < 1.0, "{}", read(InterfaceKind::Conv));
+        assert!((read(InterfaceKind::SyncOnly) - 36.66).abs() < 1.2);
+        assert!((read(InterfaceKind::Proposed) - 47.89).abs() < 1.5);
+        assert!((write(InterfaceKind::Conv) - 7.77).abs() < 0.3);
+        assert!((write(InterfaceKind::SyncOnly) - 8.38).abs() < 0.3);
+        assert!((write(InterfaceKind::Proposed) - 8.50).abs() < 0.4);
+    }
+
+    #[test]
+    fn mlc_one_way_anchors() {
+        let read = |i| evaluate(&cfg(i, CellType::Mlc, 1), RequestKind::Read).0;
+        let write = |i| evaluate(&cfg(i, CellType::Mlc, 1), RequestKind::Write).0;
+        assert!((read(InterfaceKind::Conv) - 26.04).abs() < 1.0, "{}", read(InterfaceKind::Conv));
+        assert!((write(InterfaceKind::Conv) - 4.43).abs() < 0.2, "{}", write(InterfaceKind::Conv));
+        assert!((read(InterfaceKind::Proposed) - 42.69).abs() < 1.6);
+        assert!((write(InterfaceKind::Proposed) - 4.65).abs() < 0.25);
+    }
+
+    #[test]
+    fn saturation_degrees_match_paper() {
+        // §5.3.1 Case II: CONV read saturates by 2-way, PROPOSED by 4-way.
+        let bw = |i, w| evaluate(&cfg(i, CellType::Slc, w), RequestKind::Read).0;
+        let conv2 = bw(InterfaceKind::Conv, 2);
+        let conv16 = bw(InterfaceKind::Conv, 16);
+        assert!((conv2 - conv16).abs() / conv16 < 0.02, "CONV saturated by 2-way");
+        let prop4 = bw(InterfaceKind::Proposed, 4);
+        let prop16 = bw(InterfaceKind::Proposed, 16);
+        assert!((prop4 - prop16).abs() / prop16 < 0.02, "PROPOSED saturated by 4-way");
+        let prop2 = bw(InterfaceKind::Proposed, 2);
+        assert!(prop2 < 0.9 * prop4, "PROPOSED not yet saturated at 2-way");
+    }
+
+    #[test]
+    fn headline_ratios_hold() {
+        // §6: PROPOSED/CONV read 1.65–2.76x, write 1.09–2.45x (SLC).
+        for &w in &paper::WAYS {
+            let r = evaluate(&cfg(InterfaceKind::Proposed, CellType::Slc, w), RequestKind::Read).0
+                / evaluate(&cfg(InterfaceKind::Conv, CellType::Slc, w), RequestKind::Read).0;
+            assert!((1.5..3.1).contains(&r), "read ratio {r} at {w}-way");
+            let wr = evaluate(&cfg(InterfaceKind::Proposed, CellType::Slc, w), RequestKind::Write).0
+                / evaluate(&cfg(InterfaceKind::Conv, CellType::Slc, w), RequestKind::Write).0;
+            assert!((1.0..2.8).contains(&wr), "write ratio {wr} at {w}-way");
+        }
+    }
+
+    #[test]
+    fn sata_caps_four_channel_read() {
+        // Table 4: (4ch, 4way) SLC read reaches the SATA bound ("max").
+        let mut c = cfg(InterfaceKind::Proposed, CellType::Slc, 4);
+        c.channels = 4;
+        let (bw, _) = evaluate(&c, RequestKind::Read);
+        assert_eq!(bw, 300.0);
+    }
+
+    #[test]
+    fn energy_crossover_with_ways() {
+        // Fig. 10: PROPOSED is costlier at 1-way, cheapest at 16-way.
+        let e = |i, w| evaluate(&cfg(i, CellType::Slc, w), RequestKind::Write).1;
+        assert!(e(InterfaceKind::Proposed, 1) > e(InterfaceKind::Conv, 1));
+        assert!(e(InterfaceKind::Proposed, 16) < e(InterfaceKind::Conv, 16));
+    }
+
+    #[test]
+    fn table3_full_grid_within_tolerance() {
+        // Shape reproduction: every cell within 15% of the paper, except
+        // the known sub-linear mid-curve cells (documented in
+        // EXPERIMENTS.md): 2-way PROPOSED SLC read and the >=8-way MLC
+        // write column, where the paper's simulator shows sub-linear
+        // interleaving the steady-state model doesn't capture.
+        let mut worst: (f64, String) = (0.0, String::new());
+        for (cell, mode, rows) in paper::TABLE3 {
+            for (wi, &w) in paper::WAYS.iter().enumerate() {
+                for (ii, iface) in InterfaceKind::ALL.iter().enumerate() {
+                    let ours = evaluate(&cfg(*iface, cell, w), mode).0;
+                    let ref_v = rows[wi][ii];
+                    let err = (ours - ref_v).abs() / ref_v;
+                    let known_outlier = (cell == CellType::Slc
+                        && mode == RequestKind::Read
+                        && w == 2
+                        && *iface == InterfaceKind::Proposed)
+                        || (cell == CellType::Mlc && mode == RequestKind::Write && w >= 8);
+                    if !known_outlier {
+                        assert!(
+                            err < 0.16,
+                            "{cell} {mode:?} {w}-way {iface}: ours={ours:.2} paper={ref_v:.2} err={err:.3}"
+                        );
+                    }
+                    if err > worst.0 {
+                        worst = (err, format!("{cell} {mode:?} {w}-way {iface}"));
+                    }
+                }
+            }
+        }
+        eprintln!("worst analytic-vs-paper error: {:.1}% at {}", worst.0 * 100.0, worst.1);
+    }
+}

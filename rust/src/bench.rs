@@ -1,0 +1,81 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Used by the `rust/benches/*` targets (`harness = false`): warmup, a
+//! fixed sample count, and mean/median/stddev reporting. Deliberately
+//! simple — the paper benches measure *simulated* quantities; this harness
+//! is for the §Perf wall-clock measurements.
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Result of timing one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let s = &self.summary;
+        format!(
+            "{:<44} {:>10.3} ms/iter (median {:.3}, sd {:.3}, n={})",
+            self.name, s.mean, s.median, s.stddev, s.n
+        )
+    }
+}
+
+/// Time `f` with `warmup` discarded runs and `samples` measured runs.
+/// Returns per-iteration milliseconds.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let summary = Summary::from_samples(&times).expect("samples > 0");
+    BenchResult {
+        name: name.to_string(),
+        samples: times,
+        summary,
+    }
+}
+
+/// Measure a throughput-style quantity: runs `f` once, expects it to return
+/// (units, elapsed-seconds), reports units/s.
+pub fn throughput<F: FnOnce() -> (u64, f64)>(name: &str, f: F) -> String {
+    let (units, secs) = f();
+    format!(
+        "{:<44} {:>12} units in {:.3}s = {}/s",
+        name,
+        units,
+        secs,
+        crate::util::fmt::fmt_si(units as f64 / secs)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let mut n = 0u64;
+        let r = bench("noop", 2, 10, || n += 1);
+        assert_eq!(r.summary.n, 10);
+        assert_eq!(n, 12); // warmup + samples
+        assert!(r.summary.mean >= 0.0);
+        assert!(r.report().contains("noop"));
+    }
+
+    #[test]
+    fn throughput_formats() {
+        let s = throughput("events", || (2_000_000, 0.1));
+        assert!(s.contains("20.00M"), "{s}");
+    }
+}

@@ -1,0 +1,127 @@
+//! Flag parsing: `--key value`, `--bool-flag`, one positional subcommand.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+    used: std::collections::BTreeSet<String>,
+}
+
+impl Args {
+    /// Parse argv (without the program name).
+    pub fn parse(argv: &[String]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare '--' not supported".into());
+                }
+                // `--key=value` or `--key value` or boolean `--key`.
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.bools.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a.clone());
+            } else {
+                return Err(format!("unexpected positional argument: {a}"));
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    /// String flag.
+    pub fn get(&mut self, key: &str) -> Option<String> {
+        self.used.insert(key.to_string());
+        self.flags.get(key).cloned()
+    }
+
+    /// Boolean flag presence.
+    pub fn has(&mut self, key: &str) -> bool {
+        self.used.insert(key.to_string());
+        self.bools.iter().any(|b| b == key)
+    }
+
+    /// Typed flag with default.
+    pub fn get_usize(&mut self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key}: {e}")),
+        }
+    }
+
+    pub fn get_f64(&mut self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key}: {e}")),
+        }
+    }
+
+    /// Required string flag.
+    pub fn require(&mut self, key: &str) -> Result<String, String> {
+        self.get(key).ok_or_else(|| format!("missing required --{key}"))
+    }
+
+    /// First flag the command never consumed (typo detection).
+    pub fn first_unused(&self) -> Option<String> {
+        self.flags
+            .keys()
+            .chain(self.bools.iter())
+            .find(|k| !self.used.contains(*k))
+            .map(|k| format!("--{k}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(&s.split_whitespace().map(String::from).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let mut a = parse("paper --requests 100 --csv");
+        assert_eq!(a.subcommand.as_deref(), Some("paper"));
+        assert_eq!(a.get_usize("requests", 400).unwrap(), 100);
+        assert!(a.has("csv"));
+        assert!(!a.has("native"));
+    }
+
+    #[test]
+    fn key_equals_value() {
+        let mut a = parse("dse --margin=1.05");
+        assert_eq!(a.get_f64("margin", 1.0).unwrap(), 1.05);
+    }
+
+    #[test]
+    fn unused_flag_detected() {
+        let mut a = parse("paper --wayz 4");
+        let _ = a.get("requests");
+        assert_eq!(a.first_unused(), Some("--wayz".to_string()));
+    }
+
+    #[test]
+    fn require_missing_errors() {
+        let mut a = parse("simulate");
+        assert!(a.require("config").is_err());
+    }
+
+    #[test]
+    fn double_positional_rejected() {
+        let argv: Vec<String> = vec!["a".into(), "b".into()];
+        assert!(Args::parse(&argv).is_err());
+    }
+}

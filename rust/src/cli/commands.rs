@@ -1,0 +1,243 @@
+//! Subcommand implementations.
+
+use crate::analytic;
+use crate::cli::args::Args;
+use crate::config::SsdConfig;
+use crate::coordinator::campaign::run_trace;
+use crate::coordinator::experiments as exp;
+use crate::coordinator::pool::ThreadPool;
+use crate::dse;
+use crate::host::trace::{RequestKind, Trace, TraceGen};
+use crate::iface::timing::{IfaceParams, InterfaceKind};
+use crate::report;
+use crate::runtime::{iface_params_row, Runtime, MC_S};
+use crate::util::prng::Prng;
+use anyhow::{anyhow, Context, Result};
+
+fn pool(args: &mut Args) -> Result<ThreadPool> {
+    Ok(ThreadPool::new(args.get_usize("threads", 0).map_err(anyhow::Error::msg)?))
+}
+
+fn requests(args: &mut Args) -> Result<usize> {
+    args.get_usize("requests", exp::DEFAULT_REQUESTS)
+        .map_err(anyhow::Error::msg)
+}
+
+pub fn cmd_table2(_args: &mut Args) -> Result<()> {
+    println!("{}", exp::table2_text());
+    Ok(())
+}
+
+pub fn cmd_sweep_ways(args: &mut Args) -> Result<()> {
+    let n = requests(args)?;
+    let p = pool(args)?;
+    let cells = exp::run_table3(n, &p);
+    println!(
+        "{}",
+        exp::render_cells("E2 / Fig. 8 + Table 3 — way-interleaving sweep (MB/s)", &cells, false)
+    );
+    println!("{}", exp::headline(&cells));
+    Ok(())
+}
+
+pub fn cmd_sweep_channels(args: &mut Args) -> Result<()> {
+    let n = requests(args)?;
+    let p = pool(args)?;
+    let cells = exp::run_table4(n, &p);
+    println!(
+        "{}",
+        exp::render_cells(
+            "E3 / Fig. 9 + Table 4 — channel/way configurations at constant capacity (MB/s)",
+            &cells,
+            false
+        )
+    );
+    Ok(())
+}
+
+pub fn cmd_energy(args: &mut Args) -> Result<()> {
+    let n = requests(args)?;
+    let p = pool(args)?;
+    let cells = exp::run_table5(n, &p);
+    println!(
+        "{}",
+        exp::render_cells("E4 / Fig. 10 + Table 5 — controller energy per byte (nJ/B, SLC)", &cells, true)
+    );
+    Ok(())
+}
+
+pub fn cmd_paper(args: &mut Args) -> Result<()> {
+    let n = requests(args)?;
+    let p = pool(args)?;
+    println!("{}", exp::table2_text());
+    let t3 = exp::run_table3(n, &p);
+    println!(
+        "{}",
+        exp::render_cells("E2 / Fig. 8 + Table 3 — way-interleaving sweep (MB/s)", &t3, false)
+    );
+    let t4 = exp::run_table4(n, &p);
+    println!(
+        "{}",
+        exp::render_cells("E3 / Fig. 9 + Table 4 — channel sweep (MB/s)", &t4, false)
+    );
+    let t5 = exp::run_table5(n, &p);
+    println!(
+        "{}",
+        exp::render_cells("E4 / Fig. 10 + Table 5 — energy (nJ/B, SLC)", &t5, true)
+    );
+    println!("{}", exp::headline(&t3));
+    Ok(())
+}
+
+pub fn cmd_dse(args: &mut Args) -> Result<()> {
+    let mut space = dse::Space::default();
+    if args.has("sweep-tbyte") {
+        space.t_byte_sweep = vec![12.0, 10.0, 8.0, 6.0, 4.0];
+    }
+    let runtime = if args.has("native") {
+        None
+    } else {
+        let dir = Runtime::default_dir();
+        if Runtime::artifacts_present(&dir) {
+            Some(Runtime::load(&dir).context("loading AOT artifacts")?)
+        } else {
+            eprintln!(
+                "note: artifacts missing in {} — using the native analytic model (run `make artifacts` for the PJRT path)",
+                dir.display()
+            );
+            None
+        }
+    };
+    let (cands, backend) = dse::evaluate(&space, runtime.as_ref())?;
+    let ranked = dse::rank(cands);
+    let front = dse::pareto_front(&ranked);
+    println!("DSE over {} candidates (backend: {backend:?})\n", ranked.len());
+    let mut t = report::Table::new(vec![
+        "iface", "cell", "ch", "ways", "t_BYTE", "read MB/s", "write MB/s", "W nJ/B", "area", "merit",
+    ]);
+    for c in ranked.iter().take(15) {
+        t.row(vec![
+            c.iface.name().to_string(),
+            c.cell.name().to_string(),
+            c.channels.to_string(),
+            c.ways.to_string(),
+            c.t_byte_ns.map_or("12".into(), |v| format!("{v:.0}")),
+            format!("{:.2}", c.read_bw),
+            format!("{:.2}", c.write_bw),
+            format!("{:.3}", c.write_nj_b),
+            format!("{:.2}", c.area_proxy()),
+            format!("{:.2}", c.merit()),
+        ]);
+    }
+    println!("top 15 by bandwidth-per-area merit:\n{}", t.render());
+    println!("Pareto front (read BW / write BW / area / write energy): {} designs", front.len());
+    for c in &front {
+        println!(
+            "  {:<9} {} {}ch x {:>2}way  r={:>7.2} w={:>6.2} MB/s  {:.3} nJ/B",
+            c.iface.name(),
+            c.cell.name(),
+            c.channels,
+            c.ways,
+            c.read_bw,
+            c.write_bw,
+            c.write_nj_b
+        );
+    }
+    Ok(())
+}
+
+pub fn cmd_pvt(args: &mut Args) -> Result<()> {
+    let margin = args.get_f64("margin", 1.02).map_err(anyhow::Error::msg)?;
+    let dir = Runtime::default_dir();
+    let corner = iface_params_row(&IfaceParams::default());
+    let probs = if Runtime::artifacts_present(&dir) {
+        let rt = Runtime::load(&dir)?;
+        let mut rng = Prng::new(0xA3);
+        let z: Vec<f32> = (0..MC_S * 4).map(|_| rng.next_gaussian() as f32).collect();
+        let out = rt.mc_batch(&[corner], &z, [0.10, 0.05, margin])?;
+        ("HLO/PJRT", out[0])
+    } else {
+        let pvt = crate::iface::pvt::PvtModel::default();
+        let p = IfaceParams::default();
+        let f = |k: InterfaceKind| {
+            pvt.violation_probability(k, &p, p.tp_min_ns(k) * margin, 50_000, 0xA3)
+        };
+        (
+            "native",
+            [
+                f(InterfaceKind::Conv),
+                f(InterfaceKind::SyncOnly),
+                f(InterfaceKind::Proposed),
+            ],
+        )
+    };
+    println!(
+        "A3 — PVT Monte Carlo at margin {margin} (backend: {})\n\
+         setup-violation probability per interface:\n\
+         \x20 CONV      {:.4}\n\
+         \x20 SYNC_ONLY {:.4}\n\
+         \x20 PROPOSED  {:.4}\n\n\
+         (the DVS designs track variation with the data — the paper's §2.3.3 claim)",
+        probs.0, probs.1[0], probs.1[1], probs.1[2]
+    );
+    Ok(())
+}
+
+pub fn cmd_simulate(args: &mut Args) -> Result<()> {
+    let path = args.require("config").map_err(anyhow::Error::msg)?;
+    let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
+    let cfg = SsdConfig::from_toml(&text).map_err(anyhow::Error::msg)?;
+    let n = requests(args)?;
+    let mode = match args.get("mode").as_deref() {
+        Some("read") => RequestKind::Read,
+        _ => RequestKind::Write,
+    };
+    let rep = crate::coordinator::campaign::Campaign::new(cfg, mode, n).run();
+    println!("{}", report::summarize(&rep));
+    Ok(())
+}
+
+pub fn cmd_trace_gen(args: &mut Args) -> Result<()> {
+    let out = args.require("out").map_err(anyhow::Error::msg)?;
+    let n = requests(args)?;
+    let gen = TraceGen::default();
+    let mode = args.get("mode").unwrap_or_else(|| "write".into());
+    let trace = match mode.as_str() {
+        "write" => gen.sequential(RequestKind::Write, n),
+        "read" => gen.sequential(RequestKind::Read, n),
+        "mixed" => gen.mixed_sequential(n, 0.5, 1),
+        "random-read" => gen.random(RequestKind::Read, n, 1 << 30, 1),
+        "random-write" => gen.random(RequestKind::Write, n, 1 << 30, 1),
+        other => return Err(anyhow!("unknown trace mode {other}")),
+    };
+    std::fs::write(&out, trace.to_text()).with_context(|| format!("writing {out}"))?;
+    println!("wrote {} requests ({} bytes of payload) to {out}", trace.len(), trace.total_bytes());
+    Ok(())
+}
+
+pub fn cmd_replay(args: &mut Args) -> Result<()> {
+    let path = args.require("trace").map_err(anyhow::Error::msg)?;
+    let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
+    let trace = Trace::from_text(&text).map_err(anyhow::Error::msg)?;
+    let cfg = match args.get("config") {
+        Some(cpath) => {
+            let ctext = std::fs::read_to_string(&cpath).with_context(|| format!("reading {cpath}"))?;
+            SsdConfig::from_toml(&ctext).map_err(anyhow::Error::msg)?
+        }
+        None => SsdConfig::default(),
+    };
+    // Report both DES measurement and the analytic prediction.
+    let rep = run_trace(&cfg, &trace);
+    println!("{}", report::summarize(&rep));
+    let mode = if rep.mode == "read" {
+        RequestKind::Read
+    } else {
+        RequestKind::Write
+    };
+    let (ana_bw, ana_e) = analytic::evaluate(&cfg, mode);
+    println!(
+        "analytic steady-state prediction: {ana_bw:.2} MB/s, {ana_e:.3} nJ/B (DES delta {:+.1}%)",
+        (rep.bandwidth_mbps - ana_bw) / ana_bw * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! Command-line interface (hand-rolled; clap is unavailable offline).
+//!
+//! Subcommands map one-to-one onto the experiment index in DESIGN.md:
+//!
+//! ```text
+//! ddrnand table2                      E1: frequency determination
+//! ddrnand sweep-ways [...]            E2: Fig. 8 / Table 3
+//! ddrnand sweep-channels [...]        E3: Fig. 9 / Table 4
+//! ddrnand energy [...]                E4: Fig. 10 / Table 5
+//! ddrnand paper [...]                 E1–E5 in one go
+//! ddrnand dse [--sweep-tbyte] [--native]   DSE through the AOT artifact
+//! ddrnand pvt [--margin X]            A3: PVT Monte Carlo ablation
+//! ddrnand simulate --config FILE      one simulation from a TOML config
+//! ddrnand trace-gen --out FILE [...]  generate a workload trace
+//! ddrnand replay --trace FILE [...]   replay a trace file
+//! ```
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;
+
+/// Entry point: parse and dispatch. Returns the process exit code.
+pub fn run(argv: &[String]) -> i32 {
+    let mut args = match Args::parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", usage());
+            return 2;
+        }
+    };
+    let Some(cmd) = args.subcommand.clone() else {
+        println!("{}", usage());
+        return 0;
+    };
+    let result = match cmd.as_str() {
+        "table2" => commands::cmd_table2(&mut args),
+        "sweep-ways" => commands::cmd_sweep_ways(&mut args),
+        "sweep-channels" => commands::cmd_sweep_channels(&mut args),
+        "energy" => commands::cmd_energy(&mut args),
+        "paper" => commands::cmd_paper(&mut args),
+        "dse" => commands::cmd_dse(&mut args),
+        "pvt" => commands::cmd_pvt(&mut args),
+        "simulate" => commands::cmd_simulate(&mut args),
+        "trace-gen" => commands::cmd_trace_gen(&mut args),
+        "replay" => commands::cmd_replay(&mut args),
+        other => {
+            eprintln!("unknown subcommand: {other}\n\n{}", usage());
+            return 2;
+        }
+    };
+    match result {
+        Ok(()) => {
+            if let Some(unused) = args.first_unused() {
+                eprintln!("warning: unused flag {unused}");
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+pub fn usage() -> String {
+    "ddrnand — DDR NAND SSD simulator (reproduction of Chung et al., 2015)
+
+USAGE: ddrnand <SUBCOMMAND> [FLAGS]
+
+SUBCOMMANDS
+  table2           E1: operating-frequency determination (Table 2, §5.2)
+  sweep-ways       E2: way-interleaving sweep (Fig. 8 / Table 3)
+  sweep-channels   E3: channel-config sweep (Fig. 9 / Table 4)
+  energy           E4: energy per byte (Fig. 10 / Table 5)
+  paper            E1–E5: all experiments, paper-vs-measured
+  dse              design-space exploration via the AOT analytic model
+  pvt              A3: PVT Monte Carlo ablation
+  simulate         run one simulation from a TOML config
+  trace-gen        generate a workload trace file
+  replay           replay a trace file through a configuration
+
+COMMON FLAGS
+  --requests N     requests per data point (default 400)
+  --threads N      worker threads for sweeps (default: all cores)
+  --csv            emit CSV instead of a rendered table
+  --config FILE    TOML config (simulate/replay)
+  --trace FILE     trace path (replay/trace-gen)
+  --native         dse: force the pure-Rust model (skip PJRT)
+  --sweep-tbyte    dse: sweep t_BYTE (A2 metal-layer ablation)
+  --margin X       pvt: clock-period margin (default 1.02)
+"
+    .to_string()
+}

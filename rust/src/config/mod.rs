@@ -1,0 +1,283 @@
+//! SSD configuration schema, presets and TOML loading.
+
+pub mod toml;
+
+use crate::controller::cache::CacheConfig;
+use crate::host::sata::SataGen;
+use crate::iface::timing::{IfaceParams, InterfaceKind};
+use crate::nand::datasheet::{CellType, NandTiming};
+use crate::util::time::Ps;
+
+/// Which FTL mapping scheme to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FtlKind {
+    /// Page-level mapping with striped allocation (default; maximal
+    /// interleaving on sequential workloads).
+    PageMap,
+    /// BAST-style hybrid log-block mapping [9].
+    Hybrid,
+}
+
+/// Full configuration of one simulated SSD.
+#[derive(Debug, Clone)]
+pub struct SsdConfig {
+    /// Controller↔flash interface under test.
+    pub iface: InterfaceKind,
+    /// Flash cell type (selects datasheet timing).
+    pub cell: CellType,
+    /// Number of channels (channel striping degree).
+    pub channels: u16,
+    /// Ways per channel (way interleaving degree).
+    pub ways: u16,
+    /// Blocks per chip (capacity knob for FTL experiments; the paper's
+    /// bandwidth runs need only enough to hold the trace).
+    pub blocks_per_chip: u32,
+    /// Interface timing parameters (Table 2).
+    pub params: IfaceParams,
+    /// NAND timing override; `None` uses the datasheet values for `cell`.
+    pub nand: Option<NandTiming>,
+    /// Host link.
+    pub sata: SataGen,
+    /// Host queue depth (outstanding requests; SATA2 NCQ allows up to 32).
+    pub queue_depth: u32,
+    /// DRAM cache configuration.
+    pub cache: CacheConfig,
+    /// FTL scheme.
+    pub ftl: FtlKind,
+    /// Logical capacity as a fraction of physical (over-provisioning).
+    pub utilization: f64,
+    /// Extra controller-side bus occupancy after each program completes
+    /// (status polling + FTL metadata); calibration constant.
+    pub program_status_overhead: Ps,
+    /// PRNG seed for workload/ordering decisions.
+    pub seed: u64,
+}
+
+impl Default for SsdConfig {
+    fn default() -> Self {
+        SsdConfig {
+            iface: InterfaceKind::Proposed,
+            cell: CellType::Slc,
+            channels: 1,
+            ways: 1,
+            blocks_per_chip: 4096,
+            params: IfaceParams::default(),
+            nand: None,
+            sata: SataGen::sata2(),
+            queue_depth: 4,
+            cache: CacheConfig::default(),
+            ftl: FtlKind::PageMap,
+            utilization: 0.9,
+            program_status_overhead: Ps::us(2),
+            seed: 0xDD12_7A5D,
+        }
+    }
+}
+
+impl SsdConfig {
+    /// The paper's single-channel way-interleaving sweep point (Fig. 8).
+    pub fn paper_way_sweep(iface: InterfaceKind, cell: CellType, ways: u16) -> SsdConfig {
+        SsdConfig {
+            iface,
+            cell,
+            channels: 1,
+            ways,
+            ..SsdConfig::default()
+        }
+    }
+
+    /// The paper's constant-capacity channel sweep point (Fig. 9):
+    /// channels × ways = 16.
+    pub fn paper_channel_sweep(
+        iface: InterfaceKind,
+        cell: CellType,
+        channels: u16,
+    ) -> SsdConfig {
+        assert!(16 % channels == 0, "channels must divide 16");
+        SsdConfig {
+            iface,
+            cell,
+            channels,
+            ways: 16 / channels,
+            ..SsdConfig::default()
+        }
+    }
+
+    /// Effective NAND timing.
+    pub fn nand_timing(&self) -> NandTiming {
+        self.nand.unwrap_or_else(|| NandTiming::for_cell(self.cell))
+    }
+
+    /// Total chips in the array.
+    pub fn chips(&self) -> u32 {
+        self.channels as u32 * self.ways as u32
+    }
+
+    /// Validate invariants; returns a list of problems (empty = ok).
+    pub fn validate(&self) -> Vec<String> {
+        let mut errs = Vec::new();
+        if self.channels == 0 {
+            errs.push("channels must be >= 1".into());
+        }
+        if self.ways == 0 {
+            errs.push("ways must be >= 1".into());
+        }
+        if self.blocks_per_chip < 4 {
+            errs.push("blocks_per_chip must be >= 4 (need GC headroom)".into());
+        }
+        if !(0.0..=1.0).contains(&self.utilization) {
+            errs.push("utilization must be in [0,1]".into());
+        }
+        if self.queue_depth == 0 {
+            errs.push("queue_depth must be >= 1".into());
+        }
+        if !(0.0..=0.5).contains(&self.params.alpha) {
+            errs.push("alpha must be in [0, 1/2] (Eq. 1)".into());
+        }
+        errs
+    }
+
+    /// Load from the TOML subset. Unknown keys are rejected to catch typos.
+    pub fn from_toml(text: &str) -> Result<SsdConfig, String> {
+        let doc = toml::parse(text)?;
+        let mut cfg = SsdConfig::default();
+        for (key, val) in &doc.entries {
+            match key.as_str() {
+                "iface" => {
+                    cfg.iface = match val.as_str() {
+                        Some("conv") | Some("CONV") => InterfaceKind::Conv,
+                        Some("sync_only") | Some("SYNC_ONLY") => InterfaceKind::SyncOnly,
+                        Some("proposed") | Some("PROPOSED") => InterfaceKind::Proposed,
+                        other => return Err(format!("bad iface {other:?}")),
+                    }
+                }
+                "cell" => {
+                    cfg.cell = match val.as_str() {
+                        Some("slc") | Some("SLC") => CellType::Slc,
+                        Some("mlc") | Some("MLC") => CellType::Mlc,
+                        other => return Err(format!("bad cell {other:?}")),
+                    }
+                }
+                "channels" => cfg.channels = req_u16(key, val)?,
+                "ways" => cfg.ways = req_u16(key, val)?,
+                "blocks_per_chip" => cfg.blocks_per_chip = req_u32(key, val)?,
+                "queue_depth" => cfg.queue_depth = req_u32(key, val)?,
+                "utilization" => cfg.utilization = req_f64(key, val)?,
+                "seed" => cfg.seed = req_u64(key, val)?,
+                "ftl" => {
+                    cfg.ftl = match val.as_str() {
+                        Some("page_map") => FtlKind::PageMap,
+                        Some("hybrid") => FtlKind::Hybrid,
+                        other => return Err(format!("bad ftl {other:?}")),
+                    }
+                }
+                "params.alpha" => cfg.params.alpha = req_f64(key, val)?,
+                "params.t_byte_ns" => cfg.params.t_byte_ns = req_f64(key, val)?,
+                "params.t_diff_ns" => cfg.params.t_diff_ns = req_f64(key, val)?,
+                "params.t_rea_ns" => cfg.params.t_rea_ns = req_f64(key, val)?,
+                "params.t_out_ns" => cfg.params.t_out_ns = req_f64(key, val)?,
+                "params.t_in_ns" => cfg.params.t_in_ns = req_f64(key, val)?,
+                "sata.bandwidth_mbps" => cfg.sata.bandwidth_mbps = req_f64(key, val)?,
+                "sata.command_overhead_us" => {
+                    cfg.sata.command_overhead = Ps::from_us_f64(req_f64(key, val)?)
+                }
+                "cache.capacity_pages" => cfg.cache.capacity_pages = req_u32(key, val)?,
+                "cache.write_back" => {
+                    cfg.cache.write_back =
+                        val.as_bool().ok_or_else(|| format!("{key}: want bool"))?
+                }
+                other => return Err(format!("unknown config key: {other}")),
+            }
+        }
+        let errs = cfg.validate();
+        if !errs.is_empty() {
+            return Err(errs.join("; "));
+        }
+        Ok(cfg)
+    }
+}
+
+fn req_f64(key: &str, v: &toml::Value) -> Result<f64, String> {
+    v.as_float().ok_or_else(|| format!("{key}: want number"))
+}
+fn req_u64(key: &str, v: &toml::Value) -> Result<u64, String> {
+    v.as_int()
+        .filter(|&i| i >= 0)
+        .map(|i| i as u64)
+        .ok_or_else(|| format!("{key}: want non-negative integer"))
+}
+fn req_u32(key: &str, v: &toml::Value) -> Result<u32, String> {
+    req_u64(key, v)?
+        .try_into()
+        .map_err(|_| format!("{key}: out of range"))
+}
+fn req_u16(key: &str, v: &toml::Value) -> Result<u16, String> {
+    req_u64(key, v)?
+        .try_into()
+        .map_err(|_| format!("{key}: out of range"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        assert!(SsdConfig::default().validate().is_empty());
+    }
+
+    #[test]
+    fn paper_presets() {
+        let c = SsdConfig::paper_way_sweep(InterfaceKind::Conv, CellType::Slc, 16);
+        assert_eq!(c.channels, 1);
+        assert_eq!(c.ways, 16);
+        let c = SsdConfig::paper_channel_sweep(InterfaceKind::Proposed, CellType::Mlc, 4);
+        assert_eq!((c.channels, c.ways), (4, 4));
+        assert_eq!(c.chips(), 16);
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let cfg = SsdConfig::from_toml(
+            r#"
+iface = "proposed"
+cell = "mlc"
+channels = 2
+ways = 8
+queue_depth = 8
+[sata]
+bandwidth_mbps = 600.0
+[cache]
+capacity_pages = 1024
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.iface, InterfaceKind::Proposed);
+        assert_eq!(cfg.cell, CellType::Mlc);
+        assert_eq!((cfg.channels, cfg.ways), (2, 8));
+        assert_eq!(cfg.sata.bandwidth_mbps, 600.0);
+        assert_eq!(cfg.cache.capacity_pages, 1024);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let err = SsdConfig::from_toml("wayz = 4").unwrap_err();
+        assert!(err.contains("unknown config key"), "{err}");
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        assert!(SsdConfig::from_toml("channels = 0").is_err());
+        assert!(SsdConfig::from_toml("utilization = 1.5").is_err());
+        assert!(SsdConfig::from_toml(r#"iface = "quantum""#).is_err());
+    }
+
+    #[test]
+    fn nand_timing_follows_cell() {
+        let mut c = SsdConfig::default();
+        c.cell = CellType::Mlc;
+        assert_eq!(c.nand_timing(), NandTiming::mlc());
+        c.nand = Some(NandTiming::slc());
+        assert_eq!(c.nand_timing(), NandTiming::slc());
+    }
+}

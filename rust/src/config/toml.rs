@@ -1,0 +1,230 @@
+//! Minimal TOML-subset parser (serde/toml are unavailable offline).
+//!
+//! Supported: `[table]` / `[a.b]` headers, `key = value` pairs with string,
+//! integer, float, boolean and flat-array values, `#` comments. This covers
+//! every configuration file the project ships; unsupported syntax produces
+//! a descriptive error rather than silent misparsing.
+
+use std::collections::BTreeMap;
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: dotted-path key → value. Table headers prefix keys,
+/// so `[sim]\nways = 4` yields `"sim.ways"`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Doc {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.entries.get(path)
+    }
+    pub fn get_str(&self, path: &str) -> Option<&str> {
+        self.get(path).and_then(Value::as_str)
+    }
+    pub fn get_int(&self, path: &str) -> Option<i64> {
+        self.get(path).and_then(Value::as_int)
+    }
+    pub fn get_float(&self, path: &str) -> Option<f64> {
+        self.get(path).and_then(Value::as_float)
+    }
+    pub fn get_bool(&self, path: &str) -> Option<bool> {
+        self.get(path).and_then(Value::as_bool)
+    }
+}
+
+/// Parse a document.
+pub fn parse(text: &str) -> Result<Doc, String> {
+    let mut doc = Doc::default();
+    let mut prefix = String::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated table header", ln + 1))?
+                .trim();
+            if name.is_empty() {
+                return Err(format!("line {}: empty table name", ln + 1));
+            }
+            prefix = format!("{name}.");
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| format!("line {}: expected key = value", ln + 1))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(format!("line {}: empty key", ln + 1));
+        }
+        let val = parse_value(line[eq + 1..].trim())
+            .map_err(|e| format!("line {}: {e}", ln + 1))?;
+        doc.entries.insert(format!("{prefix}{key}"), val);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        if inner.contains('"') {
+            return Err("embedded quote in string".into());
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let items: Result<Vec<Value>, String> =
+            inner.split(',').map(|p| parse_value(p.trim())).collect();
+        return Ok(Value::Array(items?));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value: {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_tables() {
+        let doc = parse(
+            r#"
+# comment
+name = "slc-16way"
+ways = 16
+alpha = 0.5
+cache = false
+
+[sata]
+bandwidth = 300.0
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("name"), Some("slc-16way"));
+        assert_eq!(doc.get_int("ways"), Some(16));
+        assert_eq!(doc.get_float("alpha"), Some(0.5));
+        assert_eq!(doc.get_bool("cache"), Some(false));
+        assert_eq!(doc.get_float("sata.bandwidth"), Some(300.0));
+    }
+
+    #[test]
+    fn arrays() {
+        let doc = parse("ways = [1, 2, 4, 8, 16]").unwrap();
+        match doc.get("ways").unwrap() {
+            Value::Array(v) => {
+                let ints: Vec<i64> = v.iter().map(|x| x.as_int().unwrap()).collect();
+                assert_eq!(ints, vec![1, 2, 4, 8, 16]);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let doc = parse("x = 3").unwrap();
+        assert_eq!(doc.get_float("x"), Some(3.0));
+    }
+
+    #[test]
+    fn comments_inside_strings_kept() {
+        let doc = parse(r##"s = "a#b" # trailing"##).unwrap();
+        assert_eq!(doc.get_str("s"), Some("a#b"));
+    }
+
+    #[test]
+    fn underscored_ints() {
+        let doc = parse("n = 1_000_000").unwrap();
+        assert_eq!(doc.get_int("n"), Some(1_000_000));
+    }
+
+    #[test]
+    fn errors_are_located() {
+        let err = parse("[unclosed").unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+        let err = parse("x 5").unwrap_err();
+        assert!(err.contains("expected key = value"));
+        let err = parse("x = @@").unwrap_err();
+        assert!(err.contains("cannot parse value"));
+    }
+
+    #[test]
+    fn dotted_table_names() {
+        let doc = parse("[a.b]\nc = 1").unwrap();
+        assert_eq!(doc.get_int("a.b.c"), Some(1));
+    }
+}

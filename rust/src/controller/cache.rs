@@ -1,0 +1,219 @@
+//! DRAM cache buffer (§2.2.1: "in most commercially available SSDs, DRAM is
+//! used as a cache buffer to hide the long access latency of NAND").
+//!
+//! A page-granular write-back LRU cache. On a hit, the NAND path is skipped
+//! entirely (the paper's point); evictions of dirty pages generate flush
+//! writes. Disabled (capacity 0) for the paper's Table 3–5 runs, which
+//! measure the raw NAND path; exercised by its own tests and ablations.
+
+use std::collections::HashMap;
+
+/// Cache configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheConfig {
+    /// Capacity in pages (0 disables the cache).
+    pub capacity_pages: u32,
+    /// If true, writes are absorbed and flushed on eviction (write-back);
+    /// otherwise writes always go to NAND (write-through).
+    pub write_back: bool,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig {
+            capacity_pages: 0,
+            write_back: true,
+        }
+    }
+}
+
+/// Result of a cache access.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheOutcome {
+    /// Serviced from DRAM; no NAND access needed.
+    Hit,
+    /// Must access NAND; carries an optional dirty eviction to flush first.
+    Miss { evict_flush: Option<u64> },
+    /// Cache disabled.
+    Bypass,
+}
+
+/// Page-granular LRU cache with dirty tracking.
+pub struct DramCache {
+    cfg: CacheConfig,
+    /// lpn -> (lru tick, dirty)
+    entries: HashMap<u64, (u64, bool)>,
+    tick: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub flushes: u64,
+}
+
+impl DramCache {
+    pub fn new(cfg: CacheConfig) -> DramCache {
+        DramCache {
+            cfg,
+            entries: HashMap::new(),
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            flushes: 0,
+        }
+    }
+
+    fn touch(&mut self, lpn: u64, dirty: bool) {
+        self.tick += 1;
+        let e = self.entries.entry(lpn).or_insert((0, false));
+        e.0 = self.tick;
+        e.1 |= dirty;
+    }
+
+    /// Evict the LRU entry; returns `Some(lpn)` if it was dirty (needs
+    /// flushing to NAND).
+    fn evict_lru(&mut self) -> Option<u64> {
+        let (&lpn, &(_, dirty)) = self.entries.iter().min_by_key(|(_, (t, _))| *t)?;
+        self.entries.remove(&lpn);
+        if dirty {
+            self.flushes += 1;
+            Some(lpn)
+        } else {
+            None
+        }
+    }
+
+    fn insert(&mut self, lpn: u64, dirty: bool) -> Option<u64> {
+        let mut flush = None;
+        if self.entries.len() as u32 >= self.cfg.capacity_pages && !self.entries.contains_key(&lpn)
+        {
+            flush = self.evict_lru();
+        }
+        self.touch(lpn, dirty);
+        flush
+    }
+
+    /// Access for read.
+    pub fn read(&mut self, lpn: u64) -> CacheOutcome {
+        if self.cfg.capacity_pages == 0 {
+            return CacheOutcome::Bypass;
+        }
+        if self.entries.contains_key(&lpn) {
+            self.hits += 1;
+            self.touch(lpn, false);
+            CacheOutcome::Hit
+        } else {
+            self.misses += 1;
+            let evict_flush = self.insert(lpn, false);
+            CacheOutcome::Miss { evict_flush }
+        }
+    }
+
+    /// Access for write.
+    pub fn write(&mut self, lpn: u64) -> CacheOutcome {
+        if self.cfg.capacity_pages == 0 || !self.cfg.write_back {
+            return CacheOutcome::Bypass;
+        }
+        if self.entries.contains_key(&lpn) {
+            self.hits += 1;
+            self.touch(lpn, true);
+            CacheOutcome::Hit
+        } else {
+            self.misses += 1;
+            let evict_flush = self.insert(lpn, true);
+            CacheOutcome::Miss { evict_flush }
+        }
+    }
+
+    /// Dirty pages remaining (to flush at shutdown).
+    pub fn dirty_pages(&self) -> Vec<u64> {
+        let mut v: Vec<u64> = self
+            .entries
+            .iter()
+            .filter(|(_, (_, d))| *d)
+            .map(|(&l, _)| l)
+            .collect();
+        v.sort();
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache(cap: u32) -> DramCache {
+        DramCache::new(CacheConfig {
+            capacity_pages: cap,
+            write_back: true,
+        })
+    }
+
+    #[test]
+    fn disabled_cache_bypasses() {
+        let mut c = cache(0);
+        assert_eq!(c.read(1), CacheOutcome::Bypass);
+        assert_eq!(c.write(1), CacheOutcome::Bypass);
+    }
+
+    #[test]
+    fn read_after_write_hits() {
+        let mut c = cache(4);
+        assert!(matches!(c.write(7), CacheOutcome::Miss { .. }));
+        assert_eq!(c.read(7), CacheOutcome::Hit);
+        assert_eq!(c.hits, 1);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let mut c = cache(2);
+        c.write(1);
+        c.write(2);
+        c.read(1); // 2 becomes LRU
+        match c.write(3) {
+            CacheOutcome::Miss { evict_flush } => assert_eq!(evict_flush, Some(2)),
+            o => panic!("unexpected {o:?}"),
+        }
+    }
+
+    #[test]
+    fn clean_eviction_needs_no_flush() {
+        let mut c = cache(1);
+        c.read(1); // clean
+        match c.read(2) {
+            CacheOutcome::Miss { evict_flush } => assert_eq!(evict_flush, None),
+            o => panic!("unexpected {o:?}"),
+        }
+    }
+
+    #[test]
+    fn dirty_pages_listed() {
+        let mut c = cache(4);
+        c.write(3);
+        c.write(1);
+        c.read(2);
+        assert_eq!(c.dirty_pages(), vec![1, 3]);
+    }
+
+    #[test]
+    fn hit_rate() {
+        let mut c = cache(8);
+        c.write(1);
+        c.read(1);
+        c.read(1);
+        assert!((c.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+}

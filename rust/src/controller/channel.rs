@@ -1,0 +1,158 @@
+//! Per-channel state: the shared bus (NAND_IF + ECC) and the round-robin
+//! way pointer implementing way interleaving.
+
+use crate::controller::ecc::EccModel;
+use crate::controller::nand_if::NandIf;
+use crate::controller::way::WayState;
+use crate::util::time::Ps;
+
+/// One channel: a NAND_IF/ECC pair and its ways (Fig. 2 row).
+pub struct ChannelState {
+    pub bus: NandIf,
+    pub ecc: EccModel,
+    pub ways: Vec<WayState>,
+    /// Round-robin pointer: next way to consider for the bus.
+    rr_next: usize,
+    /// Set when a bus-free event is already scheduled (avoid duplicates).
+    pub kick_scheduled: bool,
+}
+
+impl ChannelState {
+    pub fn new(bus: NandIf, ecc: EccModel, ways: Vec<WayState>) -> ChannelState {
+        ChannelState {
+            bus,
+            ecc,
+            ways,
+            rr_next: 0,
+            kick_scheduled: false,
+        }
+    }
+
+    /// Pick the next way to grant the bus: highest scheduling class first
+    /// (status > command dispatch > data-out; see
+    /// [`crate::controller::way::WayState::bus_class`]), round-robin within
+    /// a class. Advances the pointer past the chosen way.
+    pub fn next_way_wanting_bus(&mut self, now: Ps) -> Option<usize> {
+        let n = self.ways.len();
+        let mut best: Option<(u8, usize, usize)> = None; // (class, rr-dist, idx)
+        for off in 0..n {
+            let i = (self.rr_next + off) % n;
+            if let Some(class) = self.ways[i].bus_class(now) {
+                if class == 0 {
+                    self.rr_next = (i + 1) % n;
+                    return Some(i);
+                }
+                match best {
+                    Some((c, _, _)) if c <= class => {}
+                    _ => best = Some((class, off, i)),
+                }
+            }
+        }
+        best.map(|(_, _, i)| {
+            self.rr_next = (i + 1) % n;
+            i
+        })
+    }
+
+    /// Earliest future time any way will want the bus (array completions),
+    /// used to schedule wake-ups when the bus idles.
+    pub fn next_wakeup(&self, now: Ps) -> Option<Ps> {
+        self.ways
+            .iter()
+            .filter(|w| w.inflight.is_some() && w.array_done_at > now)
+            .map(|w| w.array_done_at)
+            .min()
+    }
+
+    /// All ways idle and queues empty?
+    pub fn is_drained(&self) -> bool {
+        self.ways.iter().all(|w| w.is_idle())
+    }
+
+    /// Total queued + in-flight jobs.
+    pub fn backlog(&self) -> usize {
+        self.ways.iter().map(|w| w.backlog()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::controller::way::{JobPhase, PageJob, PageJobKind};
+    use crate::iface::timing::{IfaceParams, InterfaceKind};
+    use crate::nand::chip::Chip;
+    use crate::nand::datasheet::NandTiming;
+
+    fn chan(nways: usize) -> ChannelState {
+        let ways = (0..nways)
+            .map(|_| WayState::new(Chip::new(NandTiming::slc(), 8)))
+            .collect();
+        ChannelState::new(
+            NandIf::new(&IfaceParams::default(), InterfaceKind::Proposed),
+            EccModel::default(),
+            ways,
+        )
+    }
+
+    fn job() -> PageJob {
+        PageJob {
+            req: 0,
+            kind: PageJobKind::Read,
+            block: 0,
+            page: 0,
+            bytes: 2048,
+            phase: JobPhase::Queued,
+        }
+    }
+
+    #[test]
+    fn round_robin_rotates() {
+        let mut c = chan(4);
+        for w in 0..4 {
+            c.ways[w].push(job());
+        }
+        // Consume the granted way's job each time, as the scheduler does.
+        let order: Vec<usize> = (0..4)
+            .map(|_| {
+                let w = c.next_way_wanting_bus(Ps::ZERO).unwrap();
+                c.ways[w].queue.pop_front();
+                w
+            })
+            .collect();
+        assert_eq!(order, vec![0, 1, 2, 3]);
+        // Pointer wraps.
+        c.ways[1].push(job());
+        assert_eq!(c.next_way_wanting_bus(Ps::ZERO), Some(1));
+    }
+
+    #[test]
+    fn skips_ways_not_wanting() {
+        let mut c = chan(4);
+        c.ways[2].push(job());
+        assert_eq!(c.next_way_wanting_bus(Ps::ZERO), Some(2));
+        c.ways[2].queue.pop_front();
+        assert_eq!(c.next_way_wanting_bus(Ps::ZERO), None);
+    }
+
+    #[test]
+    fn wakeup_is_earliest_array_completion() {
+        let mut c = chan(2);
+        let mut j = job();
+        j.phase = JobPhase::ArrayBusy;
+        c.ways[0].inflight = Some(j);
+        c.ways[0].array_done_at = Ps::us(30);
+        c.ways[1].inflight = Some(j);
+        c.ways[1].array_done_at = Ps::us(10);
+        assert_eq!(c.next_wakeup(Ps::ZERO), Some(Ps::us(10)));
+        assert_eq!(c.next_wakeup(Ps::us(20)), Some(Ps::us(30)));
+    }
+
+    #[test]
+    fn drained_accounting() {
+        let mut c = chan(2);
+        assert!(c.is_drained());
+        c.ways[0].push(job());
+        assert!(!c.is_drained());
+        assert_eq!(c.backlog(), 1);
+    }
+}

@@ -1,0 +1,106 @@
+//! Error-correction code (ECC) block latency model.
+//!
+//! Each channel has a dedicated ECC block (§2.2.1: "each channel requires a
+//! NAND interface block and an error correction code (ECC) block"). We model
+//! a BCH engine that processes data in 512-byte sectors; its per-sector
+//! latency is pipelined with, but accounted on, the channel's page path —
+//! this is the fixed per-page overhead `F` in DESIGN.md's calibration
+//! (4 µs for a 4-sector SLC page, 8 µs for an 8-sector MLC page).
+
+use crate::nand::datasheet::CellType;
+use crate::util::time::Ps;
+
+/// BCH ECC engine model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EccModel {
+    /// Codeword (sector) size in bytes.
+    pub sector_bytes: u32,
+    /// Correction capability in bits per sector (t of BCH(t)); affects
+    /// latency linearly in this model.
+    pub t_bits: u32,
+    /// Engine latency per sector at t_bits = 4 (SLC-grade). Calibration
+    /// constant (DESIGN.md §Calibration anchors).
+    pub base_sector_latency: Ps,
+}
+
+impl Default for EccModel {
+    fn default() -> Self {
+        EccModel {
+            sector_bytes: 512,
+            t_bits: 4,
+            base_sector_latency: Ps::ns(875),
+        }
+    }
+}
+
+impl EccModel {
+    /// ECC at a given correction strength; latency scales with t beyond
+    /// the t=4 base.
+    pub fn for_t(t_bits: u32) -> EccModel {
+        EccModel {
+            t_bits,
+            ..EccModel::default()
+        }
+    }
+
+    /// The strength the controller provisions per cell type: BCH(t=4) for
+    /// SLC, BCH(t=6) for MLC — the paper notes ECC is "essential for data
+    /// reliability, especially when the MLC flash is used" (§2.2.1).
+    pub fn for_cell(cell: CellType) -> EccModel {
+        match cell {
+            CellType::Slc => EccModel::for_t(4),
+            CellType::Mlc => EccModel::for_t(6),
+        }
+    }
+
+    /// Sectors in a page of `page_bytes` main data.
+    pub fn sectors(&self, page_bytes: u32) -> u32 {
+        page_bytes.div_ceil(self.sector_bytes)
+    }
+
+    /// Per-sector processing latency (scales with correction strength
+    /// beyond the base t=4).
+    pub fn sector_latency(&self) -> Ps {
+        // BCH decode latency grows ~linearly in t; normalize to t=4.
+        Ps((self.base_sector_latency.as_ps() as f64 * (self.t_bits as f64 / 4.0).max(1.0)) as i64)
+    }
+
+    /// Total engine occupancy to encode or decode one page.
+    pub fn page_latency(&self, page_bytes: u32) -> Ps {
+        self.sector_latency().times(self.sectors(page_bytes) as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slc_page_is_3500ns() {
+        let e = EccModel::for_cell(CellType::Slc);
+        assert_eq!(e.sectors(2048), 4);
+        assert_eq!(e.page_latency(2048), Ps::ns(3500));
+    }
+
+    #[test]
+    fn mlc_page_is_10500ns() {
+        // t=6 -> 1312.5 ns/sector x 8 sectors.
+        let e = EccModel::for_cell(CellType::Mlc);
+        assert_eq!(e.sectors(4096), 8);
+        assert_eq!(e.page_latency(4096), Ps::ns(10_500));
+    }
+
+    #[test]
+    fn partial_sector_rounds_up() {
+        let e = EccModel::default();
+        assert_eq!(e.sectors(513), 2);
+        assert_eq!(e.sectors(512), 1);
+    }
+
+    #[test]
+    fn stronger_code_costs_more() {
+        let weak = EccModel::for_t(4);
+        let strong = EccModel::for_t(8);
+        assert_eq!(strong.sector_latency(), weak.sector_latency() * 2);
+    }
+}

@@ -1,0 +1,307 @@
+//! Hybrid log-block FTL (BAST-style, after Kim et al. [9]).
+//!
+//! Logical blocks are block-mapped to *data blocks*; writes are appended to
+//! a small pool of page-mapped *log blocks*. When no log block is available,
+//! the FTL merges a (log, data) pair: valid pages from both are copied into
+//! a free block, then both are erased. §2.3.2: "data is always written to
+//! log blocks first. When all log blocks are used up, the FTL moves the data
+//! from log blocks to data blocks."
+
+use crate::controller::ftl::{Ftl, FtlOp, WritePlan};
+use crate::nand::geometry::Geometry;
+use std::collections::HashMap;
+
+const INVALID: u64 = u64::MAX;
+
+/// Per-log-block state: which logical block it serves and what it holds.
+struct LogBlock {
+    /// Physical block id (linear across the SSD).
+    pblock: u64,
+    /// Logical block it logs for.
+    lbn: u64,
+    /// next free page slot.
+    write_ptr: u32,
+    /// page-offset-in-lblock -> slot in this log block (latest wins).
+    map: HashMap<u32, u32>,
+}
+
+/// Hybrid (block + log) mapping FTL.
+///
+/// Physical blocks are addressed linearly (`pblock` in
+/// `0..blocks_per_chip × chips`); pages inside a logical block stripe across
+/// chips exactly like the page-map FTL, so interleaving behaviour is
+/// comparable.
+pub struct HybridFtl {
+    geom: Geometry,
+    /// Logical block -> data physical block (or INVALID).
+    data_map: Vec<u64>,
+    /// Active log blocks.
+    logs: Vec<LogBlock>,
+    /// Free physical blocks.
+    free_blocks: Vec<u64>,
+    /// Max number of simultaneous log blocks.
+    pub max_logs: usize,
+    merges: u64,
+    relocations: u64,
+    erases: u64,
+    free_pages: u64,
+}
+
+impl HybridFtl {
+    pub fn new(geom: Geometry, max_logs: usize) -> HybridFtl {
+        let total_blocks = geom.blocks_per_chip as u64 * geom.chips() as u64;
+        let logical_blocks = total_blocks - max_logs as u64 - 2; // spare for merges
+        HybridFtl {
+            data_map: vec![INVALID; logical_blocks as usize],
+            logs: Vec::new(),
+            free_blocks: (0..total_blocks).rev().collect(),
+            max_logs,
+            merges: 0,
+            relocations: 0,
+            erases: 0,
+            free_pages: geom.total_pages(),
+            geom,
+        }
+    }
+
+    pub fn logical_pages(&self) -> u64 {
+        self.data_map.len() as u64 * self.geom.pages_per_block as u64
+    }
+
+    pub fn merges(&self) -> u64 {
+        self.merges
+    }
+
+    /// ppn of page `page` within physical block `pblock`.
+    ///
+    /// Physical block b lives on chip (b % chips) as block (b / chips);
+    /// the ppn uses the canonical [`Geometry`] striped layout so the
+    /// coordinator's ppn→(channel, way) resolution is uniform across FTLs.
+    fn ppn(&self, pblock: u64, page: u32) -> u64 {
+        let chips = self.geom.chips() as u64;
+        let chip = pblock % chips;
+        let block = (pblock / chips) as u32;
+        let channel = (chip % self.geom.channels as u64) as u16;
+        let way = (chip / self.geom.channels as u64) as u16;
+        self.geom.ppn(crate::nand::geometry::PageAddr {
+            channel,
+            way,
+            block,
+            page,
+        })
+    }
+
+    fn chip_of(&self, pblock: u64) -> usize {
+        (pblock % self.geom.chips() as u64) as usize
+    }
+
+    fn alloc_block(&mut self) -> u64 {
+        self.free_blocks.pop().expect("hybrid FTL out of free blocks")
+    }
+
+    /// Merge the oldest log block with its data block.
+    fn merge_oldest(&mut self, out: &mut Vec<FtlOp>) {
+        let log = self.logs.remove(0);
+        let lbn = log.lbn;
+        let data = self.data_map[lbn as usize];
+        let new_block = self.alloc_block();
+        // Copy each page offset: prefer the log's copy, else the data block's.
+        for off in 0..self.geom.pages_per_block {
+            let src = if let Some(&slot) = log.map.get(&off) {
+                Some(self.ppn(log.pblock, slot))
+            } else if data != INVALID {
+                Some(self.ppn(data, off))
+            } else {
+                None
+            };
+            if let Some(src_ppn) = src {
+                out.push(FtlOp::ReadPage { ppn: src_ppn });
+                out.push(FtlOp::ProgramPage {
+                    ppn: self.ppn(new_block, off),
+                });
+                self.relocations += 1;
+            }
+        }
+        // Erase log + old data.
+        out.push(FtlOp::EraseBlock {
+            chip: self.chip_of(log.pblock),
+            block: (log.pblock / self.geom.chips() as u64) as u32,
+        });
+        self.free_blocks.push(log.pblock);
+        self.erases += 1;
+        if data != INVALID {
+            out.push(FtlOp::EraseBlock {
+                chip: self.chip_of(data),
+                block: (data / self.geom.chips() as u64) as u32,
+            });
+            self.free_blocks.push(data);
+            self.erases += 1;
+        }
+        self.data_map[lbn as usize] = new_block;
+        self.merges += 1;
+    }
+
+    fn log_for(&mut self, lbn: u64, out: &mut Vec<FtlOp>) -> usize {
+        if let Some(i) = self
+            .logs
+            .iter()
+            .position(|l| l.lbn == lbn && l.write_ptr < self.geom.pages_per_block)
+        {
+            return i;
+        }
+        // A full log for this lbn must merge before a new one opens.
+        if let Some(i) = self.logs.iter().position(|l| l.lbn == lbn) {
+            let log = self.logs.remove(i);
+            self.logs.insert(0, log); // make it the merge victim
+            self.merge_oldest(out);
+        } else if self.logs.len() >= self.max_logs {
+            self.merge_oldest(out);
+        }
+        let pblock = self.alloc_block();
+        self.logs.push(LogBlock {
+            pblock,
+            lbn,
+            write_ptr: 0,
+            map: HashMap::new(),
+        });
+        self.logs.len() - 1
+    }
+}
+
+impl Ftl for HybridFtl {
+    fn translate(&self, lpn: u64) -> Option<u64> {
+        let ppb = self.geom.pages_per_block as u64;
+        let lbn = lpn / ppb;
+        let off = (lpn % ppb) as u32;
+        // Log blocks take precedence (latest copy).
+        for l in self.logs.iter().rev() {
+            if l.lbn == lbn {
+                if let Some(&slot) = l.map.get(&off) {
+                    return Some(self.ppn(l.pblock, slot));
+                }
+            }
+        }
+        let data = *self.data_map.get(lbn as usize)?;
+        (data != INVALID).then(|| self.ppn(data, off))
+    }
+
+    fn plan_write(&mut self, lpn: u64) -> WritePlan {
+        let ppb = self.geom.pages_per_block as u64;
+        let lbn = lpn / ppb;
+        let off = (lpn % ppb) as u32;
+        assert!((lbn as usize) < self.data_map.len(), "lpn out of range");
+        let mut background = Vec::new();
+        let li = self.log_for(lbn, &mut background);
+        let (slot, pblock) = {
+            let l = &mut self.logs[li];
+            let slot = l.write_ptr;
+            l.write_ptr += 1;
+            l.map.insert(off, slot);
+            (slot, l.pblock)
+        };
+        let target = self.ppn(pblock, slot);
+        self.free_pages = self.free_pages.saturating_sub(1);
+        WritePlan {
+            background,
+            target_ppn: target,
+        }
+    }
+
+    fn geometry(&self) -> &Geometry {
+        &self.geom
+    }
+    fn free_pages(&self) -> u64 {
+        self.free_pages
+    }
+    fn relocations(&self) -> u64 {
+        self.relocations
+    }
+    fn erases(&self) -> u64 {
+        self.erases
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geom() -> Geometry {
+        Geometry {
+            channels: 2,
+            ways: 2,
+            blocks_per_chip: 16,
+            pages_per_block: 8,
+            page_bytes: 2048,
+        }
+    }
+
+    #[test]
+    fn write_then_read_roundtrip() {
+        let mut f = HybridFtl::new(geom(), 4);
+        assert_eq!(f.translate(5), None);
+        let p = f.plan_write(5).target_ppn;
+        assert_eq!(f.translate(5), Some(p));
+    }
+
+    #[test]
+    fn rewrite_goes_to_new_slot() {
+        let mut f = HybridFtl::new(geom(), 4);
+        let p1 = f.plan_write(5).target_ppn;
+        let p2 = f.plan_write(5).target_ppn;
+        assert_ne!(p1, p2);
+        assert_eq!(f.translate(5), Some(p2));
+    }
+
+    #[test]
+    fn log_exhaustion_triggers_merge() {
+        let mut f = HybridFtl::new(geom(), 2);
+        // Touch 3 different logical blocks -> third write must merge.
+        let mut merged = false;
+        for lbn in 0..3u64 {
+            let plan = f.plan_write(lbn * 8);
+            merged |= !plan.background.is_empty();
+        }
+        assert!(merged, "exceeding max_logs must trigger a merge");
+        assert!(f.merges() >= 1);
+    }
+
+    #[test]
+    fn merge_preserves_all_data() {
+        let mut f = HybridFtl::new(geom(), 2);
+        // Fill logical block 0 fully, then cause merges via other blocks.
+        for off in 0..8u64 {
+            f.plan_write(off);
+        }
+        for lbn in 1..6u64 {
+            f.plan_write(lbn * 8);
+        }
+        // Every page of lbn 0 still resolves.
+        for off in 0..8u64 {
+            assert!(f.translate(off).is_some(), "lost page {off}");
+        }
+    }
+
+    #[test]
+    fn full_log_same_block_remerges() {
+        let mut f = HybridFtl::new(geom(), 2);
+        // 9 writes to the same logical page: log block holds 8, 9th merges.
+        for _ in 0..9 {
+            f.plan_write(0);
+        }
+        assert!(f.merges() >= 1);
+        assert!(f.translate(0).is_some());
+    }
+
+    #[test]
+    fn sequential_fill_no_data_loss() {
+        let mut f = HybridFtl::new(geom(), 4);
+        let n = 20 * 8;
+        for lpn in 0..n {
+            f.plan_write(lpn);
+        }
+        for lpn in 0..n {
+            assert!(f.translate(lpn).is_some(), "lpn {lpn} lost");
+        }
+        assert!(f.merges() > 0);
+    }
+}

@@ -1,0 +1,80 @@
+//! Flash translation layer (FTL).
+//!
+//! §2.2.1/§2.3.2: the FTL maps logical to physical addresses and performs
+//! wear leveling and garbage collection. Two mapping schemes are provided:
+//!
+//! * [`page_map::PageMapFtl`] — page-level mapping with striped allocation
+//!   across channels/ways (the scheme that exposes maximal interleaving;
+//!   used for the paper's sequential-workload experiments).
+//! * [`hybrid::HybridFtl`] — BAST-style hybrid log-block mapping per Kim et
+//!   al. \[9\]: data blocks are block-mapped, writes land in a small set of
+//!   page-mapped log blocks, merges reclaim them.
+//!
+//! Both emit *plans* — ordered lists of physical page operations — which the
+//! coordinator turns into DES page jobs; the FTL itself is time-free.
+
+pub mod hybrid;
+pub mod page_map;
+
+use crate::nand::geometry::Geometry;
+
+/// A physical operation requested by the FTL.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FtlOp {
+    /// Read physical page `ppn` (GC relocation source or host read).
+    ReadPage { ppn: u64 },
+    /// Program physical page `ppn` (host write target or GC destination).
+    ProgramPage { ppn: u64 },
+    /// Erase the block containing physical page `ppn`'s (chip, block).
+    EraseBlock { chip: usize, block: u32 },
+}
+
+/// The plan for servicing one logical page write: any GC/merge traffic
+/// first, then the host-data program itself.
+#[derive(Debug, Clone, Default)]
+pub struct WritePlan {
+    /// Background ops (GC relocations, merges, erases) in order.
+    pub background: Vec<FtlOp>,
+    /// The physical page the host data lands in.
+    pub target_ppn: u64,
+}
+
+/// Common FTL interface used by the coordinator.
+pub trait Ftl {
+    /// Translate a logical page read; `None` if never written.
+    fn translate(&self, lpn: u64) -> Option<u64>;
+
+    /// Allocate (and map) a physical page for writing `lpn`, including any
+    /// garbage-collection work the allocation forces.
+    fn plan_write(&mut self, lpn: u64) -> WritePlan;
+
+    /// Geometry this FTL manages.
+    fn geometry(&self) -> &Geometry;
+
+    /// Number of free (erased, unallocated) pages remaining.
+    fn free_pages(&self) -> u64;
+
+    /// Total background page relocations performed (GC traffic).
+    fn relocations(&self) -> u64;
+
+    /// Total block erases issued.
+    fn erases(&self) -> u64;
+}
+
+/// Invariant checks shared by FTL implementations (used by tests and the
+/// property harness).
+pub fn check_mapping_consistency<F: Ftl>(ftl: &F, lpns: &[u64]) -> Result<(), String> {
+    use std::collections::HashSet;
+    let mut seen = HashSet::new();
+    for &lpn in lpns {
+        if let Some(ppn) = ftl.translate(lpn) {
+            if ppn >= ftl.geometry().total_pages() {
+                return Err(format!("lpn {lpn} maps to out-of-range ppn {ppn}"));
+            }
+            if !seen.insert(ppn) {
+                return Err(format!("ppn {ppn} mapped by two lpns"));
+            }
+        }
+    }
+    Ok(())
+}

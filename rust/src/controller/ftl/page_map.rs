@@ -1,0 +1,428 @@
+//! Page-level mapping FTL with striped allocation, greedy GC and
+//! wear-aware free-block selection.
+
+use crate::controller::ftl::{Ftl, FtlOp, WritePlan};
+use crate::nand::geometry::{Geometry, PageAddr};
+
+const INVALID: u64 = u64::MAX;
+
+/// Per-chip allocation state.
+struct ChipAlloc {
+    /// Free (erased) blocks, kept unordered; selection scans for min wear.
+    free_blocks: Vec<u32>,
+    /// Block currently being filled.
+    active_block: u32,
+    /// Next page within the active block.
+    next_page: u32,
+    /// FTL-visible erase count per block (wear).
+    wear: Vec<u32>,
+    /// Valid-page count per block.
+    valid: Vec<u32>,
+    /// Blocks that are completely written (candidates for GC).
+    full_blocks: Vec<u32>,
+}
+
+/// Page-mapping FTL.
+///
+/// Sequential logical pages stripe across channels, then ways (via
+/// [`Geometry::page_addr`] on the allocation counter), which is what makes
+/// way interleaving and channel striping effective on the paper's
+/// sequential traces.
+pub struct PageMapFtl {
+    geom: Geometry,
+    /// lpn -> ppn.
+    map: Vec<u64>,
+    /// ppn -> lpn (reverse map, for GC).
+    rmap: Vec<u64>,
+    chips: Vec<ChipAlloc>,
+    /// Next chip for striped allocation (round robin).
+    next_chip: usize,
+    /// GC triggers when a chip's free blocks fall to this threshold. Must
+    /// be ≥ 2: one block of headroom for the relocation overflow while a
+    /// victim is being reclaimed.
+    pub gc_threshold_blocks: u32,
+    /// Static wear leveling triggers when a chip's P/E spread exceeds this.
+    pub static_wl_threshold: u32,
+    /// Re-entrancy guard: relocations allocate pages, which must not
+    /// recursively trigger another GC cycle mid-reclaim.
+    in_gc: bool,
+    free_pages: u64,
+    relocations: u64,
+    erases: u64,
+}
+
+impl PageMapFtl {
+    /// `logical_pages` is the exported capacity (must leave spare blocks for
+    /// GC; typical over-provisioning is ≥ 2 blocks/chip).
+    pub fn new(geom: Geometry, logical_pages: u64) -> PageMapFtl {
+        let chips = (0..geom.chips())
+            .map(|_| {
+                let mut free: Vec<u32> = (0..geom.blocks_per_chip).collect();
+                let active = free.remove(0);
+                ChipAlloc {
+                    free_blocks: free,
+                    active_block: active,
+                    next_page: 0,
+                    wear: vec![0; geom.blocks_per_chip as usize],
+                    valid: vec![0; geom.blocks_per_chip as usize],
+                    full_blocks: Vec::new(),
+                }
+            })
+            .collect();
+        assert!(
+            logical_pages <= geom.total_pages(),
+            "logical capacity exceeds physical"
+        );
+        PageMapFtl {
+            map: vec![INVALID; logical_pages as usize],
+            rmap: vec![INVALID; geom.total_pages() as usize],
+            chips,
+            next_chip: 0,
+            gc_threshold_blocks: 2,
+            static_wl_threshold: 8,
+            in_gc: false,
+            free_pages: geom.total_pages(),
+            geom,
+            relocations: 0,
+            erases: 0,
+        }
+    }
+
+    fn compose_ppn(&self, chip: usize, block: u32, page: u32) -> u64 {
+        let channels = self.geom.channels as u64;
+        let ways = self.geom.ways as u64;
+        let ch = (chip as u64 % channels) as u16;
+        let way = (chip as u64 / channels % ways) as u16;
+        self.geom.ppn(PageAddr {
+            channel: ch,
+            way,
+            block,
+            page,
+        })
+    }
+
+    fn decompose(&self, ppn: u64) -> (usize, u32, u32) {
+        let a = self.geom.page_addr(ppn);
+        let chip = a.way as usize * self.geom.channels as usize + a.channel as usize;
+        (chip, a.block, a.page)
+    }
+
+    /// Allocate the next physical page on `chip`, rolling the active block
+    /// and triggering GC as needed. Appends any GC ops to `out`.
+    fn alloc_on_chip(&mut self, chip: usize, out: &mut Vec<FtlOp>) -> u64 {
+        // GC first if we're about to run dry (never re-entrantly: the
+        // threshold keeps one spare block for in-flight relocations).
+        let mut attempts = 0u32;
+        while !self.in_gc && self.chips[chip].free_blocks.len() as u32 <= self.gc_threshold_blocks
+        {
+            // Only reclaim when some victim actually holds garbage —
+            // erasing fully-valid blocks just churns (and a fresh
+            // sequential fill legitimately has none to give back).
+            let c = &self.chips[chip];
+            let reclaimable = c
+                .full_blocks
+                .iter()
+                .any(|&b| c.valid[b as usize] < self.geom.pages_per_block);
+            if !reclaimable {
+                break;
+            }
+            // Bound the attempts so pathological (~100% utilized)
+            // configurations fail loudly instead of live-locking.
+            attempts += 1;
+            assert!(
+                attempts <= self.geom.blocks_per_chip,
+                "GC cannot reclaim space: utilization too high for over-provisioning"
+            );
+            self.in_gc = true;
+            self.gc_chip(chip, out);
+            self.in_gc = false;
+        }
+        let c = &mut self.chips[chip];
+        let block = c.active_block;
+        let page = c.next_page;
+        c.next_page += 1;
+        if c.next_page == self.geom.pages_per_block {
+            // Active block is full; pick the lowest-wear free block next
+            // (dynamic wear leveling).
+            c.full_blocks.push(block);
+            let (idx, _) = c
+                .free_blocks
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, &b)| c.wear[b as usize])
+                .expect("out of free blocks: over-provisioning exhausted");
+            c.active_block = c.free_blocks.swap_remove(idx);
+            c.next_page = 0;
+        }
+        self.free_pages -= 1;
+        self.compose_ppn(chip, block, page)
+    }
+
+    /// Greedy GC on one chip: victim = full block with fewest valid pages;
+    /// relocate its valid pages into freshly allocated ones, then erase.
+    fn gc_chip(&mut self, chip: usize, out: &mut Vec<FtlOp>) {
+        let victim = {
+            let c = &self.chips[chip];
+            let (idx, _) = c
+                .full_blocks
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, &b)| c.valid[b as usize])
+                .expect("gc called with no full blocks");
+            (idx, c.full_blocks[idx])
+        };
+        let (vidx, vblock) = victim;
+        self.chips[chip].full_blocks.swap_remove(vidx);
+
+        // Relocate valid pages.
+        for page in 0..self.geom.pages_per_block {
+            let src = self.compose_ppn(chip, vblock, page);
+            let lpn = self.rmap[src as usize];
+            if lpn != INVALID {
+                out.push(FtlOp::ReadPage { ppn: src });
+                let dst = self.alloc_on_chip(chip, out);
+                out.push(FtlOp::ProgramPage { ppn: dst });
+                self.map[lpn as usize] = dst;
+                self.rmap[dst as usize] = lpn;
+                self.rmap[src as usize] = INVALID;
+                let (_, dblock, _) = self.decompose(dst);
+                self.chips[chip].valid[dblock as usize] += 1;
+                self.chips[chip].valid[vblock as usize] -= 1;
+                self.relocations += 1;
+            }
+        }
+        debug_assert_eq!(self.chips[chip].valid[vblock as usize], 0);
+        out.push(FtlOp::EraseBlock {
+            chip,
+            block: vblock,
+        });
+        self.chips[chip].wear[vblock as usize] += 1;
+        self.chips[chip].free_blocks.push(vblock);
+        self.free_pages += self.geom.pages_per_block as u64;
+        self.erases += 1;
+    }
+
+    /// Static wear leveling: if the chip's P/E spread exceeds the
+    /// threshold, forcibly relocate the coldest (lowest-wear) full block so
+    /// it re-enters the free pool. Keeps cold data from pinning low-wear
+    /// blocks forever (§2.2.1: wear leveling "plays a critical role to
+    /// maintain the initial performance and capacity of an SSD over time").
+    fn maybe_static_wl(&mut self, chip: usize, out: &mut Vec<FtlOp>) {
+        let c = &self.chips[chip];
+        let max = c.wear.iter().copied().max().unwrap_or(0);
+        let Some((vidx, &vblock)) = c
+            .full_blocks
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &b)| c.wear[b as usize])
+        else {
+            return;
+        };
+        if max - c.wear[vblock as usize] <= self.static_wl_threshold || self.in_gc {
+            return;
+        }
+        self.in_gc = true;
+        self.chips[chip].full_blocks.swap_remove(vidx);
+        for page in 0..self.geom.pages_per_block {
+            let src = self.compose_ppn(chip, vblock, page);
+            let lpn = self.rmap[src as usize];
+            if lpn != INVALID {
+                out.push(FtlOp::ReadPage { ppn: src });
+                let dst = self.alloc_on_chip(chip, out);
+                out.push(FtlOp::ProgramPage { ppn: dst });
+                self.map[lpn as usize] = dst;
+                self.rmap[dst as usize] = lpn;
+                self.rmap[src as usize] = INVALID;
+                let (_, dblock, _) = self.decompose(dst);
+                self.chips[chip].valid[dblock as usize] += 1;
+                self.chips[chip].valid[vblock as usize] -= 1;
+                self.relocations += 1;
+            }
+        }
+        out.push(FtlOp::EraseBlock {
+            chip,
+            block: vblock,
+        });
+        self.chips[chip].wear[vblock as usize] += 1;
+        self.chips[chip].free_blocks.push(vblock);
+        self.free_pages += self.geom.pages_per_block as u64;
+        self.erases += 1;
+        self.in_gc = false;
+    }
+
+    /// Max-min wear spread across all blocks of all chips.
+    pub fn wear_spread(&self) -> u32 {
+        let all = self.chips.iter().flat_map(|c| c.wear.iter().copied());
+        let max = all.clone().max().unwrap_or(0);
+        let min = all.min().unwrap_or(0);
+        max - min
+    }
+}
+
+impl Ftl for PageMapFtl {
+    fn translate(&self, lpn: u64) -> Option<u64> {
+        let p = *self.map.get(lpn as usize)?;
+        (p != INVALID).then_some(p)
+    }
+
+    fn plan_write(&mut self, lpn: u64) -> WritePlan {
+        assert!((lpn as usize) < self.map.len(), "lpn out of range");
+        let mut background = Vec::new();
+        // Invalidate the old location.
+        let old = self.map[lpn as usize];
+        if old != INVALID {
+            self.rmap[old as usize] = INVALID;
+            let (chip, block, _) = self.decompose(old);
+            self.chips[chip].valid[block as usize] -= 1;
+        }
+        // Stripe: round-robin chip selection in geometry order. The static
+        // wear-leveling check is O(blocks); amortize it to block-roll
+        // boundaries (perf pass, EXPERIMENTS.md §Perf — it was 31% of the
+        // write path when run per page).
+        let chip = self.next_chip;
+        self.next_chip = (self.next_chip + 1) % self.chips.len();
+        if self.chips[chip].next_page == 0 {
+            self.maybe_static_wl(chip, &mut background);
+        }
+        let ppn = self.alloc_on_chip(chip, &mut background);
+        self.map[lpn as usize] = ppn;
+        self.rmap[ppn as usize] = lpn;
+        let (c, block, _) = self.decompose(ppn);
+        self.chips[c].valid[block as usize] += 1;
+        WritePlan {
+            background,
+            target_ppn: ppn,
+        }
+    }
+
+    fn geometry(&self) -> &Geometry {
+        &self.geom
+    }
+    fn free_pages(&self) -> u64 {
+        self.free_pages
+    }
+    fn relocations(&self) -> u64 {
+        self.relocations
+    }
+    fn erases(&self) -> u64 {
+        self.erases
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::controller::ftl::check_mapping_consistency;
+
+    fn geom(channels: u16, ways: u16) -> Geometry {
+        Geometry {
+            channels,
+            ways,
+            blocks_per_chip: 8,
+            pages_per_block: 16,
+            page_bytes: 2048,
+        }
+    }
+
+    #[test]
+    fn sequential_writes_stripe_across_chips() {
+        let g = geom(2, 2);
+        let mut f = PageMapFtl::new(g, 64);
+        let mut chips = Vec::new();
+        for lpn in 0..8 {
+            let plan = f.plan_write(lpn);
+            assert!(plan.background.is_empty());
+            let a = g.page_addr(plan.target_ppn);
+            chips.push((a.channel, a.way));
+        }
+        // 4 chips, round robin, repeated twice.
+        assert_eq!(chips[0..4], chips[4..8]);
+        let uniq: std::collections::HashSet<_> = chips[0..4].iter().collect();
+        assert_eq!(uniq.len(), 4);
+    }
+
+    #[test]
+    fn translate_follows_latest_write() {
+        let g = geom(1, 1);
+        let mut f = PageMapFtl::new(g, 32);
+        assert_eq!(f.translate(3), None);
+        let p1 = f.plan_write(3).target_ppn;
+        assert_eq!(f.translate(3), Some(p1));
+        let p2 = f.plan_write(3).target_ppn;
+        assert_ne!(p1, p2, "rewrite must go out-of-place");
+        assert_eq!(f.translate(3), Some(p2));
+    }
+
+    #[test]
+    fn gc_reclaims_and_stays_consistent() {
+        let g = geom(1, 1); // 8 blocks x 16 pages = 128 physical
+        let mut f = PageMapFtl::new(g, 64); // 50% utilization
+        let mut total_bg = 0;
+        // Write far more than physical capacity to force steady-state GC.
+        for round in 0..20 {
+            for lpn in 0..64 {
+                let plan = f.plan_write(lpn);
+                total_bg += plan.background.len();
+                assert!(
+                    plan.target_ppn < g.total_pages(),
+                    "round {round}: ppn in range"
+                );
+            }
+        }
+        assert!(f.erases() > 0, "GC must have erased blocks");
+        assert!(total_bg > 0);
+        let lpns: Vec<u64> = (0..64).collect();
+        check_mapping_consistency(&f, &lpns).unwrap();
+    }
+
+    #[test]
+    fn hot_cold_skew_relocates_cold_data() {
+        let g = geom(1, 1);
+        let mut f = PageMapFtl::new(g, 64);
+        f.static_wl_threshold = 3;
+        // Cold data in lpns 0..32, then hammer lpn 32..40. Greedy GC alone
+        // would cycle the hot blocks forever; static WL must eventually
+        // relocate the pinned cold blocks.
+        for lpn in 0..32 {
+            f.plan_write(lpn);
+        }
+        for _ in 0..80 {
+            for lpn in 32..40 {
+                f.plan_write(lpn);
+            }
+        }
+        assert!(f.relocations() > 0, "GC must relocate cold valid pages");
+        // Cold data still readable.
+        for lpn in 0..32 {
+            assert!(f.translate(lpn).is_some());
+        }
+        check_mapping_consistency(&f, &(0..64).collect::<Vec<_>>()).unwrap();
+    }
+
+    #[test]
+    fn wear_stays_bounded_under_uniform_rewrites() {
+        let g = geom(1, 1);
+        let mut f = PageMapFtl::new(g, 64);
+        for _ in 0..30 {
+            for lpn in 0..64 {
+                f.plan_write(lpn);
+            }
+        }
+        // Dynamic + static wear leveling keep the spread bounded by the
+        // static threshold (+1 transient).
+        assert!(
+            f.wear_spread() <= f.static_wl_threshold + 2,
+            "spread={}",
+            f.wear_spread()
+        );
+    }
+
+    #[test]
+    fn free_pages_accounting() {
+        let g = geom(2, 1);
+        let mut f = PageMapFtl::new(g, 64);
+        let before = f.free_pages();
+        f.plan_write(0);
+        assert_eq!(f.free_pages(), before - 1);
+    }
+}

@@ -1,0 +1,19 @@
+//! The SSD controller (Fig. 1): NAND interface blocks, ECC, FTL, DRAM
+//! cache, and the way/channel scheduling policies that implement
+//! way interleaving and channel striping (Fig. 2).
+//!
+//! These are *policy and state* types; the event-driven composition lives
+//! in [`crate::coordinator`], which owns the DES model.
+
+pub mod cache;
+pub mod channel;
+pub mod ecc;
+pub mod ftl;
+pub mod nand_if;
+pub mod way;
+
+pub use cache::{CacheConfig, DramCache};
+pub use channel::ChannelState;
+pub use ecc::EccModel;
+pub use nand_if::NandIf;
+pub use way::{PageJob, PageJobKind, WayState};

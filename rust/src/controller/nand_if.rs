@@ -1,0 +1,122 @@
+//! NAND_IF — the per-channel interface block of Fig. 3/Fig. 5.
+//!
+//! Wraps the bus timing of the selected interface and tracks bus occupancy
+//! as a DES resource. The Gen_W/Gen_R/D_CON/FIFO structure of the figures
+//! collapses, at behavioral level, into the phase durations of
+//! [`crate::iface::bus::BusTiming`] plus the occupancy bookkeeping here.
+
+use crate::iface::bus::BusTiming;
+use crate::iface::timing::{IfaceParams, InterfaceKind};
+use crate::util::time::Ps;
+
+/// One channel's NAND interface: bus timing + busy tracking + traffic stats.
+#[derive(Debug, Clone)]
+pub struct NandIf {
+    pub timing: BusTiming,
+    busy_until: Ps,
+    /// Total time the bus spent occupied (for utilization metrics).
+    pub busy_time: Ps,
+    /// Total data bytes moved across this channel.
+    pub data_bytes: u64,
+    /// Total command/status cycles issued.
+    pub cmd_ops: u64,
+}
+
+impl NandIf {
+    pub fn new(params: &IfaceParams, kind: InterfaceKind) -> NandIf {
+        NandIf {
+            timing: BusTiming::from_params(params, kind),
+            busy_until: Ps::ZERO,
+            busy_time: Ps::ZERO,
+            data_bytes: 0,
+            cmd_ops: 0,
+        }
+    }
+
+    /// Is the bus free at `now`?
+    pub fn is_free(&self, now: Ps) -> bool {
+        now >= self.busy_until
+    }
+
+    /// Time the bus becomes free.
+    pub fn free_at(&self, now: Ps) -> Ps {
+        self.busy_until.max(now)
+    }
+
+    /// Occupy the bus for `dur` starting at `now`. Returns the completion
+    /// time. Panics if the bus is already occupied (the channel scheduler
+    /// must serialize).
+    pub fn occupy(&mut self, now: Ps, dur: Ps) -> Ps {
+        assert!(self.is_free(now), "bus occupied until {:?} at {now:?}", self.busy_until);
+        self.busy_until = now + dur;
+        self.busy_time += dur;
+        self.busy_until
+    }
+
+    /// Occupy for a data burst, accounting the bytes.
+    pub fn occupy_data(&mut self, now: Ps, bytes: u32) -> Ps {
+        self.data_bytes += bytes as u64;
+        let dur = self.timing.data_transfer(bytes);
+        self.occupy(now, dur)
+    }
+
+    /// Occupy for a command phase.
+    pub fn occupy_cmd(&mut self, now: Ps, dur: Ps) -> Ps {
+        self.cmd_ops += 1;
+        self.occupy(now, dur)
+    }
+
+    /// Bus utilization over an elapsed window.
+    pub fn utilization(&self, elapsed: Ps) -> f64 {
+        if elapsed.as_ps() <= 0 {
+            0.0
+        } else {
+            self.busy_time.as_ps() as f64 / elapsed.as_ps() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nif() -> NandIf {
+        NandIf::new(&IfaceParams::default(), InterfaceKind::Proposed)
+    }
+
+    #[test]
+    fn occupancy_serializes() {
+        let mut n = nif();
+        assert!(n.is_free(Ps::ZERO));
+        let done = n.occupy(Ps::ZERO, Ps::us(10));
+        assert_eq!(done, Ps::us(10));
+        assert!(!n.is_free(Ps::us(9)));
+        assert!(n.is_free(Ps::us(10)));
+        assert_eq!(n.free_at(Ps::us(3)), Ps::us(10));
+    }
+
+    #[test]
+    #[should_panic(expected = "bus occupied")]
+    fn double_occupy_panics() {
+        let mut n = nif();
+        n.occupy(Ps::ZERO, Ps::us(10));
+        n.occupy(Ps::us(5), Ps::us(1));
+    }
+
+    #[test]
+    fn data_accounting() {
+        let mut n = nif();
+        n.occupy_data(Ps::ZERO, 2112);
+        assert_eq!(n.data_bytes, 2112);
+        // DDR at 83 MHz: 2112 bytes x 6.024 ns
+        assert_eq!(n.busy_time, Ps::ps(2112 * 6_024));
+    }
+
+    #[test]
+    fn utilization() {
+        let mut n = nif();
+        n.occupy(Ps::ZERO, Ps::us(25));
+        let u = n.utilization(Ps::us(100));
+        assert!((u - 0.25).abs() < 1e-12);
+    }
+}

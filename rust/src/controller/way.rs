@@ -1,0 +1,170 @@
+//! Per-way state: the job queue and phase machine for one NAND chip behind
+//! a shared channel bus.
+//!
+//! Way interleaving (§2.2.1) = the channel scheduler multiplexing the bus
+//! across these way queues in round-robin order, so that one way's t_R /
+//! t_PROG busy time is hidden behind other ways' bus phases.
+
+use crate::nand::chip::Chip;
+use crate::util::time::Ps;
+use std::collections::VecDeque;
+
+/// What a page job does.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PageJobKind {
+    Read,
+    Program,
+    Erase,
+}
+
+/// Phase of a page job's lifecycle on (bus, chip).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobPhase {
+    /// Waiting for its first bus phase (cmd for reads/erases, cmd+data for
+    /// programs).
+    Queued,
+    /// Array operation in flight (t_R / t_PROG / t_BERS).
+    ArrayBusy,
+    /// Read only: array fetch done, waiting for the data-out bus phase.
+    AwaitXferOut,
+    /// Program/erase only: array op done, waiting for the status poll.
+    AwaitStatus,
+    Done,
+}
+
+/// One page-granular operation bound for a specific chip.
+#[derive(Debug, Clone, Copy)]
+pub struct PageJob {
+    /// Host request this job belongs to (u64::MAX for FTL-internal jobs
+    /// such as GC relocations).
+    pub req: u64,
+    pub kind: PageJobKind,
+    pub block: u32,
+    pub page: u32,
+    /// Main-data bytes (page size; spare is added by the bus model).
+    pub bytes: u32,
+    pub phase: JobPhase,
+}
+
+/// A way: one chip + its pending job queue + the in-flight job.
+pub struct WayState {
+    pub chip: Chip,
+    pub queue: VecDeque<PageJob>,
+    /// Job currently owning the chip (ArrayBusy/AwaitXferOut/AwaitStatus).
+    pub inflight: Option<PageJob>,
+    /// Completion time of the in-flight array op, if any.
+    pub array_done_at: Ps,
+}
+
+impl WayState {
+    pub fn new(chip: Chip) -> WayState {
+        WayState {
+            chip,
+            queue: VecDeque::new(),
+            inflight: None,
+            array_done_at: Ps::ZERO,
+        }
+    }
+
+    /// Enqueue a job (FIFO per way).
+    pub fn push(&mut self, job: PageJob) {
+        self.queue.push_back(job);
+    }
+
+    /// True if this way could use the bus right now: either a queued job
+    /// waiting to start, or an in-flight job whose array phase completed
+    /// and now needs a bus phase (data-out or status).
+    pub fn wants_bus(&self, now: Ps) -> bool {
+        self.bus_class(now).is_some()
+    }
+
+    /// Scheduling class of this way's pending bus work, if any. Lower is
+    /// higher priority (see [`crate::controller::channel`]):
+    /// 0 = status poll (frees the way, ~0.1 µs), 1 = command dispatch
+    /// (starts an array op → creates parallelism), 2 = data-out (drains the
+    /// page register). Issuing short phases that unlock parallelism before
+    /// long data bursts is what lets way interleaving hide t_R.
+    pub fn bus_class(&self, now: Ps) -> Option<u8> {
+        if let Some(j) = &self.inflight {
+            if now < self.array_done_at {
+                return None;
+            }
+            match j.phase {
+                JobPhase::AwaitStatus => Some(0),
+                JobPhase::AwaitXferOut => Some(2),
+                _ => None,
+            }
+        } else if !self.queue.is_empty() {
+            Some(1)
+        } else {
+            None
+        }
+    }
+
+    /// The queue depth including the in-flight job.
+    pub fn backlog(&self) -> usize {
+        self.queue.len() + usize::from(self.inflight.is_some())
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.inflight.is_none() && self.queue.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nand::datasheet::NandTiming;
+
+    fn way() -> WayState {
+        WayState::new(Chip::new(NandTiming::slc(), 8))
+    }
+
+    fn job(kind: PageJobKind) -> PageJob {
+        PageJob {
+            req: 0,
+            kind,
+            block: 0,
+            page: 0,
+            bytes: 2048,
+            phase: JobPhase::Queued,
+        }
+    }
+
+    #[test]
+    fn fresh_way_is_idle() {
+        let w = way();
+        assert!(w.is_idle());
+        assert!(!w.wants_bus(Ps::ZERO));
+        assert_eq!(w.backlog(), 0);
+    }
+
+    #[test]
+    fn queued_job_wants_bus() {
+        let mut w = way();
+        w.push(job(PageJobKind::Read));
+        assert!(w.wants_bus(Ps::ZERO));
+        assert_eq!(w.backlog(), 1);
+    }
+
+    #[test]
+    fn inflight_array_busy_does_not_want_bus() {
+        let mut w = way();
+        let mut j = job(PageJobKind::Read);
+        j.phase = JobPhase::ArrayBusy;
+        w.inflight = Some(j);
+        w.array_done_at = Ps::us(25);
+        assert!(!w.wants_bus(Ps::us(10)));
+    }
+
+    #[test]
+    fn awaiting_xfer_wants_bus_after_array_done() {
+        let mut w = way();
+        let mut j = job(PageJobKind::Read);
+        j.phase = JobPhase::AwaitXferOut;
+        w.inflight = Some(j);
+        w.array_done_at = Ps::us(25);
+        assert!(!w.wants_bus(Ps::us(20)));
+        assert!(w.wants_bus(Ps::us(25)));
+    }
+}

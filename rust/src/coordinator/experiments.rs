@@ -1,0 +1,264 @@
+//! The paper's experiments as reusable drivers — shared by the CLI
+//! (`ddrnand paper`, `sweep-ways`, …) and the bench targets
+//! (`cargo bench --bench bench_fig8_table3`, …).
+//!
+//! Each driver runs the DES over the same grid as the paper's table and
+//! returns rows paired with the paper's published values so callers can
+//! print paper-vs-measured deltas (EXPERIMENTS.md is generated from these).
+
+use crate::analytic::paper;
+use crate::config::SsdConfig;
+use crate::coordinator::campaign::{Campaign, SimReport};
+use crate::coordinator::pool::ThreadPool;
+use crate::host::trace::RequestKind;
+use crate::iface::timing::{IfaceParams, InterfaceKind};
+use crate::nand::datasheet::CellType;
+use crate::report::Table;
+
+/// Default request count per cell: long enough that ramp-up is <1%.
+pub const DEFAULT_REQUESTS: usize = 400;
+
+/// One measured cell with its paper reference.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub cell: CellType,
+    pub mode: RequestKind,
+    pub channels: u16,
+    pub ways: u16,
+    pub iface: InterfaceKind,
+    pub report: SimReport,
+    /// Paper value (MB/s for Tables 3/4, nJ/B for Table 5); None = "max".
+    pub paper: Option<f64>,
+}
+
+impl Cell {
+    pub fn delta_pct(&self) -> Option<f64> {
+        self.paper
+            .map(|p| (self.measured() - p) / p * 100.0)
+    }
+    /// The measured quantity this cell compares (bandwidth or energy).
+    pub fn measured(&self) -> f64 {
+        self.report.bandwidth_mbps
+    }
+}
+
+fn cfg(iface: InterfaceKind, cell: CellType, channels: u16, ways: u16) -> SsdConfig {
+    SsdConfig {
+        iface,
+        cell,
+        channels,
+        ways,
+        blocks_per_chip: 512,
+        ..SsdConfig::default()
+    }
+}
+
+/// E1 — §5.2 / Table 2: operating-frequency determination text.
+pub fn table2_text() -> String {
+    let p = IfaceParams::default();
+    let mut t = Table::new(vec!["interface", "t_P,min (ns)", "paper (ns)", "freq (MHz)", "paper (MHz)"]);
+    let rows = [
+        (InterfaceKind::Conv, 19.81, 50),
+        (InterfaceKind::SyncOnly, 12.0, 83),
+        (InterfaceKind::Proposed, 12.0, 83),
+    ];
+    for (k, paper_tp, paper_f) in rows {
+        t.row(vec![
+            k.name().to_string(),
+            format!("{:.2}", p.tp_min_ns(k)),
+            format!("{paper_tp:.2}"),
+            format!("{}", p.operating_freq_mhz(k)),
+            format!("{paper_f}"),
+        ]);
+    }
+    format!(
+        "E1 / Table 2 + §5.2 — operating frequency determination\n\
+         (Eq. 6: CONV = max{{(t_OUT+t_REA+t_IN+t_S)/(1+α), t_BYTE}}; \
+         Eq. 9: PROPOSED = max{{2(t_S+t_H+t_DIFF), t_BYTE}})\n\n{}",
+        t.render()
+    )
+}
+
+/// E2 — Fig. 8 / Table 3: single-channel way-interleaving sweep.
+pub fn run_table3(requests: usize, pool: &ThreadPool) -> Vec<Cell> {
+    let mut jobs = Vec::new();
+    let mut meta = Vec::new();
+    for (cell, mode, rows) in paper::TABLE3 {
+        for (wi, &ways) in paper::WAYS.iter().enumerate() {
+            for (ii, iface) in InterfaceKind::ALL.iter().enumerate() {
+                let c = cfg(*iface, cell, 1, ways);
+                meta.push((cell, mode, 1u16, ways, *iface, Some(rows[wi][ii])));
+                jobs.push(move || Campaign::new(c, mode, requests).run());
+            }
+        }
+    }
+    let reports = pool.run_all(jobs);
+    meta.into_iter()
+        .zip(reports)
+        .map(|((cell, mode, channels, ways, iface, paper), report)| Cell {
+            cell,
+            mode,
+            channels,
+            ways,
+            iface,
+            report,
+            paper,
+        })
+        .collect()
+}
+
+/// E3 — Fig. 9 / Table 4: constant-capacity channel/way sweep.
+pub fn run_table4(requests: usize, pool: &ThreadPool) -> Vec<Cell> {
+    let mut jobs = Vec::new();
+    let mut meta = Vec::new();
+    for (cell, mode, rows) in paper::TABLE4 {
+        for (ci, &(channels, ways)) in paper::CHANNEL_CONFIGS.iter().enumerate() {
+            for (ii, iface) in InterfaceKind::ALL.iter().enumerate() {
+                let c = cfg(*iface, cell, channels, ways);
+                meta.push((cell, mode, channels, ways, *iface, rows[ci][ii]));
+                jobs.push(move || Campaign::new(c, mode, requests).run());
+            }
+        }
+    }
+    let reports = pool.run_all(jobs);
+    meta.into_iter()
+        .zip(reports)
+        .map(|((cell, mode, channels, ways, iface, paper), report)| Cell {
+            cell,
+            mode,
+            channels,
+            ways,
+            iface,
+            report,
+            paper,
+        })
+        .collect()
+}
+
+/// E4 — Fig. 10 / Table 5: SLC energy per byte. Reuses the Table 3 SLC
+/// runs; the measured quantity is nJ/B.
+pub fn run_table5(requests: usize, pool: &ThreadPool) -> Vec<Cell> {
+    let mut cells = run_table3(requests, pool);
+    cells.retain(|c| c.cell == CellType::Slc);
+    // Swap the paper reference for the energy table.
+    for c in &mut cells {
+        let (_, rows) = paper::TABLE5
+            .iter()
+            .find(|(m, _)| *m == c.mode)
+            .expect("mode in table5");
+        let wi = paper::WAYS.iter().position(|&w| w == c.ways).unwrap();
+        c.paper = Some(rows[wi][paper::iface_index(c.iface)]);
+    }
+    cells
+}
+
+/// Render a table of cells; `energy` selects the nJ/B column.
+pub fn render_cells(title: &str, cells: &[Cell], energy: bool) -> String {
+    let mut t = Table::new(vec![
+        "cell", "mode", "ch", "ways", "iface", "measured", "paper", "delta",
+    ]);
+    for c in cells {
+        let measured = if energy {
+            c.report.energy_nj_per_byte
+        } else {
+            c.report.bandwidth_mbps
+        };
+        let (paper_s, delta_s) = match c.paper {
+            Some(p) => (
+                format!("{p:.2}"),
+                format!("{:+.1}%", (measured - p) / p * 100.0),
+            ),
+            None => ("max".to_string(), "-".to_string()),
+        };
+        t.row(vec![
+            c.cell.name().to_string(),
+            c.mode.name().to_string(),
+            c.channels.to_string(),
+            c.ways.to_string(),
+            c.iface.name().to_string(),
+            format!("{measured:.2}"),
+            paper_s,
+            delta_s,
+        ]);
+    }
+    format!("{title}\n\n{}", t.render())
+}
+
+/// E5 — §6 headline: min/max PROPOSED/CONV ratios from Table 3 cells.
+pub fn headline(cells: &[Cell]) -> String {
+    let mut out = String::from("E5 / §6 headline — PROPOSED/CONV ratio ranges (paper: SLC read 1.65–2.76x, write 1.09–2.45x; MLC read 1.64–2.66x, write 1.05–1.76x)\n\n");
+    for cell in [CellType::Slc, CellType::Mlc] {
+        for mode in [RequestKind::Read, RequestKind::Write] {
+            let mut ratios = Vec::new();
+            for &w in &paper::WAYS {
+                let find = |iface| {
+                    cells
+                        .iter()
+                        .find(|c| {
+                            c.cell == cell && c.mode == mode && c.ways == w && c.iface == iface
+                        })
+                        .map(|c| c.report.bandwidth_mbps)
+                };
+                if let (Some(p), Some(conv)) =
+                    (find(InterfaceKind::Proposed), find(InterfaceKind::Conv))
+                {
+                    ratios.push(p / conv);
+                }
+            }
+            if !ratios.is_empty() {
+                let lo = ratios.iter().cloned().fold(f64::INFINITY, f64::min);
+                let hi = ratios.iter().cloned().fold(0.0f64, f64::max);
+                out.push_str(&format!(
+                    "  {cell} {:<5}: {lo:.2}x – {hi:.2}x\n",
+                    mode.name()
+                ));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_text_contains_paper_values() {
+        let t = table2_text();
+        assert!(t.contains("19.81"));
+        assert!(t.contains("83"));
+    }
+
+    #[test]
+    fn table3_grid_shape() {
+        let pool = ThreadPool::new(0);
+        let cells = run_table3(30, &pool);
+        assert_eq!(cells.len(), 4 * 5 * 3); // 4 (cell,mode) x 5 ways x 3 ifaces
+        assert!(cells.iter().all(|c| c.report.bandwidth_mbps > 0.0));
+        let rendered = render_cells("t3", &cells, false);
+        assert!(rendered.contains("PROPOSED"));
+    }
+
+    #[test]
+    fn table5_reuses_slc_and_swaps_reference() {
+        let pool = ThreadPool::new(0);
+        let cells = run_table5(30, &pool);
+        assert_eq!(cells.len(), 2 * 5 * 3);
+        assert!(cells.iter().all(|c| c.cell == CellType::Slc));
+        // 16-way write PROPOSED paper value is 0.48 nJ/B.
+        let c = cells
+            .iter()
+            .find(|c| c.ways == 16 && c.iface == InterfaceKind::Proposed && c.mode == RequestKind::Write)
+            .unwrap();
+        assert_eq!(c.paper, Some(0.48));
+    }
+
+    #[test]
+    fn headline_mentions_all_cells() {
+        let pool = ThreadPool::new(0);
+        let cells = run_table3(30, &pool);
+        let h = headline(&cells);
+        assert!(h.contains("SLC read"));
+        assert!(h.contains("MLC write"));
+    }
+}

@@ -1,0 +1,12 @@
+//! The SSD coordinator — the top-level composition that binds host, FTL,
+//! cache, channels, ways and chips into one discrete-event model, plus the
+//! campaign/sweep orchestration that regenerates the paper's experiments.
+
+pub mod campaign;
+pub mod experiments;
+pub mod pool;
+pub mod ssd;
+
+pub use campaign::{run_trace, Campaign, SimReport};
+pub use pool::ThreadPool;
+pub use ssd::SsdSim;

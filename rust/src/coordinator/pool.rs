@@ -1,0 +1,110 @@
+//! A small scoped worker pool for running independent simulations in
+//! parallel (tokio is unavailable offline; a CPU-bound DES sweep wants
+//! plain threads anyway).
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// Fixed-size thread pool executing a batch of closures and collecting
+/// results in submission order.
+pub struct ThreadPool {
+    workers: usize,
+}
+
+impl ThreadPool {
+    /// `workers = 0` selects the available parallelism.
+    pub fn new(workers: usize) -> ThreadPool {
+        let workers = if workers == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        } else {
+            workers
+        };
+        ThreadPool { workers }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run all `jobs` across the pool; returns results in input order.
+    ///
+    /// Panics in jobs propagate (fail fast — a panicking simulation is a
+    /// bug, not a condition to swallow).
+    pub fn run_all<T, F>(&self, jobs: Vec<F>) -> Vec<T>
+    where
+        T: Send,
+        F: FnOnce() -> T + Send,
+    {
+        let n = jobs.len();
+        let queue: Arc<Mutex<Vec<(usize, F)>>> =
+            Arc::new(Mutex::new(jobs.into_iter().enumerate().rev().collect()));
+        let (tx, rx) = mpsc::channel::<(usize, T)>();
+        std::thread::scope(|s| {
+            for _ in 0..self.workers.min(n.max(1)) {
+                let queue = Arc::clone(&queue);
+                let tx = tx.clone();
+                s.spawn(move || loop {
+                    let job = queue.lock().unwrap().pop();
+                    match job {
+                        Some((i, f)) => {
+                            let r = f();
+                            if tx.send((i, r)).is_err() {
+                                return;
+                            }
+                        }
+                        None => return,
+                    }
+                });
+            }
+            drop(tx);
+            let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+            for (i, r) in rx {
+                out[i] = Some(r);
+            }
+            out.into_iter()
+                .map(|o| o.expect("worker died before completing job"))
+                .collect()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_in_submission_order() {
+        let pool = ThreadPool::new(4);
+        let jobs: Vec<_> = (0..32)
+            .map(|i| move || {
+                // Stagger to shuffle completion order.
+                std::thread::sleep(std::time::Duration::from_millis((32 - i) % 5));
+                i * 10
+            })
+            .collect();
+        let out = pool.run_all(jobs);
+        assert_eq!(out, (0..32).map(|i| i * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zero_workers_selects_parallelism() {
+        let pool = ThreadPool::new(0);
+        assert!(pool.workers() >= 1);
+    }
+
+    #[test]
+    fn empty_batch() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<i32> = pool.run_all(Vec::<fn() -> i32>::new());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn single_worker_sequential() {
+        let pool = ThreadPool::new(1);
+        let out = pool.run_all((0..5).map(|i| move || i).collect::<Vec<_>>());
+        assert_eq!(out, vec![0, 1, 2, 3, 4]);
+    }
+}

@@ -1,0 +1,733 @@
+//! The full-SSD discrete-event model.
+//!
+//! Composition (Fig. 1/Fig. 2): a SATA host link feeds requests through the
+//! (optional) DRAM cache and the FTL into per-channel round-robin way
+//! schedulers; each channel's bus (NAND_IF + ECC) is a serialized resource;
+//! each way's chip imposes t_R / t_PROG / t_BERS array busy times.
+//!
+//! ## Event flow
+//!
+//! *Write request*: `Admit` → SATA data-in transfer → FTL `plan_write` per
+//! page → page jobs queued on their (channel, way) → per page: bus phase
+//! (PROGRAM cmd + data + ECC) → chip t_PROG → status-poll bus phase → done.
+//! Request completes when all its pages are programmed.
+//!
+//! *Read request*: `Admit` → SATA command FIS → FTL translate → per page:
+//! bus phase (READ cmd) → chip t_R → bus phase (data out + ECC) → SATA
+//! response chunk → done. Request completes when all chunks reach the host.
+//!
+//! Way interleaving emerges naturally: while one way's chip is busy in
+//! t_R/t_PROG, the channel scheduler grants the bus to sibling ways.
+
+use crate::config::{FtlKind, SsdConfig};
+use crate::controller::cache::{CacheOutcome, DramCache};
+use crate::controller::channel::ChannelState;
+use crate::controller::ecc::EccModel;
+use crate::controller::ftl::hybrid::HybridFtl;
+use crate::controller::ftl::page_map::PageMapFtl;
+use crate::controller::ftl::{Ftl, FtlOp};
+use crate::controller::nand_if::NandIf;
+use crate::controller::way::{JobPhase, PageJob, PageJobKind, WayState};
+use crate::energy::{EnergyMeter, PowerModel};
+use crate::host::sata::SataLink;
+use crate::host::trace::{Request, RequestKind};
+use crate::nand::chip::{Chip, ChipOp};
+use crate::nand::geometry::Geometry;
+use crate::sim::{Engine, Model, RunResult, Scheduler};
+use crate::util::stats::Welford;
+use crate::util::time::{mbps, Ps};
+
+/// Marker for FTL-internal jobs (GC, merges, cache flushes).
+pub const INTERNAL_REQ: u64 = u64::MAX;
+
+/// Simulation events.
+#[derive(Debug, Clone, Copy)]
+pub enum Ev {
+    /// Try to admit more requests from the trace (respecting queue depth).
+    Admit,
+    /// A SATA transfer finished.
+    SataDone { req: u64, phase: SataPhase },
+    /// A channel bus phase finished.
+    BusDone { ch: u16 },
+    /// A chip array operation finished.
+    ChipDone { ch: u16, way: u16 },
+}
+
+/// What a SATA completion means.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SataPhase {
+    /// Write: host payload fully received into the controller FIFO.
+    HostDataIn,
+    /// Read: command FIS delivered; NAND work may start.
+    ReadCmd,
+    /// Read: one page-sized response chunk delivered to the host.
+    ReadChunk,
+}
+
+/// What the bus is currently doing on a channel.
+#[derive(Debug, Clone, Copy)]
+enum BusCtx {
+    /// Command phase issued to `way`; on completion the array op starts.
+    CmdIssued { way: u16 },
+    /// Read data-out phase from `way`; on completion the page is read.
+    DataOut { way: u16 },
+    /// Status poll of `way`; on completion the program/erase is done.
+    StatusDone { way: u16 },
+}
+
+/// Per-request progress.
+struct ReqState {
+    kind: RequestKind,
+    bytes: u32,
+    pages_total: u32,
+    pages_done: u32,
+    chunks_done: u32,
+    issued_at: Ps,
+}
+
+/// Aggregate simulation counters.
+#[derive(Debug, Clone, Default)]
+pub struct SimCounters {
+    pub host_bytes: u64,
+    pub requests_done: u64,
+    pub pages_read: u64,
+    pub pages_programmed: u64,
+    pub blocks_erased: u64,
+    pub internal_pages: u64,
+    pub cache_hits: u64,
+}
+
+/// The DES model for one SSD + workload.
+pub struct SsdSim {
+    pub cfg: SsdConfig,
+    pub geom: Geometry,
+    channels: Vec<ChannelState>,
+    bus_ctx: Vec<Option<BusCtx>>,
+    sata: SataLink,
+    ftl: Box<dyn Ftl>,
+    cache: DramCache,
+    trace: Vec<Request>,
+    next_req: usize,
+    outstanding: u32,
+    /// Request table indexed by request id (= trace index): dense and
+    /// allocation-free on the hot path (perf pass, EXPERIMENTS.md §Perf).
+    reqs: Vec<Option<ReqState>>,
+    pub counters: SimCounters,
+    pub latency: Welford,
+    pub power: PowerModel,
+    pub energy: EnergyMeter,
+    finished_at: Ps,
+}
+
+impl SsdSim {
+    /// Build a simulator for `cfg` over `trace`.
+    pub fn new(cfg: SsdConfig, trace: Vec<Request>) -> SsdSim {
+        let nand = cfg.nand_timing();
+        let geom = Geometry {
+            channels: cfg.channels,
+            ways: cfg.ways,
+            blocks_per_chip: cfg.blocks_per_chip,
+            pages_per_block: nand.pages_per_block,
+            page_bytes: nand.page_bytes,
+        };
+        let channels = (0..cfg.channels)
+            .map(|_| {
+                let ways = (0..cfg.ways)
+                    .map(|_| WayState::new(Chip::new(nand, geom.blocks_per_chip)))
+                    .collect();
+                ChannelState::new(
+                    NandIf::new(&cfg.params, cfg.iface),
+                    EccModel::for_cell(cfg.cell),
+                    ways,
+                )
+            })
+            .collect();
+        let logical_pages = (geom.total_pages() as f64 * cfg.utilization) as u64;
+        let ftl: Box<dyn Ftl> = match cfg.ftl {
+            FtlKind::PageMap => Box::new(PageMapFtl::new(geom, logical_pages)),
+            FtlKind::Hybrid => Box::new(HybridFtl::new(geom, 8)),
+        };
+        let power = PowerModel::for_interface(cfg.iface);
+        let reqs = (0..trace.len()).map(|_| None).collect();
+        SsdSim {
+            bus_ctx: vec![None; cfg.channels as usize],
+            channels,
+            sata: SataLink::new(cfg.sata),
+            ftl,
+            cache: DramCache::new(cfg.cache),
+            trace,
+            next_req: 0,
+            outstanding: 0,
+            reqs,
+            counters: SimCounters::default(),
+            latency: Welford::new(),
+            power,
+            energy: EnergyMeter::default(),
+            finished_at: Ps::ZERO,
+            geom,
+            cfg,
+        }
+    }
+
+    /// Pre-populate the FTL mapping for every page a read trace touches, as
+    /// if the data had been written sequentially beforehand (fresh-SSD
+    /// sequential fill). Costless in simulated time.
+    pub fn prefill_for_reads(&mut self) {
+        let page = self.geom.page_bytes as u64;
+        let mut lpns: Vec<u64> = self
+            .trace
+            .iter()
+            .filter(|r| r.kind == RequestKind::Read)
+            .flat_map(|r| {
+                let first = r.offset / page;
+                let last = (r.offset + r.bytes as u64).div_ceil(page);
+                first..last
+            })
+            .collect();
+        lpns.sort_unstable();
+        lpns.dedup();
+        for lpn in lpns {
+            if self.ftl.translate(lpn).is_none() {
+                let _ = self.ftl.plan_write(lpn);
+            }
+        }
+    }
+
+    /// Logical pages spanned by a request.
+    fn lpns(&self, r: &Request) -> std::ops::Range<u64> {
+        let page = self.geom.page_bytes as u64;
+        (r.offset / page)..(r.offset + r.bytes as u64).div_ceil(page)
+    }
+
+    fn enqueue_ftl_op(&mut self, op: FtlOp, req: u64) -> (u16, u16) {
+        let (kind, ppn_for_addr, block_page) = match op {
+            FtlOp::ReadPage { ppn } => (PageJobKind::Read, ppn, None),
+            FtlOp::ProgramPage { ppn } => (PageJobKind::Program, ppn, None),
+            FtlOp::EraseBlock { chip, block } => {
+                let channel = (chip as u64 % self.geom.channels as u64) as u16;
+                let way = (chip as u64 / self.geom.channels as u64) as u16;
+                (PageJobKind::Erase, 0, Some((channel, way, block)))
+            }
+        };
+        let (ch, way, block, page) = if let Some((ch, way, block)) = block_page {
+            (ch, way, block, 0)
+        } else {
+            let a = self.geom.page_addr(ppn_for_addr);
+            (a.channel, a.way, a.block, a.page)
+        };
+        let job = PageJob {
+            req,
+            kind,
+            block,
+            page,
+            bytes: self.geom.page_bytes,
+            phase: JobPhase::Queued,
+        };
+        self.channels[ch as usize].ways[way as usize].push(job);
+        (ch, way)
+    }
+
+    /// Dispatch NAND work for a write request whose payload has arrived.
+    fn start_write_pages(&mut self, req: u64, sched: &mut Scheduler<Ev>) {
+        let r = self.trace[req as usize];
+        let mut touched = Vec::new();
+        for lpn in self.lpns(&r) {
+            match self.cache.write(lpn) {
+                CacheOutcome::Hit => {
+                    // Absorbed by DRAM; page complete immediately.
+                    self.counters.cache_hits += 1;
+                    self.page_programmed(req, sched);
+                    continue;
+                }
+                CacheOutcome::Miss { evict_flush } => {
+                    // This write still occupies a cache slot; the page is
+                    // considered done when cached, but any dirty eviction
+                    // must be flushed to NAND as internal traffic.
+                    self.counters.cache_hits += 0;
+                    if let Some(victim) = evict_flush {
+                        let plan = self.ftl.plan_write(victim);
+                        for op in plan.background {
+                            touched.push(self.enqueue_ftl_op(op, INTERNAL_REQ));
+                        }
+                        touched.push(self.enqueue_ftl_op(
+                            FtlOp::ProgramPage {
+                                ppn: plan.target_ppn,
+                            },
+                            INTERNAL_REQ,
+                        ));
+                    }
+                    self.page_programmed(req, sched);
+                    continue;
+                }
+                CacheOutcome::Bypass => {}
+            }
+            let plan = self.ftl.plan_write(lpn);
+            for op in plan.background {
+                touched.push(self.enqueue_ftl_op(op, INTERNAL_REQ));
+            }
+            touched.push(self.enqueue_ftl_op(
+                FtlOp::ProgramPage {
+                    ppn: plan.target_ppn,
+                },
+                req,
+            ));
+        }
+        for (ch, _) in touched {
+            self.kick_channel(ch, sched);
+        }
+    }
+
+    /// Dispatch NAND work for a read request after its command FIS.
+    fn start_read_pages(&mut self, req: u64, sched: &mut Scheduler<Ev>) {
+        let r = self.trace[req as usize];
+        let mut touched = Vec::new();
+        for lpn in self.lpns(&r) {
+            if matches!(self.cache.read(lpn), CacheOutcome::Hit) {
+                self.counters.cache_hits += 1;
+                // Serve straight from DRAM: only the SATA chunk remains.
+                self.send_read_chunk(req, sched);
+                continue;
+            }
+            let ppn = self
+                .ftl
+                .translate(lpn)
+                .expect("read of never-written lpn; call prefill_for_reads");
+            touched.push(self.enqueue_ftl_op(FtlOp::ReadPage { ppn }, req));
+        }
+        for (ch, _) in touched {
+            self.kick_channel(ch, sched);
+        }
+    }
+
+    /// A host page program finished (or was absorbed); update the request.
+    fn page_programmed(&mut self, req: u64, sched: &mut Scheduler<Ev>) {
+        let done = {
+            let st = self.reqs[req as usize].as_mut().expect("unknown request");
+            st.pages_done += 1;
+            st.pages_done == st.pages_total
+        };
+        if done {
+            self.complete_request(req, sched);
+        }
+    }
+
+    /// Queue one read-response chunk to the host.
+    fn send_read_chunk(&mut self, req: u64, sched: &mut Scheduler<Ev>) {
+        let bytes = self.geom.page_bytes as u64;
+        let (_, done_at) = self.sata.reserve(sched.now(), bytes, false);
+        sched.at(
+            done_at,
+            Ev::SataDone {
+                req,
+                phase: SataPhase::ReadChunk,
+            },
+        );
+    }
+
+    fn complete_request(&mut self, req: u64, sched: &mut Scheduler<Ev>) {
+        let st = self.reqs[req as usize].take().expect("unknown request");
+        self.outstanding -= 1;
+        self.counters.requests_done += 1;
+        self.counters.host_bytes += st.bytes as u64;
+        self.latency.push((sched.now() - st.issued_at).as_us_f64());
+        self.finished_at = sched.now();
+        sched.now_ev(Ev::Admit);
+    }
+
+    /// Grant the channel bus to the next way that wants it.
+    fn kick_channel(&mut self, ch: u16, sched: &mut Scheduler<Ev>) {
+        let chi = ch as usize;
+        let now = sched.now();
+        if !self.channels[chi].bus.is_free(now) || self.bus_ctx[chi].is_some() {
+            return; // BusDone will re-kick.
+        }
+        let Some(wi) = self.channels[chi].next_way_wanting_bus(now) else {
+            return; // ChipDone events will re-kick when array ops finish.
+        };
+        let chan = &mut self.channels[chi];
+        let way = &mut chan.ways[wi];
+        if let Some(job) = way.inflight {
+            match job.phase {
+                JobPhase::AwaitXferOut => {
+                    // Read data-out: page + spare over the bus, ECC decode
+                    // pipelined on the tail.
+                    let nand = way.chip.timing;
+                    let bytes = nand.transfer_bytes();
+                    let ecc = chan.ecc.page_latency(nand.page_bytes);
+                    let xfer = chan.bus.timing.data_transfer(bytes) + ecc;
+                    chan.bus.data_bytes += bytes as u64;
+                    let done = chan.bus.occupy(now, xfer);
+                    self.bus_ctx[chi] = Some(BusCtx::DataOut { way: wi as u16 });
+                    sched.at(done, Ev::BusDone { ch });
+                }
+                JobPhase::AwaitStatus => {
+                    let dur = chan.bus.timing.status_poll() + self.cfg.program_status_overhead;
+                    let done = chan.bus.occupy_cmd(now, dur);
+                    self.bus_ctx[chi] = Some(BusCtx::StatusDone { way: wi as u16 });
+                    sched.at(done, Ev::BusDone { ch });
+                }
+                other => unreachable!("inflight job in bus-wanting phase {other:?}"),
+            }
+            return;
+        }
+        // Dispatch a fresh job from the queue.
+        let mut job = way.queue.pop_front().expect("wants_bus implies queued job");
+        let nand = way.chip.timing;
+        let dur = match job.kind {
+            PageJobKind::Read => chan.bus.timing.read_cmd(),
+            PageJobKind::Program => {
+                // PROGRAM = cmd/addr + data-in (+ ECC encode pipelined).
+                let bytes = nand.transfer_bytes();
+                chan.bus.data_bytes += bytes as u64;
+                chan.bus.timing.program_cmd()
+                    + chan.bus.timing.data_transfer(bytes)
+                    + chan.ecc.page_latency(nand.page_bytes)
+            }
+            PageJobKind::Erase => chan.bus.timing.erase_cmd(),
+        };
+        let done = chan.bus.occupy_cmd(now, dur);
+        job.phase = JobPhase::ArrayBusy; // array op starts at phase end
+        way.inflight = Some(job);
+        self.bus_ctx[chi] = Some(BusCtx::CmdIssued { way: wi as u16 });
+        sched.at(done, Ev::BusDone { ch });
+    }
+
+    fn on_bus_done(&mut self, ch: u16, sched: &mut Scheduler<Ev>) {
+        let chi = ch as usize;
+        let ctx = self.bus_ctx[chi].take().expect("BusDone without context");
+        match ctx {
+            BusCtx::CmdIssued { way } => {
+                let wi = way as usize;
+                let job = self.channels[chi].ways[wi]
+                    .inflight
+                    .expect("cmd issued to idle way");
+                let op = match job.kind {
+                    PageJobKind::Read => ChipOp::ReadFetch {
+                        block: job.block,
+                        page: job.page,
+                    },
+                    PageJobKind::Program => ChipOp::Program {
+                        block: job.block,
+                        page: job.page,
+                    },
+                    PageJobKind::Erase => ChipOp::Erase { block: job.block },
+                };
+                let w = &mut self.channels[chi].ways[wi];
+                let dur = w.chip.start(sched.now(), op);
+                w.array_done_at = sched.now() + dur;
+                sched.at(w.array_done_at, Ev::ChipDone { ch, way });
+            }
+            BusCtx::DataOut { way } => {
+                // Read page fully transferred to the controller.
+                let wi = way as usize;
+                let job = self.channels[chi].ways[wi]
+                    .inflight
+                    .take()
+                    .expect("data-out from idle way");
+                self.counters.pages_read += 1;
+                if job.req == INTERNAL_REQ {
+                    self.counters.internal_pages += 1;
+                } else {
+                    self.send_read_chunk(job.req, sched);
+                }
+            }
+            BusCtx::StatusDone { way } => {
+                let wi = way as usize;
+                let job = self.channels[chi].ways[wi]
+                    .inflight
+                    .take()
+                    .expect("status from idle way");
+                match job.kind {
+                    PageJobKind::Program => {
+                        self.counters.pages_programmed += 1;
+                        self.energy.add_nand_program(&self.power.clone(), 1);
+                        if job.req == INTERNAL_REQ {
+                            self.counters.internal_pages += 1;
+                        } else {
+                            self.page_programmed(job.req, sched);
+                        }
+                    }
+                    PageJobKind::Erase => {
+                        self.counters.blocks_erased += 1;
+                    }
+                    PageJobKind::Read => unreachable!("reads have no status phase"),
+                }
+            }
+        }
+        self.kick_channel(ch, sched);
+    }
+
+    fn on_chip_done(&mut self, ch: u16, way: u16, sched: &mut Scheduler<Ev>) {
+        let w = &mut self.channels[ch as usize].ways[way as usize];
+        if let Some(job) = &mut w.inflight {
+            debug_assert_eq!(job.phase, JobPhase::ArrayBusy);
+            job.phase = match job.kind {
+                PageJobKind::Read => {
+                    self.energy.add_nand_read(&self.power.clone(), 0); // counted at xfer
+                    JobPhase::AwaitXferOut
+                }
+                PageJobKind::Program | PageJobKind::Erase => JobPhase::AwaitStatus,
+            };
+        }
+        self.kick_channel(ch, sched);
+    }
+
+    fn admit(&mut self, sched: &mut Scheduler<Ev>) {
+        while self.outstanding < self.cfg.queue_depth && self.next_req < self.trace.len() {
+            let id = self.next_req as u64;
+            let r = self.trace[self.next_req];
+            self.next_req += 1;
+            self.outstanding += 1;
+            let pages = self.lpns(&r).count() as u32;
+            self.reqs[id as usize] = Some(ReqState {
+                    kind: r.kind,
+                    bytes: r.bytes,
+                    pages_total: pages,
+                    pages_done: 0,
+                    chunks_done: 0,
+                    issued_at: sched.now(),
+                },
+            );
+            match r.kind {
+                RequestKind::Write => {
+                    let (_, done) = self.sata.reserve(sched.now(), r.bytes as u64, true);
+                    sched.at(
+                        done,
+                        Ev::SataDone {
+                            req: id,
+                            phase: SataPhase::HostDataIn,
+                        },
+                    );
+                }
+                RequestKind::Read => {
+                    let (_, done) = self.sata.reserve(sched.now(), 0, true);
+                    sched.at(
+                        done,
+                        Ev::SataDone {
+                            req: id,
+                            phase: SataPhase::ReadCmd,
+                        },
+                    );
+                }
+            }
+        }
+    }
+
+    /// All requests issued and completed?
+    pub fn is_done(&self) -> bool {
+        self.next_req == self.trace.len() && self.outstanding == 0
+    }
+
+    /// Simulated time of the last request completion.
+    pub fn finished_at(&self) -> Ps {
+        self.finished_at
+    }
+
+    /// Host-visible bandwidth over the run.
+    pub fn bandwidth_mbps(&self) -> f64 {
+        mbps(self.counters.host_bytes, self.finished_at)
+    }
+
+    /// Run the model to completion; returns the engine statistics.
+    pub fn run(&mut self) -> RunResult {
+        let mut sched = Scheduler::new();
+        sched.at(Ps::ZERO, Ev::Admit);
+        let result = Engine::run(self, &mut sched, Ps::MAX);
+        assert!(self.is_done(), "simulation drained without completing trace");
+        // Close the books: controller energy over the active window.
+        let window = self.finished_at;
+        let power = self.power.clone();
+        self.energy.add_window(&power, window);
+        self.energy.add_bytes(self.counters.host_bytes);
+        result
+    }
+
+    /// Per-channel bus utilizations at end of run.
+    pub fn bus_utilizations(&self) -> Vec<f64> {
+        self.channels
+            .iter()
+            .map(|c| c.bus.utilization(self.finished_at))
+            .collect()
+    }
+
+    /// SATA link utilization at end of run.
+    pub fn sata_utilization(&self) -> f64 {
+        self.sata.utilization(self.finished_at)
+    }
+
+    /// FTL counters: (relocations, erases, free_pages).
+    pub fn ftl_stats(&self) -> (u64, u64, u64) {
+        (
+            self.ftl.relocations(),
+            self.ftl.erases(),
+            self.ftl.free_pages(),
+        )
+    }
+
+    /// Cache hit-rate over the run (0 if disabled).
+    pub fn cache_hit_rate(&self) -> f64 {
+        self.cache.hit_rate()
+    }
+}
+
+impl Model for SsdSim {
+    type Ev = Ev;
+
+    fn handle(&mut self, sched: &mut Scheduler<Ev>, ev: Ev) {
+        match ev {
+            Ev::Admit => self.admit(sched),
+            Ev::SataDone { req, phase } => match phase {
+                SataPhase::HostDataIn => self.start_write_pages(req, sched),
+                SataPhase::ReadCmd => self.start_read_pages(req, sched),
+                SataPhase::ReadChunk => {
+                    let done = {
+                        let st = self.reqs[req as usize].as_mut().expect("unknown request");
+                        debug_assert_eq!(st.kind, RequestKind::Read);
+                        st.chunks_done += 1;
+                        st.chunks_done == st.pages_total
+                    };
+                    if done {
+                        self.complete_request(req, sched);
+                    }
+                }
+            },
+            Ev::BusDone { ch } => self.on_bus_done(ch, sched),
+            Ev::ChipDone { ch, way } => self.on_chip_done(ch, way, sched),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::host::trace::TraceGen;
+    use crate::iface::timing::InterfaceKind;
+    use crate::nand::datasheet::CellType;
+
+    fn small_cfg(iface: InterfaceKind, ways: u16) -> SsdConfig {
+        SsdConfig {
+            iface,
+            ways,
+            blocks_per_chip: 256,
+            ..SsdConfig::default()
+        }
+    }
+
+    fn write_trace(n: usize) -> Vec<Request> {
+        TraceGen::default()
+            .sequential(RequestKind::Write, n)
+            .requests
+    }
+
+    fn read_trace(n: usize) -> Vec<Request> {
+        TraceGen::default()
+            .sequential(RequestKind::Read, n)
+            .requests
+    }
+
+    #[test]
+    fn write_run_completes_and_counts() {
+        let mut sim = SsdSim::new(small_cfg(InterfaceKind::Proposed, 2), write_trace(10));
+        sim.run();
+        assert!(sim.is_done());
+        assert_eq!(sim.counters.requests_done, 10);
+        assert_eq!(sim.counters.host_bytes, 10 * 65536);
+        // 10 requests x 32 SLC pages.
+        assert_eq!(sim.counters.pages_programmed, 320);
+        assert!(sim.bandwidth_mbps() > 0.0);
+    }
+
+    #[test]
+    fn read_run_completes() {
+        let mut sim = SsdSim::new(small_cfg(InterfaceKind::Conv, 2), read_trace(10));
+        sim.prefill_for_reads();
+        sim.run();
+        assert_eq!(sim.counters.requests_done, 10);
+        assert_eq!(sim.counters.pages_read, 320);
+    }
+
+    #[test]
+    fn proposed_beats_conv_on_reads() {
+        let bw = |iface| {
+            let mut sim = SsdSim::new(small_cfg(iface, 4), read_trace(50));
+            sim.prefill_for_reads();
+            sim.run();
+            sim.bandwidth_mbps()
+        };
+        let conv = bw(InterfaceKind::Conv);
+        let sync = bw(InterfaceKind::SyncOnly);
+        let prop = bw(InterfaceKind::Proposed);
+        assert!(
+            prop > sync && sync > conv,
+            "expected PROPOSED > SYNC_ONLY > CONV, got {prop} {sync} {conv}"
+        );
+    }
+
+    #[test]
+    fn way_interleaving_scales_writes() {
+        let bw = |ways| {
+            let mut sim = SsdSim::new(small_cfg(InterfaceKind::Proposed, ways), write_trace(30));
+            sim.run();
+            sim.bandwidth_mbps()
+        };
+        let w1 = bw(1);
+        let w4 = bw(4);
+        assert!(w4 > 3.0 * w1, "4-way should be ~4x 1-way: {w1} vs {w4}");
+    }
+
+    #[test]
+    fn mlc_slower_than_slc_writes() {
+        let bw = |cell| {
+            let cfg = SsdConfig {
+                cell,
+                blocks_per_chip: 256,
+                ..small_cfg(InterfaceKind::Conv, 1)
+            };
+            let mut sim = SsdSim::new(cfg, write_trace(10));
+            sim.run();
+            sim.bandwidth_mbps()
+        };
+        assert!(bw(CellType::Slc) > 1.5 * bw(CellType::Mlc));
+    }
+
+    #[test]
+    fn latency_recorded_per_request() {
+        let mut sim = SsdSim::new(small_cfg(InterfaceKind::Proposed, 1), write_trace(5));
+        sim.run();
+        assert_eq!(sim.latency.count(), 5);
+        assert!(sim.latency.mean() > 0.0);
+    }
+
+    #[test]
+    fn energy_accounted() {
+        let mut sim = SsdSim::new(small_cfg(InterfaceKind::Proposed, 4), write_trace(10));
+        sim.run();
+        assert!(sim.energy.controller_nj_per_byte() > 0.0);
+    }
+
+    #[test]
+    fn deterministic_repeat() {
+        let run = || {
+            let mut sim = SsdSim::new(small_cfg(InterfaceKind::Proposed, 4), write_trace(20));
+            sim.run();
+            (sim.finished_at(), sim.counters.pages_programmed)
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn cache_absorbs_rewrites() {
+        let mut cfg = small_cfg(InterfaceKind::Conv, 1);
+        cfg.cache.capacity_pages = 4096;
+        // Write the same 64KB twice: second pass hits DRAM entirely.
+        let mut t = write_trace(1);
+        t.extend(write_trace(1));
+        let mut sim = SsdSim::new(cfg, t);
+        sim.run();
+        assert!(sim.cache_hit_rate() > 0.4, "rate={}", sim.cache_hit_rate());
+        // Only the evictions/first-pass pages reach NAND; with a big cache
+        // nothing is flushed.
+        assert_eq!(sim.counters.pages_programmed, 0);
+        assert_eq!(sim.counters.requests_done, 2);
+    }
+}

@@ -1,0 +1,261 @@
+//! Design-space exploration (§5.3.2's motivating question: given a capacity
+//! budget, which channel/way configuration should an SSD use?).
+//!
+//! The explorer enumerates candidate designs, evaluates them through the
+//! AOT-compiled analytic model (PJRT) — or the pure-Rust mirror when
+//! artifacts are absent — and reports ranked results and the
+//! bandwidth/energy/area Pareto front. The DES cross-validates the winners.
+
+use crate::analytic::{self, DesignPoint};
+use crate::config::SsdConfig;
+use crate::host::trace::RequestKind;
+use crate::iface::timing::InterfaceKind;
+use crate::nand::datasheet::CellType;
+use crate::runtime::Runtime;
+use anyhow::Result;
+
+/// One candidate design and its evaluated metrics.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub iface: InterfaceKind,
+    pub cell: CellType,
+    pub channels: u16,
+    pub ways: u16,
+    /// t_BYTE override (ns) for the metal-layer ablation; None = datasheet.
+    pub t_byte_ns: Option<f64>,
+    pub read_bw: f64,
+    pub write_bw: f64,
+    pub read_nj_b: f64,
+    pub write_nj_b: f64,
+}
+
+impl Candidate {
+    /// Area proxy: channels dominate controller area (each needs a NAND_IF
+    /// + ECC block and pins, §2.2.1); ways add die but share the interface.
+    pub fn area_proxy(&self) -> f64 {
+        self.channels as f64 + 0.15 * (self.channels as f64 * self.ways as f64)
+    }
+
+    /// Scalar figure of merit: harmonic-mean bandwidth per area.
+    pub fn merit(&self) -> f64 {
+        let hm = 2.0 / (1.0 / self.read_bw + 1.0 / self.write_bw);
+        hm / self.area_proxy()
+    }
+
+    fn cfg(&self) -> SsdConfig {
+        let mut cfg = SsdConfig {
+            iface: self.iface,
+            cell: self.cell,
+            channels: self.channels,
+            ways: self.ways,
+            ..SsdConfig::default()
+        };
+        if let Some(tb) = self.t_byte_ns {
+            cfg.params.t_byte_ns = tb;
+        }
+        cfg
+    }
+}
+
+/// The exploration space.
+#[derive(Debug, Clone)]
+pub struct Space {
+    pub ifaces: Vec<InterfaceKind>,
+    pub cells: Vec<CellType>,
+    /// (channels, ways) pairs.
+    pub configs: Vec<(u16, u16)>,
+    /// t_BYTE values to sweep (ns); empty = datasheet only.
+    pub t_byte_sweep: Vec<f64>,
+}
+
+impl Default for Space {
+    /// The paper's space: all interfaces × both cells × the constant-
+    /// capacity configs of Table 4 plus the way sweep of Table 3.
+    fn default() -> Space {
+        Space {
+            ifaces: InterfaceKind::ALL.to_vec(),
+            cells: vec![CellType::Slc, CellType::Mlc],
+            configs: vec![
+                (1, 1),
+                (1, 2),
+                (1, 4),
+                (1, 8),
+                (1, 16),
+                (2, 8),
+                (4, 4),
+                (2, 16),
+                (4, 8),
+            ],
+            t_byte_sweep: vec![],
+        }
+    }
+}
+
+impl Space {
+    pub fn enumerate(&self) -> Vec<Candidate> {
+        let mut out = Vec::new();
+        let tbytes: Vec<Option<f64>> = if self.t_byte_sweep.is_empty() {
+            vec![None]
+        } else {
+            self.t_byte_sweep.iter().map(|&v| Some(v)).collect()
+        };
+        for &iface in &self.ifaces {
+            for &cell in &self.cells {
+                for &(channels, ways) in &self.configs {
+                    for &t_byte_ns in &tbytes {
+                        out.push(Candidate {
+                            iface,
+                            cell,
+                            channels,
+                            ways,
+                            t_byte_ns,
+                            read_bw: 0.0,
+                            write_bw: 0.0,
+                            read_nj_b: 0.0,
+                            write_nj_b: 0.0,
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// How candidates were evaluated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT JAX/Pallas artifact through PJRT.
+    Hlo,
+    /// Pure-Rust analytic mirror.
+    Native,
+}
+
+/// Evaluate all candidates; uses the HLO runtime when provided.
+pub fn evaluate(
+    space: &Space,
+    runtime: Option<&Runtime>,
+) -> Result<(Vec<Candidate>, Backend)> {
+    let mut cands = space.enumerate();
+    let points: Vec<DesignPoint> = cands
+        .iter()
+        .map(|c| DesignPoint::from_config(&c.cfg()))
+        .collect();
+    let backend = match runtime {
+        Some(rt) => {
+            // The artifact grid is 4096 rows; chunk if ever larger.
+            let mut offset = 0;
+            for chunk in points.chunks(crate::runtime::PERF_N) {
+                let outs = rt.perf_batch(chunk)?;
+                for (i, o) in outs.into_iter().enumerate() {
+                    let c = &mut cands[offset + i];
+                    c.read_bw = o[0];
+                    c.write_bw = o[1];
+                    c.read_nj_b = o[2];
+                    c.write_nj_b = o[3];
+                }
+                offset += chunk.len();
+            }
+            Backend::Hlo
+        }
+        None => {
+            for (c, p) in cands.iter_mut().zip(&points) {
+                c.read_bw = analytic::bandwidth_mbps(p, RequestKind::Read);
+                c.write_bw = analytic::bandwidth_mbps(p, RequestKind::Write);
+                c.read_nj_b = analytic::energy_nj_per_byte(p, RequestKind::Read);
+                c.write_nj_b = analytic::energy_nj_per_byte(p, RequestKind::Write);
+            }
+            Backend::Native
+        }
+    };
+    Ok((cands, backend))
+}
+
+/// Rank by figure of merit, best first.
+pub fn rank(mut cands: Vec<Candidate>) -> Vec<Candidate> {
+    cands.sort_by(|a, b| b.merit().partial_cmp(&a.merit()).unwrap());
+    cands
+}
+
+/// Pareto front over (read_bw ↑, write_bw ↑, area ↓, write energy ↓).
+pub fn pareto_front(cands: &[Candidate]) -> Vec<Candidate> {
+    let dominates = |a: &Candidate, b: &Candidate| {
+        let ge = a.read_bw >= b.read_bw
+            && a.write_bw >= b.write_bw
+            && a.area_proxy() <= b.area_proxy()
+            && a.write_nj_b <= b.write_nj_b;
+        let gt = a.read_bw > b.read_bw
+            || a.write_bw > b.write_bw
+            || a.area_proxy() < b.area_proxy()
+            || a.write_nj_b < b.write_nj_b;
+        ge && gt
+    };
+    cands
+        .iter()
+        .filter(|c| !cands.iter().any(|o| dominates(o, c)))
+        .cloned()
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn enumerate_counts() {
+        let s = Space::default();
+        assert_eq!(s.enumerate().len(), 3 * 2 * 9);
+        let mut s2 = s.clone();
+        s2.t_byte_sweep = vec![12.0, 8.0, 4.0];
+        assert_eq!(s2.enumerate().len(), 3 * 2 * 9 * 3);
+    }
+
+    #[test]
+    fn native_evaluation_ranks_proposed_on_top() {
+        let (cands, backend) = evaluate(&Space::default(), None).unwrap();
+        assert_eq!(backend, Backend::Native);
+        let ranked = rank(cands);
+        // Best merit design should use the PROPOSED interface (it wins
+        // bandwidth at equal area everywhere).
+        assert_eq!(ranked[0].iface, InterfaceKind::Proposed);
+    }
+
+    #[test]
+    fn pareto_front_nonempty_and_consistent() {
+        let (cands, _) = evaluate(&Space::default(), None).unwrap();
+        let front = pareto_front(&cands);
+        assert!(!front.is_empty());
+        assert!(front.len() < cands.len());
+        // Every front member must be undominated: re-check.
+        for f in &front {
+            assert!(front.iter().filter(|o| o.read_bw > f.read_bw
+                && o.write_bw > f.write_bw
+                && o.area_proxy() < f.area_proxy()
+                && o.write_nj_b < f.write_nj_b).count() == 0);
+        }
+    }
+
+    #[test]
+    fn tbyte_sweep_raises_proposed_ceiling() {
+        // A2 ablation: shrinking t_BYTE (extra metal layer) must raise
+        // PROPOSED read bandwidth while CONV stays path-limited.
+        let mut s = Space {
+            ifaces: vec![InterfaceKind::Proposed, InterfaceKind::Conv],
+            cells: vec![CellType::Slc],
+            configs: vec![(1, 16)],
+            t_byte_sweep: vec![12.0, 6.0],
+        };
+        s.cells = vec![CellType::Slc];
+        let (cands, _) = evaluate(&s, None).unwrap();
+        let find = |iface, tb| {
+            cands
+                .iter()
+                .find(|c| c.iface == iface && c.t_byte_ns == Some(tb))
+                .unwrap()
+                .read_bw
+        };
+        assert!(find(InterfaceKind::Proposed, 6.0) > 1.1 * find(InterfaceKind::Proposed, 12.0));
+        let conv_gain = find(InterfaceKind::Conv, 6.0) / find(InterfaceKind::Conv, 12.0);
+        assert!(conv_gain < 1.05, "CONV stays t_RC-limited: {conv_gain}");
+    }
+}

@@ -1,0 +1,142 @@
+//! Energy model (§5.3.3).
+//!
+//! The paper measures the *controller's* average power per interface and
+//! divides by achieved bandwidth to get energy per byte (Fig. 10/Table 5).
+//! Per-interface controller power is constant in the paper's data — the
+//! nJ/B × MB/s product is flat across way counts — so the model is a
+//! per-interface active-power constant (synthesis at 50 MHz vs 83 MHz, plus
+//! the DLL/duplicated-FIFO overhead of PROPOSED), with the crossover in
+//! Fig. 10 emerging from the bandwidth differences.
+
+use crate::iface::timing::InterfaceKind;
+use crate::util::time::Ps;
+
+/// Controller power model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerModel {
+    /// Active controller power in milliwatts while the SSD is operating.
+    pub controller_mw: f64,
+    /// NAND array energy per programmed page in nJ (extension; not part of
+    /// the paper's controller-only comparison).
+    pub nand_prog_nj_per_page: f64,
+    /// NAND array energy per read page in nJ.
+    pub nand_read_nj_per_page: f64,
+}
+
+impl PowerModel {
+    /// Calibrated from Table 5: nJ/B × MB/s ≈ 22.5 mW (CONV), 42 mW
+    /// (SYNC_ONLY), 46.5 mW (PROPOSED). The 83 MHz designs burn more power
+    /// than the 50 MHz CONV; PROPOSED adds the DLL and duplicated FIFOs
+    /// over SYNC_ONLY.
+    pub fn for_interface(kind: InterfaceKind) -> PowerModel {
+        let controller_mw = match kind {
+            InterfaceKind::Conv => 22.5,
+            InterfaceKind::SyncOnly => 42.0,
+            InterfaceKind::Proposed => 46.5,
+        };
+        PowerModel {
+            controller_mw,
+            nand_prog_nj_per_page: 33.0, // ~1.65 uA*3.3V*... representative
+            nand_read_nj_per_page: 10.0,
+        }
+    }
+}
+
+/// Accumulated energy over a simulation run.
+#[derive(Debug, Clone, Default)]
+pub struct EnergyMeter {
+    pub controller_nj: f64,
+    pub nand_nj: f64,
+    pub bytes: u64,
+}
+
+impl EnergyMeter {
+    /// Account controller energy for an elapsed window.
+    pub fn add_window(&mut self, model: &PowerModel, elapsed: Ps) {
+        // mW × s = mJ; ×1e6 -> nJ.
+        self.controller_nj += model.controller_mw * elapsed.as_secs_f64() * 1e6;
+    }
+
+    pub fn add_nand_program(&mut self, model: &PowerModel, pages: u64) {
+        self.nand_nj += model.nand_prog_nj_per_page * pages as f64;
+    }
+
+    pub fn add_nand_read(&mut self, model: &PowerModel, pages: u64) {
+        self.nand_nj += model.nand_read_nj_per_page * pages as f64;
+    }
+
+    pub fn add_bytes(&mut self, bytes: u64) {
+        self.bytes += bytes;
+    }
+
+    /// The paper's metric: controller energy per transferred byte (nJ/B).
+    pub fn controller_nj_per_byte(&self) -> f64 {
+        if self.bytes == 0 {
+            0.0
+        } else {
+            self.controller_nj / self.bytes as f64
+        }
+    }
+
+    /// Total (controller + NAND) energy per byte — extension metric.
+    pub fn total_nj_per_byte(&self) -> f64 {
+        if self.bytes == 0 {
+            0.0
+        } else {
+            (self.controller_nj + self.nand_nj) / self.bytes as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn power_ordering_matches_paper() {
+        let c = PowerModel::for_interface(InterfaceKind::Conv).controller_mw;
+        let s = PowerModel::for_interface(InterfaceKind::SyncOnly).controller_mw;
+        let p = PowerModel::for_interface(InterfaceKind::Proposed).controller_mw;
+        assert!(c < s && s < p);
+    }
+
+    #[test]
+    fn energy_per_byte_is_power_over_bandwidth() {
+        // At BW MB/s, E/B = P_mw / BW (nJ/B). Check the identity through
+        // the meter: move `bw` MB in one second.
+        let model = PowerModel::for_interface(InterfaceKind::Proposed);
+        let mut m = EnergyMeter::default();
+        let bw_mbps = 97.35; // Table 3 SLC write 16-way PROPOSED
+        m.add_window(&model, Ps::ms(1000));
+        m.add_bytes((bw_mbps * 1e6) as u64);
+        let e = m.controller_nj_per_byte();
+        assert!((e - 46.5 / 97.35).abs() < 1e-3, "e={e}");
+        // Table 5 16-way write PROPOSED: 0.48 nJ/B
+        assert!((e - 0.48).abs() < 0.01, "e={e}");
+    }
+
+    #[test]
+    fn conv_16way_write_matches_table5() {
+        let model = PowerModel::for_interface(InterfaceKind::Conv);
+        let mut m = EnergyMeter::default();
+        m.add_window(&model, Ps::ms(1000));
+        m.add_bytes((39.76 * 1e6) as u64);
+        assert!((m.controller_nj_per_byte() - 0.57).abs() < 0.01);
+    }
+
+    #[test]
+    fn nand_energy_accumulates() {
+        let model = PowerModel::for_interface(InterfaceKind::Conv);
+        let mut m = EnergyMeter::default();
+        m.add_nand_program(&model, 10);
+        m.add_nand_read(&model, 10);
+        assert!((m.nand_nj - 430.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_bytes_no_nan() {
+        let m = EnergyMeter::default();
+        assert_eq!(m.controller_nj_per_byte(), 0.0);
+        assert_eq!(m.total_nj_per_byte(), 0.0);
+    }
+}

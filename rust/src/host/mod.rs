@@ -1,0 +1,7 @@
+//! Host side: the SATA link model and workload traces.
+
+pub mod sata;
+pub mod trace;
+
+pub use sata::{SataGen, SataLink};
+pub use trace::{Request, RequestKind, Trace, TraceGen};

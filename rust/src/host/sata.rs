@@ -1,0 +1,137 @@
+//! SATA host-interface model.
+//!
+//! The paper attaches the SSD over SATA2 ("SATA 3 Gbit/s", up to 300 MB/s
+//! payload, footnote 1). We model the link as a serialized resource with a
+//! payload bandwidth cap and a per-frame protocol overhead; Table 4's
+//! (4-channel, 4-way) read rows saturate exactly this cap ("max").
+
+use crate::util::time::Ps;
+
+/// SATA generation / link parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SataGen {
+    /// Payload bandwidth cap in MB/s.
+    pub bandwidth_mbps: f64,
+    /// Per-command protocol overhead (FIS exchange, command setup).
+    pub command_overhead: Ps,
+}
+
+impl SataGen {
+    /// SATA2 / 3 Gbit/s: 300 MB/s payload (the paper's host interface).
+    pub fn sata2() -> SataGen {
+        SataGen {
+            bandwidth_mbps: 300.0,
+            command_overhead: Ps::us(5),
+        }
+    }
+
+    /// SATA1 / 1.5 Gbit/s: 150 MB/s.
+    pub fn sata1() -> SataGen {
+        SataGen {
+            bandwidth_mbps: 150.0,
+            command_overhead: Ps::us(5),
+        }
+    }
+
+    /// SATA3 / 6 Gbit/s: 600 MB/s (for what-if ablations).
+    pub fn sata3() -> SataGen {
+        SataGen {
+            bandwidth_mbps: 600.0,
+            command_overhead: Ps::us(5),
+        }
+    }
+
+    /// Payload transfer time for `bytes`.
+    pub fn transfer_time(&self, bytes: u64) -> Ps {
+        Ps((bytes as f64 / (self.bandwidth_mbps * 1e6) * 1e12).round() as i64)
+    }
+}
+
+/// The link as a DES resource: serialized, bandwidth-capped.
+#[derive(Debug, Clone)]
+pub struct SataLink {
+    pub gen: SataGen,
+    busy_until: Ps,
+    pub bytes_moved: u64,
+    pub busy_time: Ps,
+}
+
+impl SataLink {
+    pub fn new(gen: SataGen) -> SataLink {
+        SataLink {
+            gen,
+            busy_until: Ps::ZERO,
+            bytes_moved: 0,
+            busy_time: Ps::ZERO,
+        }
+    }
+
+    pub fn free_at(&self, now: Ps) -> Ps {
+        self.busy_until.max(now)
+    }
+
+    pub fn is_free(&self, now: Ps) -> bool {
+        now >= self.busy_until
+    }
+
+    /// Reserve the link starting no earlier than `now` for a payload of
+    /// `bytes` (plus command overhead if `with_cmd`); returns (start, done).
+    pub fn reserve(&mut self, now: Ps, bytes: u64, with_cmd: bool) -> (Ps, Ps) {
+        let start = self.free_at(now);
+        let mut dur = self.gen.transfer_time(bytes);
+        if with_cmd {
+            dur += self.gen.command_overhead;
+        }
+        self.busy_until = start + dur;
+        self.bytes_moved += bytes;
+        self.busy_time += dur;
+        (start, self.busy_until)
+    }
+
+    /// Achieved payload utilization of the cap over a window.
+    pub fn utilization(&self, elapsed: Ps) -> f64 {
+        if elapsed.as_ps() <= 0 {
+            return 0.0;
+        }
+        self.busy_time.as_ps() as f64 / elapsed.as_ps() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sata2_transfer_times() {
+        let g = SataGen::sata2();
+        // 64 KiB at 300 MB/s = 218.45 us
+        let t = g.transfer_time(65536);
+        assert!((t.as_us_f64() - 218.45).abs() < 0.01, "t={t}");
+        // 2048 B page chunk = 6.83 us
+        let t = g.transfer_time(2048);
+        assert!((t.as_us_f64() - 6.83).abs() < 0.01);
+    }
+
+    #[test]
+    fn link_serializes() {
+        let mut l = SataLink::new(SataGen::sata2());
+        let (s1, d1) = l.reserve(Ps::ZERO, 2048, true);
+        assert_eq!(s1, Ps::ZERO);
+        let (s2, _) = l.reserve(Ps::ZERO, 2048, false);
+        assert_eq!(s2, d1, "second transfer must wait for the first");
+    }
+
+    #[test]
+    fn reserve_after_idle_starts_at_now() {
+        let mut l = SataLink::new(SataGen::sata2());
+        l.reserve(Ps::ZERO, 2048, false);
+        let (s, _) = l.reserve(Ps::ms(1), 2048, false);
+        assert_eq!(s, Ps::ms(1));
+    }
+
+    #[test]
+    fn generations_ordered() {
+        assert!(SataGen::sata1().transfer_time(4096) > SataGen::sata2().transfer_time(4096));
+        assert!(SataGen::sata2().transfer_time(4096) > SataGen::sata3().transfer_time(4096));
+    }
+}

@@ -1,0 +1,234 @@
+//! Workload traces.
+//!
+//! The paper's experiments use "widely used sequential traces that consist
+//! of 64-KB read/write data chunks" [30] (MMC system specification access
+//! patterns). [`TraceGen`] produces those plus random and mixed workloads
+//! for the extended experiments; [`Trace`] round-trips through a simple
+//! text format so external traces can be replayed.
+
+use crate::util::prng::Prng;
+
+/// Read or write.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RequestKind {
+    Read,
+    Write,
+}
+
+impl RequestKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            RequestKind::Read => "read",
+            RequestKind::Write => "write",
+        }
+    }
+}
+
+/// One host request: a contiguous byte extent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Request {
+    pub kind: RequestKind,
+    /// Byte offset into the logical volume.
+    pub offset: u64,
+    /// Length in bytes.
+    pub bytes: u32,
+}
+
+/// An ordered workload.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub requests: Vec<Request>,
+}
+
+impl Trace {
+    pub fn total_bytes(&self) -> u64 {
+        self.requests.iter().map(|r| r.bytes as u64).sum()
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Serialize to the text trace format: `R|W <offset> <bytes>` per line,
+    /// '#' comments allowed.
+    pub fn to_text(&self) -> String {
+        let mut s = String::with_capacity(self.requests.len() * 16);
+        s.push_str("# ddrnand trace v1: <R|W> <offset-bytes> <length-bytes>\n");
+        for r in &self.requests {
+            let k = match r.kind {
+                RequestKind::Read => 'R',
+                RequestKind::Write => 'W',
+            };
+            s.push_str(&format!("{k} {} {}\n", r.offset, r.bytes));
+        }
+        s
+    }
+
+    /// Parse the text trace format.
+    pub fn from_text(text: &str) -> Result<Trace, String> {
+        let mut requests = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let kind = match it.next() {
+                Some("R") | Some("r") => RequestKind::Read,
+                Some("W") | Some("w") => RequestKind::Write,
+                other => return Err(format!("line {}: bad kind {other:?}", i + 1)),
+            };
+            let offset: u64 = it
+                .next()
+                .ok_or_else(|| format!("line {}: missing offset", i + 1))?
+                .parse()
+                .map_err(|e| format!("line {}: bad offset: {e}", i + 1))?;
+            let bytes: u32 = it
+                .next()
+                .ok_or_else(|| format!("line {}: missing length", i + 1))?
+                .parse()
+                .map_err(|e| format!("line {}: bad length: {e}", i + 1))?;
+            if bytes == 0 {
+                return Err(format!("line {}: zero-length request", i + 1));
+            }
+            requests.push(Request {
+                kind,
+                offset,
+                bytes,
+            });
+        }
+        Ok(Trace { requests })
+    }
+}
+
+/// Workload generators.
+#[derive(Debug, Clone)]
+pub struct TraceGen {
+    /// Request size in bytes (64 KiB in the paper).
+    pub request_bytes: u32,
+}
+
+impl Default for TraceGen {
+    fn default() -> Self {
+        TraceGen {
+            request_bytes: 64 * 1024,
+        }
+    }
+}
+
+impl TraceGen {
+    /// The paper's workload: `n` back-to-back sequential requests of one
+    /// kind, starting at offset 0.
+    pub fn sequential(&self, kind: RequestKind, n: usize) -> Trace {
+        let requests = (0..n)
+            .map(|i| Request {
+                kind,
+                offset: i as u64 * self.request_bytes as u64,
+                bytes: self.request_bytes,
+            })
+            .collect();
+        Trace { requests }
+    }
+
+    /// Uniform-random offsets within `volume_bytes`, aligned to the request
+    /// size.
+    pub fn random(
+        &self,
+        kind: RequestKind,
+        n: usize,
+        volume_bytes: u64,
+        seed: u64,
+    ) -> Trace {
+        let mut rng = Prng::new(seed);
+        let slots = (volume_bytes / self.request_bytes as u64).max(1);
+        let requests = (0..n)
+            .map(|_| Request {
+                kind,
+                offset: rng.next_bounded(slots) * self.request_bytes as u64,
+                bytes: self.request_bytes,
+            })
+            .collect();
+        Trace { requests }
+    }
+
+    /// Mixed read/write sequential stream with the given write fraction.
+    pub fn mixed_sequential(&self, n: usize, write_fraction: f64, seed: u64) -> Trace {
+        let mut rng = Prng::new(seed);
+        let requests = (0..n)
+            .map(|i| Request {
+                kind: if rng.next_bool(write_fraction) {
+                    RequestKind::Write
+                } else {
+                    RequestKind::Read
+                },
+                offset: i as u64 * self.request_bytes as u64,
+                bytes: self.request_bytes,
+            })
+            .collect();
+        Trace { requests }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_is_contiguous() {
+        let t = TraceGen::default().sequential(RequestKind::Write, 4);
+        assert_eq!(t.len(), 4);
+        for (i, r) in t.requests.iter().enumerate() {
+            assert_eq!(r.offset, i as u64 * 65536);
+            assert_eq!(r.bytes, 65536);
+            assert_eq!(r.kind, RequestKind::Write);
+        }
+        assert_eq!(t.total_bytes(), 4 * 65536);
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let t = TraceGen::default().mixed_sequential(32, 0.5, 1);
+        let text = t.to_text();
+        let back = Trace::from_text(&text).unwrap();
+        assert_eq!(t.requests, back.requests);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Trace::from_text("X 0 4096").is_err());
+        assert!(Trace::from_text("R zero 4096").is_err());
+        assert!(Trace::from_text("R 0").is_err());
+        assert!(Trace::from_text("R 0 0").is_err());
+    }
+
+    #[test]
+    fn parse_skips_comments_and_blanks() {
+        let t = Trace::from_text("# hi\n\nR 0 2048\n  \nW 2048 2048\n").unwrap();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.requests[1].kind, RequestKind::Write);
+    }
+
+    #[test]
+    fn random_is_aligned_and_bounded() {
+        let t = TraceGen::default().random(RequestKind::Read, 100, 1 << 30, 7);
+        for r in &t.requests {
+            assert_eq!(r.offset % 65536, 0);
+            assert!(r.offset + r.bytes as u64 <= 1 << 30);
+        }
+    }
+
+    #[test]
+    fn mixed_fraction_roughly_holds() {
+        let t = TraceGen::default().mixed_sequential(2000, 0.3, 9);
+        let writes = t
+            .requests
+            .iter()
+            .filter(|r| r.kind == RequestKind::Write)
+            .count();
+        let frac = writes as f64 / 2000.0;
+        assert!((frac - 0.3).abs() < 0.05, "frac={frac}");
+    }
+}

@@ -1,0 +1,154 @@
+//! Event-duration model of one channel bus at a chosen operating point.
+//!
+//! Converts the closed-form analysis of [`super::timing`] into the concrete
+//! durations the DES schedules: command/address phases, page data transfers
+//! and status polls. One `BusTiming` exists per channel; all ways on the
+//! channel share it (way interleaving multiplexes this bus, §2.2.1).
+
+use crate::iface::timing::{IfaceParams, InterfaceKind};
+use crate::util::time::Ps;
+
+/// Cycle counts for NAND command sequences (ONFI-style, 8-bit bus):
+/// command byte(s) + 5 address bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CommandCycles {
+    /// READ: 00h + 5 addr + 30h.
+    pub read: u32,
+    /// PROGRAM: 80h + 5 addr (+ data…) + 10h.
+    pub program: u32,
+    /// ERASE: 60h + 3 addr + D0h.
+    pub erase: u32,
+    /// STATUS: 70h + 1 data cycle.
+    pub status: u32,
+    /// Controller-side issue overhead per command, in interface-clock
+    /// cycles (NAND_IF pipeline, FIFO (re)arming, D_CON settling). This is
+    /// a calibration constant; see DESIGN.md §Calibration anchors.
+    pub controller_overhead: u32,
+}
+
+impl Default for CommandCycles {
+    fn default() -> Self {
+        CommandCycles {
+            read: 7,
+            program: 7,
+            erase: 5,
+            status: 2,
+            controller_overhead: 113,
+        }
+    }
+}
+
+/// Concrete bus-event durations for one (interface, NAND device) pairing.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BusTiming {
+    pub kind: InterfaceKind,
+    /// Interface clock period (t_P at the operating point).
+    pub t_cycle: Ps,
+    /// Per-byte data transfer time (t_cycle for SDR, t_cycle/2 for DDR).
+    pub t_data_byte: Ps,
+    pub cycles: CommandCycles,
+}
+
+impl BusTiming {
+    /// Derive from Table 2-style parameters at the paper's operating rule.
+    pub fn from_params(params: &IfaceParams, kind: InterfaceKind) -> BusTiming {
+        BusTiming {
+            kind,
+            t_cycle: Ps::from_ns_f64(params.operating_tp_ns(kind)),
+            t_data_byte: Ps::from_ns_f64(params.byte_time_ns(kind)),
+            cycles: CommandCycles::default(),
+        }
+    }
+
+    /// Duration of `n` command/address cycles. Command and address bytes are
+    /// always SDR (one per cycle) — the DDR packing applies to data only
+    /// (Fig. 6: DVS toggles during data bursts).
+    pub fn cmd_cycles(&self, n: u32) -> Ps {
+        self.t_cycle.times(n as u64)
+    }
+
+    /// Bus occupancy of the READ command + address phase, including the
+    /// controller issue overhead.
+    pub fn read_cmd(&self) -> Ps {
+        self.cmd_cycles(self.cycles.read + self.cycles.controller_overhead)
+    }
+
+    /// Bus occupancy of the PROGRAM command + address phase.
+    pub fn program_cmd(&self) -> Ps {
+        self.cmd_cycles(self.cycles.program + self.cycles.controller_overhead)
+    }
+
+    /// Bus occupancy of the ERASE command phase.
+    pub fn erase_cmd(&self) -> Ps {
+        self.cmd_cycles(self.cycles.erase + self.cycles.controller_overhead)
+    }
+
+    /// Bus occupancy of one status poll (70h + status byte).
+    pub fn status_poll(&self) -> Ps {
+        self.cmd_cycles(self.cycles.status)
+    }
+
+    /// Bus occupancy of a data burst of `bytes` bytes.
+    pub fn data_transfer(&self, bytes: u32) -> Ps {
+        self.t_data_byte.times(bytes as u64)
+    }
+
+    /// Operating frequency in MHz (for reports).
+    pub fn freq_mhz(&self) -> f64 {
+        1e3 / self.t_cycle.as_ns_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn timings() -> (BusTiming, BusTiming, BusTiming) {
+        let p = IfaceParams::default();
+        (
+            BusTiming::from_params(&p, InterfaceKind::Conv),
+            BusTiming::from_params(&p, InterfaceKind::SyncOnly),
+            BusTiming::from_params(&p, InterfaceKind::Proposed),
+        )
+    }
+
+    #[test]
+    fn operating_points() {
+        let (c, s, d) = timings();
+        assert_eq!(c.t_cycle, Ps::ns(20));
+        assert_eq!(c.t_data_byte, Ps::ns(20));
+        // 83 MHz -> 12.048 ns
+        assert_eq!(s.t_cycle, Ps::ps(12_048));
+        assert_eq!(s.t_data_byte, Ps::ps(12_048));
+        assert_eq!(d.t_cycle, Ps::ps(12_048));
+        assert_eq!(d.t_data_byte, Ps::ps(6_024));
+    }
+
+    #[test]
+    fn page_transfer_ratios() {
+        // A 2112-byte SLC page: CONV 42.24us, SYNC 25.44us, DDR 12.72us —
+        // DDR exactly halves SYNC_ONLY.
+        let (c, s, d) = timings();
+        let conv = c.data_transfer(2112);
+        let sync = s.data_transfer(2112);
+        let ddr = d.data_transfer(2112);
+        assert_eq!(conv, Ps::ns(42_240));
+        assert_eq!(sync.as_ps(), 2 * ddr.as_ps());
+        assert!(conv > sync && sync > ddr);
+    }
+
+    #[test]
+    fn cmd_phases_sdr_even_on_ddr() {
+        let (_, s, d) = timings();
+        // Same clock -> same command-phase duration despite DDR data.
+        assert_eq!(s.read_cmd(), d.read_cmd());
+        assert!(d.read_cmd() > d.status_poll());
+    }
+
+    #[test]
+    fn freq_reported() {
+        let (c, _, d) = timings();
+        assert!((c.freq_mhz() - 50.0).abs() < 1e-9);
+        assert!((d.freq_mhz() - 83.0).abs() < 0.01);
+    }
+}

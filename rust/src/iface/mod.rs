@@ -1,0 +1,24 @@
+//! Controller ↔ NAND flash interface models — the paper's contribution.
+//!
+//! Three interfaces are modelled (§5.3):
+//!
+//! * [`InterfaceKind::Conv`] — conventional **asynchronous single-data-rate**
+//!   interface (Fig. 3/4): WEB-paced writes, REB-paced reads with the
+//!   serialized control→data round trip that inflates t_RC (Eq. 4–6).
+//! * [`InterfaceKind::SyncOnly`] — the DVS-based **synchronous SDR**
+//!   interface of \[23\]: data strobed by DVS, single edge per transfer.
+//! * [`InterfaceKind::Proposed`] — the paper's **synchronous DDR** interface
+//!   (Fig. 5/6): RWEB replaces WEB/REB, DVS replaces REB pin, duplicated
+//!   FIFOs/latches clock data on both edges (Eq. 7–9).
+//!
+//! [`timing`] carries the closed-form minimum-clock-period analysis; [`bus`]
+//! turns a chosen operating frequency into event durations for the DES;
+//! [`pvt`] models process/voltage/temperature variation of the path delays.
+
+pub mod bus;
+pub mod pvt;
+pub mod timing;
+
+pub use bus::BusTiming;
+pub use pvt::PvtModel;
+pub use timing::{IfaceParams, InterfaceKind};

@@ -1,0 +1,164 @@
+//! Process/voltage/temperature (PVT) variation model.
+//!
+//! The paper motivates synchronous interfaces partly through PVT
+//! (de)sensitization (§2.3.3, ref. [23]): in the conventional read path the
+//! controller samples data on a delayed copy of its own clock, so any
+//! variation of t_OUT + t_REA + t_IN eats directly into the setup margin.
+//! With DVS, the strobe travels *with* the data, so only the board-level
+//! skew t_DIFF varies.
+//!
+//! This module samples jittered path delays and reports setup-violation
+//! probabilities; the same computation is implemented as the Pallas
+//! `montecarlo` kernel (python/compile/kernels/montecarlo.py) and the two
+//! are cross-checked in the integration tests.
+
+use crate::iface::timing::{IfaceParams, InterfaceKind};
+use crate::util::prng::Prng;
+
+/// Relative 1-sigma variation applied to each path delay.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PvtModel {
+    /// Sigma as a fraction of nominal for on-chip paths (t_OUT, t_IN, t_REA).
+    pub chip_sigma: f64,
+    /// Sigma as a fraction of nominal for board paths (t_DIFF).
+    pub board_sigma: f64,
+}
+
+impl Default for PvtModel {
+    fn default() -> Self {
+        // Worst-case 130nm corner spread; ±10% on-chip, ±5% board.
+        PvtModel {
+            chip_sigma: 0.10,
+            board_sigma: 0.05,
+        }
+    }
+}
+
+/// One sampled corner of the timing parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct PvtSample {
+    pub t_out_ns: f64,
+    pub t_in_ns: f64,
+    pub t_rea_ns: f64,
+    pub t_diff_ns: f64,
+}
+
+impl PvtModel {
+    /// Draw one jittered corner around the nominal parameters.
+    pub fn sample(&self, nominal: &IfaceParams, rng: &mut Prng) -> PvtSample {
+        let j = |v: f64, sigma: f64, rng: &mut Prng| v * (1.0 + sigma * rng.next_gaussian());
+        PvtSample {
+            t_out_ns: j(nominal.t_out_ns, self.chip_sigma, rng),
+            t_in_ns: j(nominal.t_in_ns, self.chip_sigma, rng),
+            t_rea_ns: j(nominal.t_rea_ns, self.chip_sigma, rng),
+            t_diff_ns: j(nominal.t_diff_ns, self.board_sigma, rng),
+        }
+    }
+
+    /// Does the read path meet setup at clock period `tp_ns` under `s`?
+    ///
+    /// * CONV (Eq. 4): t_OUT + t_REA + t_IN + t_S must fit in (1+α)·t_P.
+    /// * DVS interfaces (Eq. 9 form): 2(t_S + t_H + t_DIFF) ≤ t_P for DDR,
+    ///   (t_S + t_H + t_DIFF) ≤ t_P for SDR — only the skew varies.
+    pub fn read_path_meets(
+        &self,
+        kind: InterfaceKind,
+        nominal: &IfaceParams,
+        s: &PvtSample,
+        tp_ns: f64,
+    ) -> bool {
+        match kind {
+            InterfaceKind::Conv => {
+                s.t_out_ns + s.t_rea_ns + s.t_in_ns + nominal.t_s_ns
+                    <= (1.0 + nominal.alpha) * tp_ns + 1e-12
+            }
+            InterfaceKind::SyncOnly => {
+                (nominal.t_s_ns + nominal.t_h_ns + s.t_diff_ns) <= tp_ns + 1e-12
+            }
+            InterfaceKind::Proposed => {
+                2.0 * (nominal.t_s_ns + nominal.t_h_ns + s.t_diff_ns) <= tp_ns + 1e-12
+            }
+        }
+    }
+
+    /// Monte Carlo setup-violation probability at period `tp_ns`.
+    pub fn violation_probability(
+        &self,
+        kind: InterfaceKind,
+        nominal: &IfaceParams,
+        tp_ns: f64,
+        samples: u32,
+        seed: u64,
+    ) -> f64 {
+        let mut rng = Prng::new(seed);
+        let mut bad = 0u32;
+        for _ in 0..samples {
+            let s = self.sample(nominal, &mut rng);
+            if !self.read_path_meets(kind, nominal, &s, tp_ns) {
+                bad += 1;
+            }
+        }
+        bad as f64 / samples as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nominal_corners_pass_at_operating_points() {
+        let p = IfaceParams::default();
+        let pvt = PvtModel {
+            chip_sigma: 0.0,
+            board_sigma: 0.0,
+        };
+        let mut rng = Prng::new(1);
+        let s = pvt.sample(&p, &mut rng);
+        assert!(pvt.read_path_meets(InterfaceKind::Conv, &p, &s, p.operating_tp_ns(InterfaceKind::Conv)));
+        assert!(pvt.read_path_meets(
+            InterfaceKind::Proposed,
+            &p,
+            &s,
+            p.operating_tp_ns(InterfaceKind::Proposed)
+        ));
+    }
+
+    #[test]
+    fn conv_is_more_pvt_sensitive_than_proposed() {
+        // Shrink the margin: run both at a period 2% above their own
+        // nominal minimum and compare violation probabilities under the
+        // same variation. CONV accumulates three varying paths; PROPOSED
+        // only the board skew — the paper's desensitization claim.
+        let p = IfaceParams::default();
+        let pvt = PvtModel::default();
+        let conv_tp = p.conv_tp_min_ns() * 1.02;
+        let prop_tp = p.proposed_tp_min_board_ns() * 1.02;
+        let conv_viol = pvt.violation_probability(InterfaceKind::Conv, &p, conv_tp, 20_000, 42);
+        let prop_viol =
+            pvt.violation_probability(InterfaceKind::Proposed, &p, prop_tp, 20_000, 42);
+        assert!(
+            conv_viol > prop_viol,
+            "conv={conv_viol} prop={prop_viol}"
+        );
+        assert!(conv_viol > 0.05, "conv path should show real sensitivity");
+    }
+
+    #[test]
+    fn violation_monotone_in_period() {
+        let p = IfaceParams::default();
+        let pvt = PvtModel::default();
+        let v_tight = pvt.violation_probability(InterfaceKind::Conv, &p, 18.0, 10_000, 7);
+        let v_loose = pvt.violation_probability(InterfaceKind::Conv, &p, 24.0, 10_000, 7);
+        assert!(v_tight > v_loose);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let p = IfaceParams::default();
+        let pvt = PvtModel::default();
+        let a = pvt.violation_probability(InterfaceKind::Conv, &p, 19.81, 5_000, 99);
+        let b = pvt.violation_probability(InterfaceKind::Conv, &p, 19.81, 5_000, 99);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,253 @@
+//! Closed-form interface timing analysis — Eqs. (1)–(9) of the paper.
+//!
+//! All equations operate in fractional nanoseconds (f64) because the paper's
+//! Table 2 parameters are specified to 10 ps; the DES quantizes the derived
+//! clock to integer picoseconds afterwards.
+
+/// Which controller↔flash interface an SSD uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum InterfaceKind {
+    /// Conventional asynchronous SDR (Section 3). "CONV" in the tables.
+    Conv,
+    /// Synchronous SDR with DVS, per Son et al. [23]. "SYNC_ONLY".
+    SyncOnly,
+    /// Proposed synchronous DDR with DVS + DLL (Section 4). "PROPOSED".
+    Proposed,
+}
+
+impl InterfaceKind {
+    pub const ALL: [InterfaceKind; 3] =
+        [InterfaceKind::Conv, InterfaceKind::SyncOnly, InterfaceKind::Proposed];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            InterfaceKind::Conv => "CONV",
+            InterfaceKind::SyncOnly => "SYNC_ONLY",
+            InterfaceKind::Proposed => "PROPOSED",
+        }
+    }
+
+    /// Data beats per interface clock cycle (2 for DDR).
+    pub fn beats_per_cycle(self) -> u32 {
+        match self {
+            InterfaceKind::Proposed => 2,
+            _ => 1,
+        }
+    }
+
+    /// True for the interfaces that strobe data with DVS (synchronous read).
+    pub fn has_dvs(self) -> bool {
+        !matches!(self, InterfaceKind::Conv)
+    }
+}
+
+impl std::fmt::Display for InterfaceKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The measured/specified timing parameters of Table 2 (in ns).
+///
+/// The first five come from synthesis (PrimeTime on a 130 nm library in the
+/// paper; constants here), the rest from the NAND datasheets.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IfaceParams {
+    /// Signal propagation, controller FFs → flash strobe pads (CONV only).
+    pub t_out_ns: f64,
+    /// Data propagation, controller IO pad → RFIFO/WFIFO (CONV only).
+    pub t_in_ns: f64,
+    /// RFIFO/WFIFO setup time.
+    pub t_s_ns: f64,
+    /// RFIFO/WFIFO hold time.
+    pub t_h_ns: f64,
+    /// DVS-vs-IO board-level arrival skew at RFIFO (PROPOSED only).
+    pub t_diff_ns: f64,
+    /// RLAT → controller IO pad data transfer time (CONV only).
+    pub t_rea_ns: f64,
+    /// Page register ↔ latch per-byte time; device floor on t_P.
+    pub t_byte_ns: f64,
+    /// D_CON delay factor α in t_D = α·t_P, 0 ≤ α ≤ 1/2 (Eq. 1).
+    pub alpha: f64,
+    /// IO setup time w.r.t. DVS at the controller pad (Eq. 8 variant).
+    pub t_ios_ns: f64,
+    /// IO hold time w.r.t. DVS at the controller pad (Eq. 8 variant).
+    pub t_ioh_ns: f64,
+}
+
+impl Default for IfaceParams {
+    /// Table 2 of the paper.
+    fn default() -> Self {
+        IfaceParams {
+            t_out_ns: 7.82,
+            t_in_ns: 1.65,
+            t_s_ns: 0.25,
+            t_h_ns: 0.02,
+            t_diff_ns: 4.69,
+            t_rea_ns: 20.0,
+            t_byte_ns: 12.0,
+            alpha: 0.5,
+            t_ios_ns: 2.75,
+            t_ioh_ns: 2.75,
+        }
+    }
+}
+
+impl IfaceParams {
+    /// Eq. (1): t_D = α·t_P.
+    pub fn t_d_ns(&self, t_p_ns: f64) -> f64 {
+        self.alpha * t_p_ns
+    }
+
+    /// Eq. (6): minimum clock period of the **conventional** interface,
+    /// t_P,min = max{ (t_OUT + t_REA + t_IN + t_S) / (1 + α), t_BYTE }.
+    pub fn conv_tp_min_ns(&self) -> f64 {
+        let serial = (self.t_out_ns + self.t_rea_ns + self.t_in_ns + self.t_s_ns)
+            / (1.0 + self.alpha);
+        serial.max(self.t_byte_ns)
+    }
+
+    /// Eq. (8): minimum clock period of the **proposed** interface from the
+    /// controller-pad constraints: t_P,min = max{ 2(t_IOS + t_IOH), t_BYTE }.
+    pub fn proposed_tp_min_pad_ns(&self) -> f64 {
+        (2.0 * (self.t_ios_ns + self.t_ioh_ns)).max(self.t_byte_ns)
+    }
+
+    /// Eq. (9): minimum clock period of the **proposed** interface from
+    /// board-level parameters: t_P,min = max{ 2(t_S + t_H + t_DIFF), t_BYTE }.
+    pub fn proposed_tp_min_board_ns(&self) -> f64 {
+        (2.0 * (self.t_s_ns + self.t_h_ns + self.t_diff_ns)).max(self.t_byte_ns)
+    }
+
+    /// SYNC_ONLY ([23]) transfers on a single DVS edge; the strobe period is
+    /// limited by the same pad path as PROPOSED but without the ×2 DDR
+    /// packing, and by t_BYTE. The paper sets SYNC_ONLY to the same 83 MHz
+    /// clock as PROPOSED (§5.3: "derived from PROPOSED by replacing DDR
+    /// transfers with single-data-rate transfers").
+    pub fn sync_only_tp_min_ns(&self) -> f64 {
+        (self.t_s_ns + self.t_h_ns + self.t_diff_ns).max(self.t_byte_ns)
+    }
+
+    /// Minimum clock period for a given interface kind.
+    pub fn tp_min_ns(&self, kind: InterfaceKind) -> f64 {
+        match kind {
+            InterfaceKind::Conv => self.conv_tp_min_ns(),
+            InterfaceKind::SyncOnly => self.sync_only_tp_min_ns(),
+            InterfaceKind::Proposed => self.proposed_tp_min_board_ns(),
+        }
+    }
+
+    /// The paper's frequency setting rule (§5.2): the operating frequency is
+    /// t_P,min rounded **down** to a whole MHz (19.81 ns → 50 MHz,
+    /// 12 ns → 83 MHz).
+    pub fn operating_freq_mhz(&self, kind: InterfaceKind) -> u32 {
+        (1000.0 / self.tp_min_ns(kind)).floor() as u32
+    }
+
+    /// Operating clock period in ns from the whole-MHz frequency.
+    pub fn operating_tp_ns(&self, kind: InterfaceKind) -> f64 {
+        1000.0 / self.operating_freq_mhz(kind) as f64
+    }
+
+    /// Per-byte data transfer time on the bus at the operating point:
+    /// one byte per cycle for SDR, one byte per half-cycle for DDR.
+    pub fn byte_time_ns(&self, kind: InterfaceKind) -> f64 {
+        self.operating_tp_ns(kind) / kind.beats_per_cycle() as f64
+    }
+
+    /// Eq. (2): DLL delay t_DLL = t_IOD,max − t_RWEBD,min + t_IOS.
+    pub fn t_dll_ns(&self, t_iod_max_ns: f64, t_rwebd_min_ns: f64) -> f64 {
+        t_iod_max_ns - t_rwebd_min_ns + self.t_ios_ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_matches_paper_sect_5_2() {
+        // §5.2: t_P,min = max{(7.82+20+1.65+0.25)/1.5, 12} = 19.81 ns @ α=0.5
+        let p = IfaceParams::default();
+        let tp = p.conv_tp_min_ns();
+        assert!((tp - 19.81).abs() < 0.01, "tp={tp}");
+        assert_eq!(p.operating_freq_mhz(InterfaceKind::Conv), 50);
+    }
+
+    #[test]
+    fn proposed_matches_paper_sect_5_2() {
+        // §5.2: t_P,min = max{(0.25+0.02+4.69)×2, 12} = 12 ns → 83 MHz
+        let p = IfaceParams::default();
+        let tp = p.proposed_tp_min_board_ns();
+        assert!((tp - 12.0).abs() < 1e-9, "tp={tp}");
+        assert_eq!(p.operating_freq_mhz(InterfaceKind::Proposed), 83);
+    }
+
+    #[test]
+    fn sync_only_also_83mhz() {
+        let p = IfaceParams::default();
+        assert_eq!(p.operating_freq_mhz(InterfaceKind::SyncOnly), 83);
+    }
+
+    #[test]
+    fn ddr_halves_byte_time() {
+        let p = IfaceParams::default();
+        let sdr = p.byte_time_ns(InterfaceKind::SyncOnly);
+        let ddr = p.byte_time_ns(InterfaceKind::Proposed);
+        assert!((sdr - 2.0 * ddr).abs() < 1e-9);
+        // 83 MHz -> 12.048 ns SDR, 6.024 ns DDR
+        assert!((sdr - 12.048).abs() < 0.001, "sdr={sdr}");
+    }
+
+    #[test]
+    fn conv_byte_time_is_20ns() {
+        let p = IfaceParams::default();
+        assert!((p.byte_time_ns(InterfaceKind::Conv) - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tbyte_floor_binds_when_pad_path_is_fast() {
+        // If the board were perfect (t_DIFF -> 0) the floor is t_BYTE (§6:
+        // "only limited by t_BYTE").
+        let p = IfaceParams {
+            t_diff_ns: 0.0,
+            ..IfaceParams::default()
+        };
+        assert!((p.proposed_tp_min_board_ns() - 12.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn alpha_sweep_monotone() {
+        // Larger α gives the read path more slack -> smaller t_P,min (Eq. 6)
+        let mut last = f64::INFINITY;
+        for i in 0..=10 {
+            let alpha = i as f64 * 0.05;
+            let p = IfaceParams {
+                alpha,
+                ..IfaceParams::default()
+            };
+            let tp = p.conv_tp_min_ns();
+            assert!(tp <= last + 1e-12, "not monotone at alpha={alpha}");
+            last = tp;
+        }
+    }
+
+    #[test]
+    fn dll_delay_eq2() {
+        let p = IfaceParams::default();
+        // t_DLL = t_IOD,max - t_RWEBD,min + t_IOS
+        assert!((p.t_dll_ns(6.0, 1.5) - (6.0 - 1.5 + 2.75)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn faster_metal_layer_raises_frequency() {
+        // §5.1/§6: with an extra metal layer t_BYTE decreases and the
+        // proposed design's ceiling rises while CONV stays path-limited.
+        let fast = IfaceParams {
+            t_byte_ns: 6.0,
+            ..IfaceParams::default()
+        };
+        assert!(fast.operating_freq_mhz(InterfaceKind::Proposed) > 83);
+        assert_eq!(fast.operating_freq_mhz(InterfaceKind::Conv), 50);
+    }
+}

@@ -1,0 +1,31 @@
+//! # ddrnand
+//!
+//! Reproduction of *"A High-Performance Solid-State Disk with
+//! Double-Data-Rate NAND Flash Memory"* (Chung, Son, Bang, Kim, Shin, Yoon —
+//! 2015): a discrete-event SSD simulator comparing the conventional
+//! asynchronous NAND interface (CONV), the synchronous SDR interface of
+//! Son et al. \[23\] (SYNC_ONLY) and the paper's proposed synchronous DDR
+//! interface (PROPOSED), across way-interleaving degrees, channel
+//! configurations, SLC/MLC devices, bandwidth and energy — plus an
+//! AOT-compiled JAX/Pallas analytic model executed from Rust via PJRT for
+//! fast design-space exploration.
+//!
+//! See `DESIGN.md` for the architecture and the experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod analytic;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod controller;
+pub mod coordinator;
+pub mod dse;
+pub mod energy;
+pub mod host;
+pub mod iface;
+pub mod nand;
+pub mod proptest;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,10 @@
+//! `ddrnand` — leader binary. See `ddrnand --help` / `cli::usage()`.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.iter().any(|a| a == "--help" || a == "-h") {
+        println!("{}", ddrnand::cli::usage());
+        std::process::exit(0);
+    }
+    std::process::exit(ddrnand::cli::run(&argv));
+}

@@ -1,0 +1,217 @@
+//! Behavioral model of a single NAND flash chip.
+//!
+//! A chip is a state machine over {Ready, Busy}: array operations (read
+//! fetch t_R, program t_PROG, erase t_BERS) make the chip busy; IO-latch
+//! transfers are modelled by the bus (see [`crate::iface`]) and do not busy
+//! the array. This matches §2.1/§3: during t_PROG the chip "enters the busy
+//! state and cannot be interrupted".
+//!
+//! The chip also tracks per-block wear (program/erase cycles) so the FTL's
+//! wear-leveling has real state to act on.
+
+use crate::nand::datasheet::NandTiming;
+use crate::util::time::Ps;
+
+/// Array operations that busy the chip.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChipOp {
+    /// Fetch one page from the cell array into the page register (t_R).
+    ReadFetch { block: u32, page: u32 },
+    /// Program the page register into the cell array (t_PROG).
+    Program { block: u32, page: u32 },
+    /// Erase a whole block (t_BERS).
+    Erase { block: u32 },
+}
+
+/// Chip readiness.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChipState {
+    Ready,
+    /// Busy until the embedded completion time.
+    Busy(Ps),
+}
+
+/// One NAND die with its timing, busy state and wear counters.
+#[derive(Debug, Clone)]
+pub struct Chip {
+    pub timing: NandTiming,
+    state: ChipState,
+    /// Program/erase cycle count per block (wear).
+    pe_cycles: Vec<u32>,
+    /// Per-block count of programmed pages (for write-order invariants).
+    programmed_pages: Vec<u32>,
+    /// Statistics.
+    pub reads: u64,
+    pub programs: u64,
+    pub erases: u64,
+}
+
+impl Chip {
+    pub fn new(timing: NandTiming, blocks: u32) -> Chip {
+        Chip {
+            timing,
+            state: ChipState::Ready,
+            pe_cycles: vec![0; blocks as usize],
+            programmed_pages: vec![0; blocks as usize],
+            reads: 0,
+            programs: 0,
+            erases: 0,
+        }
+    }
+
+    pub fn state(&self) -> ChipState {
+        self.state
+    }
+
+    /// True if the array is ready at time `now` (lazily clears Busy).
+    pub fn is_ready(&mut self, now: Ps) -> bool {
+        if let ChipState::Busy(until) = self.state {
+            if now >= until {
+                self.state = ChipState::Ready;
+            }
+        }
+        self.state == ChipState::Ready
+    }
+
+    /// Time at which the chip becomes ready (now if already ready).
+    pub fn ready_at(&self, now: Ps) -> Ps {
+        match self.state {
+            ChipState::Ready => now,
+            ChipState::Busy(until) => until.max(now),
+        }
+    }
+
+    /// Start an array operation at `now`; returns its duration.
+    ///
+    /// Panics if the chip is busy — the controller must check readiness
+    /// first (the paper's controller polls the status register).
+    pub fn start(&mut self, now: Ps, op: ChipOp) -> Ps {
+        assert!(
+            self.is_ready(now),
+            "chip busy at {now:?}; controller must serialize array ops"
+        );
+        let dur = match op {
+            ChipOp::ReadFetch { block, .. } => {
+                assert!((block as usize) < self.pe_cycles.len(), "block out of range");
+                self.reads += 1;
+                self.timing.t_r
+            }
+            ChipOp::Program { block, page } => {
+                let b = block as usize;
+                assert!(b < self.pe_cycles.len(), "block out of range");
+                assert!(
+                    page < self.timing.pages_per_block,
+                    "page out of range within block"
+                );
+                self.programs += 1;
+                self.programmed_pages[b] += 1;
+                self.timing.t_prog
+            }
+            ChipOp::Erase { block } => {
+                let b = block as usize;
+                assert!(b < self.pe_cycles.len(), "block out of range");
+                self.erases += 1;
+                self.pe_cycles[b] += 1;
+                self.programmed_pages[b] = 0;
+                self.timing.t_bers
+            }
+        };
+        self.state = ChipState::Busy(now + dur);
+        dur
+    }
+
+    /// Program/erase cycles of a block (wear).
+    pub fn wear(&self, block: u32) -> u32 {
+        self.pe_cycles[block as usize]
+    }
+
+    /// Pages currently programmed in a block.
+    pub fn programmed(&self, block: u32) -> u32 {
+        self.programmed_pages[block as usize]
+    }
+
+    pub fn blocks(&self) -> u32 {
+        self.pe_cycles.len() as u32
+    }
+
+    /// Maximum wear across all blocks.
+    pub fn max_wear(&self) -> u32 {
+        self.pe_cycles.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Wear spread: max - min P/E cycles (wear leveling aims to keep small).
+    pub fn wear_spread(&self) -> u32 {
+        let max = self.pe_cycles.iter().copied().max().unwrap_or(0);
+        let min = self.pe_cycles.iter().copied().min().unwrap_or(0);
+        max - min
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nand::datasheet::NandTiming;
+
+    fn chip() -> Chip {
+        Chip::new(NandTiming::slc(), 16)
+    }
+
+    #[test]
+    fn read_busies_for_t_r() {
+        let mut c = chip();
+        let d = c.start(Ps::ZERO, ChipOp::ReadFetch { block: 0, page: 0 });
+        assert_eq!(d, Ps::us(25));
+        assert!(!c.is_ready(Ps::us(24)));
+        assert!(c.is_ready(Ps::us(25)));
+        assert_eq!(c.reads, 1);
+    }
+
+    #[test]
+    fn program_busies_for_t_prog() {
+        let mut c = chip();
+        let d = c.start(Ps::ZERO, ChipOp::Program { block: 1, page: 0 });
+        assert_eq!(d, Ps::us(215));
+        assert_eq!(c.ready_at(Ps::ZERO), Ps::us(215));
+        assert_eq!(c.programmed(1), 1);
+    }
+
+    #[test]
+    fn erase_resets_block_and_increments_wear() {
+        let mut c = chip();
+        c.start(Ps::ZERO, ChipOp::Program { block: 2, page: 0 });
+        let t = c.ready_at(Ps::ZERO);
+        c.start(t, ChipOp::Erase { block: 2 });
+        assert_eq!(c.wear(2), 1);
+        assert_eq!(c.programmed(2), 0);
+        assert_eq!(c.erases, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "chip busy")]
+    fn cannot_start_while_busy() {
+        let mut c = chip();
+        c.start(Ps::ZERO, ChipOp::ReadFetch { block: 0, page: 0 });
+        c.start(Ps::us(1), ChipOp::ReadFetch { block: 0, page: 1 });
+    }
+
+    #[test]
+    fn back_to_back_after_ready() {
+        let mut c = chip();
+        c.start(Ps::ZERO, ChipOp::ReadFetch { block: 0, page: 0 });
+        let t = c.ready_at(Ps::ZERO);
+        c.start(t, ChipOp::ReadFetch { block: 0, page: 1 });
+        assert_eq!(c.reads, 2);
+    }
+
+    #[test]
+    fn wear_spread_tracks() {
+        let mut c = chip();
+        let mut t = Ps::ZERO;
+        for _ in 0..5 {
+            c.start(t, ChipOp::Erase { block: 0 });
+            t = c.ready_at(t);
+        }
+        assert_eq!(c.wear_spread(), 5);
+        assert_eq!(c.max_wear(), 5);
+    }
+}

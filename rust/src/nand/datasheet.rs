@@ -1,0 +1,119 @@
+//! Datasheet timing and geometry constants for the simulated NAND devices.
+
+use crate::util::time::Ps;
+
+/// NAND flash cell type (bits per cell).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CellType {
+    /// Single-level cell: 1 bit/cell; fast program, small pages.
+    Slc,
+    /// Multi-level cell: 2 bits/cell; ~3–4× slower program (§1 of the paper).
+    Mlc,
+}
+
+impl CellType {
+    pub fn name(self) -> &'static str {
+        match self {
+            CellType::Slc => "SLC",
+            CellType::Mlc => "MLC",
+        }
+    }
+}
+
+impl std::fmt::Display for CellType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Device-level timing parameters of one NAND chip (Table 1, chip side).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NandTiming {
+    /// Cell array → page register fetch time (read busy).
+    pub t_r: Ps,
+    /// Page register → cell array program time (program busy).
+    pub t_prog: Ps,
+    /// Block erase busy time.
+    pub t_bers: Ps,
+    /// Page register ↔ IO latch per-byte transfer time; the device-level
+    /// floor on the interface clock period (Eqs. 6, 8, 9). 12 ns from the
+    /// MuxOneNAND datasheet [28].
+    pub t_byte: Ps,
+    /// Main data bytes per page.
+    pub page_bytes: u32,
+    /// Spare (OOB/ECC) bytes per page, transferred along with the page.
+    pub spare_bytes: u32,
+    /// Pages per erase block.
+    pub pages_per_block: u32,
+}
+
+impl NandTiming {
+    /// SLC per K9F1G08U0B class devices, calibrated to Table 3's 1-way rows.
+    pub fn slc() -> NandTiming {
+        NandTiming {
+            t_r: Ps::us(25),
+            t_prog: Ps::us(215),
+            t_bers: Ps::ms(2),
+            t_byte: Ps::ns(12),
+            page_bytes: 2048,
+            spare_bytes: 64,
+            pages_per_block: 64,
+        }
+    }
+
+    /// MLC per K9GAG08U0M class devices, calibrated to Table 3's 1-way rows.
+    pub fn mlc() -> NandTiming {
+        NandTiming {
+            t_r: Ps::us(60),
+            t_prog: Ps::us(830),
+            t_bers: Ps::us(2500),
+            t_byte: Ps::ns(12),
+            page_bytes: 4096,
+            spare_bytes: 128,
+            pages_per_block: 128,
+        }
+    }
+
+    pub fn for_cell(cell: CellType) -> NandTiming {
+        match cell {
+            CellType::Slc => NandTiming::slc(),
+            CellType::Mlc => NandTiming::mlc(),
+        }
+    }
+
+    /// Total bytes clocked over the bus per page (main + spare).
+    pub fn transfer_bytes(&self) -> u32 {
+        self.page_bytes + self.spare_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slc_parameters() {
+        let t = NandTiming::slc();
+        assert_eq!(t.page_bytes, 2048);
+        assert_eq!(t.spare_bytes, 64);
+        assert_eq!(t.transfer_bytes(), 2112);
+        assert_eq!(t.t_byte, Ps::ns(12));
+        assert!(t.t_prog > t.t_r, "t_PROG must dominate t_R (paper §2.1)");
+    }
+
+    #[test]
+    fn mlc_slower_than_slc() {
+        let s = NandTiming::slc();
+        let m = NandTiming::mlc();
+        // §1: MLC program time approximately 3x+ larger than SLC.
+        assert!(m.t_prog.as_ps() >= 3 * s.t_prog.as_ps());
+        assert!(m.t_r > s.t_r);
+        assert_eq!(m.page_bytes, 4096);
+    }
+
+    #[test]
+    fn for_cell_dispatch() {
+        assert_eq!(NandTiming::for_cell(CellType::Slc), NandTiming::slc());
+        assert_eq!(NandTiming::for_cell(CellType::Mlc), NandTiming::mlc());
+    }
+}

@@ -1,0 +1,131 @@
+//! Physical geometry and addressing of the flash array.
+
+/// Physical page address within one SSD: (channel, way, block, page).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PageAddr {
+    pub channel: u16,
+    pub way: u16,
+    pub block: u32,
+    pub page: u32,
+}
+
+/// Array geometry of the whole SSD.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Geometry {
+    pub channels: u16,
+    pub ways: u16,
+    pub blocks_per_chip: u32,
+    pub pages_per_block: u32,
+    pub page_bytes: u32,
+}
+
+impl Geometry {
+    pub fn chips(&self) -> u32 {
+        self.channels as u32 * self.ways as u32
+    }
+
+    pub fn pages_per_chip(&self) -> u64 {
+        self.blocks_per_chip as u64 * self.pages_per_block as u64
+    }
+
+    pub fn total_pages(&self) -> u64 {
+        self.pages_per_chip() * self.chips() as u64
+    }
+
+    pub fn capacity_bytes(&self) -> u64 {
+        self.total_pages() * self.page_bytes as u64
+    }
+
+    /// Map a linear physical page number to a `PageAddr`.
+    ///
+    /// Layout stripes consecutive pages **across channels first, then ways**
+    /// (channel striping then way interleaving, matching Fig. 2: sequential
+    /// data fans out over all buses before re-using one).
+    pub fn page_addr(&self, ppn: u64) -> PageAddr {
+        debug_assert!(ppn < self.total_pages());
+        let ch = (ppn % self.channels as u64) as u16;
+        let rest = ppn / self.channels as u64;
+        let way = (rest % self.ways as u64) as u16;
+        let rest = rest / self.ways as u64;
+        let page = (rest % self.pages_per_block as u64) as u32;
+        let block = (rest / self.pages_per_block as u64) as u32;
+        PageAddr {
+            channel: ch,
+            way,
+            block,
+            page,
+        }
+    }
+
+    /// Inverse of [`Geometry::page_addr`].
+    pub fn ppn(&self, a: PageAddr) -> u64 {
+        let within_chip = a.block as u64 * self.pages_per_block as u64 + a.page as u64;
+        (within_chip * self.ways as u64 + a.way as u64) * self.channels as u64 + a.channel as u64
+    }
+
+    /// Linear chip index of an address.
+    pub fn chip_index(&self, a: PageAddr) -> usize {
+        a.channel as usize * self.ways as usize + a.way as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn g() -> Geometry {
+        Geometry {
+            channels: 4,
+            ways: 4,
+            blocks_per_chip: 128,
+            pages_per_block: 64,
+            page_bytes: 2048,
+        }
+    }
+
+    #[test]
+    fn totals() {
+        let g = g();
+        assert_eq!(g.chips(), 16);
+        assert_eq!(g.pages_per_chip(), 8192);
+        assert_eq!(g.total_pages(), 131072);
+        assert_eq!(g.capacity_bytes(), 131072 * 2048);
+    }
+
+    #[test]
+    fn addr_roundtrip() {
+        let g = g();
+        for ppn in [0u64, 1, 4, 16, 17, 1000, 131071] {
+            assert_eq!(g.ppn(g.page_addr(ppn)), ppn, "ppn={ppn}");
+        }
+    }
+
+    #[test]
+    fn sequential_pages_stripe_channels_first() {
+        let g = g();
+        // ppn 0..4 should land on channels 0..3 (striping before interleaving)
+        for ppn in 0..4u64 {
+            assert_eq!(g.page_addr(ppn).channel, ppn as u16);
+            assert_eq!(g.page_addr(ppn).way, 0);
+        }
+        // next four move to way 1
+        for ppn in 4..8u64 {
+            assert_eq!(g.page_addr(ppn).channel, (ppn % 4) as u16);
+            assert_eq!(g.page_addr(ppn).way, 1);
+        }
+    }
+
+    #[test]
+    fn exhaustive_roundtrip_small() {
+        let g = Geometry {
+            channels: 2,
+            ways: 3,
+            blocks_per_chip: 4,
+            pages_per_block: 8,
+            page_bytes: 2048,
+        };
+        for ppn in 0..g.total_pages() {
+            assert_eq!(g.ppn(g.page_addr(ppn)), ppn);
+        }
+    }
+}

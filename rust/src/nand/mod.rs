@@ -1,0 +1,20 @@
+//! NAND flash memory behavioral model.
+//!
+//! Mirrors the chip structure of Fig. 1: a cell array, a page register, and
+//! IO latches, with the datasheet timing parameters the paper simulates
+//! (t_R, t_PROG, t_BYTE, page geometry). The chips named by the paper:
+//!
+//! * SLC — Samsung **K9F1G08U0B** (1 Gbit, 2 KiB + 64 B pages) [26]
+//! * MLC — Samsung **K9GAG08U0M** (16 Gbit, 4 KiB + 128 B pages) [27]
+//! * t_BYTE — Samsung **FK8G16Q2M MuxOneNAND** (12 ns) [28]
+//!
+//! The exact t_R/t_PROG values are calibrated so the 1-way rows of Table 3
+//! match (see DESIGN.md §Calibration anchors and `datasheet` below).
+
+pub mod chip;
+pub mod datasheet;
+pub mod geometry;
+
+pub use chip::{Chip, ChipOp, ChipState};
+pub use datasheet::{CellType, NandTiming};
+pub use geometry::{Geometry, PageAddr};

@@ -1,0 +1,138 @@
+//! Minimal property-testing harness (proptest is unavailable offline).
+//!
+//! Provides seeded case generation with failure reporting and linear input
+//! shrinking. Used by `rust/tests/ftl_properties.rs` and the invariant
+//! tests sprinkled through the modules.
+
+use crate::util::prng::Prng;
+
+/// Run `cases` random property checks. `gen` draws an input from the PRNG;
+/// `prop` returns `Err(reason)` on violation. On failure the harness tries
+/// to shrink via `shrink` (smaller inputs first) and panics with the
+/// minimal reproduction and its seed.
+pub fn check<T, G, P, S>(name: &str, cases: u32, seed: u64, mut gen: G, mut prop: P, shrink: S)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Prng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    S: Fn(&T) -> Vec<T>,
+{
+    let mut rng = Prng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(reason) = prop(&input) {
+            // Greedy shrink: first failing smaller candidate, repeat.
+            let mut minimal = input.clone();
+            let mut why = reason;
+            loop {
+                let mut shrunk = false;
+                for cand in shrink(&minimal) {
+                    if let Err(r) = prop(&cand) {
+                        minimal = cand;
+                        why = r;
+                        shrunk = true;
+                        break;
+                    }
+                }
+                if !shrunk {
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed})\n  minimal input: {minimal:?}\n  reason: {why}"
+            );
+        }
+    }
+}
+
+/// Shrinker for vectors: halves, then drop-one.
+pub fn shrink_vec<T: Clone>(v: &[T]) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    if v.is_empty() {
+        return out;
+    }
+    out.push(v[..v.len() / 2].to_vec());
+    out.push(v[v.len() / 2..].to_vec());
+    if v.len() <= 16 {
+        for i in 0..v.len() {
+            let mut c = v.to_vec();
+            c.remove(i);
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// Shrinker for unsigned integers: 0, half, decrement.
+pub fn shrink_u64(v: u64) -> Vec<u64> {
+    let mut out = Vec::new();
+    if v > 0 {
+        out.push(0);
+        if v / 2 != 0 {
+            out.push(v / 2);
+        }
+        out.push(v - 1);
+    }
+    out.dedup();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(
+            "sum-commutes",
+            100,
+            42,
+            |rng| (rng.next_bounded(1000), rng.next_bounded(1000)),
+            |&(a, b)| {
+                count += 1;
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+            |_| vec![],
+        );
+        assert_eq!(count, 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal input")]
+    fn failing_property_reports_minimal() {
+        check(
+            "all-below-500",
+            1000,
+            7,
+            |rng| rng.next_bounded(1000),
+            |&v| {
+                if v < 500 {
+                    Ok(())
+                } else {
+                    Err(format!("{v} >= 500"))
+                }
+            },
+            |&v| shrink_u64(v),
+        );
+    }
+
+    #[test]
+    fn shrink_vec_produces_smaller() {
+        let v = vec![1, 2, 3, 4];
+        for s in shrink_vec(&v) {
+            assert!(s.len() < v.len());
+        }
+    }
+
+    #[test]
+    fn shrink_u64_candidates() {
+        assert!(shrink_u64(0).is_empty());
+        let c = shrink_u64(100);
+        assert!(c.contains(&0) && c.contains(&50) && c.contains(&99));
+    }
+}

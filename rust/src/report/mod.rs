@@ -1,0 +1,140 @@
+//! Fixed-width table rendering and paper-vs-measured comparisons.
+
+use crate::coordinator::campaign::SimReport;
+
+/// A simple fixed-width text table.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(headers: Vec<S>) -> Table {
+        Table {
+            headers: headers.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render with per-column widths and a separator line.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            let mut line = String::new();
+            for i in 0..ncol {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                // Right-align numeric-looking cells, left-align text.
+                let c = &cells[i];
+                let numeric = c.chars().next().map_or(false, |ch| ch.is_ascii_digit() || ch == '-');
+                if numeric {
+                    line.push_str(&format!("{:>w$}", c, w = widths[i]));
+                } else {
+                    line.push_str(&format!("{:<w$}", c, w = widths[i]));
+                }
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncol - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    /// Render as CSV.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.headers.join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a measured-vs-paper cell with delta percentage.
+pub fn vs_paper(measured: f64, paper: Option<f64>) -> String {
+    match paper {
+        Some(p) => format!("{measured:.2} ({:+.1}%)", (measured - p) / p * 100.0),
+        None => format!("{measured:.2} (max)"),
+    }
+}
+
+/// One-line summary of a simulation report.
+pub fn summarize(r: &SimReport) -> String {
+    format!(
+        "{:<9} {:>3} ch={} way={:<2} {:<5}  {:>8.2} MB/s  {:>6.3} nJ/B  busU={:>5.1}%  sataU={:>5.1}%  {} reqs in {}",
+        r.iface,
+        r.cell,
+        r.channels,
+        r.ways,
+        r.mode,
+        r.bandwidth_mbps,
+        r.energy_nj_per_byte,
+        r.bus_utilization * 100.0,
+        r.sata_utilization * 100.0,
+        r.requests,
+        r.sim_time,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(vec!["name", "mbps"]);
+        t.row(vec!["CONV", "27.78"]);
+        t.row(vec!["PROPOSED", "117.59"]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("name"));
+        assert!(lines[2].contains("CONV"));
+        // numeric right-aligned: widths equal
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn csv_output() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["1", "2"]);
+        assert_eq!(t.to_csv(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn vs_paper_formats() {
+        assert_eq!(vs_paper(110.0, Some(100.0)), "110.00 (+10.0%)");
+        assert_eq!(vs_paper(300.0, None), "300.00 (max)");
+    }
+}

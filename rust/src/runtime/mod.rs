@@ -1,0 +1,224 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas artifacts and execute
+//! them from the coordinator's hot path.
+//!
+//! Python never runs at request/DSE time — `make artifacts` lowers the L2
+//! model once to HLO **text** (see `python/compile/aot.py` for why text,
+//! not serialized protos), and this module compiles each module once on the
+//! PJRT CPU client and reuses the executable across calls.
+
+use crate::analytic::DesignPoint;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Grid sizes fixed at lowering time (python/compile/aot.py); batches are
+/// padded up to these row counts.
+pub const PERF_N: usize = 4096;
+pub const TIMING_N: usize = 1024;
+pub const MC_N: usize = 256;
+pub const MC_S: usize = 2048;
+
+/// Columns of the perf design-point matrix (ref.py PERF_COLS).
+pub const PERF_COLS: usize = 12;
+/// Columns of the timing parameter matrix (ref.py TIMING_COLS).
+pub const TIMING_COLS: usize = 10;
+
+/// One loaded executable.
+struct Exe {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Exe {
+    fn load(client: &xla::PjRtClient, path: &Path) -> Result<Exe> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Exe { exe })
+    }
+
+    /// Execute with literal inputs; unwraps the 1-tuple output and returns
+    /// the flat f32 data.
+    fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// The artifact-backed analytic runtime.
+pub struct Runtime {
+    perf: Exe,
+    timing: Exe,
+    mc: Exe,
+    /// Wall time spent compiling (one-off, reported by the perf bench).
+    pub compile_ms: f64,
+    /// Executions since load.
+    pub executions: std::cell::Cell<u64>,
+}
+
+impl Runtime {
+    /// Default artifact directory: `$DDRNAND_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("DDRNAND_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// True if the artifacts exist (callers fall back to the pure-Rust
+    /// analytic mirror otherwise).
+    pub fn artifacts_present(dir: &Path) -> bool {
+        ["perf.hlo.txt", "timing.hlo.txt", "mc.hlo.txt"]
+            .iter()
+            .all(|f| dir.join(f).exists())
+    }
+
+    /// Load and compile all artifacts on the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        if !Self::artifacts_present(dir) {
+            bail!(
+                "AOT artifacts missing in {} — run `make artifacts`",
+                dir.display()
+            );
+        }
+        let t0 = std::time::Instant::now();
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let perf = Exe::load(&client, &dir.join("perf.hlo.txt"))?;
+        let timing = Exe::load(&client, &dir.join("timing.hlo.txt"))?;
+        let mc = Exe::load(&client, &dir.join("mc.hlo.txt"))?;
+        Ok(Runtime {
+            perf,
+            timing,
+            mc,
+            compile_ms: t0.elapsed().as_secs_f64() * 1e3,
+            executions: std::cell::Cell::new(0),
+        })
+    }
+
+    fn literal_2d(rows: &[Vec<f32>], n: usize, cols: usize) -> Result<xla::Literal> {
+        assert!(rows.len() <= n, "batch larger than artifact grid");
+        let mut flat = vec![1.0f32; n * cols]; // pad with 1s (avoids div-by-0)
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(r.len(), cols);
+            flat[i * cols..(i + 1) * cols].copy_from_slice(r);
+        }
+        Ok(xla::Literal::vec1(&flat).reshape(&[n as i64, cols as i64])?)
+    }
+
+    /// Evaluate the perf model for up to [`PERF_N`] design points. Returns
+    /// `[read_bw, write_bw, read_nj_b, write_nj_b]` per point.
+    pub fn perf_batch(&self, points: &[DesignPoint]) -> Result<Vec<[f64; 4]>> {
+        let rows: Vec<Vec<f32>> = points.iter().map(|p| design_point_row(p)).collect();
+        let lit = Self::literal_2d(&rows, PERF_N, PERF_COLS)?;
+        let out = self.perf.run(&[lit])?;
+        self.executions.set(self.executions.get() + 1);
+        Ok((0..points.len())
+            .map(|i| {
+                let r = &out[i * 4..(i + 1) * 4];
+                [r[0] as f64, r[1] as f64, r[2] as f64, r[3] as f64]
+            })
+            .collect())
+    }
+
+    /// Evaluate t_P,min for up to [`TIMING_N`] Table 2 corners. Returns
+    /// `[conv, sync_only, proposed, conv/proposed gain]` per corner (ns).
+    pub fn timing_batch(&self, corners: &[[f64; TIMING_COLS]]) -> Result<Vec<[f64; 4]>> {
+        let rows: Vec<Vec<f32>> = corners
+            .iter()
+            .map(|c| c.iter().map(|&v| v as f32).collect())
+            .collect();
+        let lit = Self::literal_2d(&rows, TIMING_N, TIMING_COLS)?;
+        let out = self.timing.run(&[lit])?;
+        self.executions.set(self.executions.get() + 1);
+        Ok((0..corners.len())
+            .map(|i| {
+                let r = &out[i * 4..(i + 1) * 4];
+                [r[0] as f64, r[1] as f64, r[2] as f64, r[3] as f64]
+            })
+            .collect())
+    }
+
+    /// PVT Monte Carlo: violation probability per corner per interface.
+    /// `z` must hold [`MC_S`]×4 standard normals; `sigmas` is
+    /// (chip_sigma, board_sigma, margin).
+    pub fn mc_batch(
+        &self,
+        corners: &[[f64; TIMING_COLS]],
+        z: &[f32],
+        sigmas: [f64; 3],
+    ) -> Result<Vec<[f64; 3]>> {
+        assert_eq!(z.len(), MC_S * 4, "need MC_S x 4 normals");
+        let rows: Vec<Vec<f32>> = corners
+            .iter()
+            .map(|c| c.iter().map(|&v| v as f32).collect())
+            .collect();
+        let params = Self::literal_2d(&rows, MC_N, TIMING_COLS)?;
+        let zlit = xla::Literal::vec1(z).reshape(&[MC_S as i64, 4])?;
+        let sig: Vec<f32> = sigmas.iter().map(|&v| v as f32).collect();
+        let siglit = xla::Literal::vec1(&sig);
+        let out = self.mc.run(&[params, zlit, siglit])?;
+        self.executions.set(self.executions.get() + 1);
+        Ok((0..corners.len())
+            .map(|i| {
+                let r = &out[i * 3..(i + 1) * 3];
+                [r[0] as f64, r[1] as f64, r[2] as f64]
+            })
+            .collect())
+    }
+}
+
+/// The [N, 12] row layout shared with `python/compile/kernels/ref.py`.
+pub fn design_point_row(p: &DesignPoint) -> Vec<f32> {
+    vec![
+        p.data_byte_ns as f32,
+        p.cmd_ns as f32,
+        p.ecc_ns as f32,
+        p.status_ns as f32,
+        p.t_r_ns as f32,
+        p.t_prog_ns as f32,
+        p.page_bytes as f32,
+        p.transfer_bytes as f32,
+        p.ways as f32,
+        p.channels as f32,
+        p.sata_mbps as f32,
+        p.controller_mw as f32,
+    ]
+}
+
+/// The Table 2 corner as a timing-kernel row.
+pub fn iface_params_row(p: &crate::iface::timing::IfaceParams) -> [f64; TIMING_COLS] {
+    [
+        p.t_out_ns,
+        p.t_in_ns,
+        p.t_s_ns,
+        p.t_h_ns,
+        p.t_diff_ns,
+        p.t_rea_ns,
+        p.t_byte_ns,
+        p.alpha,
+        p.t_ios_ns,
+        p.t_ioh_ns,
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn design_point_row_layout() {
+        let cfg = crate::config::SsdConfig::default();
+        let p = DesignPoint::from_config(&cfg);
+        let row = design_point_row(&p);
+        assert_eq!(row.len(), PERF_COLS);
+        assert_eq!(row[6], 2048.0); // page_bytes (SLC)
+        assert_eq!(row[8], 1.0); // ways
+        assert_eq!(row[10], 300.0); // SATA2
+    }
+
+    #[test]
+    fn artifacts_present_detects_missing() {
+        assert!(!Runtime::artifacts_present(Path::new("/nonexistent")));
+    }
+}

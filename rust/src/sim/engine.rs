@@ -1,0 +1,225 @@
+//! The simulation loop: pop earliest event, advance the clock, dispatch to
+//! the model, repeat.
+
+use crate::sim::queue::EventQueue;
+use crate::util::time::Ps;
+
+/// Scheduling handle passed to the model on every event.
+///
+/// Wraps the event calendar and the simulation clock; the model may only
+/// schedule into the present or future (scheduling into the past panics —
+/// it is always a model bug).
+pub struct Scheduler<Ev> {
+    now: Ps,
+    queue: EventQueue<Ev>,
+    stopped: bool,
+}
+
+impl<Ev> Scheduler<Ev> {
+    pub fn new() -> Self {
+        Scheduler {
+            now: Ps::ZERO,
+            queue: EventQueue::with_capacity(1024),
+            stopped: false,
+        }
+    }
+
+    /// Current simulated time.
+    #[inline]
+    pub fn now(&self) -> Ps {
+        self.now
+    }
+
+    /// Schedule `ev` to fire `delay` after now.
+    #[inline]
+    pub fn after(&mut self, delay: Ps, ev: Ev) {
+        debug_assert!(delay >= Ps::ZERO, "negative delay {delay:?}");
+        self.queue.push(self.now + delay, ev);
+    }
+
+    /// Schedule `ev` at absolute time `at` (must not be in the past).
+    #[inline]
+    pub fn at(&mut self, at: Ps, ev: Ev) {
+        assert!(at >= self.now, "scheduling into the past: {at:?} < {:?}", self.now);
+        self.queue.push(at, ev);
+    }
+
+    /// Schedule `ev` to fire immediately (after already-queued events at
+    /// the current timestamp).
+    #[inline]
+    pub fn now_ev(&mut self, ev: Ev) {
+        self.queue.push(self.now, ev);
+    }
+
+    /// Request the engine to stop after the current event.
+    pub fn stop(&mut self) {
+        self.stopped = true;
+    }
+
+    /// Number of pending events.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+impl<Ev> Default for Scheduler<Ev> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A simulation model: reacts to events by mutating state and scheduling
+/// follow-up events.
+pub trait Model {
+    type Ev;
+    fn handle(&mut self, sched: &mut Scheduler<Self::Ev>, ev: Self::Ev);
+}
+
+/// Result of an engine run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RunResult {
+    /// Simulated time at which the run ended.
+    pub end_time: Ps,
+    /// Total events dispatched.
+    pub events: u64,
+    /// True if the run ended because the event calendar drained (vs. the
+    /// horizon or an explicit stop).
+    pub drained: bool,
+}
+
+/// The DES driver.
+pub struct Engine;
+
+impl Engine {
+    /// Run `model` until the calendar drains, `horizon` is reached, or the
+    /// model calls [`Scheduler::stop`].
+    pub fn run<M: Model>(
+        model: &mut M,
+        sched: &mut Scheduler<M::Ev>,
+        horizon: Ps,
+    ) -> RunResult {
+        let mut events: u64 = 0;
+        loop {
+            if sched.stopped {
+                return RunResult {
+                    end_time: sched.now,
+                    events,
+                    drained: false,
+                };
+            }
+            match sched.queue.pop() {
+                None => {
+                    return RunResult {
+                        end_time: sched.now,
+                        events,
+                        drained: true,
+                    }
+                }
+                Some((at, ev)) => {
+                    if at > horizon {
+                        // Put nothing back: runs past the horizon are done.
+                        sched.now = horizon;
+                        return RunResult {
+                            end_time: horizon,
+                            events,
+                            drained: false,
+                        };
+                    }
+                    debug_assert!(at >= sched.now, "time went backwards");
+                    sched.now = at;
+                    events += 1;
+                    model.handle(sched, ev);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A model that counts down: each Tick(n) schedules Tick(n-1) 10ns later.
+    struct Countdown {
+        fired: Vec<(Ps, u32)>,
+    }
+    #[derive(Debug)]
+    enum Ev {
+        Tick(u32),
+    }
+    impl Model for Countdown {
+        type Ev = Ev;
+        fn handle(&mut self, sched: &mut Scheduler<Ev>, ev: Ev) {
+            let Ev::Tick(n) = ev;
+            self.fired.push((sched.now(), n));
+            if n > 0 {
+                sched.after(Ps::ns(10), Ev::Tick(n - 1));
+            }
+        }
+    }
+
+    #[test]
+    fn runs_to_drain() {
+        let mut m = Countdown { fired: vec![] };
+        let mut s = Scheduler::new();
+        s.at(Ps::ZERO, Ev::Tick(5));
+        let r = Engine::run(&mut m, &mut s, Ps::ms(1));
+        assert!(r.drained);
+        assert_eq!(r.events, 6);
+        assert_eq!(r.end_time, Ps::ns(50));
+        assert_eq!(m.fired.last(), Some(&(Ps::ns(50), 0)));
+    }
+
+    #[test]
+    fn horizon_cuts_off() {
+        let mut m = Countdown { fired: vec![] };
+        let mut s = Scheduler::new();
+        s.at(Ps::ZERO, Ev::Tick(1000));
+        let r = Engine::run(&mut m, &mut s, Ps::ns(35));
+        assert!(!r.drained);
+        assert_eq!(r.end_time, Ps::ns(35));
+        // Ticks at 0,10,20,30 fired; 40 was past the horizon.
+        assert_eq!(r.events, 4);
+    }
+
+    struct Stopper;
+    impl Model for Stopper {
+        type Ev = u32;
+        fn handle(&mut self, sched: &mut Scheduler<u32>, ev: u32) {
+            if ev == 3 {
+                sched.stop();
+            }
+            sched.after(Ps::ns(1), ev + 1);
+        }
+    }
+
+    #[test]
+    fn explicit_stop() {
+        let mut m = Stopper;
+        let mut s = Scheduler::new();
+        s.at(Ps::ZERO, 0u32);
+        let r = Engine::run(&mut m, &mut s, Ps::ms(1));
+        assert!(!r.drained);
+        assert_eq!(r.events, 4); // 0,1,2,3
+    }
+
+    #[test]
+    fn same_time_fifo_dispatch() {
+        struct Recorder {
+            order: Vec<u32>,
+        }
+        impl Model for Recorder {
+            type Ev = u32;
+            fn handle(&mut self, _s: &mut Scheduler<u32>, ev: u32) {
+                self.order.push(ev);
+            }
+        }
+        let mut m = Recorder { order: vec![] };
+        let mut s = Scheduler::new();
+        for i in 0..50 {
+            s.at(Ps::ns(7), i);
+        }
+        Engine::run(&mut m, &mut s, Ps::ms(1));
+        assert_eq!(m.order, (0..50).collect::<Vec<_>>());
+    }
+}

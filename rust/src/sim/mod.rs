@@ -1,0 +1,22 @@
+//! Discrete-event simulation (DES) engine.
+//!
+//! The SSD models in this crate are *behavioral*, like the Seamless models
+//! used by the paper: each NAND command phase, bus transfer, program/read
+//! latency and host transfer is a timed event. The engine is deliberately
+//! minimal — a time-ordered event calendar plus a user model that reacts to
+//! events by scheduling more events — and allocation-free on the hot path.
+//!
+//! # Design
+//!
+//! * Time is [`crate::util::time::Ps`] (integer picoseconds).
+//! * Events of the same timestamp fire in FIFO order (a monotonically
+//!   increasing sequence number breaks ties), which makes simulations
+//!   deterministic and independent of heap internals.
+//! * The model is a state machine implementing [`Model`]; it receives each
+//!   event together with a [`Scheduler`] handle for scheduling follow-ups.
+
+pub mod engine;
+pub mod queue;
+
+pub use engine::{Engine, Model, RunResult, Scheduler};
+pub use queue::EventQueue;

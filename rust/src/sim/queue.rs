@@ -1,0 +1,141 @@
+//! Time-ordered event calendar.
+//!
+//! A binary heap over `(time, seq)` with FIFO tie-breaking. This is the
+//! simulator's hottest data structure; see `rust/benches/bench_engine.rs`
+//! for its microbenchmark and EXPERIMENTS.md §Perf for the optimization
+//! history.
+
+use crate::util::time::Ps;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+struct Entry<Ev> {
+    at: Ps,
+    seq: u64,
+    ev: Ev,
+}
+
+impl<Ev> PartialEq for Entry<Ev> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<Ev> Eq for Entry<Ev> {}
+impl<Ev> PartialOrd for Entry<Ev> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<Ev> Ord for Entry<Ev> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we need earliest-first.
+        other
+            .at
+            .cmp(&self.at)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Min-heap event calendar with deterministic FIFO ordering for ties.
+pub struct EventQueue<Ev> {
+    heap: BinaryHeap<Entry<Ev>>,
+    seq: u64,
+}
+
+impl<Ev> Default for EventQueue<Ev> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<Ev> EventQueue<Ev> {
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        EventQueue {
+            heap: BinaryHeap::with_capacity(cap),
+            seq: 0,
+        }
+    }
+
+    /// Schedule `ev` to fire at absolute time `at`.
+    #[inline]
+    pub fn push(&mut self, at: Ps, ev: Ev) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Entry { at, seq, ev });
+    }
+
+    /// Pop the earliest event, FIFO among equal timestamps.
+    #[inline]
+    pub fn pop(&mut self) -> Option<(Ps, Ev)> {
+        self.heap.pop().map(|e| (e.at, e.ev))
+    }
+
+    /// Earliest scheduled time, if any.
+    pub fn peek_time(&self) -> Option<Ps> {
+        self.heap.peek().map(|e| e.at)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(Ps::ns(30), "c");
+        q.push(Ps::ns(10), "a");
+        q.push(Ps::ns(20), "b");
+        assert_eq!(q.pop(), Some((Ps::ns(10), "a")));
+        assert_eq!(q.pop(), Some((Ps::ns(20), "b")));
+        assert_eq!(q.pop(), Some((Ps::ns(30), "c")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn fifo_on_ties() {
+        let mut q = EventQueue::new();
+        for i in 0..100 {
+            q.push(Ps::ns(5), i);
+        }
+        for i in 0..100 {
+            assert_eq!(q.pop(), Some((Ps::ns(5), i)));
+        }
+    }
+
+    #[test]
+    fn interleaved_push_pop() {
+        let mut q = EventQueue::new();
+        q.push(Ps::ns(10), 1);
+        q.push(Ps::ns(5), 0);
+        assert_eq!(q.pop(), Some((Ps::ns(5), 0)));
+        q.push(Ps::ns(7), 2);
+        assert_eq!(q.pop(), Some((Ps::ns(7), 2)));
+        assert_eq!(q.pop(), Some((Ps::ns(10), 1)));
+    }
+
+    #[test]
+    fn peek_time() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.peek_time(), None);
+        q.push(Ps::ns(42), ());
+        assert_eq!(q.peek_time(), Some(Ps::ns(42)));
+    }
+}

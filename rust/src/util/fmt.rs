@@ -1,0 +1,61 @@
+//! Human-friendly number formatting for reports and the CLI.
+
+/// Format a byte count with binary units (KiB/MiB/GiB).
+pub fn fmt_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes}B")
+    } else {
+        format!("{v:.2}{}", UNITS[u])
+    }
+}
+
+/// Format a bandwidth in MB/s with two decimals (the paper's table format).
+pub fn fmt_mbps(mbps: f64) -> String {
+    format!("{mbps:.2}")
+}
+
+/// Format with an SI prefix (k/M/G), e.g. event rates.
+pub fn fmt_si(v: f64) -> String {
+    let a = v.abs();
+    if a >= 1e9 {
+        format!("{:.2}G", v / 1e9)
+    } else if a >= 1e6 {
+        format!("{:.2}M", v / 1e6)
+    } else if a >= 1e3 {
+        format!("{:.2}k", v / 1e3)
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes() {
+        assert_eq!(fmt_bytes(512), "512B");
+        assert_eq!(fmt_bytes(2048), "2.00KiB");
+        assert_eq!(fmt_bytes(65536), "64.00KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00MiB");
+    }
+
+    #[test]
+    fn mbps() {
+        assert_eq!(fmt_mbps(97.351), "97.35");
+    }
+
+    #[test]
+    fn si() {
+        assert_eq!(fmt_si(20_000_000.0), "20.00M");
+        assert_eq!(fmt_si(1_500.0), "1.50k");
+        assert_eq!(fmt_si(12.3), "12.30");
+    }
+}

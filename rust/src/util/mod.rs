@@ -1,0 +1,16 @@
+//! Small self-contained utilities shared across the simulator.
+//!
+//! The offline build environment ships only the `xla` crate closure, so the
+//! usual ecosystem crates (rand, statrs, humansize, ...) are replaced by the
+//! minimal implementations in this module. Everything here is deterministic
+//! and dependency-free.
+
+pub mod fmt;
+pub mod prng;
+pub mod stats;
+pub mod time;
+
+pub use fmt::{fmt_bytes, fmt_mbps, fmt_si};
+pub use prng::{Prng, SplitMix64};
+pub use stats::Summary;
+pub use time::Ps;

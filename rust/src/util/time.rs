@@ -1,0 +1,192 @@
+//! Simulation time base.
+//!
+//! All simulator time is integer **picoseconds** (`Ps`). The paper's timing
+//! parameters span 0.02 ns (t_H) to 832 µs (MLC t_PROG); picoseconds keep
+//! every quantity exact (Table 2 is specified to 10 ps resolution) while an
+//! `i64` still covers ±106 days of simulated time — ample for any campaign.
+
+/// A point in (or duration of) simulated time, in integer picoseconds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Ps(pub i64);
+
+impl Ps {
+    pub const ZERO: Ps = Ps(0);
+    pub const MAX: Ps = Ps(i64::MAX);
+
+    /// Construct from picoseconds.
+    pub const fn ps(v: i64) -> Ps {
+        Ps(v)
+    }
+    /// Construct from nanoseconds.
+    pub const fn ns(v: i64) -> Ps {
+        Ps(v * 1_000)
+    }
+    /// Construct from microseconds.
+    pub const fn us(v: i64) -> Ps {
+        Ps(v * 1_000_000)
+    }
+    /// Construct from milliseconds.
+    pub const fn ms(v: i64) -> Ps {
+        Ps(v * 1_000_000_000)
+    }
+    /// Construct from (possibly fractional) nanoseconds, rounding to ps.
+    pub fn from_ns_f64(v: f64) -> Ps {
+        Ps((v * 1_000.0).round() as i64)
+    }
+    /// Construct from (possibly fractional) microseconds, rounding to ps.
+    pub fn from_us_f64(v: f64) -> Ps {
+        Ps((v * 1_000_000.0).round() as i64)
+    }
+
+    /// Value in picoseconds.
+    pub const fn as_ps(self) -> i64 {
+        self.0
+    }
+    /// Value in fractional nanoseconds.
+    pub fn as_ns_f64(self) -> f64 {
+        self.0 as f64 / 1_000.0
+    }
+    /// Value in fractional microseconds.
+    pub fn as_us_f64(self) -> f64 {
+        self.0 as f64 / 1_000_000.0
+    }
+    /// Value in fractional seconds.
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e12
+    }
+
+    /// Saturating addition.
+    pub fn saturating_add(self, rhs: Ps) -> Ps {
+        Ps(self.0.saturating_add(rhs.0))
+    }
+
+    /// Multiply a per-unit duration by a count (e.g. bytes × t_cycle).
+    pub fn times(self, n: u64) -> Ps {
+        Ps(self.0 * n as i64)
+    }
+
+    /// max(self, other)
+    pub fn max(self, other: Ps) -> Ps {
+        if self >= other {
+            self
+        } else {
+            other
+        }
+    }
+    /// min(self, other)
+    pub fn min(self, other: Ps) -> Ps {
+        if self <= other {
+            self
+        } else {
+            other
+        }
+    }
+}
+
+impl std::ops::Add for Ps {
+    type Output = Ps;
+    fn add(self, rhs: Ps) -> Ps {
+        Ps(self.0 + rhs.0)
+    }
+}
+impl std::ops::AddAssign for Ps {
+    fn add_assign(&mut self, rhs: Ps) {
+        self.0 += rhs.0;
+    }
+}
+impl std::ops::Sub for Ps {
+    type Output = Ps;
+    fn sub(self, rhs: Ps) -> Ps {
+        Ps(self.0 - rhs.0)
+    }
+}
+impl std::ops::SubAssign for Ps {
+    fn sub_assign(&mut self, rhs: Ps) {
+        self.0 -= rhs.0;
+    }
+}
+impl std::ops::Mul<i64> for Ps {
+    type Output = Ps;
+    fn mul(self, rhs: i64) -> Ps {
+        Ps(self.0 * rhs)
+    }
+}
+impl std::ops::Div<i64> for Ps {
+    type Output = Ps;
+    fn div(self, rhs: i64) -> Ps {
+        Ps(self.0 / rhs)
+    }
+}
+
+impl std::fmt::Display for Ps {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let v = self.0;
+        if v.abs() >= 1_000_000_000_000 {
+            write!(f, "{:.3}s", v as f64 / 1e12)
+        } else if v.abs() >= 1_000_000_000 {
+            write!(f, "{:.3}ms", v as f64 / 1e9)
+        } else if v.abs() >= 1_000_000 {
+            write!(f, "{:.3}us", v as f64 / 1e6)
+        } else if v.abs() >= 1_000 {
+            write!(f, "{:.3}ns", v as f64 / 1e3)
+        } else {
+            write!(f, "{v}ps")
+        }
+    }
+}
+
+/// Bandwidth helper: bytes moved over a duration, in MB/s (decimal MB, as
+/// used by the paper's tables).
+pub fn mbps(bytes: u64, elapsed: Ps) -> f64 {
+    if elapsed.0 <= 0 {
+        return 0.0;
+    }
+    bytes as f64 / elapsed.as_secs_f64() / 1e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_roundtrip() {
+        assert_eq!(Ps::ns(20).as_ps(), 20_000);
+        assert_eq!(Ps::us(25).as_ps(), 25_000_000);
+        assert_eq!(Ps::ms(1).as_ps(), 1_000_000_000);
+        assert_eq!(Ps::from_ns_f64(19.81).as_ps(), 19_810);
+        assert_eq!(Ps::from_ns_f64(0.02).as_ps(), 20);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Ps::ns(12);
+        let b = Ps::ns(8);
+        assert_eq!(a + b, Ps::ns(20));
+        assert_eq!(a - b, Ps::ns(4));
+        assert_eq!(a * 2, Ps::ns(24));
+        assert_eq!(a / 2, Ps::ns(6));
+        assert_eq!(a.times(2048), Ps::ns(24576));
+        assert_eq!(a.max(b), a);
+        assert_eq!(a.min(b), b);
+    }
+
+    #[test]
+    fn display_units() {
+        assert_eq!(format!("{}", Ps::ps(500)), "500ps");
+        assert_eq!(format!("{}", Ps::ns(12)), "12.000ns");
+        assert_eq!(format!("{}", Ps::us(25)), "25.000us");
+    }
+
+    #[test]
+    fn bandwidth() {
+        // 2048 bytes in 73.72us -> 27.78 MB/s (paper Table 3, SLC read 1-way CONV)
+        let bw = mbps(2048, Ps::from_us_f64(73.72));
+        assert!((bw - 27.78).abs() < 0.01, "bw={bw}");
+    }
+
+    #[test]
+    fn ordering_and_saturating() {
+        assert!(Ps::ns(1) < Ps::ns(2));
+        assert_eq!(Ps::MAX.saturating_add(Ps::ns(1)), Ps::MAX);
+    }
+}

@@ -1,0 +1,171 @@
+//! Integration: the AOT JAX/Pallas artifact (through PJRT) agrees with the
+//! pure-Rust analytic mirror — the cross-layer correctness contract.
+//!
+//! Requires `make artifacts`; tests are skipped (with a loud message) when
+//! the artifacts are absent so `cargo test` works on a fresh checkout.
+
+use ddrnand::analytic::{self, DesignPoint};
+use ddrnand::config::SsdConfig;
+use ddrnand::host::trace::RequestKind;
+use ddrnand::iface::pvt::PvtModel;
+use ddrnand::iface::timing::{IfaceParams, InterfaceKind};
+use ddrnand::nand::datasheet::CellType;
+use ddrnand::runtime::{design_point_row, iface_params_row, Runtime, MC_S};
+use ddrnand::util::prng::Prng;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Runtime::default_dir();
+    if !Runtime::artifacts_present(&dir) {
+        eprintln!("SKIP: artifacts missing in {} (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("artifact load"))
+}
+
+fn all_configs() -> Vec<SsdConfig> {
+    let mut out = Vec::new();
+    for iface in InterfaceKind::ALL {
+        for cell in [CellType::Slc, CellType::Mlc] {
+            for (ch, w) in [(1u16, 1u16), (1, 4), (1, 16), (2, 8), (4, 4)] {
+                out.push(SsdConfig {
+                    iface,
+                    cell,
+                    channels: ch,
+                    ways: w,
+                    ..SsdConfig::default()
+                });
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn perf_artifact_matches_rust_mirror() {
+    let Some(rt) = runtime() else { return };
+    let cfgs = all_configs();
+    let points: Vec<DesignPoint> = cfgs.iter().map(DesignPoint::from_config).collect();
+    let hlo = rt.perf_batch(&points).expect("perf_batch");
+    for (i, (p, h)) in points.iter().zip(&hlo).enumerate() {
+        let want = [
+            analytic::read_bandwidth_mbps(p),
+            analytic::write_bandwidth_mbps(p),
+            analytic::energy_nj_per_byte(p, RequestKind::Read),
+            analytic::energy_nj_per_byte(p, RequestKind::Write),
+        ];
+        for k in 0..4 {
+            let rel = (h[k] - want[k]).abs() / want[k];
+            assert!(
+                rel < 2e-4,
+                "cfg {i} out {k}: hlo={} rust={} rel={rel}",
+                h[k],
+                want[k]
+            );
+        }
+    }
+}
+
+#[test]
+fn perf_artifact_row_layout_is_stable() {
+    // Guards the cross-language column contract: a deliberate column swap
+    // must produce different results.
+    let Some(rt) = runtime() else { return };
+    let cfg = SsdConfig::default();
+    let p = DesignPoint::from_config(&cfg);
+    let row = design_point_row(&p);
+    assert_eq!(row.len(), 12);
+    let base = rt.perf_batch(&[p]).unwrap()[0];
+    let mut swapped = p;
+    std::mem::swap(&mut swapped.t_r_ns, &mut swapped.t_prog_ns);
+    let other = rt.perf_batch(&[swapped]).unwrap()[0];
+    assert_ne!(base[0], other[0], "column order must matter");
+}
+
+#[test]
+fn timing_artifact_matches_equations() {
+    let Some(rt) = runtime() else { return };
+    // Table 2 corner + a sweep of alpha and t_BYTE.
+    let mut corners = vec![iface_params_row(&IfaceParams::default())];
+    for i in 0..20 {
+        let p = IfaceParams {
+            alpha: 0.5 * i as f64 / 19.0,
+            t_byte_ns: 4.0 + i as f64,
+            ..IfaceParams::default()
+        };
+        corners.push(iface_params_row(&p));
+    }
+    let out = rt.timing_batch(&corners).expect("timing_batch");
+    // Paper values at the Table 2 corner.
+    assert!((out[0][0] - 19.81).abs() < 0.01, "conv={}", out[0][0]);
+    assert!((out[0][2] - 12.0).abs() < 1e-3, "proposed={}", out[0][2]);
+    // Equation agreement across the sweep.
+    for (i, c) in corners.iter().enumerate() {
+        let p = IfaceParams {
+            t_out_ns: c[0],
+            t_in_ns: c[1],
+            t_s_ns: c[2],
+            t_h_ns: c[3],
+            t_diff_ns: c[4],
+            t_rea_ns: c[5],
+            t_byte_ns: c[6],
+            alpha: c[7],
+            t_ios_ns: c[8],
+            t_ioh_ns: c[9],
+        };
+        let want = analytic::tp_min_ns(&p);
+        for k in 0..3 {
+            let rel = (out[i][k] - want[k]).abs() / want[k];
+            assert!(rel < 1e-4, "corner {i} iface {k}: {} vs {}", out[i][k], want[k]);
+        }
+        let gain = out[i][0] / out[i][2];
+        assert!((out[i][3] - gain).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn mc_artifact_matches_rust_pvt_distributionally() {
+    let Some(rt) = runtime() else { return };
+    // Same margin, same sigmas, *independent* randomness: the violation
+    // probabilities should agree within Monte Carlo error.
+    let mut rng = Prng::new(0x5EED);
+    let z: Vec<f32> = (0..MC_S * 4).map(|_| rng.next_gaussian() as f32).collect();
+    let corner = iface_params_row(&IfaceParams::default());
+    let margin = 1.02;
+    let hlo = rt
+        .mc_batch(&[corner], &z, [0.10, 0.05, margin])
+        .expect("mc_batch")[0];
+
+    let pvt = PvtModel {
+        chip_sigma: 0.10,
+        board_sigma: 0.05,
+    };
+    let params = IfaceParams::default();
+    for (k, kind) in InterfaceKind::ALL.iter().enumerate() {
+        let tp = params.tp_min_ns(*kind) * margin;
+        let want = pvt.violation_probability(*kind, &params, tp, 40_000, 99);
+        let diff = (hlo[k] - want).abs();
+        assert!(
+            diff < 0.02,
+            "{kind}: hlo={} rust={} diff={diff}",
+            hlo[k],
+            want
+        );
+    }
+    // And the paper's ordering: CONV most sensitive.
+    assert!(hlo[0] > hlo[2], "CONV should violate more than PROPOSED");
+}
+
+#[test]
+fn dse_hlo_and_native_backends_agree() {
+    let Some(rt) = runtime() else { return };
+    use ddrnand::dse::{evaluate, Backend, Space};
+    let space = Space::default();
+    let (hlo, b1) = evaluate(&space, Some(&rt)).unwrap();
+    let (native, b2) = evaluate(&space, None).unwrap();
+    assert_eq!(b1, Backend::Hlo);
+    assert_eq!(b2, Backend::Native);
+    for (h, n) in hlo.iter().zip(&native) {
+        assert!((h.read_bw - n.read_bw).abs() / n.read_bw < 2e-4);
+        assert!((h.write_bw - n.write_bw).abs() / n.write_bw < 2e-4);
+    }
+}

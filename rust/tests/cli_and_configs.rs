@@ -1,0 +1,84 @@
+//! CLI smoke tests and shipped-config validation.
+
+use ddrnand::cli;
+use ddrnand::config::SsdConfig;
+use ddrnand::coordinator::campaign::Campaign;
+use ddrnand::host::trace::RequestKind;
+
+fn argv(s: &str) -> Vec<String> {
+    s.split_whitespace().map(String::from).collect()
+}
+
+#[test]
+fn every_shipped_config_parses_validates_and_runs() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+    let mut count = 0;
+    for entry in std::fs::read_dir(&dir).expect("configs dir") {
+        let path = entry.unwrap().path();
+        if path.extension().map(|e| e != "toml").unwrap_or(true) {
+            continue;
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut cfg = SsdConfig::from_toml(&text)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        assert!(cfg.validate().is_empty(), "{}", path.display());
+        // Keep the smoke run small.
+        cfg.blocks_per_chip = 64;
+        let rep = Campaign::new(cfg, RequestKind::Write, 10).run();
+        assert!(rep.bandwidth_mbps > 0.0, "{}", path.display());
+        count += 1;
+    }
+    assert!(count >= 4, "expected the shipped preset configs, found {count}");
+}
+
+#[test]
+fn cli_table2_succeeds() {
+    assert_eq!(cli::run(&argv("table2")), 0);
+}
+
+#[test]
+fn cli_pvt_succeeds() {
+    assert_eq!(cli::run(&argv("pvt --margin 1.05")), 0);
+}
+
+#[test]
+fn cli_unknown_subcommand_fails() {
+    assert_eq!(cli::run(&argv("frobnicate")), 2);
+}
+
+#[test]
+fn cli_no_subcommand_prints_usage_ok() {
+    assert_eq!(cli::run(&[]), 0);
+}
+
+#[test]
+fn cli_trace_gen_and_replay_roundtrip() {
+    let dir = std::env::temp_dir().join("ddrnand_cli_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace = dir.join("t.trace");
+    let cmd = format!("trace-gen --out {} --requests 20 --mode mixed", trace.display());
+    assert_eq!(cli::run(&argv(&cmd)), 0);
+    assert!(trace.exists());
+    let cmd = format!("replay --trace {}", trace.display());
+    assert_eq!(cli::run(&argv(&cmd)), 0);
+}
+
+#[test]
+fn cli_simulate_with_config_file() {
+    let dir = std::env::temp_dir().join("ddrnand_cli_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("c.toml");
+    std::fs::write(&cfg, "iface = \"sync_only\"\nways = 2\nblocks_per_chip = 64\n").unwrap();
+    let cmd = format!("simulate --config {} --requests 5", cfg.display());
+    assert_eq!(cli::run(&argv(&cmd)), 0);
+}
+
+#[test]
+fn cli_simulate_missing_config_fails() {
+    assert_eq!(cli::run(&argv("simulate")), 1);
+}
+
+#[test]
+fn cli_dse_native_succeeds() {
+    assert_eq!(cli::run(&argv("dse --native --sweep-tbyte")), 0);
+}

@@ -1,0 +1,202 @@
+//! End-to-end system tests: full stack (SATA → cache → FTL → scheduler →
+//! bus → chips) under workloads the paper's tables don't cover — GC
+//! pressure, cache effects, hybrid FTL, failure-ish corner cases.
+
+use ddrnand::config::{FtlKind, SsdConfig};
+use ddrnand::coordinator::campaign::run_trace;
+use ddrnand::coordinator::ssd::SsdSim;
+use ddrnand::host::trace::{Request, RequestKind, Trace, TraceGen};
+use ddrnand::iface::timing::InterfaceKind;
+use ddrnand::nand::datasheet::CellType;
+
+fn base_cfg() -> SsdConfig {
+    SsdConfig {
+        iface: InterfaceKind::Proposed,
+        cell: CellType::Slc,
+        channels: 2,
+        ways: 4,
+        blocks_per_chip: 32,
+        ..SsdConfig::default()
+    }
+}
+
+/// Steady-state GC: write the volume several times over; the simulator must
+/// finish, relocate pages, and still beat CONV.
+#[test]
+fn gc_pressure_completes_and_proposed_still_wins() {
+    let run = |iface| {
+        let cfg = SsdConfig {
+            iface,
+            utilization: 0.85,
+            ..base_cfg()
+        };
+        // Logical capacity: 2*4 chips * 32 blocks * 64 pages * 2KiB * 0.85
+        // ≈ 28.5 MiB; keep the footprint at 26 MiB and write ~3x that
+        // with wrap-around.
+        let volume = 26 * 1024 * 1024u64;
+        let reqs = (volume * 3 / 65536) as usize;
+        let trace: Vec<Request> = (0..reqs)
+            .map(|i| Request {
+                kind: RequestKind::Write,
+                offset: (i as u64 * 65536) % (volume - 65536),
+                bytes: 65536,
+            })
+            .collect();
+        let mut sim = SsdSim::new(cfg, trace);
+        sim.run();
+        let (reloc, erases, _) = sim.ftl_stats();
+        assert!(erases > 0, "rewriting 3x the volume must trigger GC erases");
+        (sim.bandwidth_mbps(), reloc, erases)
+    };
+    let (prop_bw, _, _) = run(InterfaceKind::Proposed);
+    let (conv_bw, _, _) = run(InterfaceKind::Conv);
+    assert!(
+        prop_bw > conv_bw,
+        "PROPOSED must still win under GC: {prop_bw} vs {conv_bw}"
+    );
+}
+
+/// The DRAM cache absorbs a hot working set and beats the uncached config.
+#[test]
+fn cache_improves_hot_workload() {
+    let hot_requests: Vec<Request> = (0..400)
+        .map(|i| Request {
+            kind: if i % 2 == 0 { RequestKind::Write } else { RequestKind::Read },
+            offset: (i as u64 % 8) * 65536, // 512 KiB hot set
+            bytes: 65536,
+        })
+        .collect();
+    let run = |cache_pages: u32| {
+        let mut cfg = base_cfg();
+        cfg.cache.capacity_pages = cache_pages;
+        let trace = Trace {
+            requests: hot_requests.clone(),
+        };
+        run_trace(&cfg, &trace).bandwidth_mbps
+    };
+    let uncached = run(0);
+    let cached = run(1024); // 2 MiB cache > hot set
+    assert!(
+        cached > 1.5 * uncached,
+        "cache must accelerate the hot set: {cached} vs {uncached}"
+    );
+}
+
+/// Hybrid FTL services the paper's sequential workload correctly (merges
+/// happen, data survives, throughput is positive and sane).
+#[test]
+fn hybrid_ftl_full_system() {
+    let mut cfg = base_cfg();
+    cfg.ftl = FtlKind::Hybrid;
+    let trace = TraceGen::default().sequential(RequestKind::Write, 100);
+    let rep = run_trace(&cfg, &trace);
+    assert_eq!(rep.requests, 100);
+    assert!(rep.bandwidth_mbps > 1.0);
+}
+
+/// Mixed read/write workloads complete with both request kinds accounted.
+#[test]
+fn mixed_workload_accounting() {
+    let cfg = base_cfg();
+    let trace = TraceGen::default().mixed_sequential(200, 0.5, 7);
+    let rep = run_trace(&cfg, &trace);
+    assert_eq!(rep.requests, 200);
+    assert_eq!(rep.bytes, 200 * 65536);
+    assert!(rep.pages_read > 0 && rep.pages_programmed > 0);
+}
+
+/// Random (non-sequential) reads lose striping alignment but must still
+/// work and still rank the interfaces correctly.
+#[test]
+fn random_reads_preserve_interface_ordering() {
+    let bw = |iface| {
+        let cfg = SsdConfig {
+            iface,
+            ..base_cfg()
+        };
+        let trace = TraceGen::default().random(RequestKind::Read, 150, 16 << 20, 3);
+        run_trace(&cfg, &trace).bandwidth_mbps
+    };
+    let conv = bw(InterfaceKind::Conv);
+    let sync = bw(InterfaceKind::SyncOnly);
+    let prop = bw(InterfaceKind::Proposed);
+    assert!(prop > sync && sync > conv, "{prop} {sync} {conv}");
+}
+
+/// Single-page requests (smallest possible) and odd-sized requests.
+#[test]
+fn odd_request_sizes() {
+    let cfg = base_cfg();
+    let trace = Trace {
+        requests: vec![
+            Request { kind: RequestKind::Write, offset: 0, bytes: 2048 },
+            Request { kind: RequestKind::Write, offset: 2048, bytes: 1 },
+            Request { kind: RequestKind::Write, offset: 4096, bytes: 3000 },
+            Request { kind: RequestKind::Read, offset: 0, bytes: 2048 },
+            Request { kind: RequestKind::Read, offset: 2048, bytes: 6144 },
+        ],
+    };
+    let rep = run_trace(&cfg, &trace);
+    assert_eq!(rep.requests, 5);
+    // bytes=1 still occupies one page; bytes=3000 spans two.
+    assert!(rep.pages_programmed >= 4);
+}
+
+/// SATA1 halves the cap; a fast array must saturate it.
+#[test]
+fn sata_generation_caps_bandwidth() {
+    let mut cfg = base_cfg();
+    cfg.channels = 4;
+    cfg.ways = 4;
+    cfg.sata = ddrnand::host::sata::SataGen::sata1(); // 150 MB/s
+    let trace = TraceGen::default().sequential(RequestKind::Read, 200);
+    let rep = run_trace(&cfg, &trace);
+    assert!(
+        rep.bandwidth_mbps <= 150.0 + 1.0,
+        "cap violated: {}",
+        rep.bandwidth_mbps
+    );
+    assert!(
+        rep.bandwidth_mbps > 120.0,
+        "a 4x4 PROPOSED array should saturate SATA1: {}",
+        rep.bandwidth_mbps
+    );
+}
+
+/// Queue-depth sensitivity: QD1 must not deadlock and QD32 must not break
+/// accounting; bandwidth grows (weakly) with queue depth.
+#[test]
+fn queue_depth_sweep() {
+    let bw = |qd| {
+        let mut cfg = base_cfg();
+        cfg.queue_depth = qd;
+        let trace = TraceGen::default().sequential(RequestKind::Write, 150);
+        run_trace(&cfg, &trace).bandwidth_mbps
+    };
+    let q1 = bw(1);
+    let q4 = bw(4);
+    let q32 = bw(32);
+    assert!(q1 > 0.0);
+    assert!(q4 >= q1 * 0.99, "QD4 {q4} vs QD1 {q1}");
+    assert!(q32 >= q4 * 0.99, "QD32 {q32} vs QD4 {q4}");
+}
+
+/// Config TOML → simulation round trip (the `simulate` CLI path).
+#[test]
+fn toml_config_to_simulation() {
+    let cfg = SsdConfig::from_toml(
+        r#"
+iface = "sync_only"
+cell = "mlc"
+channels = 2
+ways = 2
+blocks_per_chip = 16
+"#,
+    )
+    .unwrap();
+    let trace = TraceGen::default().sequential(RequestKind::Write, 20);
+    let rep = run_trace(&cfg, &trace);
+    assert_eq!(rep.iface, "SYNC_ONLY");
+    assert_eq!(rep.cell, "MLC");
+    assert!(rep.bandwidth_mbps > 0.0);
+}

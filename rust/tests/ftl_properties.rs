@@ -1,0 +1,175 @@
+//! Property-based tests over FTL and simulator invariants, using the
+//! in-crate proptest harness (rust/src/proptest.rs).
+
+use ddrnand::config::{FtlKind, SsdConfig};
+use ddrnand::controller::ftl::hybrid::HybridFtl;
+use ddrnand::controller::ftl::page_map::PageMapFtl;
+use ddrnand::controller::ftl::{check_mapping_consistency, Ftl};
+use ddrnand::coordinator::ssd::SsdSim;
+use ddrnand::host::trace::{Request, RequestKind};
+use ddrnand::nand::geometry::Geometry;
+use ddrnand::proptest::{check, shrink_vec};
+use ddrnand::util::prng::Prng;
+
+fn small_geom() -> Geometry {
+    Geometry {
+        channels: 2,
+        ways: 2,
+        blocks_per_chip: 8,
+        pages_per_block: 8,
+        page_bytes: 2048,
+    }
+}
+
+/// Any write sequence leaves the page-map FTL consistent: each mapped lpn
+/// resolves to a unique in-range ppn, and reading back every written lpn
+/// succeeds.
+#[test]
+fn prop_page_map_consistency_under_random_writes() {
+    let logical = 128u64;
+    check(
+        "page-map consistency",
+        60,
+        0xF71,
+        |rng: &mut Prng| {
+            let n = 50 + rng.next_bounded(400) as usize;
+            (0..n).map(|_| rng.next_bounded(logical)).collect::<Vec<u64>>()
+        },
+        |writes: &Vec<u64>| {
+            let mut ftl = PageMapFtl::new(small_geom(), logical);
+            let mut written = std::collections::BTreeSet::new();
+            for &lpn in writes {
+                let plan = ftl.plan_write(lpn);
+                if plan.target_ppn >= ftl.geometry().total_pages() {
+                    return Err(format!("ppn {} out of range", plan.target_ppn));
+                }
+                written.insert(lpn);
+            }
+            for &lpn in &written {
+                if ftl.translate(lpn).is_none() {
+                    return Err(format!("written lpn {lpn} unreadable"));
+                }
+            }
+            let lpns: Vec<u64> = (0..logical).collect();
+            check_mapping_consistency(&ftl, &lpns)
+        },
+        |v| shrink_vec(v),
+    );
+}
+
+/// The hybrid FTL preserves every written page across merges.
+#[test]
+fn prop_hybrid_preserves_data() {
+    let geom = small_geom();
+    let logical_blocks = 16u64; // conservative subset
+    check(
+        "hybrid durability",
+        40,
+        0xF72,
+        |rng: &mut Prng| {
+            let n = 30 + rng.next_bounded(200) as usize;
+            (0..n)
+                .map(|_| rng.next_bounded(logical_blocks * geom.pages_per_block as u64))
+                .collect::<Vec<u64>>()
+        },
+        |writes: &Vec<u64>| {
+            let mut ftl = HybridFtl::new(small_geom(), 3);
+            let mut latest = std::collections::BTreeMap::new();
+            for (i, &lpn) in writes.iter().enumerate() {
+                let plan = ftl.plan_write(lpn);
+                latest.insert(lpn, i);
+                if plan.target_ppn >= ftl.geometry().total_pages() {
+                    return Err(format!("ppn {} out of range", plan.target_ppn));
+                }
+            }
+            for &lpn in latest.keys() {
+                if ftl.translate(lpn).is_none() {
+                    return Err(format!("lpn {lpn} lost after merges"));
+                }
+            }
+            Ok(())
+        },
+        |v| shrink_vec(v),
+    );
+}
+
+/// Free-page accounting never goes negative and erases reclaim exactly one
+/// block's worth of pages.
+#[test]
+fn prop_page_map_free_accounting() {
+    let logical = 96u64;
+    check(
+        "free-page accounting",
+        40,
+        0xF73,
+        |rng: &mut Prng| {
+            let n = 100 + rng.next_bounded(600) as usize;
+            (0..n).map(|_| rng.next_bounded(logical)).collect::<Vec<u64>>()
+        },
+        |writes: &Vec<u64>| {
+            let geom = small_geom();
+            let mut ftl = PageMapFtl::new(geom, logical);
+            let total = geom.total_pages();
+            for &lpn in writes {
+                ftl.plan_write(lpn);
+                let free = ftl.free_pages();
+                if free > total {
+                    return Err(format!("free {free} > total {total}"));
+                }
+            }
+            Ok(())
+        },
+        |v| shrink_vec(v),
+    );
+}
+
+/// Full-simulator metamorphic property: doubling the trace roughly doubles
+/// simulated time (steady-state linearity), and bandwidth is invariant.
+#[test]
+fn prop_simulation_time_linearity() {
+    let run = |n: usize| {
+        let cfg = SsdConfig {
+            ways: 4,
+            blocks_per_chip: 256,
+            ..SsdConfig::default()
+        };
+        let trace: Vec<Request> = (0..n)
+            .map(|i| Request {
+                kind: RequestKind::Write,
+                offset: i as u64 * 65536,
+                bytes: 65536,
+            })
+            .collect();
+        let mut sim = SsdSim::new(cfg, trace);
+        sim.run();
+        (sim.finished_at(), sim.bandwidth_mbps())
+    };
+    let (t1, bw1) = run(100);
+    let (t2, bw2) = run(200);
+    let ratio = t2.as_ps() as f64 / t1.as_ps() as f64;
+    assert!((ratio - 2.0).abs() < 0.05, "time ratio {ratio}");
+    assert!((bw1 - bw2).abs() / bw1 < 0.05, "bw {bw1} vs {bw2}");
+}
+
+/// Determinism: identical seeds and configs give bit-identical outcomes,
+/// regardless of thread scheduling in the sweep pool.
+#[test]
+fn prop_sweep_determinism() {
+    use ddrnand::coordinator::campaign::Campaign;
+    use ddrnand::coordinator::pool::ThreadPool;
+    let jobs = || {
+        (1u16..=8)
+            .map(|w| {
+                let cfg = SsdConfig {
+                    ways: w,
+                    blocks_per_chip: 128,
+                    ..SsdConfig::default()
+                };
+                move || Campaign::new(cfg, RequestKind::Write, 50).run().sim_time
+            })
+            .collect::<Vec<_>>()
+    };
+    let a = ThreadPool::new(8).run_all(jobs());
+    let b = ThreadPool::new(1).run_all(jobs());
+    assert_eq!(a, b, "sweep results must not depend on thread interleaving");
+}

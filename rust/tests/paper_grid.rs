@@ -1,0 +1,140 @@
+//! Integration: the DES reproduces Table 3's shape, and agrees with the
+//! analytic model where the steady-state assumptions hold.
+
+use ddrnand::analytic::{self, paper};
+use ddrnand::config::SsdConfig;
+use ddrnand::coordinator::campaign::Campaign;
+use ddrnand::host::trace::RequestKind;
+use ddrnand::iface::timing::InterfaceKind;
+use ddrnand::nand::datasheet::CellType;
+
+fn cfg(iface: InterfaceKind, cell: CellType, ways: u16) -> SsdConfig {
+    SsdConfig {
+        iface,
+        cell,
+        ways,
+        blocks_per_chip: 512,
+        ..SsdConfig::default()
+    }
+}
+
+/// Run the DES for one Table 3 cell.
+fn des_bw(iface: InterfaceKind, cell: CellType, ways: u16, mode: RequestKind) -> f64 {
+    Campaign::new(cfg(iface, cell, ways), mode, 400).run().bandwidth_mbps
+}
+
+#[test]
+fn table3_grid_des_vs_paper() {
+    let mut rows = Vec::new();
+    let mut worst = (0.0f64, String::new());
+    for (cell, mode, table) in paper::TABLE3 {
+        for (wi, &w) in paper::WAYS.iter().enumerate() {
+            for (ii, iface) in InterfaceKind::ALL.iter().enumerate() {
+                let des = des_bw(*iface, cell, w, mode);
+                let p = table[wi][ii];
+                let err = (des - p) / p;
+                rows.push(format!(
+                    "{cell} {:>5} {w:>2}-way {:<9} paper={p:>7.2} des={des:>7.2} ({:+.1}%)",
+                    mode.name(),
+                    iface.name(),
+                    err * 100.0
+                ));
+                if err.abs() > worst.0 {
+                    worst = (err.abs(), rows.last().unwrap().clone());
+                }
+            }
+        }
+    }
+    for r in &rows {
+        println!("{r}");
+    }
+    println!("worst: {}", worst.1);
+}
+
+/// The qualitative Table 3 claims (§5.3.1), asserted on the DES itself.
+#[test]
+fn table3_shape_assertions() {
+    // Ordering P > S > C everywhere.
+    for (cell, mode, _) in paper::TABLE3 {
+        for &w in &paper::WAYS {
+            let c = des_bw(InterfaceKind::Conv, cell, w, mode);
+            let s = des_bw(InterfaceKind::SyncOnly, cell, w, mode);
+            let p = des_bw(InterfaceKind::Proposed, cell, w, mode);
+            assert!(p > s && s > c, "{cell} {mode:?} {w}-way: {p} {s} {c}");
+        }
+    }
+    // SLC read saturation degrees: CONV by 2-way, PROPOSED by 4-way.
+    let r = |i, w| des_bw(i, CellType::Slc, w, RequestKind::Read);
+    assert!((r(InterfaceKind::Conv, 2) - r(InterfaceKind::Conv, 16)).abs() < 1.0);
+    assert!((r(InterfaceKind::Proposed, 4) - r(InterfaceKind::Proposed, 16)).abs() < 2.5);
+    assert!(r(InterfaceKind::Proposed, 2) < 0.9 * r(InterfaceKind::Proposed, 4));
+    // SLC write: CONV saturates by 8-way, PROPOSED keeps scaling to 16.
+    let w = |i, ways| des_bw(i, CellType::Slc, ways, RequestKind::Write);
+    assert!((w(InterfaceKind::Conv, 8) - w(InterfaceKind::Conv, 16)).abs() < 1.0);
+    assert!(w(InterfaceKind::Proposed, 16) > 1.4 * w(InterfaceKind::Proposed, 8));
+}
+
+/// Table 4: channel scaling and the SATA "max" cells, on the DES.
+#[test]
+fn table4_shape_assertions() {
+    let bw = |iface, cell, ch: u16, w: u16, mode| {
+        let cfg = SsdConfig {
+            iface,
+            cell,
+            channels: ch,
+            ways: w,
+            blocks_per_chip: 512,
+            ..SsdConfig::default()
+        };
+        Campaign::new(cfg, mode, 300).run().bandwidth_mbps
+    };
+    for cell in [CellType::Slc, CellType::Mlc] {
+        // Reads scale with channels until SATA binds at (4,4) PROPOSED.
+        let r116 = bw(InterfaceKind::Proposed, cell, 1, 16, RequestKind::Read);
+        let r28 = bw(InterfaceKind::Proposed, cell, 2, 8, RequestKind::Read);
+        let r44 = bw(InterfaceKind::Proposed, cell, 4, 4, RequestKind::Read);
+        assert!(r28 > 1.7 * r116, "{cell}: 2ch read should ~2x: {r28} vs {r116}");
+        assert!(r44 > 280.0 && r44 <= 301.0, "{cell}: (4,4) read must hit SATA: {r44}");
+        // Write-mode P/C advantage shrinks as channels replace ways (§5.3.2).
+        let pc = |ch: u16, w: u16| {
+            bw(InterfaceKind::Proposed, cell, ch, w, RequestKind::Write)
+                / bw(InterfaceKind::Conv, cell, ch, w, RequestKind::Write)
+        };
+        assert!(pc(1, 16) > pc(4, 4), "{cell}: P/C must shrink with channels");
+    }
+}
+
+/// Table 5's crossover claims on the DES energy metric.
+#[test]
+fn table5_energy_crossovers() {
+    let e = |iface, ways, mode| {
+        let cfg = cfg(iface, CellType::Slc, ways);
+        Campaign::new(cfg, mode, 300).run().energy_nj_per_byte
+    };
+    for mode in [RequestKind::Write, RequestKind::Read] {
+        assert!(e(InterfaceKind::Proposed, 1, mode) > e(InterfaceKind::Conv, 1, mode));
+    }
+    assert!(e(InterfaceKind::Proposed, 16, RequestKind::Write) < e(InterfaceKind::Conv, 16, RequestKind::Write));
+    assert!(e(InterfaceKind::Proposed, 4, RequestKind::Read) < e(InterfaceKind::Conv, 4, RequestKind::Read));
+}
+
+#[test]
+fn des_matches_analytic_steady_state() {
+    // Where the steady-state assumptions hold (SLC, QD covers the array),
+    // DES and analytic should agree within a few percent.
+    for iface in InterfaceKind::ALL {
+        for &w in &[1u16, 4, 16] {
+            for mode in [RequestKind::Read, RequestKind::Write] {
+                let c = cfg(iface, CellType::Slc, w);
+                let des = Campaign::new(c.clone(), mode, 300).run().bandwidth_mbps;
+                let ana = analytic::evaluate(&c, mode).0;
+                let err = (des - ana).abs() / ana;
+                assert!(
+                    err < 0.12,
+                    "{iface} SLC {mode:?} {w}-way: des={des:.2} analytic={ana:.2} err={:.1}%",
+                    err * 100.0
+                );
+            }
+        }
+    }
+}
