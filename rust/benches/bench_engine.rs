@@ -1,16 +1,21 @@
-//! §Perf microbenchmarks: DES engine event throughput, event-queue ops,
-//! full-SSD simulation events/s, sweep scaling across threads, and the
-//! PJRT analytic-batch latency. Numbers recorded in EXPERIMENTS.md §Perf.
+//! §Perf microbenchmarks: event-calendar ops (bucketed calendar vs the
+//! BinaryHeap baseline), DES engine dispatch (incl. same-timestamp batch
+//! drain), full-SSD simulation events/s, sweep scaling across threads with
+//! per-worker simulator reuse, and the PJRT analytic-batch latency.
+//!
+//! Numbers are printed human-readable AND recorded machine-readable to
+//! `BENCH_engine.json` at the repo root (override with `$BENCH_JSON`), so
+//! every perf PR leaves a measured trajectory (EXPERIMENTS.md §Perf).
 //!
 //! Run: `cargo bench --bench bench_engine`
 
-use ddrnand::bench::{bench, throughput};
+use ddrnand::bench::{bench, throughput, PerfLog};
 use ddrnand::config::SsdConfig;
-use ddrnand::coordinator::campaign::Campaign;
+use ddrnand::coordinator::campaign::{Campaign, SimWorkspace};
 use ddrnand::coordinator::pool::ThreadPool;
 use ddrnand::host::trace::RequestKind;
 use ddrnand::iface::timing::InterfaceKind;
-use ddrnand::sim::{Engine, EventQueue, Model, Scheduler};
+use ddrnand::sim::{Engine, EventQueue, HeapEventQueue, Model, Scheduler};
 use ddrnand::util::time::Ps;
 
 /// Ping-pong model: minimal per-event work to measure engine overhead.
@@ -27,18 +32,85 @@ impl Model for PingPong {
     }
 }
 
+/// Fan-out model: every event at t spawns a batch of events at t + 100ns,
+/// exercising the same-timestamp batch drain.
+struct FanOut {
+    rounds: u32,
+    width: u32,
+    handled: u64,
+}
+impl Model for FanOut {
+    type Ev = u32;
+    fn handle(&mut self, sched: &mut Scheduler<u32>, round: u32) {
+        self.handled += 1;
+        if round < self.rounds && self.handled % self.width as u64 == 1 {
+            for _ in 0..self.width {
+                sched.after(Ps::ns(100), round + 1);
+            }
+        }
+    }
+}
+
+/// The microbench op sequence, identical for both calendar implementations:
+/// `n` pushes with hashed times in [0, 1 ms), then a full drain.
+fn hashed_time(i: u32) -> Ps {
+    Ps::ns(((i.wrapping_mul(2_654_435_761)) % 1_000_000) as i64)
+}
+
 fn main() {
-    // 1. Raw event-queue ops.
-    let r = bench("event queue: 100k push+pop (heap)", 3, 20, || {
-        let mut q = EventQueue::new();
-        for i in 0..100_000u32 {
-            q.push(Ps::ns(((i * 2_654_435_761u32) % 1_000_000) as i64), i);
+    let mut log = PerfLog::new("bench_engine");
+
+    // 1. Raw event-calendar ops: bucketed calendar vs BinaryHeap baseline.
+    const QN: u32 = 100_000;
+    let heap = bench("event queue: 100k push+pop (heap baseline)", 3, 20, || {
+        let mut q = HeapEventQueue::new();
+        for i in 0..QN {
+            q.push(hashed_time(i), i);
         }
         while q.pop().is_some() {}
     });
-    println!("{}", r.report());
+    println!("{}", heap.report());
+    log.push_bench("event_queue_100k/heap", &heap);
+    let cal = bench("event queue: 100k push+pop (calendar)", 3, 20, || {
+        let mut q = EventQueue::new();
+        for i in 0..QN {
+            q.push(hashed_time(i), i);
+        }
+        while q.pop().is_some() {}
+    });
+    println!("{}", cal.report());
+    log.push_bench("event_queue_100k/calendar", &cal);
+    let speedup = heap.summary.median / cal.summary.median;
+    println!("  -> calendar speedup vs heap baseline: {speedup:.2}x (target >= 1.3x)");
+    log.push("event_queue_100k/speedup_vs_heap", "ratio", speedup, 20);
 
-    // 2. Engine dispatch overhead.
+    // 1b. Tie-heavy variant: 100 events per timestamp (batch shape).
+    let heap_ties = bench("event queue: 100k ties x100 (heap baseline)", 3, 20, || {
+        let mut q = HeapEventQueue::new();
+        for i in 0..QN {
+            q.push(hashed_time(i / 100), i);
+        }
+        while q.pop().is_some() {}
+    });
+    println!("{}", heap_ties.report());
+    log.push_bench("event_queue_ties/heap", &heap_ties);
+    let cal_ties = bench("event queue: 100k ties x100 (calendar)", 3, 20, || {
+        let mut q = EventQueue::new();
+        for i in 0..QN {
+            q.push(hashed_time(i / 100), i);
+        }
+        while q.pop().is_some() {}
+    });
+    println!("{}", cal_ties.report());
+    log.push_bench("event_queue_ties/calendar", &cal_ties);
+    log.push(
+        "event_queue_ties/speedup_vs_heap",
+        "ratio",
+        heap_ties.summary.median / cal_ties.summary.median,
+        20,
+    );
+
+    // 2. Engine dispatch overhead (sparse queue, alternating events).
     println!(
         "{}",
         throughput("DES engine: ping-pong events", || {
@@ -48,14 +120,37 @@ fn main() {
             s.at(Ps::ZERO, 0u32);
             let t0 = std::time::Instant::now();
             let res = Engine::run(&mut m, &mut s, Ps::MAX);
-            (res.events, t0.elapsed().as_secs_f64())
+            let secs = t0.elapsed().as_secs_f64();
+            log.push("engine_pingpong/events_per_sec", "events_per_sec", res.events as f64 / secs, 1);
+            (res.events, secs)
+        })
+    );
+
+    // 2b. Batch drain: wide same-timestamp fan-outs.
+    println!(
+        "{}",
+        throughput("DES engine: same-timestamp fan-out batches", || {
+            let mut m = FanOut {
+                rounds: 2_000,
+                width: 500,
+                handled: 0,
+            };
+            let mut s = Scheduler::new();
+            for _ in 0..500 {
+                s.at(Ps::ZERO, 0u32);
+            }
+            let t0 = std::time::Instant::now();
+            let res = Engine::run(&mut m, &mut s, Ps::MAX);
+            let secs = t0.elapsed().as_secs_f64();
+            log.push("engine_fanout/events_per_sec", "events_per_sec", res.events as f64 / secs, 1);
+            (res.events, secs)
         })
     );
 
     // 3. Full-SSD simulation throughput.
-    for (iface, ways, label) in [
-        (InterfaceKind::Proposed, 16u16, "PROPOSED 16-way SLC write"),
-        (InterfaceKind::Conv, 4, "CONV 4-way SLC write"),
+    for (iface, ways, label, key) in [
+        (InterfaceKind::Proposed, 16u16, "PROPOSED 16-way SLC write", "full_sim/proposed_16way"),
+        (InterfaceKind::Conv, 4, "CONV 4-way SLC write", "full_sim/conv_4way"),
     ] {
         println!(
             "{}",
@@ -68,42 +163,60 @@ fn main() {
                 };
                 let t0 = std::time::Instant::now();
                 let rep = Campaign::new(cfg, RequestKind::Write, 2000).run();
-                (rep.events, t0.elapsed().as_secs_f64())
+                let secs = t0.elapsed().as_secs_f64();
+                log.push(key, "events_per_sec", rep.events as f64 / secs, 1);
+                log.push(key, "wall_ms", rep.wall_ms, 1);
+                (rep.events, secs)
             })
         );
     }
 
-    // 4. Sweep scaling across worker threads.
+    // 4. Sweep scaling across worker threads, with per-worker simulator
+    //    reuse (SimWorkspace) — the campaign path the paper sweeps use.
     let sweep = |threads| {
         let pool = ThreadPool::new(threads);
         let jobs: Vec<_> = (0..16)
             .map(|i| {
-                move || {
+                move |ws: &mut SimWorkspace| {
                     let cfg = SsdConfig {
                         iface: InterfaceKind::Proposed,
                         ways: 1 + (i % 16) as u16,
                         blocks_per_chip: 512,
                         ..SsdConfig::default()
                     };
-                    Campaign::new(cfg, RequestKind::Write, 300).run().events
+                    let rep = Campaign::new(cfg, RequestKind::Write, 300).run_in(ws);
+                    (rep.events, rep.wall_ms)
                 }
             })
             .collect();
         let t0 = std::time::Instant::now();
-        let ev: u64 = pool.run_all(jobs).iter().sum();
-        (ev, t0.elapsed().as_secs_f64())
+        let out = pool.run_all_with(jobs, SimWorkspace::new);
+        let ev: u64 = out.iter().map(|(e, _)| e).sum();
+        let mean_wall: f64 = out.iter().map(|(_, w)| w).sum::<f64>() / out.len() as f64;
+        (ev, t0.elapsed().as_secs_f64(), mean_wall)
     };
     for threads in [1usize, 4, 0] {
-        let (ev, secs) = sweep(threads);
+        let (ev, secs, mean_wall) = sweep(threads);
+        let shown = if threads == 0 { num_cpus() } else { threads };
         println!(
-            "sweep scaling: {:>2} threads  16 sims  {:>9} events  {:.2}s",
-            if threads == 0 { num_cpus() } else { threads },
-            ev,
-            secs
+            "sweep scaling: {shown:>2} threads  16 sims  {ev:>9} events  {secs:.2}s  ({mean_wall:.1} ms/point)"
+        );
+        log.push(
+            &format!("sweep_16sims/{shown}_threads"),
+            "wall_sec",
+            secs,
+            16,
+        );
+        log.push(
+            &format!("sweep_16sims/{shown}_threads_per_point"),
+            "wall_ms_mean",
+            mean_wall,
+            16,
         );
     }
 
-    // 5. PJRT analytic batch.
+    // 5. PJRT analytic batch (skipped without artifacts or the `pjrt`
+    //    feature — see rust/src/runtime/mod.rs).
     let dir = ddrnand::runtime::Runtime::default_dir();
     if ddrnand::runtime::Runtime::artifacts_present(&dir) {
         let rt = ddrnand::runtime::Runtime::load(&dir).unwrap();
@@ -124,6 +237,17 @@ fn main() {
             "  -> {:.2}M design points/s through the AOT artifact",
             4096.0 / r.summary.mean / 1e3
         );
+        log.push_bench("pjrt_perf_batch_4096", &r);
+    }
+
+    // Emit the machine-readable trajectory.
+    let path = std::env::var_os("BENCH_JSON")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| {
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_engine.json")
+        });
+    if let Err(e) = log.write(&path) {
+        eprintln!("warning: could not write perf log to {}: {e}", path.display());
     }
 }
 

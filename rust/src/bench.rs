@@ -4,6 +4,13 @@
 //! fixed sample count, and mean/median/stddev reporting. Deliberately
 //! simple — the paper benches measure *simulated* quantities; this harness
 //! is for the §Perf wall-clock measurements.
+//!
+//! [`PerfLog`] is the machine-readable side: every perf-relevant number a
+//! bench emits is also recorded as a `(name, metric, value)` triple and
+//! written as JSON (`BENCH_engine.json` at the repo root), so each perf PR
+//! leaves a measured trajectory that tooling and EXPERIMENTS.md §Perf can
+//! diff across commits. No serde offline — the writer emits the small
+//! schema by hand.
 
 use crate::util::stats::Summary;
 use std::time::Instant;
@@ -59,6 +66,110 @@ pub fn throughput<F: FnOnce() -> (u64, f64)>(name: &str, f: F) -> String {
     )
 }
 
+/// One recorded perf number.
+#[derive(Debug, Clone)]
+pub struct PerfRecord {
+    /// What was measured (e.g. `event_queue_100k_ops/calendar`).
+    pub name: String,
+    /// The unit/kind of the value (e.g. `ms_per_iter`, `events_per_sec`).
+    pub metric: String,
+    pub value: f64,
+    /// Samples behind the value (1 for throughput-style one-shots).
+    pub n: usize,
+}
+
+/// Collects [`PerfRecord`]s and serializes them as the
+/// `ddrnand-bench-v1` JSON schema.
+#[derive(Debug, Default)]
+pub struct PerfLog {
+    /// Which bench produced the log (e.g. `bench_engine`).
+    pub bench: String,
+    pub records: Vec<PerfRecord>,
+}
+
+impl PerfLog {
+    pub fn new(bench: &str) -> PerfLog {
+        PerfLog {
+            bench: bench.to_string(),
+            records: Vec::new(),
+        }
+    }
+
+    /// Record one number.
+    pub fn push(&mut self, name: &str, metric: &str, value: f64, n: usize) {
+        self.records.push(PerfRecord {
+            name: name.to_string(),
+            metric: metric.to_string(),
+            value,
+            n,
+        });
+    }
+
+    /// Record a [`BenchResult`] (mean/median/stddev ms per iteration).
+    pub fn push_bench(&mut self, key: &str, r: &BenchResult) {
+        self.push(key, "ms_per_iter_mean", r.summary.mean, r.summary.n);
+        self.push(key, "ms_per_iter_median", r.summary.median, r.summary.n);
+        self.push(key, "ms_per_iter_stddev", r.summary.stddev, r.summary.n);
+    }
+
+    /// Serialize to the `ddrnand-bench-v1` JSON schema.
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(256 + self.records.len() * 96);
+        out.push_str("{\n");
+        out.push_str("  \"schema\": \"ddrnand-bench-v1\",\n");
+        out.push_str(&format!("  \"bench\": \"{}\",\n", escape_json(&self.bench)));
+        let unix = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        out.push_str(&format!("  \"created_unix\": {unix},\n"));
+        out.push_str("  \"results\": [\n");
+        for (i, r) in self.records.iter().enumerate() {
+            let comma = if i + 1 == self.records.len() { "" } else { "," };
+            out.push_str(&format!(
+                "    {{\"name\": \"{}\", \"metric\": \"{}\", \"value\": {}, \"n\": {}}}{comma}\n",
+                escape_json(&r.name),
+                escape_json(&r.metric),
+                json_num(r.value),
+                r.n,
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write the JSON log to `path` and announce it on stdout.
+    pub fn write(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())?;
+        println!("perf log: {} records -> {}", self.records.len(), path.display());
+        Ok(())
+    }
+}
+
+fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// JSON has no NaN/Inf; clamp to null-safe representations.
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -77,5 +188,33 @@ mod tests {
     fn throughput_formats() {
         let s = throughput("events", || (2_000_000, 0.1));
         assert!(s.contains("20.00M"), "{s}");
+    }
+
+    #[test]
+    fn perf_log_json_schema() {
+        let mut log = PerfLog::new("bench_test");
+        log.push("queue/calendar", "ms_per_iter_mean", 1.25, 20);
+        log.push("speedup \"q\"", "ratio", 1.7, 1);
+        log.push("bad", "nan", f64::NAN, 1);
+        let json = log.to_json();
+        assert!(json.contains("\"schema\": \"ddrnand-bench-v1\""));
+        assert!(json.contains("\"bench\": \"bench_test\""));
+        assert!(json.contains("\"name\": \"queue/calendar\""));
+        assert!(json.contains("\"value\": 1.25"));
+        assert!(json.contains("speedup \\\"q\\\""));
+        assert!(json.contains("\"value\": null"));
+        // Exactly one trailing record without a comma, valid bracket close.
+        assert!(json.trim_end().ends_with('}'));
+        assert_eq!(json.matches("\"name\":").count(), 3);
+    }
+
+    #[test]
+    fn perf_log_push_bench() {
+        let r = bench("x", 0, 5, || {});
+        let mut log = PerfLog::new("b");
+        log.push_bench("x", &r);
+        assert_eq!(log.records.len(), 3);
+        assert_eq!(log.records[0].metric, "ms_per_iter_mean");
+        assert_eq!(log.records[0].n, 5);
     }
 }

@@ -61,6 +61,17 @@ impl DramCache {
         }
     }
 
+    /// Drop all entries and statistics, keeping the map's allocation; the
+    /// configuration may change when a sweep worker is retargeted.
+    pub fn reset(&mut self, cfg: CacheConfig) {
+        self.cfg = cfg;
+        self.entries.clear();
+        self.tick = 0;
+        self.hits = 0;
+        self.misses = 0;
+        self.flushes = 0;
+    }
+
     fn touch(&mut self, lpn: u64, dirty: bool) {
         self.tick += 1;
         let e = self.entries.entry(lpn).or_insert((0, false));

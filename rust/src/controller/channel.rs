@@ -28,6 +28,25 @@ impl ChannelState {
         }
     }
 
+    /// Reset the channel for a new run without dropping way/queue storage
+    /// (sweep-worker reuse). Bus timing, ECC grade and NAND timing may all
+    /// change between sweep points; the way *count* may not.
+    pub fn reset(
+        &mut self,
+        params: &crate::iface::timing::IfaceParams,
+        kind: crate::iface::timing::InterfaceKind,
+        ecc: EccModel,
+        timing: crate::nand::datasheet::NandTiming,
+    ) {
+        self.bus.reset(params, kind);
+        self.ecc = ecc;
+        for w in &mut self.ways {
+            w.reset(timing);
+        }
+        self.rr_next = 0;
+        self.kick_scheduled = false;
+    }
+
     /// Pick the next way to grant the bus: highest scheduling class first
     /// (status > command dispatch > data-out; see
     /// [`crate::controller::way::WayState::bus_class`]), round-robin within

@@ -7,7 +7,7 @@
 //! log blocks first. When all log blocks are used up, the FTL moves the data
 //! from log blocks to data blocks."
 
-use crate::controller::ftl::{Ftl, FtlOp, WritePlan};
+use crate::controller::ftl::{Ftl, FtlOp};
 use crate::nand::geometry::Geometry;
 use std::collections::HashMap;
 
@@ -185,13 +185,12 @@ impl Ftl for HybridFtl {
         (data != INVALID).then(|| self.ppn(data, off))
     }
 
-    fn plan_write(&mut self, lpn: u64) -> WritePlan {
+    fn plan_write_into(&mut self, lpn: u64, out: &mut Vec<FtlOp>) -> u64 {
         let ppb = self.geom.pages_per_block as u64;
         let lbn = lpn / ppb;
         let off = (lpn % ppb) as u32;
         assert!((lbn as usize) < self.data_map.len(), "lpn out of range");
-        let mut background = Vec::new();
-        let li = self.log_for(lbn, &mut background);
+        let li = self.log_for(lbn, out);
         let (slot, pblock) = {
             let l = &mut self.logs[li];
             let slot = l.write_ptr;
@@ -201,10 +200,19 @@ impl Ftl for HybridFtl {
         };
         let target = self.ppn(pblock, slot);
         self.free_pages = self.free_pages.saturating_sub(1);
-        WritePlan {
-            background,
-            target_ppn: target,
-        }
+        target
+    }
+
+    fn reset(&mut self) {
+        self.data_map.fill(INVALID);
+        self.logs.clear();
+        let total_blocks = self.geom.blocks_per_chip as u64 * self.geom.chips() as u64;
+        self.free_blocks.clear();
+        self.free_blocks.extend((0..total_blocks).rev());
+        self.merges = 0;
+        self.relocations = 0;
+        self.erases = 0;
+        self.free_pages = self.geom.total_pages();
     }
 
     fn geometry(&self) -> &Geometry {
@@ -290,6 +298,24 @@ mod tests {
         }
         assert!(f.merges() >= 1);
         assert!(f.translate(0).is_some());
+    }
+
+    #[test]
+    fn reset_restores_factory_state_and_determinism() {
+        let run = |f: &mut HybridFtl| -> Vec<u64> {
+            (0..40).map(|lpn| f.plan_write(lpn).target_ppn).collect()
+        };
+        let mut fresh = HybridFtl::new(geom(), 4);
+        let expect = run(&mut fresh);
+        let mut reused = HybridFtl::new(geom(), 4);
+        for lpn in 0..100u64 {
+            reused.plan_write(lpn % 30);
+        }
+        reused.reset();
+        assert_eq!(reused.free_pages(), geom().total_pages());
+        assert_eq!(reused.merges(), 0);
+        assert_eq!(reused.translate(0), None);
+        assert_eq!(run(&mut reused), expect);
     }
 
     #[test]

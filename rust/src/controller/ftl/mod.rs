@@ -44,9 +44,29 @@ pub trait Ftl {
     /// Translate a logical page read; `None` if never written.
     fn translate(&self, lpn: u64) -> Option<u64>;
 
+    /// Allocate (and map) a physical page for writing `lpn`; any
+    /// garbage-collection/merge work the allocation forces is appended to
+    /// `out` in issue order. Returns the physical page the host data lands
+    /// in. This is the hot-path entry: the coordinator passes one pooled
+    /// buffer so steady-state dispatch is allocation-free.
+    fn plan_write_into(&mut self, lpn: u64, out: &mut Vec<FtlOp>) -> u64;
+
     /// Allocate (and map) a physical page for writing `lpn`, including any
-    /// garbage-collection work the allocation forces.
-    fn plan_write(&mut self, lpn: u64) -> WritePlan;
+    /// garbage-collection work the allocation forces. Convenience wrapper
+    /// over [`plan_write_into`](Ftl::plan_write_into).
+    fn plan_write(&mut self, lpn: u64) -> WritePlan {
+        let mut background = Vec::new();
+        let target_ppn = self.plan_write_into(lpn, &mut background);
+        WritePlan {
+            background,
+            target_ppn,
+        }
+    }
+
+    /// Return to the just-initialized state (empty mapping, all blocks
+    /// free, zero counters) without dropping the mapping-table allocations
+    /// — used when a sweep worker reuses one simulator across runs.
+    fn reset(&mut self);
 
     /// Geometry this FTL manages.
     fn geometry(&self) -> &Geometry;

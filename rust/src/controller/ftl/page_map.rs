@@ -1,7 +1,7 @@
 //! Page-level mapping FTL with striped allocation, greedy GC and
 //! wear-aware free-block selection.
 
-use crate::controller::ftl::{Ftl, FtlOp, WritePlan};
+use crate::controller::ftl::{Ftl, FtlOp};
 use crate::nand::geometry::{Geometry, PageAddr};
 
 const INVALID: u64 = u64::MAX;
@@ -265,9 +265,8 @@ impl Ftl for PageMapFtl {
         (p != INVALID).then_some(p)
     }
 
-    fn plan_write(&mut self, lpn: u64) -> WritePlan {
+    fn plan_write_into(&mut self, lpn: u64, out: &mut Vec<FtlOp>) -> u64 {
         assert!((lpn as usize) < self.map.len(), "lpn out of range");
-        let mut background = Vec::new();
         // Invalidate the old location.
         let old = self.map[lpn as usize];
         if old != INVALID {
@@ -282,17 +281,34 @@ impl Ftl for PageMapFtl {
         let chip = self.next_chip;
         self.next_chip = (self.next_chip + 1) % self.chips.len();
         if self.chips[chip].next_page == 0 {
-            self.maybe_static_wl(chip, &mut background);
+            self.maybe_static_wl(chip, out);
         }
-        let ppn = self.alloc_on_chip(chip, &mut background);
+        let ppn = self.alloc_on_chip(chip, out);
         self.map[lpn as usize] = ppn;
         self.rmap[ppn as usize] = lpn;
         let (c, block, _) = self.decompose(ppn);
         self.chips[c].valid[block as usize] += 1;
-        WritePlan {
-            background,
-            target_ppn: ppn,
+        ppn
+    }
+
+    fn reset(&mut self) {
+        self.map.fill(INVALID);
+        self.rmap.fill(INVALID);
+        let blocks = self.geom.blocks_per_chip;
+        for c in &mut self.chips {
+            c.free_blocks.clear();
+            c.free_blocks.extend(1..blocks);
+            c.active_block = 0;
+            c.next_page = 0;
+            c.wear.fill(0);
+            c.valid.fill(0);
+            c.full_blocks.clear();
         }
+        self.next_chip = 0;
+        self.in_gc = false;
+        self.free_pages = self.geom.total_pages();
+        self.relocations = 0;
+        self.erases = 0;
     }
 
     fn geometry(&self) -> &Geometry {
@@ -415,6 +431,28 @@ mod tests {
             "spread={}",
             f.wear_spread()
         );
+    }
+
+    #[test]
+    fn reset_restores_factory_state_and_determinism() {
+        let g = geom(2, 2);
+        let run = |f: &mut PageMapFtl| -> Vec<u64> {
+            (0..48).map(|lpn| f.plan_write(lpn).target_ppn).collect()
+        };
+        let mut fresh = PageMapFtl::new(g, 64);
+        let expect = run(&mut fresh);
+        // Dirty a second instance heavily, then reset: identical behaviour.
+        let mut reused = PageMapFtl::new(g, 64);
+        for round in 0..10 {
+            for lpn in 0..64 {
+                reused.plan_write((lpn + round) % 64);
+            }
+        }
+        reused.reset();
+        assert_eq!(reused.free_pages(), g.total_pages());
+        assert_eq!(reused.erases(), 0);
+        assert_eq!(reused.translate(0), None);
+        assert_eq!(run(&mut reused), expect);
     }
 
     #[test]

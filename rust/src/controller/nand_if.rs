@@ -33,6 +33,16 @@ impl NandIf {
         }
     }
 
+    /// Free the bus and zero its statistics; `timing` may change when a
+    /// sweep worker is retargeted at a different interface.
+    pub fn reset(&mut self, params: &IfaceParams, kind: InterfaceKind) {
+        self.timing = BusTiming::from_params(params, kind);
+        self.busy_until = Ps::ZERO;
+        self.busy_time = Ps::ZERO;
+        self.data_bytes = 0;
+        self.cmd_ops = 0;
+    }
+
     /// Is the bus free at `now`?
     pub fn is_free(&self, now: Ps) -> bool {
         now >= self.busy_until

@@ -71,6 +71,16 @@ impl WayState {
         self.queue.push_back(job);
     }
 
+    /// Drop all queued/in-flight work and reset the chip, keeping the
+    /// queue's allocation (sweep-worker reuse; steady-state dispatch then
+    /// re-fills the same storage allocation-free).
+    pub fn reset(&mut self, timing: crate::nand::datasheet::NandTiming) {
+        self.queue.clear();
+        self.inflight = None;
+        self.array_done_at = Ps::ZERO;
+        self.chip.reset(timing);
+    }
+
     /// True if this way could use the bus right now: either a queued job
     /// waiting to start, or an in-flight job whose array phase completed
     /// and now needs a bus phase (data-out or status).

@@ -1,9 +1,16 @@
 //! Simulation campaigns: run one configuration over a workload and collect
 //! a [`SimReport`]; enumerate the paper's sweeps.
+//!
+//! [`SimWorkspace`] is the sweep-reuse vehicle: one per worker thread, it
+//! keeps a simulator (channels/ways/chips/FTL tables) and a scheduler
+//! (event calendar) alive across sweep points and retargets them via
+//! [`SsdSim::reset`] whenever the geometry fingerprint matches, instead of
+//! rebuilding everything per run (perf pass, EXPERIMENTS.md §Perf).
 
 use crate::config::SsdConfig;
-use crate::coordinator::ssd::SsdSim;
+use crate::coordinator::ssd::{Ev, SsdSim};
 use crate::host::trace::{RequestKind, Trace, TraceGen};
+use crate::sim::{RunResult, Scheduler};
 use crate::util::time::Ps;
 
 /// Everything measured from one simulation run.
@@ -37,22 +44,18 @@ pub struct SimReport {
     pub wall_ms: f64,
 }
 
-/// Run `cfg` over an explicit trace.
+/// Run `cfg` over an explicit trace (one-shot; sweeps should prefer a
+/// per-worker [`SimWorkspace`], which reuses simulator state).
 pub fn run_trace(cfg: &SsdConfig, trace: &Trace) -> SimReport {
-    let wall0 = std::time::Instant::now();
-    let mode = match trace.requests.first().map(|r| r.kind) {
-        Some(RequestKind::Read) => "read",
-        _ => "write",
-    };
-    let mut sim = SsdSim::new(cfg.clone(), trace.requests.clone());
-    let reads = trace
-        .requests
-        .iter()
-        .any(|r| r.kind == RequestKind::Read);
-    if reads {
-        sim.prefill_for_reads();
-    }
-    let result = sim.run();
+    SimWorkspace::new().run_trace(cfg, trace)
+}
+
+fn report_from(
+    sim: &SsdSim,
+    result: RunResult,
+    mode: &'static str,
+    wall0: std::time::Instant,
+) -> SimReport {
     let bus_u = {
         let us = sim.bus_utilizations();
         us.iter().sum::<f64>() / us.len().max(1) as f64
@@ -77,6 +80,65 @@ pub fn run_trace(cfg: &SsdConfig, trace: &Trace) -> SimReport {
         sim_time: sim.finished_at(),
         events: result.events,
         wall_ms: wall0.elapsed().as_secs_f64() * 1e3,
+    }
+}
+
+/// Reusable per-worker simulation state (see the module docs).
+pub struct SimWorkspace {
+    sim: Option<SsdSim>,
+    sched: Scheduler<Ev>,
+    /// Runs served by resetting the cached simulator (telemetry for the
+    /// perf harness).
+    pub reuses: u64,
+    /// Runs that had to build a fresh simulator.
+    pub builds: u64,
+}
+
+impl Default for SimWorkspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SimWorkspace {
+    pub fn new() -> SimWorkspace {
+        SimWorkspace {
+            sim: None,
+            sched: Scheduler::new(),
+            reuses: 0,
+            builds: 0,
+        }
+    }
+
+    /// Run `cfg` over `trace`, retargeting this worker's cached simulator
+    /// when the geometry fingerprint matches ([`SsdSim::reuse_key`]).
+    /// Results are bit-identical to a fresh build either way.
+    pub fn run_trace(&mut self, cfg: &SsdConfig, trace: &Trace) -> SimReport {
+        let wall0 = std::time::Instant::now();
+        let mode = match trace.requests.first().map(|r| r.kind) {
+            Some(RequestKind::Read) => "read",
+            _ => "write",
+        };
+        let reusable = self
+            .sim
+            .as_ref()
+            .map_or(false, |s| SsdSim::reuse_key(&s.cfg) == SsdSim::reuse_key(cfg));
+        if reusable {
+            self.reuses += 1;
+            self.sim
+                .as_mut()
+                .expect("reusable implies cached sim")
+                .reset(cfg.clone(), &trace.requests);
+        } else {
+            self.builds += 1;
+            self.sim = Some(SsdSim::new(cfg.clone(), trace.requests.clone()));
+        }
+        let sim = self.sim.as_mut().expect("just placed");
+        if trace.requests.iter().any(|r| r.kind == RequestKind::Read) {
+            sim.prefill_for_reads();
+        }
+        let result = sim.run_with(&mut self.sched);
+        report_from(sim, result, mode, wall0)
     }
 }
 
@@ -114,9 +176,14 @@ impl Campaign {
 
     /// Generate the workload and run.
     pub fn run(&self) -> SimReport {
+        self.run_in(&mut SimWorkspace::new())
+    }
+
+    /// Generate the workload and run inside a reusable worker workspace.
+    pub fn run_in(&self, ws: &mut SimWorkspace) -> SimReport {
         let n = self.clamped_requests();
         let trace = TraceGen::default().sequential(self.mode, n);
-        run_trace(&self.cfg, &trace)
+        ws.run_trace(&self.cfg, &trace)
     }
 }
 
@@ -159,6 +226,45 @@ mod tests {
         assert_eq!(r.requests, 10);
         assert_eq!(r.mode, "read");
         assert!(r.pages_read >= 320);
+    }
+
+    /// A shared workspace across heterogeneous campaigns must reproduce
+    /// the per-campaign fresh results exactly, while actually reusing the
+    /// simulator for geometry-compatible consecutive points.
+    #[test]
+    fn workspace_reuse_matches_fresh_runs() {
+        use crate::nand::datasheet::CellType;
+        let points = [
+            (InterfaceKind::Conv, CellType::Slc, 4u16, RequestKind::Write),
+            (InterfaceKind::Proposed, CellType::Slc, 4, RequestKind::Write),
+            (InterfaceKind::Proposed, CellType::Slc, 4, RequestKind::Read),
+            (InterfaceKind::Proposed, CellType::Mlc, 2, RequestKind::Write),
+            (InterfaceKind::SyncOnly, CellType::Mlc, 2, RequestKind::Write),
+        ];
+        let campaign = |(iface, cell, ways, mode): (InterfaceKind, CellType, u16, RequestKind)| {
+            let c = SsdConfig {
+                iface,
+                cell,
+                ways,
+                ..cfg()
+            };
+            Campaign::new(c, mode, 15)
+        };
+        let mut ws = SimWorkspace::new();
+        for p in points {
+            let shared = campaign(p).run_in(&mut ws);
+            let fresh = campaign(p).run();
+            assert_eq!(shared.events, fresh.events, "{p:?}");
+            assert_eq!(shared.sim_time, fresh.sim_time, "{p:?}");
+            assert_eq!(shared.bandwidth_mbps, fresh.bandwidth_mbps, "{p:?}");
+            assert_eq!(shared.energy_nj_per_byte, fresh.energy_nj_per_byte, "{p:?}");
+            assert_eq!(shared.pages_programmed, fresh.pages_programmed, "{p:?}");
+            assert_eq!(shared.pages_read, fresh.pages_read, "{p:?}");
+        }
+        // CONV→PROPOSED (same geometry) and write→read reuse; the MLC
+        // switch (different page geometry) rebuilds.
+        assert!(ws.reuses >= 3, "reuses={}", ws.reuses);
+        assert!(ws.builds >= 2, "builds={}", ws.builds);
     }
 
     #[test]

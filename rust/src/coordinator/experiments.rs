@@ -8,7 +8,7 @@
 
 use crate::analytic::paper;
 use crate::config::SsdConfig;
-use crate::coordinator::campaign::{Campaign, SimReport};
+use crate::coordinator::campaign::{Campaign, SimReport, SimWorkspace};
 use crate::coordinator::pool::ThreadPool;
 use crate::host::trace::RequestKind;
 use crate::iface::timing::{IfaceParams, InterfaceKind};
@@ -88,11 +88,11 @@ pub fn run_table3(requests: usize, pool: &ThreadPool) -> Vec<Cell> {
             for (ii, iface) in InterfaceKind::ALL.iter().enumerate() {
                 let c = cfg(*iface, cell, 1, ways);
                 meta.push((cell, mode, 1u16, ways, *iface, Some(rows[wi][ii])));
-                jobs.push(move || Campaign::new(c, mode, requests).run());
+                jobs.push(move |ws: &mut SimWorkspace| Campaign::new(c, mode, requests).run_in(ws));
             }
         }
     }
-    let reports = pool.run_all(jobs);
+    let reports = pool.run_all_with(jobs, SimWorkspace::new);
     meta.into_iter()
         .zip(reports)
         .map(|((cell, mode, channels, ways, iface, paper), report)| Cell {
@@ -116,11 +116,11 @@ pub fn run_table4(requests: usize, pool: &ThreadPool) -> Vec<Cell> {
             for (ii, iface) in InterfaceKind::ALL.iter().enumerate() {
                 let c = cfg(*iface, cell, channels, ways);
                 meta.push((cell, mode, channels, ways, *iface, rows[ci][ii]));
-                jobs.push(move || Campaign::new(c, mode, requests).run());
+                jobs.push(move |ws: &mut SimWorkspace| Campaign::new(c, mode, requests).run_in(ws));
             }
         }
     }
-    let reports = pool.run_all(jobs);
+    let reports = pool.run_all_with(jobs, SimWorkspace::new);
     meta.into_iter()
         .zip(reports)
         .map(|((cell, mode, channels, ways, iface, paper), report)| Cell {

@@ -37,24 +37,47 @@ impl ThreadPool {
         T: Send,
         F: FnOnce() -> T + Send,
     {
+        let jobs: Vec<_> = jobs
+            .into_iter()
+            .map(|f| move |_state: &mut ()| f())
+            .collect();
+        self.run_all_with(jobs, || ())
+    }
+
+    /// Like [`run_all`](ThreadPool::run_all), but each worker thread owns
+    /// one `state` value (built by `mk_state` on that worker) that is
+    /// threaded through every job it executes. This is how sweeps reuse
+    /// per-worker simulator state across sweep points: the state is a
+    /// `SimWorkspace` and consecutive jobs on a worker retarget it instead
+    /// of rebuilding channels/ways/chips per run.
+    pub fn run_all_with<T, F, S, G>(&self, jobs: Vec<F>, mk_state: G) -> Vec<T>
+    where
+        T: Send,
+        F: FnOnce(&mut S) -> T + Send,
+        G: Fn() -> S + Sync,
+    {
         let n = jobs.len();
         let queue: Arc<Mutex<Vec<(usize, F)>>> =
             Arc::new(Mutex::new(jobs.into_iter().enumerate().rev().collect()));
         let (tx, rx) = mpsc::channel::<(usize, T)>();
+        let mk_state = &mk_state;
         std::thread::scope(|s| {
             for _ in 0..self.workers.min(n.max(1)) {
                 let queue = Arc::clone(&queue);
                 let tx = tx.clone();
-                s.spawn(move || loop {
-                    let job = queue.lock().unwrap().pop();
-                    match job {
-                        Some((i, f)) => {
-                            let r = f();
-                            if tx.send((i, r)).is_err() {
-                                return;
+                s.spawn(move || {
+                    let mut state = mk_state();
+                    loop {
+                        let job = queue.lock().unwrap().pop();
+                        match job {
+                            Some((i, f)) => {
+                                let r = f(&mut state);
+                                if tx.send((i, r)).is_err() {
+                                    return;
+                                }
                             }
+                            None => return,
                         }
-                        None => return,
                     }
                 });
             }
@@ -106,5 +129,59 @@ mod tests {
         let pool = ThreadPool::new(1);
         let out = pool.run_all((0..5).map(|i| move || i).collect::<Vec<_>>());
         assert_eq!(out, vec![0, 1, 2, 3, 4]);
+    }
+
+    /// Stress: many jobs with deliberately uneven durations over worker
+    /// state. Order must be preserved, every job must see exactly one
+    /// worker-local state, and the per-worker run counts must add up.
+    #[test]
+    fn run_all_with_uneven_jobs_reuses_worker_state() {
+        struct WorkerState {
+            runs: u64,
+        }
+        let pool = ThreadPool::new(4);
+        let jobs: Vec<_> = (0..64u64)
+            .map(|i| {
+                move |st: &mut WorkerState| {
+                    st.runs += 1;
+                    // Uneven durations: some jobs ~20x longer than others,
+                    // so fast workers steal more jobs (uneven reuse).
+                    let spins = if i % 7 == 0 { 400_000 } else { 20_000 };
+                    let mut acc = i;
+                    for k in 0..spins {
+                        acc = acc.wrapping_mul(6364136223846793005).wrapping_add(k);
+                    }
+                    std::hint::black_box(acc);
+                    (i * 3, st.runs)
+                }
+            })
+            .collect();
+        let out = pool.run_all_with(jobs, || WorkerState { runs: 0 });
+        // Submission order preserved despite completion-order shuffling.
+        for (i, &(v, runs)) in out.iter().enumerate() {
+            assert_eq!(v, i as u64 * 3);
+            assert!((1..=64).contains(&runs));
+        }
+        // Each job incremented exactly one worker's counter: within any
+        // worker the observed `runs` values are 1..=k, so the number of
+        // jobs observing `runs == 1` equals the number of workers used.
+        let firsts = out.iter().filter(|&&(_, r)| r == 1).count();
+        assert!((1..=4).contains(&firsts), "firsts={firsts}");
+        // And state was actually reused: with 64 jobs on <= 4 workers,
+        // some job must have seen runs >= 16.
+        assert!(out.iter().any(|&(_, r)| r >= 16));
+    }
+
+    #[test]
+    fn run_all_with_single_worker_threads_state_through_all_jobs() {
+        let pool = ThreadPool::new(1);
+        let jobs: Vec<_> = (0..10u64)
+            .map(|_| move |st: &mut u64| {
+                *st += 1;
+                *st
+            })
+            .collect();
+        let out = pool.run_all_with(jobs, || 0u64);
+        assert_eq!(out, (1..=10).collect::<Vec<_>>());
     }
 }

@@ -112,6 +112,12 @@ pub struct SsdSim {
     /// Request table indexed by request id (= trace index): dense and
     /// allocation-free on the hot path (perf pass, EXPERIMENTS.md §Perf).
     reqs: Vec<Option<ReqState>>,
+    /// Pooled scratch for FTL write plans (GC/merge ops); cleared per plan,
+    /// never reallocated in steady state (perf pass, EXPERIMENTS.md §Perf).
+    ftl_ops: Vec<FtlOp>,
+    /// Pooled scratch listing channels touched while fanning out one
+    /// request's page jobs; kicked then cleared.
+    kick_list: Vec<u16>,
     pub counters: SimCounters,
     pub latency: Welford,
     pub power: PowerModel,
@@ -159,6 +165,8 @@ impl SsdSim {
             next_req: 0,
             outstanding: 0,
             reqs,
+            ftl_ops: Vec::new(),
+            kick_list: Vec::new(),
             counters: SimCounters::default(),
             latency: Welford::new(),
             power,
@@ -227,10 +235,39 @@ impl SsdSim {
         (ch, way)
     }
 
+    /// Plan one logical-page write via the FTL and enqueue its background
+    /// ops plus the host program; touched channels are appended to the
+    /// pooled kick list. Allocation-free in steady state.
+    fn enqueue_write_plan(&mut self, lpn: u64, req: u64) {
+        self.ftl_ops.clear();
+        let target = self.ftl.plan_write_into(lpn, &mut self.ftl_ops);
+        // Index loop: enqueue_ftl_op needs `&mut self` (ops are Copy).
+        let mut i = 0;
+        while i < self.ftl_ops.len() {
+            let op = self.ftl_ops[i];
+            let (ch, _) = self.enqueue_ftl_op(op, INTERNAL_REQ);
+            self.kick_list.push(ch);
+            i += 1;
+        }
+        let (ch, _) = self.enqueue_ftl_op(FtlOp::ProgramPage { ppn: target }, req);
+        self.kick_list.push(ch);
+    }
+
+    /// Kick every channel recorded in the pooled kick list, then clear it.
+    fn kick_touched(&mut self, sched: &mut Scheduler<Ev>) {
+        let mut i = 0;
+        while i < self.kick_list.len() {
+            let ch = self.kick_list[i];
+            self.kick_channel(ch, sched);
+            i += 1;
+        }
+        self.kick_list.clear();
+    }
+
     /// Dispatch NAND work for a write request whose payload has arrived.
     fn start_write_pages(&mut self, req: u64, sched: &mut Scheduler<Ev>) {
         let r = self.trace[req as usize];
-        let mut touched = Vec::new();
+        debug_assert!(self.kick_list.is_empty());
         for lpn in self.lpns(&r) {
             match self.cache.write(lpn) {
                 CacheOutcome::Hit => {
@@ -243,44 +280,23 @@ impl SsdSim {
                     // This write still occupies a cache slot; the page is
                     // considered done when cached, but any dirty eviction
                     // must be flushed to NAND as internal traffic.
-                    self.counters.cache_hits += 0;
                     if let Some(victim) = evict_flush {
-                        let plan = self.ftl.plan_write(victim);
-                        for op in plan.background {
-                            touched.push(self.enqueue_ftl_op(op, INTERNAL_REQ));
-                        }
-                        touched.push(self.enqueue_ftl_op(
-                            FtlOp::ProgramPage {
-                                ppn: plan.target_ppn,
-                            },
-                            INTERNAL_REQ,
-                        ));
+                        self.enqueue_write_plan(victim, INTERNAL_REQ);
                     }
                     self.page_programmed(req, sched);
                     continue;
                 }
                 CacheOutcome::Bypass => {}
             }
-            let plan = self.ftl.plan_write(lpn);
-            for op in plan.background {
-                touched.push(self.enqueue_ftl_op(op, INTERNAL_REQ));
-            }
-            touched.push(self.enqueue_ftl_op(
-                FtlOp::ProgramPage {
-                    ppn: plan.target_ppn,
-                },
-                req,
-            ));
+            self.enqueue_write_plan(lpn, req);
         }
-        for (ch, _) in touched {
-            self.kick_channel(ch, sched);
-        }
+        self.kick_touched(sched);
     }
 
     /// Dispatch NAND work for a read request after its command FIS.
     fn start_read_pages(&mut self, req: u64, sched: &mut Scheduler<Ev>) {
         let r = self.trace[req as usize];
-        let mut touched = Vec::new();
+        debug_assert!(self.kick_list.is_empty());
         for lpn in self.lpns(&r) {
             if matches!(self.cache.read(lpn), CacheOutcome::Hit) {
                 self.counters.cache_hits += 1;
@@ -292,11 +308,10 @@ impl SsdSim {
                 .ftl
                 .translate(lpn)
                 .expect("read of never-written lpn; call prefill_for_reads");
-            touched.push(self.enqueue_ftl_op(FtlOp::ReadPage { ppn }, req));
+            let (ch, _) = self.enqueue_ftl_op(FtlOp::ReadPage { ppn }, req);
+            self.kick_list.push(ch);
         }
-        for (ch, _) in touched {
-            self.kick_channel(ch, sched);
-        }
+        self.kick_touched(sched);
     }
 
     /// A host page program finished (or was absorbed); update the request.
@@ -528,11 +543,82 @@ impl SsdSim {
         mbps(self.counters.host_bytes, self.finished_at)
     }
 
+    /// The structural fingerprint that gates simulator reuse: two configs
+    /// with equal keys size every array/table (channels, ways, per-chip
+    /// block tables, FTL mapping tables, logical capacity) identically, so
+    /// [`SsdSim::reset`] can retarget an existing simulator instead of
+    /// rebuilding it. Interface, cell timing, SATA generation, cache and
+    /// queue-depth settings may all differ — they are overwritten in place.
+    pub fn reuse_key(cfg: &SsdConfig) -> (u16, u16, u32, u32, u32, FtlKind, u64) {
+        let nand = cfg.nand_timing();
+        let geom = Geometry {
+            channels: cfg.channels,
+            ways: cfg.ways,
+            blocks_per_chip: cfg.blocks_per_chip,
+            pages_per_block: nand.pages_per_block,
+            page_bytes: nand.page_bytes,
+        };
+        let logical_pages = (geom.total_pages() as f64 * cfg.utilization) as u64;
+        (
+            cfg.channels,
+            cfg.ways,
+            cfg.blocks_per_chip,
+            nand.pages_per_block,
+            nand.page_bytes,
+            cfg.ftl,
+            logical_pages,
+        )
+    }
+
+    /// Rewind this simulator to a freshly-constructed state for `cfg` over
+    /// `trace`, reusing every large allocation (channel/way/chip state,
+    /// FTL mapping tables, the request table, scratch buffers). The caller
+    /// must have checked [`SsdSim::reuse_key`] equality; a mismatched
+    /// geometry is a bug and asserts in debug builds. Behaviour after a
+    /// reset is bit-identical to a freshly built simulator (tested below).
+    pub fn reset(&mut self, cfg: SsdConfig, trace: &[Request]) {
+        debug_assert_eq!(
+            Self::reuse_key(&cfg),
+            Self::reuse_key(&self.cfg),
+            "reset with an incompatible geometry"
+        );
+        let nand = cfg.nand_timing();
+        let ecc = EccModel::for_cell(cfg.cell);
+        for ch in &mut self.channels {
+            ch.reset(&cfg.params, cfg.iface, ecc, nand);
+        }
+        self.bus_ctx.fill(None);
+        self.sata.reset(cfg.sata);
+        self.ftl.reset();
+        self.cache.reset(cfg.cache);
+        self.trace.clear();
+        self.trace.extend_from_slice(trace);
+        self.next_req = 0;
+        self.outstanding = 0;
+        self.reqs.clear();
+        self.reqs.resize_with(self.trace.len(), || None);
+        self.ftl_ops.clear();
+        self.kick_list.clear();
+        self.counters = SimCounters::default();
+        self.latency = Welford::new();
+        self.power = PowerModel::for_interface(cfg.iface);
+        self.energy = EnergyMeter::default();
+        self.finished_at = Ps::ZERO;
+        self.cfg = cfg;
+    }
+
     /// Run the model to completion; returns the engine statistics.
     pub fn run(&mut self) -> RunResult {
         let mut sched = Scheduler::new();
+        self.run_with(&mut sched)
+    }
+
+    /// Like [`run`](SsdSim::run), but on a caller-provided scheduler whose
+    /// calendar allocations are reused across runs (sweep workers).
+    pub fn run_with(&mut self, sched: &mut Scheduler<Ev>) -> RunResult {
+        sched.reset();
         sched.at(Ps::ZERO, Ev::Admit);
-        let result = Engine::run(self, &mut sched, Ps::MAX);
+        let result = Engine::run(self, sched, Ps::MAX);
         assert!(self.is_done(), "simulation drained without completing trace");
         // Close the books: controller energy over the active window.
         let window = self.finished_at;
@@ -713,6 +799,68 @@ mod tests {
             (sim.finished_at(), sim.counters.pages_programmed)
         };
         assert_eq!(run(), run());
+    }
+
+    /// Golden guarantee of the sweep-reuse path: a reset-and-reused
+    /// simulator must be bit-identical to a freshly constructed one —
+    /// same event count, same end time, same counters, same latency stats.
+    #[test]
+    fn reused_simulator_bit_identical_to_fresh() {
+        let fingerprint = |iface, trace: Vec<Request>| {
+            let mut sim = SsdSim::new(small_cfg(iface, 4), trace);
+            let r = sim.run();
+            (
+                r.events,
+                sim.finished_at(),
+                sim.counters.pages_programmed,
+                sim.counters.requests_done,
+                sim.latency.mean(),
+                sim.bandwidth_mbps(),
+                sim.energy.controller_nj_per_byte(),
+            )
+        };
+        // Interfaces share geometry, so a worker may retarget across them.
+        assert_eq!(
+            SsdSim::reuse_key(&small_cfg(InterfaceKind::Conv, 4)),
+            SsdSim::reuse_key(&small_cfg(InterfaceKind::Proposed, 4)),
+        );
+        // Dirty a simulator with a CONV run, then reuse it for PROPOSED.
+        let mut sim = SsdSim::new(small_cfg(InterfaceKind::Conv, 4), write_trace(12));
+        sim.run();
+        let t = write_trace(20);
+        sim.reset(small_cfg(InterfaceKind::Proposed, 4), &t);
+        let r = sim.run();
+        let reused = (
+            r.events,
+            sim.finished_at(),
+            sim.counters.pages_programmed,
+            sim.counters.requests_done,
+            sim.latency.mean(),
+            sim.bandwidth_mbps(),
+            sim.energy.controller_nj_per_byte(),
+        );
+        assert_eq!(reused, fingerprint(InterfaceKind::Proposed, write_trace(20)));
+    }
+
+    /// Reuse also holds for the read path (prefill after reset) and for a
+    /// reused scheduler (`run_with`).
+    #[test]
+    fn reused_simulator_and_scheduler_reads_identical() {
+        let mut fresh = SsdSim::new(small_cfg(InterfaceKind::Proposed, 2), read_trace(10));
+        fresh.prefill_for_reads();
+        let rf = fresh.run();
+        let mut sim = SsdSim::new(small_cfg(InterfaceKind::Proposed, 2), write_trace(7));
+        let mut sched = Scheduler::new();
+        sim.run_with(&mut sched);
+        let t = read_trace(10);
+        sim.reset(small_cfg(InterfaceKind::Proposed, 2), &t);
+        sim.prefill_for_reads();
+        let rr = sim.run_with(&mut sched);
+        assert_eq!(rr.events, rf.events);
+        assert_eq!(rr.end_time, rf.end_time);
+        assert_eq!(sim.finished_at(), fresh.finished_at());
+        assert_eq!(sim.counters.pages_read, fresh.counters.pages_read);
+        assert_eq!(sim.latency.mean(), fresh.latency.mean());
     }
 
     #[test]

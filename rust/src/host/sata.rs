@@ -66,6 +66,14 @@ impl SataLink {
         }
     }
 
+    /// Free the link and zero its statistics (sweep-worker reuse).
+    pub fn reset(&mut self, gen: SataGen) {
+        self.gen = gen;
+        self.busy_until = Ps::ZERO;
+        self.bytes_moved = 0;
+        self.busy_time = Ps::ZERO;
+    }
+
     pub fn free_at(&self, now: Ps) -> Ps {
         self.busy_until.max(now)
     }

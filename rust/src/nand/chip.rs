@@ -63,6 +63,19 @@ impl Chip {
         self.state
     }
 
+    /// Return the chip to factory state (ready, zero wear, zero counters)
+    /// without reallocating the per-block tables; `timing` may change when
+    /// a sweep worker is retargeted at a different cell type.
+    pub fn reset(&mut self, timing: NandTiming) {
+        self.timing = timing;
+        self.state = ChipState::Ready;
+        self.pe_cycles.fill(0);
+        self.programmed_pages.fill(0);
+        self.reads = 0;
+        self.programs = 0;
+        self.erases = 0;
+    }
+
     /// True if the array is ready at time `now` (lazily clears Busy).
     pub fn is_ready(&mut self, now: Ps) -> bool {
         if let ChipState::Busy(until) = self.state {

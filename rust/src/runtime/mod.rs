@@ -5,9 +5,17 @@
 //! model once to HLO **text** (see `python/compile/aot.py` for why text,
 //! not serialized protos), and this module compiles each module once on the
 //! PJRT CPU client and reuses the executable across calls.
+//!
+//! ## Offline builds
+//!
+//! The PJRT path needs the `xla` crate, which cannot be vendored offline.
+//! It is gated behind the `pjrt` cargo feature: without it this module
+//! compiles a stub [`Runtime`] whose `artifacts_present` always reports
+//! `false`, so the CLI, DSE, benches and tests all take their pure-Rust
+//! analytic fallback paths unchanged.
 
 use crate::analytic::DesignPoint;
-use anyhow::{bail, Context, Result};
+use anyhow::Result;
 use std::path::{Path, PathBuf};
 
 /// Grid sizes fixed at lowering time (python/compile/aot.py); batches are
@@ -22,151 +30,230 @@ pub const PERF_COLS: usize = 12;
 /// Columns of the timing parameter matrix (ref.py TIMING_COLS).
 pub const TIMING_COLS: usize = 10;
 
-/// One loaded executable.
-struct Exe {
-    exe: xla::PjRtLoadedExecutable,
+/// Default artifact directory: `$DDRNAND_ARTIFACTS` or `./artifacts`.
+fn artifact_dir() -> PathBuf {
+    std::env::var_os("DDRNAND_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
 }
 
-impl Exe {
-    fn load(client: &xla::PjRtClient, path: &Path) -> Result<Exe> {
-        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(Exe { exe })
-    }
-
-    /// Execute with literal inputs; unwraps the 1-tuple output and returns
-    /// the flat f32 data.
-    fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
-        let result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
-    }
+/// True if all three HLO text artifacts exist in `dir`.
+#[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
+fn artifacts_on_disk(dir: &Path) -> bool {
+    ["perf.hlo.txt", "timing.hlo.txt", "mc.hlo.txt"]
+        .iter()
+        .all(|f| dir.join(f).exists())
 }
 
-/// The artifact-backed analytic runtime.
-pub struct Runtime {
-    perf: Exe,
-    timing: Exe,
-    mc: Exe,
-    /// Wall time spent compiling (one-off, reported by the perf bench).
-    pub compile_ms: f64,
-    /// Executions since load.
-    pub executions: std::cell::Cell<u64>,
-}
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use super::*;
+    use anyhow::{bail, Context};
 
-impl Runtime {
-    /// Default artifact directory: `$DDRNAND_ARTIFACTS` or `./artifacts`.
-    pub fn default_dir() -> PathBuf {
-        std::env::var_os("DDRNAND_ARTIFACTS")
-            .map(PathBuf::from)
-            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    /// One loaded executable.
+    struct Exe {
+        exe: xla::PjRtLoadedExecutable,
     }
 
-    /// True if the artifacts exist (callers fall back to the pure-Rust
-    /// analytic mirror otherwise).
-    pub fn artifacts_present(dir: &Path) -> bool {
-        ["perf.hlo.txt", "timing.hlo.txt", "mc.hlo.txt"]
-            .iter()
-            .all(|f| dir.join(f).exists())
-    }
-
-    /// Load and compile all artifacts on the PJRT CPU client.
-    pub fn load(dir: &Path) -> Result<Runtime> {
-        if !Self::artifacts_present(dir) {
-            bail!(
-                "AOT artifacts missing in {} — run `make artifacts`",
-                dir.display()
-            );
+    impl Exe {
+        fn load(client: &xla::PjRtClient, path: &Path) -> Result<Exe> {
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            Ok(Exe { exe })
         }
-        let t0 = std::time::Instant::now();
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let perf = Exe::load(&client, &dir.join("perf.hlo.txt"))?;
-        let timing = Exe::load(&client, &dir.join("timing.hlo.txt"))?;
-        let mc = Exe::load(&client, &dir.join("mc.hlo.txt"))?;
-        Ok(Runtime {
-            perf,
-            timing,
-            mc,
-            compile_ms: t0.elapsed().as_secs_f64() * 1e3,
-            executions: std::cell::Cell::new(0),
-        })
-    }
 
-    fn literal_2d(rows: &[Vec<f32>], n: usize, cols: usize) -> Result<xla::Literal> {
-        assert!(rows.len() <= n, "batch larger than artifact grid");
-        let mut flat = vec![1.0f32; n * cols]; // pad with 1s (avoids div-by-0)
-        for (i, r) in rows.iter().enumerate() {
-            assert_eq!(r.len(), cols);
-            flat[i * cols..(i + 1) * cols].copy_from_slice(r);
+        /// Execute with literal inputs; unwraps the 1-tuple output and returns
+        /// the flat f32 data.
+        fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
+            let result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+            let out = result.to_tuple1()?;
+            Ok(out.to_vec::<f32>()?)
         }
-        Ok(xla::Literal::vec1(&flat).reshape(&[n as i64, cols as i64])?)
     }
 
-    /// Evaluate the perf model for up to [`PERF_N`] design points. Returns
-    /// `[read_bw, write_bw, read_nj_b, write_nj_b]` per point.
-    pub fn perf_batch(&self, points: &[DesignPoint]) -> Result<Vec<[f64; 4]>> {
-        let rows: Vec<Vec<f32>> = points.iter().map(|p| design_point_row(p)).collect();
-        let lit = Self::literal_2d(&rows, PERF_N, PERF_COLS)?;
-        let out = self.perf.run(&[lit])?;
-        self.executions.set(self.executions.get() + 1);
-        Ok((0..points.len())
-            .map(|i| {
-                let r = &out[i * 4..(i + 1) * 4];
-                [r[0] as f64, r[1] as f64, r[2] as f64, r[3] as f64]
-            })
-            .collect())
+    /// The artifact-backed analytic runtime.
+    pub struct Runtime {
+        perf: Exe,
+        timing: Exe,
+        mc: Exe,
+        /// Wall time spent compiling (one-off, reported by the perf bench).
+        pub compile_ms: f64,
+        /// Executions since load.
+        pub executions: std::cell::Cell<u64>,
     }
 
-    /// Evaluate t_P,min for up to [`TIMING_N`] Table 2 corners. Returns
-    /// `[conv, sync_only, proposed, conv/proposed gain]` per corner (ns).
-    pub fn timing_batch(&self, corners: &[[f64; TIMING_COLS]]) -> Result<Vec<[f64; 4]>> {
-        let rows: Vec<Vec<f32>> = corners
-            .iter()
-            .map(|c| c.iter().map(|&v| v as f32).collect())
-            .collect();
-        let lit = Self::literal_2d(&rows, TIMING_N, TIMING_COLS)?;
-        let out = self.timing.run(&[lit])?;
-        self.executions.set(self.executions.get() + 1);
-        Ok((0..corners.len())
-            .map(|i| {
-                let r = &out[i * 4..(i + 1) * 4];
-                [r[0] as f64, r[1] as f64, r[2] as f64, r[3] as f64]
-            })
-            .collect())
-    }
+    impl Runtime {
+        /// Default artifact directory: `$DDRNAND_ARTIFACTS` or `./artifacts`.
+        pub fn default_dir() -> PathBuf {
+            artifact_dir()
+        }
 
-    /// PVT Monte Carlo: violation probability per corner per interface.
-    /// `z` must hold [`MC_S`]×4 standard normals; `sigmas` is
-    /// (chip_sigma, board_sigma, margin).
-    pub fn mc_batch(
-        &self,
-        corners: &[[f64; TIMING_COLS]],
-        z: &[f32],
-        sigmas: [f64; 3],
-    ) -> Result<Vec<[f64; 3]>> {
-        assert_eq!(z.len(), MC_S * 4, "need MC_S x 4 normals");
-        let rows: Vec<Vec<f32>> = corners
-            .iter()
-            .map(|c| c.iter().map(|&v| v as f32).collect())
-            .collect();
-        let params = Self::literal_2d(&rows, MC_N, TIMING_COLS)?;
-        let zlit = xla::Literal::vec1(z).reshape(&[MC_S as i64, 4])?;
-        let sig: Vec<f32> = sigmas.iter().map(|&v| v as f32).collect();
-        let siglit = xla::Literal::vec1(&sig);
-        let out = self.mc.run(&[params, zlit, siglit])?;
-        self.executions.set(self.executions.get() + 1);
-        Ok((0..corners.len())
-            .map(|i| {
-                let r = &out[i * 3..(i + 1) * 3];
-                [r[0] as f64, r[1] as f64, r[2] as f64]
+        /// True if the artifacts exist (callers fall back to the pure-Rust
+        /// analytic mirror otherwise).
+        pub fn artifacts_present(dir: &Path) -> bool {
+            artifacts_on_disk(dir)
+        }
+
+        /// Load and compile all artifacts on the PJRT CPU client.
+        pub fn load(dir: &Path) -> Result<Runtime> {
+            if !Self::artifacts_present(dir) {
+                bail!(
+                    "AOT artifacts missing in {} — run `make artifacts`",
+                    dir.display()
+                );
+            }
+            let t0 = std::time::Instant::now();
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            let perf = Exe::load(&client, &dir.join("perf.hlo.txt"))?;
+            let timing = Exe::load(&client, &dir.join("timing.hlo.txt"))?;
+            let mc = Exe::load(&client, &dir.join("mc.hlo.txt"))?;
+            Ok(Runtime {
+                perf,
+                timing,
+                mc,
+                compile_ms: t0.elapsed().as_secs_f64() * 1e3,
+                executions: std::cell::Cell::new(0),
             })
-            .collect())
+        }
+
+        fn literal_2d(rows: &[Vec<f32>], n: usize, cols: usize) -> Result<xla::Literal> {
+            assert!(rows.len() <= n, "batch larger than artifact grid");
+            let mut flat = vec![1.0f32; n * cols]; // pad with 1s (avoids div-by-0)
+            for (i, r) in rows.iter().enumerate() {
+                assert_eq!(r.len(), cols);
+                flat[i * cols..(i + 1) * cols].copy_from_slice(r);
+            }
+            Ok(xla::Literal::vec1(&flat).reshape(&[n as i64, cols as i64])?)
+        }
+
+        /// Evaluate the perf model for up to [`PERF_N`] design points. Returns
+        /// `[read_bw, write_bw, read_nj_b, write_nj_b]` per point.
+        pub fn perf_batch(&self, points: &[DesignPoint]) -> Result<Vec<[f64; 4]>> {
+            let rows: Vec<Vec<f32>> = points.iter().map(design_point_row).collect();
+            let lit = Self::literal_2d(&rows, PERF_N, PERF_COLS)?;
+            let out = self.perf.run(&[lit])?;
+            self.executions.set(self.executions.get() + 1);
+            Ok((0..points.len())
+                .map(|i| {
+                    let r = &out[i * 4..(i + 1) * 4];
+                    [r[0] as f64, r[1] as f64, r[2] as f64, r[3] as f64]
+                })
+                .collect())
+        }
+
+        /// Evaluate t_P,min for up to [`TIMING_N`] Table 2 corners. Returns
+        /// `[conv, sync_only, proposed, conv/proposed gain]` per corner (ns).
+        pub fn timing_batch(&self, corners: &[[f64; TIMING_COLS]]) -> Result<Vec<[f64; 4]>> {
+            let rows: Vec<Vec<f32>> = corners
+                .iter()
+                .map(|c| c.iter().map(|&v| v as f32).collect())
+                .collect();
+            let lit = Self::literal_2d(&rows, TIMING_N, TIMING_COLS)?;
+            let out = self.timing.run(&[lit])?;
+            self.executions.set(self.executions.get() + 1);
+            Ok((0..corners.len())
+                .map(|i| {
+                    let r = &out[i * 4..(i + 1) * 4];
+                    [r[0] as f64, r[1] as f64, r[2] as f64, r[3] as f64]
+                })
+                .collect())
+        }
+
+        /// PVT Monte Carlo: violation probability per corner per interface.
+        /// `z` must hold [`MC_S`]×4 standard normals; `sigmas` is
+        /// (chip_sigma, board_sigma, margin).
+        pub fn mc_batch(
+            &self,
+            corners: &[[f64; TIMING_COLS]],
+            z: &[f32],
+            sigmas: [f64; 3],
+        ) -> Result<Vec<[f64; 3]>> {
+            assert_eq!(z.len(), MC_S * 4, "need MC_S x 4 normals");
+            let rows: Vec<Vec<f32>> = corners
+                .iter()
+                .map(|c| c.iter().map(|&v| v as f32).collect())
+                .collect();
+            let params = Self::literal_2d(&rows, MC_N, TIMING_COLS)?;
+            let zlit = xla::Literal::vec1(z).reshape(&[MC_S as i64, 4])?;
+            let sig: Vec<f32> = sigmas.iter().map(|&v| v as f32).collect();
+            let siglit = xla::Literal::vec1(&sig);
+            let out = self.mc.run(&[params, zlit, siglit])?;
+            self.executions.set(self.executions.get() + 1);
+            Ok((0..corners.len())
+                .map(|i| {
+                    let r = &out[i * 3..(i + 1) * 3];
+                    [r[0] as f64, r[1] as f64, r[2] as f64]
+                })
+                .collect())
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod stub_impl {
+    use super::*;
+    use anyhow::bail;
+
+    /// Stub runtime compiled without the `pjrt` feature.
+    ///
+    /// `artifacts_present` reports `false` unconditionally so every caller
+    /// (CLI `dse`/`pvt`, `tests/analytic_vs_hlo.rs`, the benches) takes its
+    /// documented native-fallback path; `load` fails loudly if forced.
+    pub struct Runtime {
+        /// Mirror of the PJRT field so callers compile either way.
+        pub compile_ms: f64,
+        /// Mirror of the PJRT field so callers compile either way.
+        pub executions: std::cell::Cell<u64>,
+    }
+
+    impl Runtime {
+        /// Default artifact directory: `$DDRNAND_ARTIFACTS` or `./artifacts`.
+        pub fn default_dir() -> PathBuf {
+            artifact_dir()
+        }
+
+        /// Always `false` in a stub build — the PJRT path cannot run, so
+        /// callers must use the pure-Rust analytic mirror.
+        pub fn artifacts_present(_dir: &Path) -> bool {
+            false
+        }
+
+        /// Always fails: rebuild with `--features pjrt` (and the `xla`
+        /// dependency available) for the artifact-backed path.
+        pub fn load(_dir: &Path) -> Result<Runtime> {
+            bail!("ddrnand was built without the `pjrt` feature; the PJRT runtime is unavailable")
+        }
+
+        /// Unreachable in a stub build (`load` never succeeds).
+        pub fn perf_batch(&self, _points: &[DesignPoint]) -> Result<Vec<[f64; 4]>> {
+            bail!("pjrt feature disabled")
+        }
+
+        /// Unreachable in a stub build (`load` never succeeds).
+        pub fn timing_batch(&self, _corners: &[[f64; TIMING_COLS]]) -> Result<Vec<[f64; 4]>> {
+            bail!("pjrt feature disabled")
+        }
+
+        /// Unreachable in a stub build (`load` never succeeds).
+        pub fn mc_batch(
+            &self,
+            _corners: &[[f64; TIMING_COLS]],
+            _z: &[f32],
+            _sigmas: [f64; 3],
+        ) -> Result<Vec<[f64; 3]>> {
+            bail!("pjrt feature disabled")
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::Runtime;
+#[cfg(not(feature = "pjrt"))]
+pub use stub_impl::Runtime;
 
 /// The [N, 12] row layout shared with `python/compile/kernels/ref.py`.
 pub fn design_point_row(p: &DesignPoint) -> Vec<f32> {

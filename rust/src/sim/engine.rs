@@ -60,6 +60,15 @@ impl<Ev> Scheduler<Ev> {
     pub fn pending(&self) -> usize {
         self.queue.len()
     }
+
+    /// Rewind to a pristine state (t = 0, no pending events, not stopped)
+    /// while keeping the calendar's allocations — used when one scheduler
+    /// is reused across many simulation runs (sweep workers).
+    pub fn reset(&mut self) {
+        self.now = Ps::ZERO;
+        self.queue.clear();
+        self.stopped = false;
+    }
 }
 
 impl<Ev> Default for Scheduler<Ev> {
@@ -93,6 +102,11 @@ pub struct Engine;
 impl Engine {
     /// Run `model` until the calendar drains, `horizon` is reached, or the
     /// model calls [`Scheduler::stop`].
+    ///
+    /// Events beyond the horizon stay queued, so a run can be resumed by
+    /// calling `run` again with a later horizon. Events sharing a timestamp
+    /// are drained as one batch without re-searching the calendar
+    /// (`pop_if_at`), in exact FIFO order.
     pub fn run<M: Model>(
         model: &mut M,
         sched: &mut Scheduler<M::Ev>,
@@ -107,28 +121,36 @@ impl Engine {
                     drained: false,
                 };
             }
-            match sched.queue.pop() {
-                None => {
+            let Some(at) = sched.queue.next_time() else {
+                return RunResult {
+                    end_time: sched.now,
+                    events,
+                    drained: true,
+                };
+            };
+            if at > horizon {
+                // Keep the event queued: runs must be resumable past a
+                // horizon (regression: it used to be popped and dropped).
+                sched.now = horizon;
+                return RunResult {
+                    end_time: horizon,
+                    events,
+                    drained: false,
+                };
+            }
+            debug_assert!(at >= sched.now, "time went backwards");
+            sched.now = at;
+            // Drain the whole same-timestamp batch; follow-ups scheduled at
+            // `at` by the handlers join the batch in FIFO order.
+            while let Some(ev) = sched.queue.pop_if_at(at) {
+                events += 1;
+                model.handle(sched, ev);
+                if sched.stopped {
                     return RunResult {
                         end_time: sched.now,
                         events,
-                        drained: true,
-                    }
-                }
-                Some((at, ev)) => {
-                    if at > horizon {
-                        // Put nothing back: runs past the horizon are done.
-                        sched.now = horizon;
-                        return RunResult {
-                            end_time: horizon,
-                            events,
-                            drained: false,
-                        };
-                    }
-                    debug_assert!(at >= sched.now, "time went backwards");
-                    sched.now = at;
-                    events += 1;
-                    model.handle(sched, ev);
+                        drained: false,
+                    };
                 }
             }
         }
@@ -182,6 +204,26 @@ mod tests {
         assert_eq!(r.events, 4);
     }
 
+    /// Regression: an event beyond the horizon must stay queued so the run
+    /// can resume with a later horizon (it used to be silently dropped).
+    #[test]
+    fn beyond_horizon_event_stays_queued_and_resumes() {
+        let mut m = Countdown { fired: vec![] };
+        let mut s = Scheduler::new();
+        s.at(Ps::ZERO, Ev::Tick(10));
+        let r1 = Engine::run(&mut m, &mut s, Ps::ns(35));
+        assert_eq!(r1.events, 4);
+        assert_eq!(s.pending(), 1, "the tick at 40ns must remain queued");
+        assert_eq!(s.now(), Ps::ns(35));
+        // Resume: the remaining 7 ticks (at 40..100ns) fire.
+        let r2 = Engine::run(&mut m, &mut s, Ps::ms(1));
+        assert!(r2.drained);
+        assert_eq!(r2.events, 7);
+        assert_eq!(r2.end_time, Ps::ns(100));
+        assert_eq!(m.fired.len(), 11);
+        assert_eq!(m.fired.last(), Some(&(Ps::ns(100), 0)));
+    }
+
     struct Stopper;
     impl Model for Stopper {
         type Ev = u32;
@@ -204,6 +246,31 @@ mod tests {
     }
 
     #[test]
+    fn stop_mid_batch_keeps_rest_of_batch_queued() {
+        struct StopAt2 {
+            seen: Vec<u32>,
+        }
+        impl Model for StopAt2 {
+            type Ev = u32;
+            fn handle(&mut self, s: &mut Scheduler<u32>, ev: u32) {
+                self.seen.push(ev);
+                if ev == 2 {
+                    s.stop();
+                }
+            }
+        }
+        let mut m = StopAt2 { seen: vec![] };
+        let mut s = Scheduler::new();
+        for i in 0..10 {
+            s.at(Ps::ns(5), i);
+        }
+        let r = Engine::run(&mut m, &mut s, Ps::ms(1));
+        assert_eq!(r.events, 3); // 0, 1, 2
+        assert_eq!(m.seen, vec![0, 1, 2]);
+        assert_eq!(s.pending(), 7, "unreached batch events stay queued");
+    }
+
+    #[test]
     fn same_time_fifo_dispatch() {
         struct Recorder {
             order: Vec<u32>,
@@ -221,5 +288,50 @@ mod tests {
         }
         Engine::run(&mut m, &mut s, Ps::ms(1));
         assert_eq!(m.order, (0..50).collect::<Vec<_>>());
+    }
+
+    /// Follow-ups scheduled with `now_ev` during a batch join the same
+    /// batch after the already-queued events (FIFO by sequence).
+    #[test]
+    fn now_ev_joins_current_batch_in_order() {
+        struct Chain {
+            order: Vec<u32>,
+        }
+        impl Model for Chain {
+            type Ev = u32;
+            fn handle(&mut self, s: &mut Scheduler<u32>, ev: u32) {
+                self.order.push(ev);
+                if ev < 3 {
+                    s.now_ev(ev + 100);
+                }
+            }
+        }
+        let mut m = Chain { order: vec![] };
+        let mut s = Scheduler::new();
+        for i in 0..3 {
+            s.at(Ps::ns(9), i);
+        }
+        let r = Engine::run(&mut m, &mut s, Ps::ms(1));
+        assert_eq!(m.order, vec![0, 1, 2, 100, 101, 102]);
+        assert_eq!(r.end_time, Ps::ns(9));
+        assert!(r.drained);
+    }
+
+    #[test]
+    fn scheduler_reset_reuses_allocations() {
+        let mut m = Countdown { fired: vec![] };
+        let mut s = Scheduler::new();
+        s.at(Ps::ZERO, Ev::Tick(3));
+        Engine::run(&mut m, &mut s, Ps::ns(15));
+        assert!(s.pending() > 0);
+        s.reset();
+        assert_eq!(s.pending(), 0);
+        assert_eq!(s.now(), Ps::ZERO);
+        // A fresh run on the reused scheduler behaves like a new one.
+        let mut m2 = Countdown { fired: vec![] };
+        s.at(Ps::ZERO, Ev::Tick(5));
+        let r = Engine::run(&mut m2, &mut s, Ps::ms(1));
+        assert_eq!(r.events, 6);
+        assert_eq!(r.end_time, Ps::ns(50));
     }
 }

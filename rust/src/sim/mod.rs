@@ -11,12 +11,17 @@
 //! * Time is [`crate::util::time::Ps`] (integer picoseconds).
 //! * Events of the same timestamp fire in FIFO order (a monotonically
 //!   increasing sequence number breaks ties), which makes simulations
-//!   deterministic and independent of heap internals.
+//!   deterministic and independent of calendar internals.
 //! * The model is a state machine implementing [`Model`]; it receives each
 //!   event together with a [`Scheduler`] handle for scheduling follow-ups.
+//! * The calendar is a two-level bucketed structure ([`EventQueue`]) tuned
+//!   for near-monotonic event distributions; [`HeapEventQueue`] is the
+//!   binary-heap reference/baseline it is tested and benchmarked against.
+//!   The engine drains same-timestamp batches without re-searching the
+//!   calendar (see [`Engine::run`]).
 
 pub mod engine;
 pub mod queue;
 
 pub use engine::{Engine, Model, RunResult, Scheduler};
-pub use queue::EventQueue;
+pub use queue::{EventQueue, HeapEventQueue};

@@ -1,9 +1,38 @@
 //! Time-ordered event calendar.
 //!
-//! A binary heap over `(time, seq)` with FIFO tie-breaking. This is the
-//! simulator's hottest data structure; see `rust/benches/bench_engine.rs`
-//! for its microbenchmark and EXPERIMENTS.md §Perf for the optimization
-//! history.
+//! Two implementations with one contract — earliest time first, FIFO among
+//! equal timestamps (exact `(time, seq)` order, never approximate):
+//!
+//! * [`EventQueue`] — the default: a two-level *bucketed calendar*. A
+//!   near-term wheel of [`BUCKETS`] time buckets (each a small binary heap)
+//!   covers one window of simulated time; events beyond the window wait in
+//!   a sorted overflow tier and migrate in bulk when the wheel drains. Pops
+//!   pay `O(log k)` for a bucket of `k` events instead of `O(log n)` over
+//!   the whole calendar, and an occupancy bitmap makes the skip over empty
+//!   buckets word-parallel. This is the simulator's hottest data structure;
+//!   see `rust/benches/bench_engine.rs` for its microbenchmark and
+//!   EXPERIMENTS.md §Perf for the optimization history.
+//! * [`HeapEventQueue`] — the original single `BinaryHeap` calendar, kept
+//!   as the reference implementation: the randomized tests below assert the
+//!   bucketed calendar is observationally identical to it, and the perf
+//!   harness uses it as the baseline the calendar is measured against.
+//!
+//! ## Ordering invariants of the bucketed calendar
+//!
+//! Let `W` be the bucket width and the window cover absolute buckets
+//! `[base, base + BUCKETS)`; `cursor ∈ [base, base + BUCKETS)` is the scan
+//! position. The structure maintains:
+//!
+//! 1. Every bucket with absolute index `< cursor` is empty.
+//! 2. The overflow tier only holds events whose bucket is `>= base +
+//!    BUCKETS`, so any wheel event precedes any overflow event.
+//! 3. An event pushed with a time earlier than the cursor bucket is stored
+//!    *in* the cursor bucket ("clamped"). Its heap position is still sorted
+//!    by `(time, seq)`, and by (1) no earlier bucket is occupied, so the
+//!    global pop order is unchanged.
+//!
+//! Together these make "pop the min of the first occupied bucket" return
+//! the global `(time, seq)` minimum, bit-identical to the reference heap.
 
 use crate::util::time::Ps;
 use std::cmp::Ordering;
@@ -36,9 +65,30 @@ impl<Ev> Ord for Entry<Ev> {
     }
 }
 
-/// Min-heap event calendar with deterministic FIFO ordering for ties.
+/// Buckets in the near-term wheel (power of two).
+pub const BUCKETS: usize = 1024;
+const OCC_WORDS: usize = BUCKETS / 64;
+/// Default bucket width: 1 µs. The SSD models schedule most follow-ups
+/// within tens of ns to hundreds of µs of `now`, so one window spans ~1 ms
+/// of simulated time and same-batch events land in small per-bucket heaps.
+pub const DEFAULT_BUCKET_PS: i64 = 1_000_000;
+
+/// Bucketed calendar event queue with deterministic FIFO ordering for ties.
 pub struct EventQueue<Ev> {
-    heap: BinaryHeap<Entry<Ev>>,
+    /// The near-term wheel; slot `b % BUCKETS` holds absolute bucket `b`.
+    wheel: Vec<BinaryHeap<Entry<Ev>>>,
+    /// One bit per slot: set iff the bucket is non-empty.
+    occ: [u64; OCC_WORDS],
+    /// Total events in the wheel.
+    wheel_len: usize,
+    /// Absolute bucket index of the window start.
+    base: i64,
+    /// Absolute bucket index of the scan position (see module invariants).
+    cursor: i64,
+    /// Bucket width in picoseconds.
+    bucket_ps: i64,
+    /// Events beyond the window, ordered by `(time, seq)`.
+    overflow: BinaryHeap<Entry<Ev>>,
     seq: u64,
 }
 
@@ -50,14 +100,242 @@ impl<Ev> Default for EventQueue<Ev> {
 
 impl<Ev> EventQueue<Ev> {
     pub fn new() -> Self {
+        Self::with_bucket_ps(DEFAULT_BUCKET_PS)
+    }
+
+    /// API-compat constructor: `cap` pre-sizes only the overflow tier.
+    /// The wheel's per-bucket heaps grow on demand and keep their
+    /// capacity across [`clear`](Self::clear), so a reused scheduler
+    /// (sweep workers, see `coordinator/campaign.rs`) reaches steady
+    /// state after its first run and allocates nothing thereafter.
+    pub fn with_capacity(cap: usize) -> Self {
+        let mut q = Self::new();
+        q.overflow.reserve(cap);
+        q
+    }
+
+    /// Calendar with an explicit bucket width (tuning / tests).
+    pub fn with_bucket_ps(bucket_ps: i64) -> Self {
+        assert!(bucket_ps > 0, "bucket width must be positive");
         EventQueue {
+            wheel: (0..BUCKETS).map(|_| BinaryHeap::new()).collect(),
+            occ: [0; OCC_WORDS],
+            wheel_len: 0,
+            base: 0,
+            cursor: 0,
+            bucket_ps,
+            overflow: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+
+    #[inline]
+    fn bucket_of(&self, at: Ps) -> i64 {
+        at.as_ps().div_euclid(self.bucket_ps)
+    }
+
+    #[inline]
+    fn slot_of(bucket: i64) -> usize {
+        bucket.rem_euclid(BUCKETS as i64) as usize
+    }
+
+    #[inline]
+    fn window_end(&self) -> i64 {
+        self.base.saturating_add(BUCKETS as i64)
+    }
+
+    #[inline]
+    fn mark(&mut self, slot: usize) {
+        self.occ[slot / 64] |= 1u64 << (slot % 64);
+    }
+
+    #[inline]
+    fn unmark_if_empty(&mut self, slot: usize) {
+        if self.wheel[slot].is_empty() {
+            self.occ[slot / 64] &= !(1u64 << (slot % 64));
+        }
+    }
+
+    /// Distance (in buckets, 0-based) from `start_slot` to the first
+    /// occupied slot, scanning circularly. `None` if the wheel is empty.
+    fn scan_occ(&self, start_slot: usize) -> Option<usize> {
+        let w0 = start_slot / 64;
+        let b0 = start_slot % 64;
+        let first = self.occ[w0] >> b0;
+        if first != 0 {
+            return Some(first.trailing_zeros() as usize);
+        }
+        for i in 1..=OCC_WORDS {
+            let wi = (w0 + i) % OCC_WORDS;
+            let word = if i == OCC_WORDS {
+                // Full circle: only the low bits of the start word remain.
+                if b0 == 0 {
+                    0
+                } else {
+                    self.occ[wi] & ((1u64 << b0) - 1)
+                }
+            } else {
+                self.occ[wi]
+            };
+            if word != 0 {
+                return Some((64 - b0) + (i - 1) * 64 + word.trailing_zeros() as usize);
+            }
+        }
+        None
+    }
+
+    /// Wheel empty: restart the window at the overflow's earliest bucket and
+    /// migrate every now-in-window overflow event. Returns false if there is
+    /// nothing pending at all.
+    fn advance_window(&mut self) -> bool {
+        debug_assert_eq!(self.wheel_len, 0);
+        let Some(head) = self.overflow.peek() else {
+            return false;
+        };
+        self.base = self.bucket_of(head.at);
+        self.cursor = self.base;
+        let end = self.window_end();
+        while let Some(head) = self.overflow.peek() {
+            if self.bucket_of(head.at) >= end {
+                break;
+            }
+            let e = self.overflow.pop().expect("peeked");
+            let slot = Self::slot_of(self.bucket_of(e.at));
+            self.wheel[slot].push(e);
+            self.mark(slot);
+            self.wheel_len += 1;
+        }
+        true
+    }
+
+    /// Schedule `ev` to fire at absolute time `at`.
+    #[inline]
+    pub fn push(&mut self, at: Ps, ev: Ev) {
+        let seq = self.seq;
+        self.seq += 1;
+        let e = Entry { at, seq, ev };
+        let b = self.bucket_of(at);
+        if b >= self.window_end() {
+            self.overflow.push(e);
+            return;
+        }
+        // Invariant 3: never place an event behind the scan cursor.
+        let slot = Self::slot_of(b.max(self.cursor));
+        self.wheel[slot].push(e);
+        self.mark(slot);
+        self.wheel_len += 1;
+    }
+
+    /// Earliest pending time, advancing the scan cursor to its bucket (and
+    /// migrating overflow events if the wheel drained). Prefer this over
+    /// [`peek_time`](Self::peek_time) on hot paths: the cursor advance is
+    /// memoized so the empty-bucket skip is not re-paid.
+    pub fn next_time(&mut self) -> Option<Ps> {
+        if self.wheel_len == 0 && !self.advance_window() {
+            return None;
+        }
+        let start = Self::slot_of(self.cursor);
+        let d = self.scan_occ(start).expect("wheel_len > 0");
+        self.cursor += d as i64;
+        debug_assert!(self.cursor < self.window_end());
+        let slot = (start + d) % BUCKETS;
+        Some(self.wheel[slot].peek().expect("occupied slot").at)
+    }
+
+    /// Pop the earliest event, FIFO among equal timestamps.
+    #[inline]
+    pub fn pop(&mut self) -> Option<(Ps, Ev)> {
+        self.next_time()?;
+        let slot = Self::slot_of(self.cursor);
+        let e = self.wheel[slot].pop().expect("cursor bucket occupied");
+        self.wheel_len -= 1;
+        self.unmark_if_empty(slot);
+        Some((e.at, e.ev))
+    }
+
+    /// Pop the next event only if it fires exactly at `t`.
+    ///
+    /// Contract: `t` must be the time returned by the immediately preceding
+    /// [`next_time`](Self::next_time)/[`pop`](Self::pop) — the cursor then
+    /// already points at the batch's bucket, so draining a same-timestamp
+    /// batch never re-scans the calendar. Events scheduled *at* `t` during
+    /// the batch land in the same bucket (invariant 3) and are picked up in
+    /// FIFO order.
+    #[inline]
+    pub fn pop_if_at(&mut self, t: Ps) -> Option<Ev> {
+        if self.wheel_len == 0 {
+            // Same-timestamp events can never hide in the overflow tier
+            // (invariant 2: overflow buckets lie beyond the whole window).
+            return None;
+        }
+        let slot = Self::slot_of(self.cursor);
+        match self.wheel[slot].peek() {
+            Some(head) if head.at == t => {
+                let e = self.wheel[slot].pop().expect("peeked");
+                self.wheel_len -= 1;
+                self.unmark_if_empty(slot);
+                Some(e.ev)
+            }
+            _ => None,
+        }
+    }
+
+    /// Earliest scheduled time, if any (non-mutating; pays the empty-bucket
+    /// scan on every call — hot paths use [`next_time`](Self::next_time)).
+    pub fn peek_time(&self) -> Option<Ps> {
+        if self.wheel_len == 0 {
+            return self.overflow.peek().map(|e| e.at);
+        }
+        let start = Self::slot_of(self.cursor);
+        let d = self.scan_occ(start).expect("wheel_len > 0");
+        let slot = (start + d) % BUCKETS;
+        self.wheel[slot].peek().map(|e| e.at)
+    }
+
+    pub fn len(&self) -> usize {
+        self.wheel_len + self.overflow.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    pub fn clear(&mut self) {
+        if self.wheel_len > 0 {
+            for b in &mut self.wheel {
+                b.clear();
+            }
+        }
+        self.occ = [0; OCC_WORDS];
+        self.wheel_len = 0;
+        self.overflow.clear();
+        self.base = 0;
+        self.cursor = 0;
+    }
+}
+
+/// Reference implementation: min-heap event calendar with deterministic
+/// FIFO ordering for ties (the pre-calendar baseline; used as the oracle in
+/// randomized tests and as the baseline in `bench_engine`).
+pub struct HeapEventQueue<Ev> {
+    heap: BinaryHeap<Entry<Ev>>,
+    seq: u64,
+}
+
+impl<Ev> Default for HeapEventQueue<Ev> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<Ev> HeapEventQueue<Ev> {
+    pub fn new() -> Self {
+        HeapEventQueue {
             heap: BinaryHeap::new(),
             seq: 0,
         }
     }
 
     pub fn with_capacity(cap: usize) -> Self {
-        EventQueue {
+        HeapEventQueue {
             heap: BinaryHeap::with_capacity(cap),
             seq: 0,
         }
@@ -96,6 +374,7 @@ impl<Ev> EventQueue<Ev> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prng::Prng;
 
     #[test]
     fn pops_in_time_order() {
@@ -137,5 +416,144 @@ mod tests {
         assert_eq!(q.peek_time(), None);
         q.push(Ps::ns(42), ());
         assert_eq!(q.peek_time(), Some(Ps::ns(42)));
+    }
+
+    #[test]
+    fn overflow_tier_roundtrip() {
+        // Times spread over ~40 s with 1 µs buckets: everything beyond the
+        // first 1.024 ms window exercises overflow + window advance.
+        let mut q = EventQueue::new();
+        let n = 2_000i64;
+        for i in (0..n).rev() {
+            q.push(Ps::us(i * 20_000), i);
+        }
+        assert_eq!(q.len(), n as usize);
+        for i in 0..n {
+            assert_eq!(q.pop(), Some((Ps::us(i * 20_000), i)), "i={i}");
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn clamped_push_behind_cursor_pops_first() {
+        let mut q = EventQueue::new();
+        q.push(Ps::us(100), 1u32);
+        q.push(Ps::us(200), 2);
+        // Pop the 100 µs event: the cursor advances to its bucket.
+        assert_eq!(q.pop(), Some((Ps::us(100), 1)));
+        // A push earlier than the cursor bucket must still pop first
+        // (clamp path, invariant 3).
+        q.push(Ps::us(50), 3);
+        assert_eq!(q.peek_time(), Some(Ps::us(50)));
+        assert_eq!(q.pop(), Some((Ps::us(50), 3)));
+        assert_eq!(q.pop(), Some((Ps::us(200), 2)));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn pop_if_at_drains_one_batch_in_fifo_order() {
+        let mut q = EventQueue::new();
+        for i in 0..40u32 {
+            q.push(Ps::us(7), i);
+        }
+        q.push(Ps::us(9), 999);
+        let t = q.next_time().unwrap();
+        assert_eq!(t, Ps::us(7));
+        let mut batch = Vec::new();
+        while let Some(ev) = q.pop_if_at(t) {
+            batch.push(ev);
+            // Events scheduled at the batch timestamp join the same batch.
+            if ev == 5 {
+                q.push(Ps::us(7), 1000);
+            }
+        }
+        let mut expect: Vec<u32> = (0..40).collect();
+        expect.push(1000);
+        assert_eq!(batch, expect);
+        assert_eq!(q.pop(), Some((Ps::us(9), 999)));
+    }
+
+    #[test]
+    fn far_future_and_max_times() {
+        let mut q = EventQueue::new();
+        q.push(Ps::MAX, 2u8);
+        q.push(Ps::ms(1000), 1);
+        q.push(Ps::ns(1), 0);
+        assert_eq!(q.pop(), Some((Ps::ns(1), 0)));
+        assert_eq!(q.pop(), Some((Ps::ms(1000), 1)));
+        assert_eq!(q.pop(), Some((Ps::MAX, 2)));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut q = EventQueue::new();
+        for i in 0..100i64 {
+            q.push(Ps::us(i * 5_000), i);
+        }
+        q.pop();
+        q.clear();
+        assert!(q.is_empty());
+        assert_eq!(q.peek_time(), None);
+        q.push(Ps::ns(3), 7);
+        assert_eq!(q.pop(), Some((Ps::ns(3), 7)));
+    }
+
+    /// Randomized interleaved push/pop: the calendar must match the heap
+    /// reference exactly — same times, same FIFO order among ties — across
+    /// in-window, cross-window and overflow time scales.
+    #[test]
+    fn matches_heap_reference_randomized() {
+        for seed in 0..20u64 {
+            let mut rng = Prng::new(0xCA1E_17DA + seed);
+            let mut cal: EventQueue<u32> = EventQueue::with_bucket_ps(1 + (seed as i64 % 7) * 997);
+            let mut heap: HeapEventQueue<u32> = HeapEventQueue::new();
+            // `now` mimics the Scheduler's monotonic clock: pushes are
+            // always >= the last popped time.
+            let mut now = Ps::ZERO;
+            let mut id = 0u32;
+            for step in 0..4_000 {
+                if rng.next_bool(0.55) || heap.is_empty() {
+                    // Mixed scales: same-time, near-term, and far-future.
+                    let delay = match rng.next_bounded(10) {
+                        0 => Ps::ZERO,
+                        1..=5 => Ps::ps(rng.next_bounded(2_000_000) as i64),
+                        6..=8 => Ps::ps(rng.next_bounded(400_000_000) as i64),
+                        _ => Ps::ps(rng.next_bounded(60_000_000_000) as i64),
+                    };
+                    cal.push(now + delay, id);
+                    heap.push(now + delay, id);
+                    id += 1;
+                } else {
+                    let expect = heap.pop();
+                    let got = cal.pop();
+                    assert_eq!(got, expect, "seed {seed} step {step}");
+                    now = got.expect("heap non-empty").0;
+                }
+                assert_eq!(cal.len(), heap.len(), "seed {seed} step {step}");
+                assert_eq!(cal.peek_time(), heap.peek_time(), "seed {seed} step {step}");
+            }
+            // Drain: remaining order must match exactly.
+            loop {
+                let expect = heap.pop();
+                let got = cal.pop();
+                assert_eq!(got, expect, "seed {seed} drain");
+                if got.is_none() {
+                    break;
+                }
+            }
+        }
+    }
+
+    /// The heap reference itself honours FIFO ties (oracle sanity).
+    #[test]
+    fn heap_reference_fifo_on_ties() {
+        let mut q = HeapEventQueue::new();
+        for i in 0..100 {
+            q.push(Ps::ns(5), i);
+        }
+        for i in 0..100 {
+            assert_eq!(q.pop(), Some((Ps::ns(5), i)));
+        }
     }
 }
