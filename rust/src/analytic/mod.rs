@@ -5,7 +5,7 @@
 //! formulas are implemented as the Pallas kernels in
 //! `python/compile/kernels/{timing,bandwidth,energy}.py`; integration tests
 //! load the AOT artifact and assert this module and the HLO agree bit-for-
-//! bit (f32-for-f32), and `tests/analytic_vs_des.rs` asserts the DES agrees
+//! bit (f32-for-f32), and `tests/analytic_vs_hlo.rs` asserts the DES agrees
 //! within tolerance.
 //!
 //! The DES remains ground truth: it additionally models queue depth, SATA

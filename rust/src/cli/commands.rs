@@ -2,13 +2,14 @@
 
 use crate::analytic;
 use crate::cli::args::Args;
-use crate::config::SsdConfig;
+use crate::config::{ArrivalKind, SsdConfig};
 use crate::coordinator::campaign::run_trace;
 use crate::coordinator::experiments as exp;
 use crate::coordinator::pool::ThreadPool;
 use crate::dse;
 use crate::host::trace::{RequestKind, Trace, TraceGen};
 use crate::iface::timing::{IfaceParams, InterfaceKind};
+use crate::nand::datasheet::CellType;
 use crate::report;
 use crate::runtime::{iface_params_row, Runtime, MC_S};
 use crate::util::prng::Prng;
@@ -86,6 +87,78 @@ pub fn cmd_paper(args: &mut Args) -> Result<()> {
         exp::render_cells("E4 / Fig. 10 + Table 5 — energy (nJ/B, SLC)", &t5, true)
     );
     println!("{}", exp::headline(&t3));
+    Ok(())
+}
+
+/// E6 — `ddrnand sweep-load`: sweep offered MB/s across interfaces × way
+/// counts and print the throughput–latency hockey stick plus the
+/// saturation knee of every configuration (EXPERIMENTS.md §Load).
+pub fn cmd_sweep_load(args: &mut Args) -> Result<()> {
+    let mut spec = exp::LoadSweepSpec {
+        requests: requests(args)?,
+        ..exp::LoadSweepSpec::default()
+    };
+    let p = pool(args)?;
+    spec.mode = match args.get("mode").as_deref() {
+        None | Some("read") => RequestKind::Read,
+        Some("write") => RequestKind::Write,
+        Some(other) => return Err(anyhow!("unknown --mode {other} (read|write)")),
+    };
+    spec.cell = match args.get("cell").as_deref() {
+        None | Some("slc") => CellType::Slc,
+        Some("mlc") => CellType::Mlc,
+        Some(other) => return Err(anyhow!("unknown --cell {other} (slc|mlc)")),
+    };
+    if let Some(w) = args.get("ways") {
+        spec.ways = w
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<u16>()
+                    .map_err(|e| anyhow!("--ways {s:?}: {e}"))
+            })
+            .collect::<Result<Vec<u16>>>()?;
+        if spec.ways.is_empty() || spec.ways.contains(&0) {
+            return Err(anyhow!("--ways needs a comma-separated list of counts >= 1"));
+        }
+    }
+    spec.points = args.get_usize("points", spec.points).map_err(anyhow::Error::msg)?;
+    spec.max_mbps = args
+        .get_f64("max-mbps", spec.max_mbps)
+        .map_err(anyhow::Error::msg)?;
+    if spec.points == 0 || !(spec.max_mbps > 0.0) {
+        return Err(anyhow!("--points and --max-mbps must be positive"));
+    }
+    spec.arrival = match args.get("arrival").as_deref() {
+        None | Some("poisson") => ArrivalKind::Poisson,
+        Some("bursty") => ArrivalKind::Bursty,
+        Some(other) => return Err(anyhow!("unknown --arrival {other} (poisson|bursty)")),
+    };
+    spec.burst = args
+        .get_usize("burst", spec.burst as usize)
+        .map_err(anyhow::Error::msg)? as u32;
+    if spec.burst == 0 {
+        return Err(anyhow!("--burst must be >= 1"));
+    }
+    let csv = args.has("csv");
+    let cells = exp::run_load_sweep(&spec, &p);
+    println!(
+        "{}",
+        exp::render_load_sweep(
+            &format!(
+                "E6 — open-loop offered-load sweep ({} {} {}, {} arrivals; achieved MB/s and latency percentiles vs offered MB/s)",
+                spec.cell.name(),
+                spec.mode.name(),
+                if spec.channels == 1 { "1-channel".to_string() } else { format!("{}-channel", spec.channels) },
+                match spec.arrival {
+                    ArrivalKind::Poisson => "poisson",
+                    ArrivalKind::Bursty => "bursty",
+                },
+            ),
+            &cells,
+            csv
+        )
+    );
     Ok(())
 }
 

@@ -8,6 +8,7 @@
 //! ddrnand sweep-channels [...]        E3: Fig. 9 / Table 4
 //! ddrnand energy [...]                E4: Fig. 10 / Table 5
 //! ddrnand paper [...]                 E1–E5 in one go
+//! ddrnand sweep-load [...]            E6: open-loop offered-load sweep
 //! ddrnand dse [--sweep-tbyte] [--native]   DSE through the AOT artifact
 //! ddrnand pvt [--margin X]            A3: PVT Monte Carlo ablation
 //! ddrnand simulate --config FILE      one simulation from a TOML config
@@ -39,6 +40,7 @@ pub fn run(argv: &[String]) -> i32 {
         "sweep-channels" => commands::cmd_sweep_channels(&mut args),
         "energy" => commands::cmd_energy(&mut args),
         "paper" => commands::cmd_paper(&mut args),
+        "sweep-load" => commands::cmd_sweep_load(&mut args),
         "dse" => commands::cmd_dse(&mut args),
         "pvt" => commands::cmd_pvt(&mut args),
         "simulate" => commands::cmd_simulate(&mut args),
@@ -74,6 +76,7 @@ SUBCOMMANDS
   sweep-channels   E3: channel-config sweep (Fig. 9 / Table 4)
   energy           E4: energy per byte (Fig. 10 / Table 5)
   paper            E1–E5: all experiments, paper-vs-measured
+  sweep-load       E6: open-loop offered-load sweep (latency under load)
   dse              design-space exploration via the AOT analytic model
   pvt              A3: PVT Monte Carlo ablation
   simulate         run one simulation from a TOML config
@@ -89,6 +92,15 @@ COMMON FLAGS
   --native         dse: force the pure-Rust model (skip PJRT)
   --sweep-tbyte    dse: sweep t_BYTE (A2 metal-layer ablation)
   --margin X       pvt: clock-period margin (default 1.02)
+
+SWEEP-LOAD FLAGS
+  --mode M         workload kind: read|write (default read)
+  --cell C         flash cell: slc|mlc (default slc)
+  --ways LIST      comma-separated way counts (default 1,4,8)
+  --points N       offered-load grid points (default 8)
+  --max-mbps X     top of the offered-load grid (default 320)
+  --arrival KIND   arrival process: poisson|bursty (default poisson)
+  --burst N        requests per burst for bursty arrivals (default 4)
 "
     .to_string()
 }

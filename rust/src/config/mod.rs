@@ -18,6 +18,41 @@ pub enum FtlKind {
     Hybrid,
 }
 
+/// Arrival process for open-loop (arrival-driven) workloads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalKind {
+    /// Exponential inter-arrival gaps — a memoryless offered load.
+    Poisson,
+    /// Back-to-back groups of [`LoadConfig::burst`] requests whose group
+    /// starts form a Poisson process at the same mean byte rate.
+    Bursty,
+}
+
+/// Open-loop workload knobs (`[load]` in TOML). With `offered_mbps`
+/// unset the workload is closed loop (queue-depth driven), the paper's
+/// regime; setting it turns the run arrival-driven so latency under
+/// sustained load is measurable (EXPERIMENTS.md §Load, `ddrnand
+/// sweep-load`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LoadConfig {
+    /// Offered load in MB/s (decimal); `None` = closed loop.
+    pub offered_mbps: Option<f64>,
+    /// Arrival process shape.
+    pub arrival: ArrivalKind,
+    /// Requests per burst (only used by [`ArrivalKind::Bursty`]).
+    pub burst: u32,
+}
+
+impl Default for LoadConfig {
+    fn default() -> Self {
+        LoadConfig {
+            offered_mbps: None,
+            arrival: ArrivalKind::Poisson,
+            burst: 4,
+        }
+    }
+}
+
 /// Full configuration of one simulated SSD.
 #[derive(Debug, Clone)]
 pub struct SsdConfig {
@@ -51,6 +86,8 @@ pub struct SsdConfig {
     pub program_status_overhead: Ps,
     /// PRNG seed for workload/ordering decisions.
     pub seed: u64,
+    /// Open-loop workload knobs (closed loop when unset).
+    pub load: LoadConfig,
 }
 
 impl Default for SsdConfig {
@@ -70,6 +107,7 @@ impl Default for SsdConfig {
             utilization: 0.9,
             program_status_overhead: Ps::us(2),
             seed: 0xDD12_7A5D,
+            load: LoadConfig::default(),
         }
     }
 }
@@ -134,6 +172,14 @@ impl SsdConfig {
         if !(0.0..=0.5).contains(&self.params.alpha) {
             errs.push("alpha must be in [0, 1/2] (Eq. 1)".into());
         }
+        if let Some(mbps) = self.load.offered_mbps {
+            if !(mbps > 0.0 && mbps.is_finite()) {
+                errs.push("load.offered_mbps must be a positive number".into());
+            }
+        }
+        if self.load.burst == 0 {
+            errs.push("load.burst must be >= 1".into());
+        }
         errs
     }
 
@@ -181,6 +227,15 @@ impl SsdConfig {
                 "sata.command_overhead_us" => {
                     cfg.sata.command_overhead = Ps::from_us_f64(req_f64(key, val)?)
                 }
+                "load.offered_mbps" => cfg.load.offered_mbps = Some(req_f64(key, val)?),
+                "load.arrival" => {
+                    cfg.load.arrival = match val.as_str() {
+                        Some("poisson") => ArrivalKind::Poisson,
+                        Some("bursty") => ArrivalKind::Bursty,
+                        other => return Err(format!("bad load.arrival {other:?}")),
+                    }
+                }
+                "load.burst" => cfg.load.burst = req_u32(key, val)?,
                 "cache.capacity_pages" => cfg.cache.capacity_pages = req_u32(key, val)?,
                 "cache.write_back" => {
                     cfg.cache.write_back =
@@ -257,6 +312,29 @@ capacity_pages = 1024
         assert_eq!((cfg.channels, cfg.ways), (2, 8));
         assert_eq!(cfg.sata.bandwidth_mbps, 600.0);
         assert_eq!(cfg.cache.capacity_pages, 1024);
+    }
+
+    #[test]
+    fn load_section_parses_and_validates() {
+        let cfg = SsdConfig::from_toml(
+            r#"
+iface = "proposed"
+[load]
+offered_mbps = 120.5
+arrival = "bursty"
+burst = 8
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.load.offered_mbps, Some(120.5));
+        assert_eq!(cfg.load.arrival, ArrivalKind::Bursty);
+        assert_eq!(cfg.load.burst, 8);
+        // Closed loop by default.
+        assert_eq!(SsdConfig::default().load.offered_mbps, None);
+        // Bad values rejected.
+        assert!(SsdConfig::from_toml("[load]\noffered_mbps = -3.0").is_err());
+        assert!(SsdConfig::from_toml("[load]\nburst = 0").is_err());
+        assert!(SsdConfig::from_toml("[load]\narrival = \"uniform\"").is_err());
     }
 
     #[test]

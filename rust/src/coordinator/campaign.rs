@@ -7,10 +7,11 @@
 //! [`SsdSim::reset`] whenever the geometry fingerprint matches, instead of
 //! rebuilding everything per run (perf pass, EXPERIMENTS.md §Perf).
 
-use crate::config::SsdConfig;
+use crate::config::{ArrivalKind, SsdConfig};
 use crate::coordinator::ssd::{Ev, SsdSim};
 use crate::host::trace::{RequestKind, Trace, TraceGen};
 use crate::sim::{RunResult, Scheduler};
+use crate::util::stats::Summary;
 use crate::util::time::Ps;
 
 /// Everything measured from one simulation run.
@@ -29,6 +30,14 @@ pub struct SimReport {
     /// Request latency stats (µs).
     pub latency_mean_us: f64,
     pub latency_max_us: f64,
+    /// Latency percentiles (µs) over the per-request samples; NaN when the
+    /// run completed no requests.
+    pub latency_p50_us: f64,
+    pub latency_p95_us: f64,
+    pub latency_p99_us: f64,
+    /// Offered load implied by the trace's arrival track, in MB/s
+    /// (0 for closed-loop runs).
+    pub offered_mbps: f64,
     /// Mean bus utilization across channels.
     pub bus_utilization: f64,
     pub sata_utilization: f64,
@@ -60,6 +69,10 @@ fn report_from(
         let us = sim.bus_utilizations();
         us.iter().sum::<f64>() / us.len().max(1) as f64
     };
+    let (p50, p95, p99) = match Summary::from_samples(&sim.latency_samples) {
+        Some(s) => (s.median, s.p95, s.p99),
+        None => (f64::NAN, f64::NAN, f64::NAN),
+    };
     SimReport {
         iface: sim.cfg.iface.name(),
         cell: sim.cfg.cell.name(),
@@ -70,6 +83,10 @@ fn report_from(
         energy_nj_per_byte: sim.energy.controller_nj_per_byte(),
         latency_mean_us: sim.latency.mean(),
         latency_max_us: sim.latency.max(),
+        latency_p50_us: p50,
+        latency_p95_us: p95,
+        latency_p99_us: p99,
+        offered_mbps: 0.0,
         bus_utilization: bus_u,
         sata_utilization: sim.sata_utilization(),
         requests: sim.counters.requests_done,
@@ -134,11 +151,14 @@ impl SimWorkspace {
             self.sim = Some(SsdSim::new(cfg.clone(), trace.requests.clone()));
         }
         let sim = self.sim.as_mut().expect("just placed");
+        sim.set_arrivals(&trace.arrivals);
         if trace.requests.iter().any(|r| r.kind == RequestKind::Read) {
             sim.prefill_for_reads();
         }
         let result = sim.run_with(&mut self.sched);
-        report_from(sim, result, mode, wall0)
+        let mut rep = report_from(sim, result, mode, wall0);
+        rep.offered_mbps = trace.offered_mbps().unwrap_or(0.0);
+        rep
     }
 }
 
@@ -180,10 +200,31 @@ impl Campaign {
     }
 
     /// Generate the workload and run inside a reusable worker workspace.
+    /// When the config's `[load]` section sets an offered load, the trace
+    /// is stamped with the corresponding arrival track and the run is
+    /// open loop (EXPERIMENTS.md §Load).
     pub fn run_in(&self, ws: &mut SimWorkspace) -> SimReport {
         let n = self.clamped_requests();
-        let trace = TraceGen::default().sequential(self.mode, n);
-        ws.run_trace(&self.cfg, &trace)
+        let gen = TraceGen::default();
+        let mut trace = gen.sequential(self.mode, n);
+        if let Some(offered) = self.cfg.load.offered_mbps {
+            trace = match self.cfg.load.arrival {
+                ArrivalKind::Poisson => gen.poisson_arrivals(trace, offered, self.cfg.seed),
+                ArrivalKind::Bursty => gen.bursty_arrivals(
+                    trace,
+                    offered,
+                    self.cfg.load.burst as usize,
+                    self.cfg.seed,
+                ),
+            };
+        }
+        let mut rep = ws.run_trace(&self.cfg, &trace);
+        if let Some(offered) = self.cfg.load.offered_mbps {
+            // Report the configured offered load, which stays meaningful
+            // even when the arrival span degenerates (e.g. one burst).
+            rep.offered_mbps = offered;
+        }
+        rep
     }
 }
 
@@ -207,6 +248,36 @@ mod tests {
         assert!(r.energy_nj_per_byte > 0.0);
         assert!(r.events > 0);
         assert_eq!(r.mode, "write");
+    }
+
+    #[test]
+    fn closed_loop_report_has_percentiles_and_no_offered_load() {
+        let r = Campaign::new(cfg(), RequestKind::Write, 10).run();
+        assert_eq!(r.offered_mbps, 0.0);
+        assert!(r.latency_p50_us.is_finite() && r.latency_p50_us > 0.0);
+        assert!(r.latency_p50_us <= r.latency_p95_us);
+        assert!(r.latency_p95_us <= r.latency_p99_us);
+        assert!(r.latency_p99_us <= r.latency_max_us + 1e-9);
+    }
+
+    /// The `[load]` config knobs turn a campaign open loop end to end.
+    #[test]
+    fn load_config_drives_open_loop_campaign() {
+        let mut c = cfg();
+        c.load.offered_mbps = Some(5.0);
+        let r = Campaign::new(c, RequestKind::Write, 30).run();
+        assert_eq!(r.requests, 30);
+        assert!(r.offered_mbps > 0.0, "open-loop run must report offered load");
+        assert!(r.latency_p50_us > 0.0);
+        let mut c2 = cfg();
+        c2.load.offered_mbps = Some(5.0);
+        c2.load.arrival = crate::config::ArrivalKind::Bursty;
+        c2.load.burst = 4;
+        let r2 = Campaign::new(c2, RequestKind::Write, 30).run();
+        assert_eq!(r2.requests, 30);
+        // Bursts queue behind each other: tail latency exceeds Poisson's
+        // at the same (light) offered load.
+        assert!(r2.latency_p99_us > r.latency_p50_us);
     }
 
     #[test]

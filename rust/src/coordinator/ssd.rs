@@ -18,6 +18,16 @@
 //!
 //! Way interleaving emerges naturally: while one way's chip is busy in
 //! t_R/t_PROG, the channel scheduler grants the bus to sibling ways.
+//!
+//! ## Admission: closed loop vs open loop
+//!
+//! By default requests are admitted *closed loop*: the device is refilled
+//! to `queue_depth` as requests complete (`Admit` events). When an arrival
+//! track is installed via [`SsdSim::set_arrivals`], admission is *open
+//! loop*: request `i` enters at `arrivals[i]` (`Arrive` events) no matter
+//! how the device is keeping up, so queueing delay — and therefore the
+//! latency-vs-offered-load curve the E6 sweep measures — is visible.
+//! Closed-loop runs are bit-identical to the pre-open-loop simulator.
 
 use crate::config::{FtlKind, SsdConfig};
 use crate::controller::cache::{CacheOutcome, DramCache};
@@ -45,6 +55,9 @@ pub const INTERNAL_REQ: u64 = u64::MAX;
 pub enum Ev {
     /// Try to admit more requests from the trace (respecting queue depth).
     Admit,
+    /// Open-loop mode: admit every request whose arrival time has come,
+    /// then re-arm for the next arrival (see [`SsdSim::set_arrivals`]).
+    Arrive,
     /// A SATA transfer finished.
     SataDone { req: u64, phase: SataPhase },
     /// A channel bus phase finished.
@@ -107,6 +120,9 @@ pub struct SsdSim {
     ftl: Box<dyn Ftl>,
     cache: DramCache,
     trace: Vec<Request>,
+    /// Open-loop arrival timestamps (one per trace entry, non-decreasing);
+    /// empty = closed-loop queue-depth admission (the default).
+    arrivals: Vec<Ps>,
     next_req: usize,
     outstanding: u32,
     /// Request table indexed by request id (= trace index): dense and
@@ -120,6 +136,10 @@ pub struct SsdSim {
     kick_list: Vec<u16>,
     pub counters: SimCounters,
     pub latency: Welford,
+    /// Per-request latency samples in µs, in completion order — the raw
+    /// material for the p50/p95/p99 columns of the load sweep (`report`,
+    /// EXPERIMENTS.md §Load).
+    pub latency_samples: Vec<f64>,
     pub power: PowerModel,
     pub energy: EnergyMeter,
     finished_at: Ps,
@@ -162,6 +182,7 @@ impl SsdSim {
             ftl,
             cache: DramCache::new(cfg.cache),
             trace,
+            arrivals: Vec::new(),
             next_req: 0,
             outstanding: 0,
             reqs,
@@ -169,6 +190,7 @@ impl SsdSim {
             kick_list: Vec::new(),
             counters: SimCounters::default(),
             latency: Welford::new(),
+            latency_samples: Vec::new(),
             power,
             energy: EnergyMeter::default(),
             finished_at: Ps::ZERO,
@@ -344,9 +366,15 @@ impl SsdSim {
         self.outstanding -= 1;
         self.counters.requests_done += 1;
         self.counters.host_bytes += st.bytes as u64;
-        self.latency.push((sched.now() - st.issued_at).as_us_f64());
+        let lat_us = (sched.now() - st.issued_at).as_us_f64();
+        self.latency.push(lat_us);
+        self.latency_samples.push(lat_us);
         self.finished_at = sched.now();
-        sched.now_ev(Ev::Admit);
+        // Open-loop admission is arrival-driven; a completion-time Admit
+        // would be a guaranteed no-op event on the hot path.
+        if self.arrivals.is_empty() {
+            sched.now_ev(Ev::Admit);
+        }
     }
 
     /// Grant the channel bus to the next way that wants it.
@@ -487,45 +515,90 @@ impl SsdSim {
         self.kick_channel(ch, sched);
     }
 
+    /// Closed-loop admission: refill the device to its queue depth. A
+    /// no-op in open-loop mode, where [`arrive`](Self::arrive) drives
+    /// admission from the arrival track instead.
     fn admit(&mut self, sched: &mut Scheduler<Ev>) {
+        if !self.arrivals.is_empty() {
+            return;
+        }
         while self.outstanding < self.cfg.queue_depth && self.next_req < self.trace.len() {
-            let id = self.next_req as u64;
-            let r = self.trace[self.next_req];
-            self.next_req += 1;
-            self.outstanding += 1;
-            let pages = self.lpns(&r).count() as u32;
-            self.reqs[id as usize] = Some(ReqState {
-                    kind: r.kind,
-                    bytes: r.bytes,
-                    pages_total: pages,
-                    pages_done: 0,
-                    chunks_done: 0,
-                    issued_at: sched.now(),
-                },
-            );
-            match r.kind {
-                RequestKind::Write => {
-                    let (_, done) = self.sata.reserve(sched.now(), r.bytes as u64, true);
-                    sched.at(
-                        done,
-                        Ev::SataDone {
-                            req: id,
-                            phase: SataPhase::HostDataIn,
-                        },
-                    );
-                }
-                RequestKind::Read => {
-                    let (_, done) = self.sata.reserve(sched.now(), 0, true);
-                    sched.at(
-                        done,
-                        Ev::SataDone {
-                            req: id,
-                            phase: SataPhase::ReadCmd,
-                        },
-                    );
-                }
+            self.issue_next(sched);
+        }
+    }
+
+    /// Open-loop admission: admit every request whose arrival time has
+    /// come (the queue is unbounded — under overload, latency grows
+    /// without bound, which is exactly the saturation signal the load
+    /// sweep measures), then re-arm for the next arrival.
+    fn arrive(&mut self, sched: &mut Scheduler<Ev>) {
+        while self.next_req < self.trace.len() && self.arrivals[self.next_req] <= sched.now() {
+            self.issue_next(sched);
+        }
+        if self.next_req < self.trace.len() {
+            sched.at(self.arrivals[self.next_req], Ev::Arrive);
+        }
+    }
+
+    /// Admit the next trace request now: create its state and start its
+    /// SATA command/data phase.
+    fn issue_next(&mut self, sched: &mut Scheduler<Ev>) {
+        let id = self.next_req as u64;
+        let r = self.trace[self.next_req];
+        self.next_req += 1;
+        self.outstanding += 1;
+        let pages = self.lpns(&r).count() as u32;
+        self.reqs[id as usize] = Some(ReqState {
+                kind: r.kind,
+                bytes: r.bytes,
+                pages_total: pages,
+                pages_done: 0,
+                chunks_done: 0,
+                issued_at: sched.now(),
+            },
+        );
+        match r.kind {
+            RequestKind::Write => {
+                let (_, done) = self.sata.reserve(sched.now(), r.bytes as u64, true);
+                sched.at(
+                    done,
+                    Ev::SataDone {
+                        req: id,
+                        phase: SataPhase::HostDataIn,
+                    },
+                );
+            }
+            RequestKind::Read => {
+                let (_, done) = self.sata.reserve(sched.now(), 0, true);
+                sched.at(
+                    done,
+                    Ev::SataDone {
+                        req: id,
+                        phase: SataPhase::ReadCmd,
+                    },
+                );
             }
         }
+    }
+
+    /// Switch this run to open-loop admission: request `i` enters the
+    /// device at `arrivals[i]` regardless of completions. Pass an empty
+    /// slice (or call [`reset`](Self::reset)) to restore the default
+    /// closed-loop admission; closed-loop behaviour is bit-identical to a
+    /// simulator that never had an arrival track (tested below).
+    pub fn set_arrivals(&mut self, arrivals: &[Ps]) {
+        assert!(
+            arrivals.is_empty() || arrivals.len() == self.trace.len(),
+            "arrival track length mismatch: {} arrivals for {} requests",
+            arrivals.len(),
+            self.trace.len()
+        );
+        debug_assert!(
+            arrivals.windows(2).all(|w| w[0] <= w[1]),
+            "arrivals must be non-decreasing"
+        );
+        self.arrivals.clear();
+        self.arrivals.extend_from_slice(arrivals);
     }
 
     /// All requests issued and completed?
@@ -593,6 +666,7 @@ impl SsdSim {
         self.cache.reset(cfg.cache);
         self.trace.clear();
         self.trace.extend_from_slice(trace);
+        self.arrivals.clear();
         self.next_req = 0;
         self.outstanding = 0;
         self.reqs.clear();
@@ -601,6 +675,7 @@ impl SsdSim {
         self.kick_list.clear();
         self.counters = SimCounters::default();
         self.latency = Welford::new();
+        self.latency_samples.clear();
         self.power = PowerModel::for_interface(cfg.iface);
         self.energy = EnergyMeter::default();
         self.finished_at = Ps::ZERO;
@@ -617,7 +692,11 @@ impl SsdSim {
     /// calendar allocations are reused across runs (sweep workers).
     pub fn run_with(&mut self, sched: &mut Scheduler<Ev>) -> RunResult {
         sched.reset();
-        sched.at(Ps::ZERO, Ev::Admit);
+        if self.arrivals.is_empty() {
+            sched.at(Ps::ZERO, Ev::Admit);
+        } else {
+            sched.at(self.arrivals[0], Ev::Arrive);
+        }
         let result = Engine::run(self, sched, Ps::MAX);
         assert!(self.is_done(), "simulation drained without completing trace");
         // Close the books: controller energy over the active window.
@@ -662,6 +741,7 @@ impl Model for SsdSim {
     fn handle(&mut self, sched: &mut Scheduler<Ev>, ev: Ev) {
         match ev {
             Ev::Admit => self.admit(sched),
+            Ev::Arrive => self.arrive(sched),
             Ev::SataDone { req, phase } => match phase {
                 SataPhase::HostDataIn => self.start_write_pages(req, sched),
                 SataPhase::ReadCmd => self.start_read_pages(req, sched),
@@ -782,6 +862,64 @@ mod tests {
         sim.run();
         assert_eq!(sim.latency.count(), 5);
         assert!(sim.latency.mean() > 0.0);
+        assert_eq!(sim.latency_samples.len(), 5);
+        let mean = sim.latency_samples.iter().sum::<f64>() / 5.0;
+        assert!((mean - sim.latency.mean()).abs() < 1e-9);
+    }
+
+    /// Open loop: requests are admitted at their arrival times, and with
+    /// arrivals far apart every request sees an idle device (equal
+    /// latencies, end time dominated by the last arrival).
+    #[test]
+    fn open_loop_admits_at_arrivals() {
+        let mut sim = SsdSim::new(small_cfg(InterfaceKind::Proposed, 2), write_trace(3));
+        sim.set_arrivals(&[Ps::ZERO, Ps::ms(20), Ps::ms(40)]);
+        sim.run();
+        assert!(sim.is_done());
+        assert_eq!(sim.counters.requests_done, 3);
+        assert_eq!(sim.latency_samples.len(), 3);
+        assert!(sim.finished_at() >= Ps::ms(40));
+        let spread = sim.latency.max() - sim.latency.min();
+        assert!(
+            spread <= sim.latency.mean() * 0.05,
+            "idle-device arrivals must see equal latency: min={} max={}",
+            sim.latency.min(),
+            sim.latency.max()
+        );
+    }
+
+    /// Simultaneous (bursty) arrivals queue up and all complete.
+    #[test]
+    fn open_loop_burst_arrivals_complete() {
+        let mut sim = SsdSim::new(small_cfg(InterfaceKind::Proposed, 4), write_trace(8));
+        sim.set_arrivals(&[Ps::ZERO; 8]);
+        sim.run();
+        assert_eq!(sim.counters.requests_done, 8);
+        // Later burst members wait behind earlier ones: latency spreads.
+        assert!(sim.latency.max() > sim.latency.min());
+    }
+
+    /// A reset clears the arrival track: the same simulator reused for a
+    /// closed-loop run is bit-identical to a fresh closed-loop simulator.
+    #[test]
+    fn reset_restores_closed_loop_exactly() {
+        let fingerprint = |sim: &SsdSim, r: RunResult| {
+            (
+                r.events,
+                sim.finished_at(),
+                sim.counters.pages_programmed,
+                sim.latency.mean(),
+            )
+        };
+        let mut fresh = SsdSim::new(small_cfg(InterfaceKind::Proposed, 2), write_trace(10));
+        let rf = fresh.run();
+        let mut sim = SsdSim::new(small_cfg(InterfaceKind::Proposed, 2), write_trace(10));
+        sim.set_arrivals(&[Ps::us(100); 10]);
+        sim.run();
+        let t = write_trace(10);
+        sim.reset(small_cfg(InterfaceKind::Proposed, 2), &t);
+        let rr = sim.run();
+        assert_eq!(fingerprint(&sim, rr), fingerprint(&fresh, rf));
     }
 
     #[test]

@@ -5,8 +5,29 @@
 //! patterns). [`TraceGen`] produces those plus random and mixed workloads
 //! for the extended experiments; [`Trace`] round-trips through a simple
 //! text format so external traces can be replayed.
+//!
+//! ## Open-loop traces (v2)
+//!
+//! A trace may additionally carry one **arrival timestamp per request**
+//! (`Trace::arrivals`). Such a trace is *open loop*: the host submits
+//! request `i` at `arrivals[i]` regardless of how the device is keeping
+//! up, which is the sustained-load regime the E6 sweep (`ddrnand
+//! sweep-load`, DESIGN.md) measures latency under. An empty arrival track
+//! is the classic *closed loop*: the device is refilled to its queue
+//! depth as requests complete.
+//!
+//! The text format grows a fourth column for this (v1 files still parse):
+//!
+//! ```text
+//! # v1 (closed loop):  <R|W> <offset-bytes> <length-bytes>
+//! # v2 (open loop):    <R|W> <offset-bytes> <length-bytes> <arrival-ps>
+//! ```
+//!
+//! Arrivals are integer picoseconds from the start of the run and must be
+//! non-decreasing; mixing v1 and v2 rows in one file is rejected.
 
 use crate::util::prng::Prng;
+use crate::util::time::Ps;
 
 /// Read or write.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -38,9 +59,20 @@ pub struct Request {
 #[derive(Debug, Clone, Default)]
 pub struct Trace {
     pub requests: Vec<Request>,
+    /// Open-loop arrival timestamps, one per request, non-decreasing.
+    /// Empty = closed loop (see the module docs).
+    pub arrivals: Vec<Ps>,
 }
 
 impl Trace {
+    /// A closed-loop trace over `requests` (no arrival track).
+    pub fn from_requests(requests: Vec<Request>) -> Trace {
+        Trace {
+            requests,
+            arrivals: Vec::new(),
+        }
+    }
+
     pub fn total_bytes(&self) -> u64 {
         self.requests.iter().map(|r| r.bytes as u64).sum()
     }
@@ -52,24 +84,64 @@ impl Trace {
         self.requests.is_empty()
     }
 
-    /// Serialize to the text trace format: `R|W <offset> <bytes>` per line,
-    /// '#' comments allowed.
+    /// Does this trace drive the device open loop (arrival timestamps)?
+    pub fn is_open_loop(&self) -> bool {
+        !self.arrivals.is_empty()
+    }
+
+    /// Mean offered load implied by the arrival track, in MB/s (decimal,
+    /// like the paper's tables), measured over the arrival span. `None`
+    /// for closed-loop traces and degenerate (single-instant) spans.
+    pub fn offered_mbps(&self) -> Option<f64> {
+        let first = *self.arrivals.first()?;
+        let last = *self.arrivals.last()?;
+        let span = last - first;
+        if span <= Ps::ZERO {
+            return None;
+        }
+        Some(self.total_bytes() as f64 / span.as_secs_f64() / 1e6)
+    }
+
+    /// Serialize to the text trace format: `R|W <offset> <bytes>` per line
+    /// (v1), with a fourth `<arrival-ps>` column when the trace carries an
+    /// arrival track (v2). '#' comments allowed.
     pub fn to_text(&self) -> String {
-        let mut s = String::with_capacity(self.requests.len() * 16);
-        s.push_str("# ddrnand trace v1: <R|W> <offset-bytes> <length-bytes>\n");
-        for r in &self.requests {
+        let open = self.is_open_loop();
+        assert!(
+            !open || self.arrivals.len() == self.requests.len(),
+            "arrival track length mismatch: {} arrivals for {} requests",
+            self.arrivals.len(),
+            self.requests.len()
+        );
+        let mut s = String::with_capacity(self.requests.len() * 24);
+        if open {
+            s.push_str("# ddrnand trace v2: <R|W> <offset-bytes> <length-bytes> <arrival-ps>\n");
+        } else {
+            s.push_str("# ddrnand trace v1: <R|W> <offset-bytes> <length-bytes>\n");
+        }
+        for (i, r) in self.requests.iter().enumerate() {
             let k = match r.kind {
                 RequestKind::Read => 'R',
                 RequestKind::Write => 'W',
             };
-            s.push_str(&format!("{k} {} {}\n", r.offset, r.bytes));
+            if open {
+                s.push_str(&format!(
+                    "{k} {} {} {}\n",
+                    r.offset,
+                    r.bytes,
+                    self.arrivals[i].as_ps()
+                ));
+            } else {
+                s.push_str(&format!("{k} {} {}\n", r.offset, r.bytes));
+            }
         }
         s
     }
 
-    /// Parse the text trace format.
+    /// Parse the text trace format (v1 or v2; see the module docs).
     pub fn from_text(text: &str) -> Result<Trace, String> {
         let mut requests = Vec::new();
+        let mut arrivals: Vec<Ps> = Vec::new();
         for (i, line) in text.lines().enumerate() {
             let line = line.trim();
             if line.is_empty() || line.starts_with('#') {
@@ -94,13 +166,52 @@ impl Trace {
             if bytes == 0 {
                 return Err(format!("line {}: zero-length request", i + 1));
             }
+            match it.next() {
+                Some(a) => {
+                    // v2 row: arrival in picoseconds.
+                    if requests.len() != arrivals.len() {
+                        return Err(format!(
+                            "line {}: v2 arrival column after v1 rows (all rows must agree)",
+                            i + 1
+                        ));
+                    }
+                    let ps: i64 = a
+                        .parse()
+                        .map_err(|e| format!("line {}: bad arrival: {e}", i + 1))?;
+                    if ps < 0 {
+                        return Err(format!("line {}: negative arrival {ps}", i + 1));
+                    }
+                    let at = Ps::ps(ps);
+                    if let Some(&prev) = arrivals.last() {
+                        if at < prev {
+                            return Err(format!(
+                                "line {}: arrival moves backwards ({at} < {prev})",
+                                i + 1
+                            ));
+                        }
+                    }
+                    arrivals.push(at);
+                }
+                None => {
+                    // v1 row: reject if earlier rows carried arrivals.
+                    if !arrivals.is_empty() {
+                        return Err(format!(
+                            "line {}: v1 row after v2 rows (all rows must agree)",
+                            i + 1
+                        ));
+                    }
+                }
+            }
+            if it.next().is_some() {
+                return Err(format!("line {}: too many fields", i + 1));
+            }
             requests.push(Request {
                 kind,
                 offset,
                 bytes,
             });
         }
-        Ok(Trace { requests })
+        Ok(Trace { requests, arrivals })
     }
 }
 
@@ -130,7 +241,7 @@ impl TraceGen {
                 bytes: self.request_bytes,
             })
             .collect();
-        Trace { requests }
+        Trace::from_requests(requests)
     }
 
     /// Uniform-random offsets within `volume_bytes`, aligned to the request
@@ -151,7 +262,7 @@ impl TraceGen {
                 bytes: self.request_bytes,
             })
             .collect();
-        Trace { requests }
+        Trace::from_requests(requests)
     }
 
     /// Mixed read/write sequential stream with the given write fraction.
@@ -168,7 +279,47 @@ impl TraceGen {
                 bytes: self.request_bytes,
             })
             .collect();
-        Trace { requests }
+        Trace::from_requests(requests)
+    }
+
+    /// Stamp Poisson-process arrivals onto `trace` so its mean offered
+    /// load is `offered_mbps` (decimal MB/s). The first request arrives at
+    /// t = 0; each following gap is exponential with a per-request mean
+    /// proportional to that request's size, so mixed-size traces still hit
+    /// the target byte rate. The result is an open-loop trace.
+    pub fn poisson_arrivals(&self, trace: Trace, offered_mbps: f64, seed: u64) -> Trace {
+        // A Poisson stream is the degenerate burst of one; keeping a single
+        // stamping loop means the two arrival kinds can never diverge.
+        self.bursty_arrivals(trace, offered_mbps, 1, seed)
+    }
+
+    /// Stamp bursty arrivals: requests arrive in back-to-back groups of
+    /// `burst` sharing one instant, and the group starts form a Poisson
+    /// process at the same long-run byte rate `offered_mbps`. This is the
+    /// aggregated-submission host pattern (deep instantaneous queues at an
+    /// unchanged mean load), the stress case for way interleaving.
+    pub fn bursty_arrivals(
+        &self,
+        mut trace: Trace,
+        offered_mbps: f64,
+        burst: usize,
+        seed: u64,
+    ) -> Trace {
+        assert!(offered_mbps > 0.0, "offered load must be positive");
+        assert!(burst >= 1, "burst must be >= 1");
+        let mut rng = Prng::new(seed);
+        let mut at = Ps::ZERO;
+        trace.arrivals.clear();
+        trace.arrivals.reserve(trace.requests.len());
+        for chunk in trace.requests.chunks(burst) {
+            for _ in chunk {
+                trace.arrivals.push(at);
+            }
+            let bytes: u64 = chunk.iter().map(|r| r.bytes as u64).sum();
+            let mean_gap_ps = bytes as f64 / (offered_mbps * 1e6) * 1e12;
+            at += Ps::ps((mean_gap_ps * rng.next_exponential()).round() as i64);
+        }
+        trace
     }
 }
 
@@ -186,14 +337,36 @@ mod tests {
             assert_eq!(r.kind, RequestKind::Write);
         }
         assert_eq!(t.total_bytes(), 4 * 65536);
+        assert!(!t.is_open_loop());
     }
 
     #[test]
     fn text_roundtrip() {
         let t = TraceGen::default().mixed_sequential(32, 0.5, 1);
         let text = t.to_text();
+        assert!(text.starts_with("# ddrnand trace v1"));
         let back = Trace::from_text(&text).unwrap();
         assert_eq!(t.requests, back.requests);
+        assert!(back.arrivals.is_empty());
+    }
+
+    #[test]
+    fn v2_text_roundtrip() {
+        let gen = TraceGen::default();
+        let t = gen.poisson_arrivals(gen.mixed_sequential(32, 0.5, 1), 40.0, 9);
+        let text = t.to_text();
+        assert!(text.starts_with("# ddrnand trace v2"));
+        let back = Trace::from_text(&text).unwrap();
+        assert_eq!(t.requests, back.requests);
+        assert_eq!(t.arrivals, back.arrivals);
+        assert!(back.is_open_loop());
+    }
+
+    #[test]
+    fn v2_parses_explicit_arrivals() {
+        let t = Trace::from_text("R 0 2048 0\nW 2048 2048 1000000\n").unwrap();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.arrivals, vec![Ps::ZERO, Ps::ps(1_000_000)]);
     }
 
     #[test]
@@ -202,6 +375,19 @@ mod tests {
         assert!(Trace::from_text("R zero 4096").is_err());
         assert!(Trace::from_text("R 0").is_err());
         assert!(Trace::from_text("R 0 0").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_bad_arrivals() {
+        // Non-numeric, negative, and backwards-moving arrivals.
+        assert!(Trace::from_text("R 0 2048 soon").is_err());
+        assert!(Trace::from_text("R 0 2048 -5").is_err());
+        assert!(Trace::from_text("R 0 2048 1000\nW 2048 2048 999").is_err());
+        // Mixed v1/v2 rows, both orders.
+        assert!(Trace::from_text("R 0 2048 0\nW 2048 2048").is_err());
+        assert!(Trace::from_text("R 0 2048\nW 2048 2048 10").is_err());
+        // Trailing junk beyond the arrival column.
+        assert!(Trace::from_text("R 0 2048 5 9").is_err());
     }
 
     #[test]
@@ -230,5 +416,39 @@ mod tests {
             .count();
         let frac = writes as f64 / 2000.0;
         assert!((frac - 0.3).abs() < 0.05, "frac={frac}");
+    }
+
+    #[test]
+    fn poisson_arrivals_hit_offered_load() {
+        let gen = TraceGen::default();
+        let t = gen.poisson_arrivals(gen.sequential(RequestKind::Write, 2000), 50.0, 3);
+        assert_eq!(t.arrivals.len(), 2000);
+        assert_eq!(t.arrivals[0], Ps::ZERO);
+        assert!(t.arrivals.windows(2).all(|w| w[0] <= w[1]));
+        let offered = t.offered_mbps().unwrap();
+        assert!((offered - 50.0).abs() / 50.0 < 0.1, "offered={offered}");
+    }
+
+    #[test]
+    fn bursty_arrivals_group_and_hit_offered_load() {
+        let gen = TraceGen::default();
+        let t = gen.bursty_arrivals(gen.sequential(RequestKind::Read, 2000), 80.0, 4, 5);
+        assert_eq!(t.arrivals.len(), 2000);
+        assert!(t.arrivals.windows(2).all(|w| w[0] <= w[1]));
+        // Within each burst of 4, all arrivals share one instant.
+        for g in t.arrivals.chunks(4) {
+            assert!(g.iter().all(|&a| a == g[0]));
+        }
+        let offered = t.offered_mbps().unwrap();
+        assert!((offered - 80.0).abs() / 80.0 < 0.1, "offered={offered}");
+    }
+
+    #[test]
+    fn offered_mbps_none_for_closed_loop_and_degenerate() {
+        let gen = TraceGen::default();
+        assert!(gen.sequential(RequestKind::Read, 8).offered_mbps().is_none());
+        let mut t = gen.sequential(RequestKind::Read, 2);
+        t.arrivals = vec![Ps::ZERO, Ps::ZERO];
+        assert!(t.offered_mbps().is_none());
     }
 }

@@ -82,9 +82,10 @@ pub fn vs_paper(measured: f64, paper: Option<f64>) -> String {
     }
 }
 
-/// One-line summary of a simulation report.
+/// One-line summary of a simulation report. Open-loop runs (those with an
+/// offered load) append the offered MB/s and the latency percentiles.
 pub fn summarize(r: &SimReport) -> String {
-    format!(
+    let mut s = format!(
         "{:<9} {:>3} ch={} way={:<2} {:<5}  {:>8.2} MB/s  {:>6.3} nJ/B  busU={:>5.1}%  sataU={:>5.1}%  {} reqs in {}",
         r.iface,
         r.cell,
@@ -97,7 +98,14 @@ pub fn summarize(r: &SimReport) -> String {
         r.sata_utilization * 100.0,
         r.requests,
         r.sim_time,
-    )
+    );
+    if r.offered_mbps > 0.0 {
+        s.push_str(&format!(
+            "\n  open loop: offered {:.1} MB/s, latency p50/p95/p99 = {:.1}/{:.1}/{:.1} us",
+            r.offered_mbps, r.latency_p50_us, r.latency_p95_us, r.latency_p99_us
+        ));
+    }
+    s
 }
 
 #[cfg(test)]

@@ -88,6 +88,14 @@ impl Prng {
         }
     }
 
+    /// Standard exponential (mean 1) via inverse transform — the
+    /// inter-arrival law of a Poisson process. Scale by the desired mean
+    /// to get arbitrary-rate gaps (see `host::trace::TraceGen`).
+    pub fn next_exponential(&mut self) -> f64 {
+        // next_f64 is in [0, 1), so 1 - u is in (0, 1] and ln() is finite.
+        -(1.0 - self.next_f64()).ln()
+    }
+
     /// Bernoulli with probability `p`.
     pub fn next_bool(&mut self, p: f64) -> bool {
         self.next_f64() < p
@@ -153,6 +161,19 @@ mod tests {
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
         assert!(mean.abs() < 0.02, "mean={mean}");
         assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn exponential_moments_and_support() {
+        let mut p = Prng::new(17);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| p.next_exponential()).collect();
+        assert!(xs.iter().all(|&x| x >= 0.0 && x.is_finite()));
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        // Exponential(1): mean 1, variance 1.
+        assert!((mean - 1.0).abs() < 0.02, "mean={mean}");
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
     }
 
     #[test]

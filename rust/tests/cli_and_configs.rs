@@ -42,6 +42,23 @@ fn cli_pvt_succeeds() {
 }
 
 #[test]
+fn cli_sweep_load_succeeds() {
+    assert_eq!(
+        cli::run(&argv(
+            "sweep-load --requests 20 --points 2 --ways 2 --max-mbps 120 --csv"
+        )),
+        0
+    );
+}
+
+#[test]
+fn cli_sweep_load_rejects_bad_flags() {
+    assert_eq!(cli::run(&argv("sweep-load --arrival uniform")), 1);
+    assert_eq!(cli::run(&argv("sweep-load --ways 0")), 1);
+    assert_eq!(cli::run(&argv("sweep-load --mode scan")), 1);
+}
+
+#[test]
 fn cli_unknown_subcommand_fails() {
     assert_eq!(cli::run(&argv("frobnicate")), 2);
 }

@@ -69,9 +69,7 @@ fn cache_improves_hot_workload() {
     let run = |cache_pages: u32| {
         let mut cfg = base_cfg();
         cfg.cache.capacity_pages = cache_pages;
-        let trace = Trace {
-            requests: hot_requests.clone(),
-        };
+        let trace = Trace::from_requests(hot_requests.clone());
         run_trace(&cfg, &trace).bandwidth_mbps
     };
     let uncached = run(0);
@@ -127,15 +125,13 @@ fn random_reads_preserve_interface_ordering() {
 #[test]
 fn odd_request_sizes() {
     let cfg = base_cfg();
-    let trace = Trace {
-        requests: vec![
-            Request { kind: RequestKind::Write, offset: 0, bytes: 2048 },
-            Request { kind: RequestKind::Write, offset: 2048, bytes: 1 },
-            Request { kind: RequestKind::Write, offset: 4096, bytes: 3000 },
-            Request { kind: RequestKind::Read, offset: 0, bytes: 2048 },
-            Request { kind: RequestKind::Read, offset: 2048, bytes: 6144 },
-        ],
-    };
+    let trace = Trace::from_requests(vec![
+        Request { kind: RequestKind::Write, offset: 0, bytes: 2048 },
+        Request { kind: RequestKind::Write, offset: 2048, bytes: 1 },
+        Request { kind: RequestKind::Write, offset: 4096, bytes: 3000 },
+        Request { kind: RequestKind::Read, offset: 0, bytes: 2048 },
+        Request { kind: RequestKind::Read, offset: 2048, bytes: 6144 },
+    ]);
     let rep = run_trace(&cfg, &trace);
     assert_eq!(rep.requests, 5);
     // bytes=1 still occupies one page; bytes=3000 spans two.

@@ -1,0 +1,122 @@
+//! Open-loop (arrival-driven) workload integration tests: low-load
+//! convergence to the closed-loop QD=1 latency, closed-loop golden
+//! equality after open-loop workspace reuse, and the saturation-knee
+//! ordering the E6 load sweep exists to demonstrate (PROPOSED sustains a
+//! strictly higher offered load than CONV).
+
+use ddrnand::config::SsdConfig;
+use ddrnand::coordinator::campaign::SimWorkspace;
+use ddrnand::coordinator::experiments::knee_mbps;
+use ddrnand::host::trace::{RequestKind, TraceGen};
+use ddrnand::iface::timing::InterfaceKind;
+
+fn cfg(iface: InterfaceKind, ways: u16) -> SsdConfig {
+    SsdConfig {
+        iface,
+        ways,
+        blocks_per_chip: 256,
+        ..SsdConfig::default()
+    }
+}
+
+/// At an offered load far below capacity every request meets an idle
+/// device, so open-loop latency converges to the closed-loop QD=1 latency
+/// (each QD=1 request equally meets an idle device).
+#[test]
+fn low_offered_load_converges_to_qd1_latency() {
+    let gen = TraceGen::default();
+    let mut ws = SimWorkspace::new();
+    // Closed-loop QD=1 reference.
+    let mut c1 = cfg(InterfaceKind::Proposed, 4);
+    c1.queue_depth = 1;
+    let closed = ws.run_trace(&c1, &gen.sequential(RequestKind::Write, 60));
+    // Open loop at 2 MB/s: mean inter-arrival of a 64 KiB request is
+    // ~33 ms, orders of magnitude above its service time.
+    let open_trace = gen.poisson_arrivals(gen.sequential(RequestKind::Write, 60), 2.0, 42);
+    let open = ws.run_trace(&cfg(InterfaceKind::Proposed, 4), &open_trace);
+    let rel = (open.latency_mean_us - closed.latency_mean_us).abs() / closed.latency_mean_us;
+    assert!(
+        rel < 0.05,
+        "open-loop mean {} us must converge to closed QD=1 mean {} us (rel {:.3})",
+        open.latency_mean_us,
+        closed.latency_mean_us,
+        rel
+    );
+    // And the tail collapses onto the median: no queueing at this load.
+    assert!(open.latency_p99_us < open.latency_p50_us * 1.10);
+}
+
+/// Golden guarantee: a workspace dirtied by an open-loop run reproduces
+/// closed-loop results bit-identically (the open-loop machinery leaves no
+/// trace when the arrival track is absent).
+#[test]
+fn closed_loop_bit_identical_after_open_loop_reuse() {
+    let gen = TraceGen::default();
+    let c = cfg(InterfaceKind::Proposed, 4);
+    let closed_trace = gen.sequential(RequestKind::Write, 40);
+    let fresh = SimWorkspace::new().run_trace(&c, &closed_trace);
+    let mut ws = SimWorkspace::new();
+    let open_trace = gen.poisson_arrivals(gen.sequential(RequestKind::Write, 40), 30.0, 7);
+    let _ = ws.run_trace(&c, &open_trace);
+    let reused = ws.run_trace(&c, &closed_trace);
+    assert!(ws.reuses >= 1, "second run must reuse the simulator");
+    assert_eq!(fresh.events, reused.events);
+    assert_eq!(fresh.sim_time, reused.sim_time);
+    assert_eq!(fresh.bandwidth_mbps, reused.bandwidth_mbps);
+    assert_eq!(fresh.latency_mean_us, reused.latency_mean_us);
+    assert_eq!(fresh.latency_p99_us, reused.latency_p99_us);
+    assert_eq!(fresh.pages_programmed, reused.pages_programmed);
+    assert_eq!(fresh.offered_mbps, 0.0);
+    assert_eq!(reused.offered_mbps, 0.0);
+}
+
+/// The acceptance property of the load sweep: achieved throughput is
+/// monotone in offered load, and PROPOSED's saturation knee sits strictly
+/// above CONV's at 4 ways — way interleaving's benefit shown on the load
+/// axis rather than the closed-loop bandwidth axis.
+#[test]
+fn proposed_knee_beats_conv_at_4_ways() {
+    let run_curve = |iface| {
+        let gen = TraceGen::default();
+        let mut ws = SimWorkspace::new();
+        let mut pts = Vec::new();
+        let mut p95s = Vec::new();
+        for i in 1..=6 {
+            let offered = 40.0 * i as f64; // 40..240 MB/s
+            let trace =
+                gen.poisson_arrivals(gen.sequential(RequestKind::Read, 150), offered, 11);
+            let rep = ws.run_trace(&cfg(iface, 4), &trace);
+            pts.push((offered, rep.bandwidth_mbps));
+            p95s.push(rep.latency_p95_us);
+        }
+        // Achieved throughput never decreases as offered load rises
+        // (small tolerance for Poisson sampling noise).
+        for w in pts.windows(2) {
+            assert!(
+                w[1].1 >= w[0].1 * 0.95,
+                "{iface:?}: achieved dropped: {:?} -> {:?}",
+                w[0],
+                w[1]
+            );
+        }
+        // Latency never improves with more load.
+        for w in p95s.windows(2) {
+            assert!(
+                w[1] >= w[0] * 0.90,
+                "{iface:?}: p95 latency dropped under load: {p95s:?}"
+            );
+        }
+        pts
+    };
+    let conv = run_curve(InterfaceKind::Conv);
+    let prop = run_curve(InterfaceKind::Proposed);
+    let (conv_knee, prop_knee) = (knee_mbps(&conv), knee_mbps(&prop));
+    assert!(
+        prop_knee > conv_knee,
+        "PROPOSED must sustain more offered load than CONV: {prop_knee} vs {conv_knee} \
+         (conv curve {conv:?}, prop curve {prop:?})"
+    );
+    // Under heavy overload both achieve their closed-loop ceiling, and
+    // PROPOSED's ceiling is higher (Table 3's shape survives open loop).
+    assert!(prop.last().unwrap().1 > conv.last().unwrap().1);
+}
