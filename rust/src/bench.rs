@@ -146,6 +146,273 @@ impl PerfLog {
     }
 }
 
+/// Summary of a validated perf log.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BenchLogSummary {
+    /// Which bench produced the log.
+    pub bench: String,
+    /// Number of result records.
+    pub results: usize,
+}
+
+/// Validate `text` against the `ddrnand-bench-v1` schema: a JSON object
+/// with `"schema": "ddrnand-bench-v1"`, a string `"bench"`, and a
+/// `"results"` array whose records each carry a string `name`, a string
+/// `metric`, a numeric-or-null `value` and an integer `n >= 1`. Unknown
+/// top-level keys (e.g. `created_unix`, `note`) are allowed. Used by the
+/// CI pipeline (`rust/tests/bench_schema.rs`) so schema drift in the
+/// committed artifact or the writer fails loudly instead of rotting.
+pub fn validate_bench_json(text: &str) -> Result<BenchLogSummary, String> {
+    let value = json::parse(text)?;
+    let top = value
+        .as_object()
+        .ok_or_else(|| "top level must be a JSON object".to_string())?;
+    let schema = top
+        .iter()
+        .find(|(k, _)| k == "schema")
+        .ok_or_else(|| "missing \"schema\" key".to_string())?;
+    match &schema.1 {
+        json::Value::Str(s) if s == "ddrnand-bench-v1" => {}
+        other => return Err(format!("bad schema value: {other:?}")),
+    }
+    let bench = match top.iter().find(|(k, _)| k == "bench") {
+        Some((_, json::Value::Str(s))) => s.clone(),
+        Some((_, other)) => return Err(format!("\"bench\" must be a string, got {other:?}")),
+        None => return Err("missing \"bench\" key".to_string()),
+    };
+    let results = match top.iter().find(|(k, _)| k == "results") {
+        Some((_, json::Value::Array(rs))) => rs,
+        Some((_, other)) => return Err(format!("\"results\" must be an array, got {other:?}")),
+        None => return Err("missing \"results\" key".to_string()),
+    };
+    for (i, r) in results.iter().enumerate() {
+        let rec = r
+            .as_object()
+            .ok_or_else(|| format!("results[{i}] must be an object"))?;
+        let field = |name: &str| {
+            rec.iter()
+                .find(|(k, _)| k == name)
+                .map(|(_, v)| v)
+                .ok_or_else(|| format!("results[{i}] missing \"{name}\""))
+        };
+        if !matches!(field("name")?, json::Value::Str(_)) {
+            return Err(format!("results[{i}].name must be a string"));
+        }
+        if !matches!(field("metric")?, json::Value::Str(_)) {
+            return Err(format!("results[{i}].metric must be a string"));
+        }
+        if !matches!(field("value")?, json::Value::Num(_) | json::Value::Null) {
+            return Err(format!("results[{i}].value must be a number or null"));
+        }
+        match field("n")? {
+            json::Value::Num(n) if *n >= 1.0 && n.fract() == 0.0 => {}
+            other => return Err(format!("results[{i}].n must be an integer >= 1, got {other:?}")),
+        }
+    }
+    Ok(BenchLogSummary {
+        bench,
+        results: results.len(),
+    })
+}
+
+/// Minimal JSON parser (serde is unavailable offline) — just enough to
+/// validate the `ddrnand-bench-v1` schema. Numbers parse as f64; strings
+/// support the escapes `escape_json` emits plus `\uXXXX`.
+mod json {
+    #[derive(Debug, Clone, PartialEq)]
+    pub enum Value {
+        Null,
+        Bool(bool),
+        Num(f64),
+        Str(String),
+        Array(Vec<Value>),
+        /// Key order preserved; duplicate keys kept as-is (first match wins
+        /// in the validator).
+        Object(Vec<(String, Value)>),
+    }
+
+    impl Value {
+        pub fn as_object(&self) -> Option<&[(String, Value)]> {
+            match self {
+                Value::Object(kv) => Some(kv),
+                _ => None,
+            }
+        }
+    }
+
+    pub fn parse(text: &str) -> Result<Value, String> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let v = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            return Err(format!("trailing garbage at byte {pos}"));
+        }
+        Ok(v)
+    }
+
+    fn skip_ws(b: &[u8], pos: &mut usize) {
+        while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+            *pos += 1;
+        }
+    }
+
+    fn expect(b: &[u8], pos: &mut usize, c: u8) -> Result<(), String> {
+        skip_ws(b, pos);
+        if *pos < b.len() && b[*pos] == c {
+            *pos += 1;
+            Ok(())
+        } else {
+            Err(format!("expected {:?} at byte {}", c as char, *pos))
+        }
+    }
+
+    fn parse_value(b: &[u8], pos: &mut usize) -> Result<Value, String> {
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b'{') => parse_object(b, pos),
+            Some(b'[') => parse_array(b, pos),
+            Some(b'"') => Ok(Value::Str(parse_string(b, pos)?)),
+            Some(b't') => parse_lit(b, pos, "true", Value::Bool(true)),
+            Some(b'f') => parse_lit(b, pos, "false", Value::Bool(false)),
+            Some(b'n') => parse_lit(b, pos, "null", Value::Null),
+            Some(_) => parse_number(b, pos),
+            None => Err("unexpected end of input".to_string()),
+        }
+    }
+
+    fn parse_lit(b: &[u8], pos: &mut usize, lit: &str, v: Value) -> Result<Value, String> {
+        if b[*pos..].starts_with(lit.as_bytes()) {
+            *pos += lit.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at byte {}", *pos))
+        }
+    }
+
+    fn parse_number(b: &[u8], pos: &mut usize) -> Result<Value, String> {
+        let start = *pos;
+        while *pos < b.len()
+            && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            *pos += 1;
+        }
+        std::str::from_utf8(&b[start..*pos])
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .map(Value::Num)
+            .ok_or_else(|| format!("bad number at byte {start}"))
+    }
+
+    fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, String> {
+        debug_assert_eq!(b[*pos], b'"');
+        *pos += 1;
+        let mut out = String::new();
+        loop {
+            match b.get(*pos) {
+                None => return Err("unterminated string".to_string()),
+                Some(b'"') => {
+                    *pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    *pos += 1;
+                    match b.get(*pos) {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'u') => {
+                            let hex = b
+                                .get(*pos + 1..*pos + 5)
+                                .and_then(|h| std::str::from_utf8(h).ok())
+                                .ok_or_else(|| "bad \\u escape".to_string())?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| "bad \\u escape".to_string())?;
+                            out.push(
+                                char::from_u32(code)
+                                    .ok_or_else(|| "bad \\u codepoint".to_string())?,
+                            );
+                            *pos += 4;
+                        }
+                        _ => return Err(format!("bad escape at byte {}", *pos)),
+                    }
+                    *pos += 1;
+                }
+                Some(_) => {
+                    // Multi-byte UTF-8 sequences pass through untouched.
+                    let s = &b[*pos..];
+                    let ch_len = match s[0] {
+                        0x00..=0x7F => 1,
+                        0xC0..=0xDF => 2,
+                        0xE0..=0xEF => 3,
+                        _ => 4,
+                    };
+                    let chunk = std::str::from_utf8(&s[..ch_len.min(s.len())])
+                        .map_err(|_| "invalid UTF-8 in string".to_string())?;
+                    out.push_str(chunk);
+                    *pos += chunk.len();
+                }
+            }
+        }
+    }
+
+    fn parse_array(b: &[u8], pos: &mut usize) -> Result<Value, String> {
+        expect(b, pos, b'[')?;
+        let mut items = Vec::new();
+        skip_ws(b, pos);
+        if b.get(*pos) == Some(&b']') {
+            *pos += 1;
+            return Ok(Value::Array(items));
+        }
+        loop {
+            items.push(parse_value(b, pos)?);
+            skip_ws(b, pos);
+            match b.get(*pos) {
+                Some(b',') => *pos += 1,
+                Some(b']') => {
+                    *pos += 1;
+                    return Ok(Value::Array(items));
+                }
+                _ => return Err(format!("expected ',' or ']' at byte {}", *pos)),
+            }
+        }
+    }
+
+    fn parse_object(b: &[u8], pos: &mut usize) -> Result<Value, String> {
+        expect(b, pos, b'{')?;
+        let mut kv = Vec::new();
+        skip_ws(b, pos);
+        if b.get(*pos) == Some(&b'}') {
+            *pos += 1;
+            return Ok(Value::Object(kv));
+        }
+        loop {
+            skip_ws(b, pos);
+            if b.get(*pos) != Some(&b'"') {
+                return Err(format!("expected object key at byte {}", *pos));
+            }
+            let key = parse_string(b, pos)?;
+            expect(b, pos, b':')?;
+            let val = parse_value(b, pos)?;
+            kv.push((key, val));
+            skip_ws(b, pos);
+            match b.get(*pos) {
+                Some(b',') => *pos += 1,
+                Some(b'}') => {
+                    *pos += 1;
+                    return Ok(Value::Object(kv));
+                }
+                _ => return Err(format!("expected ',' or '}}' at byte {}", *pos)),
+            }
+        }
+    }
+}
+
 fn escape_json(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for c in s.chars() {

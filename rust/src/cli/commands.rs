@@ -2,7 +2,7 @@
 
 use crate::analytic;
 use crate::cli::args::Args;
-use crate::config::{ArrivalKind, SsdConfig};
+use crate::config::{ArrivalKind, SsdConfig, SteadyConfig};
 use crate::coordinator::campaign::run_trace;
 use crate::coordinator::experiments as exp;
 use crate::coordinator::pool::ThreadPool;
@@ -153,6 +153,121 @@ pub fn cmd_sweep_load(args: &mut Args) -> Result<()> {
                 match spec.arrival {
                     ArrivalKind::Poisson => "poisson",
                     ArrivalKind::Bursty => "bursty",
+                },
+            ),
+            &cells,
+            csv
+        )
+    );
+    Ok(())
+}
+
+/// E7 — `ddrnand sweep-steady`: preconditioned drives under sustained
+/// random writes, swept over over-provisioning × interface × way count;
+/// prints write amplification and the GC tax on p99 latency per point
+/// (EXPERIMENTS.md §Steady-State).
+pub fn cmd_sweep_steady(args: &mut Args) -> Result<()> {
+    let mut spec = exp::SteadySweepSpec {
+        requests: requests(args)?,
+        ..exp::SteadySweepSpec::default()
+    };
+    let p = pool(args)?;
+    spec.cell = match args.get("cell").as_deref() {
+        None | Some("slc") => CellType::Slc,
+        Some("mlc") => CellType::Mlc,
+        Some(other) => return Err(anyhow!("unknown --cell {other} (slc|mlc)")),
+    };
+    if let Some(w) = args.get("ways") {
+        spec.ways = w
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<u16>()
+                    .map_err(|e| anyhow!("--ways {s:?}: {e}"))
+            })
+            .collect::<Result<Vec<u16>>>()?;
+        if spec.ways.is_empty() || spec.ways.contains(&0) {
+            return Err(anyhow!("--ways needs a comma-separated list of counts >= 1"));
+        }
+    }
+    if let Some(o) = args.get("op") {
+        spec.over_provision = o
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<f64>()
+                    .map_err(|e| anyhow!("--op {s:?}: {e}"))
+            })
+            .collect::<Result<Vec<f64>>>()?;
+        if spec.over_provision.is_empty()
+            || spec
+                .over_provision
+                .iter()
+                .any(|&v| !(v > 0.0 && v < 0.5))
+        {
+            return Err(anyhow!(
+                "--op needs comma-separated over-provisioning fractions in (0, 0.5)"
+            ));
+        }
+    }
+    let offered = args
+        .get_f64("offered-mbps", spec.offered_mbps.unwrap_or(0.0))
+        .map_err(anyhow::Error::msg)?;
+    if offered < 0.0 || !offered.is_finite() {
+        return Err(anyhow!(
+            "--offered-mbps must be >= 0 (0 = closed loop), got {offered}"
+        ));
+    }
+    spec.offered_mbps = if offered > 0.0 { Some(offered) } else { None };
+    spec.arrival = match args.get("arrival").as_deref() {
+        None | Some("poisson") => ArrivalKind::Poisson,
+        Some("bursty") => ArrivalKind::Bursty,
+        Some(other) => return Err(anyhow!("unknown --arrival {other} (poisson|bursty)")),
+    };
+    spec.burst = args
+        .get_usize("burst", spec.burst as usize)
+        .map_err(anyhow::Error::msg)? as u32;
+    if spec.burst == 0 {
+        return Err(anyhow!("--burst must be >= 1"));
+    }
+    spec.blocks_per_chip = args
+        .get_usize("blocks", spec.blocks_per_chip as usize)
+        .map_err(anyhow::Error::msg)? as u32;
+    if spec.blocks_per_chip < 16 {
+        return Err(anyhow!("--blocks must be >= 16 (GC needs room to work)"));
+    }
+    spec.wear_level_spread = args
+        .get_usize("wl-spread", spec.wear_level_spread as usize)
+        .map_err(anyhow::Error::msg)? as u32;
+    // The shared headroom rule config validation enforces for TOML: every
+    // op point must leave GC spare blocks beyond its trigger threshold or
+    // the sweep would live-lock-assert mid-run (the sweep runs the
+    // default tuning).
+    if let Some(&op) = spec.over_provision.iter().find(|&&op| {
+        let steady = SteadyConfig {
+            over_provision: op,
+            ..SteadyConfig::default()
+        };
+        !steady.gc_headroom_ok(spec.blocks_per_chip)
+    }) {
+        return Err(anyhow!(
+            "--op {op} is too small for --blocks {}: GC needs spare blocks beyond \
+             its trigger threshold (raise --blocks or --op)",
+            spec.blocks_per_chip
+        ));
+    }
+    let csv = args.has("csv");
+    let cells = exp::run_steady_state(&spec, &p);
+    println!(
+        "{}",
+        exp::render_steady_sweep(
+            &format!(
+                "E7 — steady-state sweep ({} random write, {}, {}; WAF and GC-attributed p99 vs over-provisioning)",
+                spec.cell.name(),
+                if spec.channels == 1 { "1-channel".to_string() } else { format!("{}-channel", spec.channels) },
+                match spec.offered_mbps {
+                    Some(o) => format!("open loop {o:.1} MB/s offered"),
+                    None => "closed loop".to_string(),
                 },
             ),
             &cells,

@@ -9,6 +9,7 @@
 //! ddrnand energy [...]                E4: Fig. 10 / Table 5
 //! ddrnand paper [...]                 E1–E5 in one go
 //! ddrnand sweep-load [...]            E6: open-loop offered-load sweep
+//! ddrnand sweep-steady [...]          E7: steady-state GC/WAF sweep
 //! ddrnand dse [--sweep-tbyte] [--native]   DSE through the AOT artifact
 //! ddrnand pvt [--margin X]            A3: PVT Monte Carlo ablation
 //! ddrnand simulate --config FILE      one simulation from a TOML config
@@ -41,6 +42,7 @@ pub fn run(argv: &[String]) -> i32 {
         "energy" => commands::cmd_energy(&mut args),
         "paper" => commands::cmd_paper(&mut args),
         "sweep-load" => commands::cmd_sweep_load(&mut args),
+        "sweep-steady" => commands::cmd_sweep_steady(&mut args),
         "dse" => commands::cmd_dse(&mut args),
         "pvt" => commands::cmd_pvt(&mut args),
         "simulate" => commands::cmd_simulate(&mut args),
@@ -77,6 +79,7 @@ SUBCOMMANDS
   energy           E4: energy per byte (Fig. 10 / Table 5)
   paper            E1–E5: all experiments, paper-vs-measured
   sweep-load       E6: open-loop offered-load sweep (latency under load)
+  sweep-steady     E7: steady-state GC sweep (WAF, wear, GC tax on p99)
   dse              design-space exploration via the AOT analytic model
   pvt              A3: PVT Monte Carlo ablation
   simulate         run one simulation from a TOML config
@@ -101,6 +104,16 @@ SWEEP-LOAD FLAGS
   --max-mbps X     top of the offered-load grid (default 320)
   --arrival KIND   arrival process: poisson|bursty (default poisson)
   --burst N        requests per burst for bursty arrivals (default 4)
+
+SWEEP-STEADY FLAGS
+  --cell C         flash cell: slc|mlc (default slc)
+  --ways LIST      comma-separated way counts (default 4,8)
+  --op LIST        over-provisioning fractions in (0,0.5) (default 0.07,0.15,0.28)
+  --offered-mbps X offered write load; 0 = closed loop (default 20)
+  --arrival KIND   arrival process: poisson|bursty (default poisson)
+  --burst N        requests per burst for bursty arrivals (default 4)
+  --blocks N       blocks per chip (default 64)
+  --wl-spread N    chip P/E-spread threshold for wear leveling; 0 = off (default 16)
 "
     .to_string()
 }

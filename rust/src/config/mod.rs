@@ -53,6 +53,83 @@ impl Default for LoadConfig {
     }
 }
 
+/// Steady-state subsystem knobs (`[steady]` in TOML). Disabled by default:
+/// with `enabled = false` every run behaves bit-identically to the
+/// fresh-drive simulator (golden-tested), and the tuning defaults
+/// reproduce the historical FTL constants exactly.
+///
+/// When enabled, the campaign switches to the sustained regime the paper's
+/// fresh-drive tables cannot measure: the FTL is sized by `over_provision`
+/// instead of `utilization`, the drive is preconditioned (logical space
+/// filled, mapping-only, no simulated time), the workload becomes uniform
+/// random over the logical volume so every write invalidates an old page,
+/// and the coordinator feeds the chip's measured P/E spread back into
+/// wear leveling (E7, `ddrnand sweep-steady`, EXPERIMENTS.md
+/// §Steady-State).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SteadyConfig {
+    /// Master switch for the steady-state regime.
+    pub enabled: bool,
+    /// Fraction of physical capacity reserved as GC headroom; the exported
+    /// logical capacity is physical × (1 − over_provision). Only consulted
+    /// when `enabled` (otherwise `utilization` sizes the FTL).
+    pub over_provision: f64,
+    /// GC triggers when a chip's free blocks fall to this threshold (≥ 2:
+    /// relocation overflow headroom).
+    pub gc_threshold_blocks: u32,
+    /// FTL-internal static wear-leveling P/E-spread threshold.
+    pub static_wl_threshold: u32,
+    /// Coordinator-driven wear leveling: after each erase completes, if
+    /// that chip's *measured* P/E spread (`Chip::wear_spread`) exceeds this,
+    /// the FTL is asked to relocate its coldest full block. 0 disables the
+    /// hook (the default — fresh-drive runs stay untouched).
+    pub wear_level_spread: u32,
+    /// Sequentially fill the logical space (mapping only, costless in
+    /// simulated time) before the measured run, so GC reaches steady state
+    /// inside the measured window.
+    pub precondition: bool,
+}
+
+impl Default for SteadyConfig {
+    fn default() -> Self {
+        SteadyConfig {
+            enabled: false,
+            over_provision: 0.07,
+            gc_threshold_blocks: 2,
+            static_wl_threshold: 8,
+            wear_level_spread: 0,
+            precondition: true,
+        }
+    }
+}
+
+impl SteadyConfig {
+    /// The GC headroom rule, shared by config validation, the E7 driver
+    /// and the CLI pre-check (one source of truth): the over-provisioned
+    /// spare must cover the GC trigger threshold plus one relocation
+    /// block, or GC live-locks instead of reclaiming.
+    pub fn gc_headroom_ok(&self, blocks_per_chip: u32) -> bool {
+        blocks_per_chip as f64 * self.over_provision
+            >= (self.gc_threshold_blocks + 1) as f64
+    }
+
+    /// The FTL-facing tuning view of this section. When the section is
+    /// disabled, the historical defaults are returned regardless of the
+    /// other fields — a dormant `[steady]` block (whose tuning values
+    /// validation deliberately does not check) can never perturb
+    /// fresh-drive behaviour (the bit-identity guarantee).
+    pub fn tuning(&self) -> crate::controller::ftl::steady::GcTuning {
+        if self.enabled {
+            crate::controller::ftl::steady::GcTuning {
+                gc_threshold_blocks: self.gc_threshold_blocks,
+                static_wl_threshold: self.static_wl_threshold,
+            }
+        } else {
+            crate::controller::ftl::steady::GcTuning::default()
+        }
+    }
+}
+
 /// Full configuration of one simulated SSD.
 #[derive(Debug, Clone)]
 pub struct SsdConfig {
@@ -88,6 +165,10 @@ pub struct SsdConfig {
     pub seed: u64,
     /// Open-loop workload knobs (closed loop when unset).
     pub load: LoadConfig,
+    /// Steady-state (sustained-load GC/wear-leveling) knobs; disabled by
+    /// default, in which case runs are bit-identical to the fresh-drive
+    /// simulator.
+    pub steady: SteadyConfig,
 }
 
 impl Default for SsdConfig {
@@ -108,6 +189,7 @@ impl Default for SsdConfig {
             program_status_overhead: Ps::us(2),
             seed: 0xDD12_7A5D,
             load: LoadConfig::default(),
+            steady: SteadyConfig::default(),
         }
     }
 }
@@ -151,6 +233,19 @@ impl SsdConfig {
         self.channels as u32 * self.ways as u32
     }
 
+    /// Exported logical capacity in pages for a given physical page count:
+    /// sized by `steady.over_provision` in the steady-state regime, by
+    /// `utilization` otherwise. Shared by simulator construction and the
+    /// sweep-reuse fingerprint so the two can never disagree.
+    pub fn logical_pages(&self, total_pages: u64) -> u64 {
+        let fraction = if self.steady.enabled {
+            1.0 - self.steady.over_provision
+        } else {
+            self.utilization
+        };
+        (total_pages as f64 * fraction) as u64
+    }
+
     /// Validate invariants; returns a list of problems (empty = ok).
     pub fn validate(&self) -> Vec<String> {
         let mut errs = Vec::new();
@@ -179,6 +274,28 @@ impl SsdConfig {
         }
         if self.load.burst == 0 {
             errs.push("load.burst must be >= 1".into());
+        }
+        if self.steady.enabled {
+            if self.ftl == FtlKind::Hybrid {
+                errs.push(
+                    "steady.enabled requires ftl = \"page_map\" (the hybrid FTL's \
+                     log-block reserve fixes its own exported capacity)"
+                        .into(),
+                );
+            }
+            if !(self.steady.over_provision > 0.0 && self.steady.over_provision < 0.5) {
+                errs.push("steady.over_provision must be in (0, 0.5)".into());
+            }
+            if self.steady.gc_threshold_blocks < 2 {
+                errs.push("steady.gc_threshold_blocks must be >= 2 (relocation headroom)".into());
+            }
+            if !self.steady.gc_headroom_ok(self.blocks_per_chip) {
+                errs.push(
+                    "steady.over_provision too small for blocks_per_chip: GC needs spare \
+                     blocks beyond the trigger threshold"
+                        .into(),
+                );
+            }
         }
         errs
     }
@@ -236,6 +353,24 @@ impl SsdConfig {
                     }
                 }
                 "load.burst" => cfg.load.burst = req_u32(key, val)?,
+                "steady.enabled" => {
+                    cfg.steady.enabled =
+                        val.as_bool().ok_or_else(|| format!("{key}: want bool"))?
+                }
+                "steady.over_provision" => cfg.steady.over_provision = req_f64(key, val)?,
+                "steady.gc_threshold_blocks" => {
+                    cfg.steady.gc_threshold_blocks = req_u32(key, val)?
+                }
+                "steady.static_wl_threshold" => {
+                    cfg.steady.static_wl_threshold = req_u32(key, val)?
+                }
+                "steady.wear_level_spread" => {
+                    cfg.steady.wear_level_spread = req_u32(key, val)?
+                }
+                "steady.precondition" => {
+                    cfg.steady.precondition =
+                        val.as_bool().ok_or_else(|| format!("{key}: want bool"))?
+                }
                 "cache.capacity_pages" => cfg.cache.capacity_pages = req_u32(key, val)?,
                 "cache.write_back" => {
                     cfg.cache.write_back =
@@ -335,6 +470,74 @@ burst = 8
         assert!(SsdConfig::from_toml("[load]\noffered_mbps = -3.0").is_err());
         assert!(SsdConfig::from_toml("[load]\nburst = 0").is_err());
         assert!(SsdConfig::from_toml("[load]\narrival = \"uniform\"").is_err());
+    }
+
+    #[test]
+    fn steady_section_parses_and_validates() {
+        let cfg = SsdConfig::from_toml(
+            r#"
+blocks_per_chip = 128
+[steady]
+enabled = true
+over_provision = 0.07
+gc_threshold_blocks = 3
+static_wl_threshold = 6
+wear_level_spread = 16
+precondition = false
+"#,
+        )
+        .unwrap();
+        assert!(cfg.steady.enabled);
+        assert_eq!(cfg.steady.over_provision, 0.07);
+        assert_eq!(cfg.steady.gc_threshold_blocks, 3);
+        assert_eq!(cfg.steady.static_wl_threshold, 6);
+        assert_eq!(cfg.steady.wear_level_spread, 16);
+        assert!(!cfg.steady.precondition);
+        // Disabled by default, and the tuning defaults are the historical
+        // constants (bit-identity anchor).
+        let d = SsdConfig::default();
+        assert!(!d.steady.enabled);
+        assert_eq!(d.steady.tuning().gc_threshold_blocks, 2);
+        assert_eq!(d.steady.tuning().static_wl_threshold, 8);
+        // A dormant section's tuning values must not leak into disabled
+        // runs: tuning() hands back the defaults until enabled.
+        let mut dormant = SsdConfig::default();
+        dormant.steady.gc_threshold_blocks = 0;
+        dormant.steady.static_wl_threshold = 0;
+        assert!(dormant.validate().is_empty(), "dormant tuning not validated");
+        assert_eq!(dormant.steady.tuning().gc_threshold_blocks, 2);
+        assert_eq!(dormant.steady.tuning().static_wl_threshold, 8);
+        dormant.steady.enabled = true;
+        assert!(!dormant.validate().is_empty(), "enabled tuning is validated");
+        // The hybrid FTL sizes its own capacity; steady sizing is rejected.
+        assert!(SsdConfig::from_toml(
+            "ftl = \"hybrid\"\nblocks_per_chip = 128\n[steady]\nenabled = true"
+        )
+        .is_err());
+        // Bad values rejected (only when the section is enabled).
+        assert!(
+            SsdConfig::from_toml("[steady]\nenabled = true\nover_provision = 0.9").is_err()
+        );
+        assert!(SsdConfig::from_toml(
+            "blocks_per_chip = 128\n[steady]\nenabled = true\ngc_threshold_blocks = 1"
+        )
+        .is_err());
+        // 7% of 16 blocks cannot cover threshold+1 spare blocks.
+        assert!(SsdConfig::from_toml(
+            "blocks_per_chip = 16\n[steady]\nenabled = true\nover_provision = 0.07"
+        )
+        .is_err());
+        assert!(SsdConfig::from_toml("[steady]\nover_provision = 0.9").is_ok());
+    }
+
+    #[test]
+    fn logical_pages_follows_regime() {
+        let mut c = SsdConfig::default();
+        c.utilization = 0.9;
+        assert_eq!(c.logical_pages(1000), 900);
+        c.steady.enabled = true;
+        c.steady.over_provision = 0.07;
+        assert_eq!(c.logical_pages(1000), 930);
     }
 
     #[test]

@@ -72,6 +72,13 @@ impl HybridFtl {
         self.merges
     }
 
+    /// Free physical blocks remaining. Merges allocate one block before
+    /// erasing two, so this floor must stay ≥ 1 at every step (the spare
+    /// reserved in `new`); the property tests enforce it.
+    pub fn free_block_count(&self) -> usize {
+        self.free_blocks.len()
+    }
+
     /// ppn of page `page` within physical block `pblock`.
     ///
     /// Physical block b lives on chip (b % chips) as block (b / chips);
@@ -217,6 +224,9 @@ impl Ftl for HybridFtl {
 
     fn geometry(&self) -> &Geometry {
         &self.geom
+    }
+    fn logical_capacity(&self) -> u64 {
+        self.logical_pages()
     }
     fn free_pages(&self) -> u64 {
         self.free_pages

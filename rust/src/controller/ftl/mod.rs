@@ -15,6 +15,7 @@
 
 pub mod hybrid;
 pub mod page_map;
+pub mod steady;
 
 use crate::nand::geometry::Geometry;
 
@@ -63,6 +64,29 @@ pub trait Ftl {
         }
     }
 
+    /// Apply steady-state GC/wear-leveling tuning (the `[steady]` TOML
+    /// section). The default implementation ignores it — mapping schemes
+    /// whose reclamation is demand-driven rather than threshold-driven
+    /// (the hybrid log-block FTL) have nothing to tune. Called on
+    /// construction and after every [`reset`](Ftl::reset), always: with the
+    /// [`steady::GcTuning`] defaults the behaviour is bit-identical to the
+    /// pre-steady-state code.
+    fn set_gc_tuning(&mut self, tuning: steady::GcTuning) {
+        let _ = tuning;
+    }
+
+    /// Coordinator-driven wear leveling: relocate the coldest full block
+    /// of `chip` so it re-enters the free pool, appending the copy-back
+    /// ops to `out`. Called by the coordinator when the chip's *measured*
+    /// P/E spread ([`crate::nand::chip::Chip::wear_spread`]) exceeds the
+    /// `[steady]` limit — the coordinator decides *when*, the FTL decides
+    /// *what*. Returns false when nothing was relocated (no lagging full
+    /// block, or the FTL does not support forced relocation).
+    fn plan_wear_level_into(&mut self, chip: usize, out: &mut Vec<FtlOp>) -> bool {
+        let _ = (chip, out);
+        false
+    }
+
     /// Return to the just-initialized state (empty mapping, all blocks
     /// free, zero counters) without dropping the mapping-table allocations
     /// — used when a sweep worker reuses one simulator across runs.
@@ -70,6 +94,13 @@ pub trait Ftl {
 
     /// Geometry this FTL manages.
     fn geometry(&self) -> &Geometry;
+
+    /// Exported logical capacity in pages — the highest lpn this FTL
+    /// accepts is `logical_capacity() - 1`. For the page-map FTL this is
+    /// the `logical_pages` it was constructed with; the hybrid FTL derives
+    /// it from its own log-block reserve. Preconditioning fills exactly
+    /// this range.
+    fn logical_capacity(&self) -> u64;
 
     /// Number of free (erased, unallocated) pages remaining.
     fn free_pages(&self) -> u64;

@@ -1,0 +1,273 @@
+//! Steady-state block management: the allocation + garbage-collection
+//! layer shared by FTL implementations.
+//!
+//! Fresh-drive runs (the paper's Tables 3–5) never exercise this code:
+//! sequential fills allocate monotonically and produce no garbage. Under
+//! *sustained* load — random rewrites over a full drive — every host write
+//! invalidates an old page, and reclaiming space costs copy-back traffic
+//! (read → program per valid page, then an erase) that competes with host
+//! requests on the same channels and ways. This module concentrates the
+//! per-chip state and the selection policies that determine how much of
+//! that traffic exists:
+//!
+//! * **Greedy GC victim selection** — the full block with the fewest valid
+//!   pages frees the most space per erase (minimizes write amplification
+//!   for a given over-provisioning level).
+//! * **Wear-aware free-block choice** — the lowest-wear free block becomes
+//!   the next active block (dynamic wear leveling).
+//! * **Cold-block relocation** — the coldest (lowest-wear) full block can
+//!   be forcibly recycled (static wear leveling), either on the FTL's own
+//!   threshold or on demand from the coordinator when the *chip's* measured
+//!   P/E spread (`crate::nand::chip::Chip::wear_spread`) exceeds the
+//!   `[steady]` configuration's limit.
+//!
+//! The mapping-table side of GC (which lpn lives where) stays in the FTL
+//! implementations; this layer is policy + per-chip bookkeeping, so both
+//! concerns can evolve independently. Tuning comes from
+//! [`GcTuning`], fed by the `[steady]` TOML section
+//! (`crate::config::SteadyConfig`). With the defaults the behaviour is
+//! bit-identical to the pre-steady-state simulator (golden-tested).
+
+/// Tuning knobs for the steady-state layer. Defaults reproduce the
+/// historical constants exactly, so an FTL tuned with `GcTuning::default()`
+/// behaves bit-identically to the pre-`[steady]` code.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GcTuning {
+    /// GC triggers when a chip's free blocks fall to this threshold. Must
+    /// be ≥ 2: one block of headroom for the relocation overflow while a
+    /// victim is being reclaimed.
+    pub gc_threshold_blocks: u32,
+    /// FTL-internal static wear leveling triggers when a chip's P/E spread
+    /// exceeds this.
+    pub static_wl_threshold: u32,
+}
+
+impl Default for GcTuning {
+    fn default() -> Self {
+        GcTuning {
+            gc_threshold_blocks: 2,
+            static_wl_threshold: 8,
+        }
+    }
+}
+
+/// Per-chip block-allocation state: the free pool, the block being filled,
+/// per-block wear and valid-page counts, and the full-block GC candidate
+/// list. One per chip; owned by the FTL.
+pub struct ChipAllocator {
+    /// Free (erased) blocks, kept unordered; selection scans for min wear.
+    pub free_blocks: Vec<u32>,
+    /// Block currently being filled.
+    pub active_block: u32,
+    /// Next page within the active block.
+    pub next_page: u32,
+    /// FTL-visible erase count per block (wear).
+    pub wear: Vec<u32>,
+    /// Valid-page count per block.
+    pub valid: Vec<u32>,
+    /// Blocks that are completely written (candidates for GC).
+    pub full_blocks: Vec<u32>,
+}
+
+impl ChipAllocator {
+    /// Fresh allocator over `blocks` erased blocks; block 0 is active.
+    pub fn new(blocks: u32) -> ChipAllocator {
+        ChipAllocator {
+            free_blocks: (1..blocks).collect(),
+            active_block: 0,
+            next_page: 0,
+            wear: vec![0; blocks as usize],
+            valid: vec![0; blocks as usize],
+            full_blocks: Vec::new(),
+        }
+    }
+
+    /// Return to the just-initialized state without dropping allocations
+    /// (sweep-worker reuse).
+    pub fn reset(&mut self, blocks: u32) {
+        self.free_blocks.clear();
+        self.free_blocks.extend(1..blocks);
+        self.active_block = 0;
+        self.next_page = 0;
+        self.wear.fill(0);
+        self.valid.fill(0);
+        self.full_blocks.clear();
+    }
+
+    /// Free (erased) block count.
+    pub fn free_len(&self) -> u32 {
+        self.free_blocks.len() as u32
+    }
+
+    /// Does any full block hold at least one invalid page? Erasing
+    /// fully-valid blocks just churns, so GC only runs when this is true.
+    pub fn reclaimable(&self, pages_per_block: u32) -> bool {
+        self.full_blocks
+            .iter()
+            .any(|&b| self.valid[b as usize] < pages_per_block)
+    }
+
+    /// Greedy GC victim: the full block with the fewest valid pages,
+    /// removed from the full-block list. `None` when no block is full.
+    pub fn take_gc_victim(&mut self) -> Option<u32> {
+        let (idx, _) = self
+            .full_blocks
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &b)| self.valid[b as usize])?;
+        Some(self.full_blocks.swap_remove(idx))
+    }
+
+    /// Wear-leveling victim: the coldest (lowest-wear) full block, removed
+    /// from the full-block list — but only if its wear lags the chip
+    /// maximum by *more than* `threshold` (0 = any strictly-lagging block).
+    /// Keeps cold data from pinning low-wear blocks forever while never
+    /// churning a block already at max wear.
+    pub fn take_wl_victim(&mut self, threshold: u32) -> Option<u32> {
+        let max = self.wear.iter().copied().max().unwrap_or(0);
+        let (idx, &vblock) = self
+            .full_blocks
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &b)| self.wear[b as usize])?;
+        if max - self.wear[vblock as usize] <= threshold {
+            return None;
+        }
+        self.full_blocks.swap_remove(idx);
+        Some(vblock)
+    }
+
+    /// Allocate the next `(block, page)` slot, rolling the active block
+    /// onto the lowest-wear free block when it fills (dynamic wear
+    /// leveling). The caller is responsible for triggering GC *before*
+    /// allocating (see the FTL implementations); running completely dry
+    /// means over-provisioning was exhausted and panics.
+    pub fn alloc_page(&mut self, pages_per_block: u32) -> (u32, u32) {
+        let block = self.active_block;
+        let page = self.next_page;
+        self.next_page += 1;
+        if self.next_page == pages_per_block {
+            self.full_blocks.push(block);
+            let (idx, _) = self
+                .free_blocks
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, &b)| self.wear[b as usize])
+                .expect("out of free blocks: over-provisioning exhausted");
+            self.active_block = self.free_blocks.swap_remove(idx);
+            self.next_page = 0;
+        }
+        (block, page)
+    }
+
+    /// Record a completed erase: the block's wear ticks and it returns to
+    /// the free pool.
+    ///
+    /// (FTL-visible wear only; the *measured* spread the `[steady]`
+    /// wear-leveling hook consumes comes from the chip model,
+    /// `crate::nand::chip::Chip::wear_spread`.)
+    pub fn note_erased(&mut self, block: u32) {
+        self.wear[block as usize] += 1;
+        self.free_blocks.push(block);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_allocator_state() {
+        let a = ChipAllocator::new(8);
+        assert_eq!(a.active_block, 0);
+        assert_eq!(a.free_len(), 7);
+        assert!(!a.reclaimable(16));
+        assert!(a.wear.iter().all(|&w| w == 0));
+    }
+
+    #[test]
+    fn alloc_rolls_to_lowest_wear_free_block() {
+        let mut a = ChipAllocator::new(4);
+        a.wear[1] = 5;
+        a.wear[2] = 1;
+        a.wear[3] = 3;
+        // Fill block 0 (2 pages/block): the roll must pick block 2.
+        assert_eq!(a.alloc_page(2), (0, 0));
+        assert_eq!(a.alloc_page(2), (0, 1));
+        assert_eq!(a.active_block, 2);
+        assert_eq!(a.full_blocks, vec![0]);
+        assert_eq!(a.free_len(), 2);
+    }
+
+    #[test]
+    fn greedy_victim_has_fewest_valid_pages() {
+        let mut a = ChipAllocator::new(4);
+        a.full_blocks = vec![1, 2, 3];
+        a.valid[1] = 9;
+        a.valid[2] = 3;
+        a.valid[3] = 7;
+        assert_eq!(a.take_gc_victim(), Some(2));
+        assert_eq!(a.full_blocks.len(), 2);
+        // No full blocks left -> no victim.
+        a.full_blocks.clear();
+        assert_eq!(a.take_gc_victim(), None);
+    }
+
+    #[test]
+    fn reclaimable_requires_garbage() {
+        let mut a = ChipAllocator::new(4);
+        a.full_blocks = vec![1];
+        a.valid[1] = 16;
+        assert!(!a.reclaimable(16), "fully-valid block is not reclaimable");
+        a.valid[1] = 15;
+        assert!(a.reclaimable(16));
+    }
+
+    #[test]
+    fn wl_victim_respects_threshold_and_skips_max_wear() {
+        let mut a = ChipAllocator::new(4);
+        a.full_blocks = vec![1, 2];
+        a.wear[0] = 10; // chip max
+        a.wear[1] = 2;
+        a.wear[2] = 9;
+        assert_eq!(a.take_wl_victim(8), None, "spread 8 not exceeded");
+        assert_eq!(a.take_wl_victim(7), Some(1));
+        // Remaining full block lags max by 1: only threshold 0 takes it.
+        assert_eq!(a.take_wl_victim(1), None);
+        assert_eq!(a.take_wl_victim(0), Some(2));
+        // Everything at max wear: even threshold 0 refuses (no churn).
+        a.full_blocks = vec![3];
+        a.wear[3] = 10;
+        assert_eq!(a.take_wl_victim(0), None);
+    }
+
+    #[test]
+    fn erase_ticks_wear_and_frees() {
+        let mut a = ChipAllocator::new(4);
+        let before = a.free_len();
+        a.note_erased(3);
+        assert_eq!(a.wear[3], 1);
+        assert_eq!(a.free_len(), before + 1);
+    }
+
+    #[test]
+    fn reset_restores_factory_state() {
+        let mut a = ChipAllocator::new(4);
+        a.alloc_page(2);
+        a.alloc_page(2);
+        a.note_erased(0);
+        a.reset(4);
+        assert_eq!(a.active_block, 0);
+        assert_eq!(a.next_page, 0);
+        assert_eq!(a.free_len(), 3);
+        assert_eq!(a.wear, vec![0; 4]);
+        assert!(a.full_blocks.is_empty());
+    }
+
+    #[test]
+    fn default_tuning_matches_historical_constants() {
+        let t = GcTuning::default();
+        assert_eq!(t.gc_threshold_blocks, 2);
+        assert_eq!(t.static_wl_threshold, 8);
+    }
+}

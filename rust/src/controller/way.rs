@@ -35,8 +35,9 @@ pub enum JobPhase {
 /// One page-granular operation bound for a specific chip.
 #[derive(Debug, Clone, Copy)]
 pub struct PageJob {
-    /// Host request this job belongs to (u64::MAX for FTL-internal jobs
-    /// such as GC relocations).
+    /// Host request this job belongs to. Values at the top of the range
+    /// mark internal traffic (see `coordinator::ssd`: `INTERNAL_REQ` cache
+    /// flushes, `WL_REQ` wear leveling, `GC_REQ` GC copy-back).
     pub req: u64,
     pub kind: PageJobKind,
     pub block: u32,

@@ -51,6 +51,28 @@ pub struct SimReport {
     pub events: u64,
     /// Host wall-clock of the simulation itself (for perf tracking).
     pub wall_ms: f64,
+    /// Steady-state accounting (EXPERIMENTS.md §Steady-State). Write
+    /// amplification factor: total NAND programs / host-attributed programs
+    /// (cache write-back flushes are deferred host data and count as host;
+    /// exactly 1.0 on fresh-drive runs).
+    pub waf: f64,
+    /// GC/wear-leveling copy-back reads (subset of `pages_read`).
+    pub gc_pages_read: u64,
+    /// GC/merge copy-back programs (subset of `pages_programmed`).
+    pub gc_pages_programmed: u64,
+    /// Coordinator wear-leveling programs (subset of `pages_programmed`).
+    pub wl_pages_programmed: u64,
+    /// Host requests whose write plan forced GC work.
+    pub gc_requests: u64,
+    /// p99 latency (µs) over GC-hit requests (NaN when none occurred) and
+    /// over the remaining, clean requests — the GC-attributed tail
+    /// inflation pair.
+    pub latency_p99_gc_us: f64,
+    pub latency_p99_clean_us: f64,
+    /// Largest measured per-chip P/E spread at end of run.
+    pub wear_spread: u32,
+    /// Fraction of NAND array energy spent on GC/WL copy-back programs.
+    pub gc_energy_share: f64,
 }
 
 /// Run `cfg` over an explicit trace (one-shot; sweeps should prefer a
@@ -72,6 +94,11 @@ fn report_from(
     let (p50, p95, p99) = match Summary::from_samples(&sim.latency_samples) {
         Some(s) => (s.median, s.p95, s.p99),
         None => (f64::NAN, f64::NAN, f64::NAN),
+    };
+    let p99_of = |samples: &[f64]| {
+        Summary::from_samples(samples)
+            .map(|s| s.p99)
+            .unwrap_or(f64::NAN)
     };
     SimReport {
         iface: sim.cfg.iface.name(),
@@ -97,6 +124,15 @@ fn report_from(
         sim_time: sim.finished_at(),
         events: result.events,
         wall_ms: wall0.elapsed().as_secs_f64() * 1e3,
+        waf: sim.waf(),
+        gc_pages_read: sim.counters.gc_pages_read,
+        gc_pages_programmed: sim.counters.gc_pages_programmed,
+        wl_pages_programmed: sim.counters.wl_pages_programmed,
+        gc_requests: sim.counters.gc_requests,
+        latency_p99_gc_us: p99_of(&sim.gc_latency_samples),
+        latency_p99_clean_us: p99_of(&sim.clean_latency_samples),
+        wear_spread: sim.max_wear_spread(),
+        gc_energy_share: sim.energy.gc_share(),
     }
 }
 
@@ -152,6 +188,9 @@ impl SimWorkspace {
         }
         let sim = self.sim.as_mut().expect("just placed");
         sim.set_arrivals(&trace.arrivals);
+        if cfg.steady.enabled && cfg.steady.precondition {
+            sim.precondition_fill();
+        }
         if trace.requests.iter().any(|r| r.kind == RequestKind::Read) {
             sim.prefill_for_reads();
         }
@@ -182,13 +221,18 @@ impl Campaign {
         }
     }
 
+    /// Physical page count implied by the config's geometry (shared by the
+    /// clamping and the steady trace-volume arithmetic so the two can
+    /// never disagree).
+    fn physical_pages(&self) -> u64 {
+        let nand = self.cfg.nand_timing();
+        self.cfg.chips() as u64 * self.cfg.blocks_per_chip as u64 * nand.pages_per_block as u64
+    }
+
     /// Requests that fit in 80% of logical capacity.
     fn clamped_requests(&self) -> usize {
         let nand = self.cfg.nand_timing();
-        let physical = self.cfg.chips() as u64
-            * self.cfg.blocks_per_chip as u64
-            * nand.pages_per_block as u64
-            * nand.page_bytes as u64;
+        let physical = self.physical_pages() * nand.page_bytes as u64;
         let logical = (physical as f64 * self.cfg.utilization * 0.8) as u64;
         let max_reqs = (logical / (64 * 1024)) as usize;
         self.requests.min(max_reqs.max(1))
@@ -202,11 +246,23 @@ impl Campaign {
     /// Generate the workload and run inside a reusable worker workspace.
     /// When the config's `[load]` section sets an offered load, the trace
     /// is stamped with the corresponding arrival track and the run is
-    /// open loop (EXPERIMENTS.md §Load).
+    /// open loop (EXPERIMENTS.md §Load). When the `[steady]` section is
+    /// enabled, the workload switches from the paper's fresh-drive
+    /// sequential pattern to uniform-random requests over the full logical
+    /// volume — with the preconditioning fill, every write invalidates an
+    /// old page and GC runs in its sustained regime (§Steady-State); the
+    /// request count is not clamped, since wrap-around rewrites are the
+    /// point.
     pub fn run_in(&self, ws: &mut SimWorkspace) -> SimReport {
-        let n = self.clamped_requests();
         let gen = TraceGen::default();
-        let mut trace = gen.sequential(self.mode, n);
+        let mut trace = if self.cfg.steady.enabled {
+            let nand = self.cfg.nand_timing();
+            let volume = self.cfg.logical_pages(self.physical_pages())
+                * nand.page_bytes as u64;
+            gen.random(self.mode, self.requests, volume, self.cfg.seed)
+        } else {
+            gen.sequential(self.mode, self.clamped_requests())
+        };
         if let Some(offered) = self.cfg.load.offered_mbps {
             trace = match self.cfg.load.arrival {
                 ArrivalKind::Poisson => gen.poisson_arrivals(trace, offered, self.cfg.seed),
@@ -278,6 +334,31 @@ mod tests {
         // Bursts queue behind each other: tail latency exceeds Poisson's
         // at the same (light) offered load.
         assert!(r2.latency_p99_us > r.latency_p50_us);
+    }
+
+    /// The `[steady]` section turns a campaign into a preconditioned
+    /// sustained-random-write run end to end: WAF climbs above 1 and the
+    /// GC columns populate.
+    #[test]
+    fn steady_campaign_reports_amplification() {
+        let mut c = cfg();
+        c.blocks_per_chip = 64;
+        c.ways = 2;
+        c.steady.enabled = true;
+        c.steady.over_provision = 0.07;
+        let r = Campaign::new(c, RequestKind::Write, 150).run();
+        assert_eq!(r.requests, 150, "steady campaigns are not clamped");
+        assert!(r.waf > 1.0, "waf={}", r.waf);
+        assert!(r.gc_pages_programmed > 0);
+        assert!(r.blocks_erased > 0);
+        assert!(r.gc_requests > 0);
+        assert!(r.latency_p99_gc_us.is_finite());
+        assert!(r.gc_energy_share > 0.0 && r.gc_energy_share < 1.0);
+        // A fresh-drive campaign of the same shape stays amplification-free.
+        let clean = Campaign::new(cfg(), RequestKind::Write, 20).run();
+        assert_eq!(clean.waf, 1.0);
+        assert_eq!(clean.gc_pages_programmed, 0);
+        assert!(clean.latency_p99_gc_us.is_nan());
     }
 
     #[test]

@@ -1,5 +1,6 @@
-//! The paper's experiments as reusable drivers — shared by the CLI
-//! (`ddrnand paper`, `sweep-ways`, …) and the bench targets
+//! The experiments as reusable drivers (E1–E5 from the paper, E6 open-loop
+//! load, E7 steady-state) — shared by the CLI (`ddrnand paper`,
+//! `sweep-ways`, `sweep-load`, `sweep-steady`, …) and the bench targets
 //! (`cargo bench --bench bench_fig8_table3`, …).
 //!
 //! Each driver runs the DES over the same grid as the paper's table and
@@ -347,6 +348,174 @@ pub fn render_load_sweep(title: &str, cells: &[LoadCell], csv: bool) -> String {
     out
 }
 
+/// Specification of the E7 steady-state sweep (`ddrnand sweep-steady`):
+/// preconditioned drives under sustained uniform-random writes, swept over
+/// over-provisioning × interface × way count. Measures the axis neither the
+/// fresh-drive tables nor the load sweep can: **write amplification and the
+/// GC tax on tail latency** (EXPERIMENTS.md §Steady-State).
+#[derive(Debug, Clone)]
+pub struct SteadySweepSpec {
+    pub cell: CellType,
+    pub channels: u16,
+    /// Way counts to sweep (each × all three interfaces).
+    pub ways: Vec<u16>,
+    /// Over-provisioning fractions to sweep (logical = physical × (1−op)).
+    pub over_provision: Vec<f64>,
+    /// Sustained random-write requests per point (not clamped; wrap-around
+    /// rewrites are the point).
+    pub requests: usize,
+    /// Offered write load in MB/s driving the open-loop arrival track;
+    /// `None` = closed loop (queue-depth driven).
+    pub offered_mbps: Option<f64>,
+    pub arrival: ArrivalKind,
+    pub burst: u32,
+    /// Blocks per chip — small enough that GC reaches its sustained regime
+    /// within `requests`.
+    pub blocks_per_chip: u32,
+    /// Coordinator wear-leveling P/E-spread threshold (0 = off).
+    pub wear_level_spread: u32,
+    pub seed: u64,
+}
+
+impl Default for SteadySweepSpec {
+    fn default() -> Self {
+        SteadySweepSpec {
+            cell: CellType::Slc,
+            channels: 1,
+            ways: vec![4, 8],
+            over_provision: vec![0.07, 0.15, 0.28],
+            requests: DEFAULT_REQUESTS,
+            // Below the fresh-drive write ceiling of every 4-way config,
+            // but above what a GC-taxed CONV drive sustains at ~7% OP —
+            // the regime where the interfaces separate on the p99 axis.
+            offered_mbps: Some(20.0),
+            arrival: ArrivalKind::Poisson,
+            burst: 4,
+            blocks_per_chip: 64,
+            wear_level_spread: 16,
+            seed: 0xDD12_7A5D,
+        }
+    }
+}
+
+/// One measured point of the E7 steady-state sweep.
+#[derive(Debug, Clone)]
+pub struct SteadyCell {
+    pub iface: InterfaceKind,
+    pub ways: u16,
+    pub over_provision: f64,
+    pub report: SimReport,
+}
+
+/// E7 — steady-state sweep: over-provisioning × interface × way count under
+/// sustained random writes on a preconditioned drive.
+pub fn run_steady_state(spec: &SteadySweepSpec, pool: &ThreadPool) -> Vec<SteadyCell> {
+    assert!(!spec.ways.is_empty(), "need at least one way count");
+    assert!(
+        !spec.over_provision.is_empty(),
+        "need at least one over-provisioning point"
+    );
+    let mut jobs = Vec::new();
+    let mut meta = Vec::new();
+    for iface in InterfaceKind::ALL.iter() {
+        for &ways in &spec.ways {
+            for &op in &spec.over_provision {
+                assert!(
+                    op > 0.0 && op < 0.5,
+                    "over-provisioning fraction {op} out of (0, 0.5)"
+                );
+                let mut c = cfg(*iface, spec.cell, spec.channels, ways);
+                c.blocks_per_chip = spec.blocks_per_chip;
+                c.steady.enabled = true;
+                c.steady.over_provision = op;
+                // The shared headroom rule config validation enforces for
+                // TOML: fail loudly here, not with a live-lock assert
+                // mid-sweep.
+                assert!(
+                    c.steady.gc_headroom_ok(spec.blocks_per_chip),
+                    "over-provisioning {op} too small for {} blocks/chip: \
+                     GC needs spare blocks beyond the trigger threshold",
+                    spec.blocks_per_chip
+                );
+                c.steady.wear_level_spread = spec.wear_level_spread;
+                c.seed = spec.seed;
+                if let Some(offered) = spec.offered_mbps {
+                    c.load.offered_mbps = Some(offered);
+                    c.load.arrival = spec.arrival;
+                    c.load.burst = spec.burst;
+                }
+                let requests = spec.requests;
+                meta.push((*iface, ways, op));
+                jobs.push(move |ws: &mut SimWorkspace| {
+                    Campaign::new(c, RequestKind::Write, requests).run_in(ws)
+                });
+            }
+        }
+    }
+    let reports = pool.run_all_with(jobs, SimWorkspace::new);
+    meta.into_iter()
+        .zip(reports)
+        .map(|((iface, ways, over_provision), report)| SteadyCell {
+            iface,
+            ways,
+            over_provision,
+            report,
+        })
+        .collect()
+}
+
+/// Render the steady-state sweep as a table plus a per-configuration GC-tax
+/// summary. In CSV mode only the machine-readable table is emitted.
+pub fn render_steady_sweep(title: &str, cells: &[SteadyCell], csv: bool) -> String {
+    let mut t = Table::new(vec![
+        "iface", "ways", "op", "waf", "achieved", "p99_us", "p99_gc_us", "p99_clean_us",
+        "erases", "spread", "gc_e_pct",
+    ]);
+    for c in cells {
+        t.row(vec![
+            c.iface.name().to_string(),
+            c.ways.to_string(),
+            format!("{:.2}", c.over_provision),
+            format!("{:.3}", c.report.waf),
+            format!("{:.2}", c.report.bandwidth_mbps),
+            format!("{:.1}", c.report.latency_p99_us),
+            format!("{:.1}", c.report.latency_p99_gc_us),
+            format!("{:.1}", c.report.latency_p99_clean_us),
+            c.report.blocks_erased.to_string(),
+            c.report.wear_spread.to_string(),
+            format!("{:.1}", c.report.gc_energy_share * 100.0),
+        ]);
+    }
+    if csv {
+        return t.to_csv();
+    }
+    let mut out = format!("{title}\n\n{}\n", t.render());
+    let mut seen: Vec<(InterfaceKind, u16)> = Vec::new();
+    for c in cells {
+        if !seen.contains(&(c.iface, c.ways)) {
+            seen.push((c.iface, c.ways));
+        }
+    }
+    out.push_str("GC tax across the over-provisioning grid (first -> last op point):\n");
+    for (iface, ways) in seen {
+        let pts: Vec<&SteadyCell> = cells
+            .iter()
+            .filter(|c| c.iface == iface && c.ways == ways)
+            .collect();
+        let (first, last) = (pts.first().expect("seen implies cells"), pts.last().unwrap());
+        out.push_str(&format!(
+            "  {:<9} x{:<2} way: WAF {:.3} -> {:.3}, p99 {:.1} -> {:.1} us\n",
+            iface.name(),
+            ways,
+            first.report.waf,
+            last.report.waf,
+            first.report.latency_p99_us,
+            last.report.latency_p99_us,
+        ));
+    }
+    out
+}
+
 /// E5 — §6 headline: min/max PROPOSED/CONV ratios from Table 3 cells.
 pub fn headline(cells: &[Cell]) -> String {
     let mut out = String::from("E5 / §6 headline — PROPOSED/CONV ratio ranges (paper: SLC read 1.65–2.76x, write 1.09–2.45x; MLC read 1.64–2.66x, write 1.05–1.76x)\n\n");
@@ -448,6 +617,45 @@ mod tests {
         assert!(rendered.contains("PROPOSED"));
         let csv = render_load_sweep("t", &cells, true);
         assert!(csv.contains("iface,ways,offered"));
+    }
+
+    #[test]
+    fn steady_sweep_grid_shape_and_rendering() {
+        let pool = ThreadPool::new(0);
+        let spec = SteadySweepSpec {
+            ways: vec![2],
+            over_provision: vec![0.07, 0.25],
+            requests: 120,
+            blocks_per_chip: 64,
+            offered_mbps: None, // closed loop keeps the unit test fast
+            ..SteadySweepSpec::default()
+        };
+        let cells = run_steady_state(&spec, &pool);
+        assert_eq!(cells.len(), 3 * 1 * 2); // 3 ifaces x 1 way count x 2 op points
+        for c in &cells {
+            assert!(c.report.bandwidth_mbps > 0.0);
+            assert!(c.report.waf >= 1.0, "waf={}", c.report.waf);
+            assert!(c.report.blocks_erased > 0, "steady runs must GC");
+        }
+        // More over-provisioning -> less amplification (same iface/ways).
+        for iface in InterfaceKind::ALL.iter() {
+            let find = |op: f64| {
+                cells
+                    .iter()
+                    .find(|c| c.iface == *iface && (c.over_provision - op).abs() < 1e-9)
+                    .map(|c| c.report.waf)
+                    .unwrap()
+            };
+            assert!(
+                find(0.07) >= find(0.25),
+                "{iface:?}: WAF must not grow with over-provisioning"
+            );
+        }
+        let rendered = render_steady_sweep("t", &cells, false);
+        assert!(rendered.contains("GC tax"));
+        assert!(rendered.contains("PROPOSED"));
+        let csv = render_steady_sweep("t", &cells, true);
+        assert!(csv.contains("iface,ways,op,waf"));
     }
 
     #[test]

@@ -47,8 +47,19 @@ use crate::sim::{Engine, Model, RunResult, Scheduler};
 use crate::util::stats::Welford;
 use crate::util::time::{mbps, Ps};
 
-/// Marker for FTL-internal jobs (GC, merges, cache flushes).
+/// Marker for cache write-back eviction flushes: internal *dispatch*, but
+/// the payload is deferred host data, so these programs count on the host
+/// side of the write-amplification ratio.
 pub const INTERNAL_REQ: u64 = u64::MAX;
+
+/// Marker for coordinator-driven wear-leveling copy-back jobs (counted as
+/// amplification, separately from GC).
+pub const WL_REQ: u64 = u64::MAX - 1;
+
+/// Marker for GC/merge copy-back jobs — the background ops of a write
+/// plan (counted as amplification). Any `req >= GC_REQ` is internal
+/// traffic and never completes a host request.
+pub const GC_REQ: u64 = u64::MAX - 2;
 
 /// Simulation events.
 #[derive(Debug, Clone, Copy)]
@@ -96,6 +107,10 @@ struct ReqState {
     pages_done: u32,
     chunks_done: u32,
     issued_at: Ps,
+    /// True if any of this request's write plans forced GC/merge work —
+    /// its copy-back ops are queued ahead of the host program on the same
+    /// way, so the request pays the GC stall (steady-state accounting).
+    gc_hit: bool,
 }
 
 /// Aggregate simulation counters.
@@ -108,6 +123,19 @@ pub struct SimCounters {
     pub blocks_erased: u64,
     pub internal_pages: u64,
     pub cache_hits: u64,
+    /// Copy-back reads for GC/wear-leveling relocation (subset of
+    /// `pages_read`).
+    pub gc_pages_read: u64,
+    /// GC/merge copy-back programs (subset of `pages_programmed`) — the
+    /// write-amplification numerator beyond host traffic. Cache-flush
+    /// programs are internal dispatch but deferred *host* data, so they
+    /// are excluded here.
+    pub gc_pages_programmed: u64,
+    /// Coordinator-driven wear-leveling programs (subset of
+    /// `pages_programmed`, disjoint from `gc_pages_programmed`).
+    pub wl_pages_programmed: u64,
+    /// Host requests whose write plan forced GC/merge work.
+    pub gc_requests: u64,
 }
 
 /// The DES model for one SSD + workload.
@@ -140,6 +168,12 @@ pub struct SsdSim {
     /// material for the p50/p95/p99 columns of the load sweep (`report`,
     /// EXPERIMENTS.md §Load).
     pub latency_samples: Vec<f64>,
+    /// Latency samples (µs) of requests whose write plan forced GC work /
+    /// of all other requests — the split behind the GC-attributed p99
+    /// inflation column (EXPERIMENTS.md §Steady-State). Fresh-drive runs
+    /// leave the GC vector empty.
+    pub gc_latency_samples: Vec<f64>,
+    pub clean_latency_samples: Vec<f64>,
     pub power: PowerModel,
     pub energy: EnergyMeter,
     finished_at: Ps,
@@ -168,11 +202,12 @@ impl SsdSim {
                 )
             })
             .collect();
-        let logical_pages = (geom.total_pages() as f64 * cfg.utilization) as u64;
-        let ftl: Box<dyn Ftl> = match cfg.ftl {
+        let logical_pages = cfg.logical_pages(geom.total_pages());
+        let mut ftl: Box<dyn Ftl> = match cfg.ftl {
             FtlKind::PageMap => Box::new(PageMapFtl::new(geom, logical_pages)),
             FtlKind::Hybrid => Box::new(HybridFtl::new(geom, 8)),
         };
+        ftl.set_gc_tuning(cfg.steady.tuning());
         let power = PowerModel::for_interface(cfg.iface);
         let reqs = (0..trace.len()).map(|_| None).collect();
         SsdSim {
@@ -191,6 +226,8 @@ impl SsdSim {
             counters: SimCounters::default(),
             latency: Welford::new(),
             latency_samples: Vec::new(),
+            gc_latency_samples: Vec::new(),
+            clean_latency_samples: Vec::new(),
             power,
             energy: EnergyMeter::default(),
             finished_at: Ps::ZERO,
@@ -221,6 +258,57 @@ impl SsdSim {
                 let _ = self.ftl.plan_write(lpn);
             }
         }
+    }
+
+    /// Precondition the drive for steady-state measurement: sequentially
+    /// fill the entire exported logical space, mapping-only and costless in
+    /// simulated time (like [`prefill_for_reads`](Self::prefill_for_reads)).
+    /// Every subsequent host write then invalidates an old page, so GC
+    /// reaches its sustained regime inside the measured window instead of
+    /// after a multi-pass warm-up.
+    pub fn precondition_fill(&mut self) {
+        // The FTL's own exported capacity, not the config arithmetic: the
+        // hybrid FTL reserves log blocks out of its range (config
+        // validation rejects steady sizing for it, but a direct caller
+        // must not overrun either). Equal to `cfg.logical_pages` for the
+        // page-map FTL.
+        let logical = self.ftl.logical_capacity();
+        debug_assert!(self.ftl_ops.is_empty());
+        for lpn in 0..logical {
+            // A first-touch sequential fill produces no background ops
+            // (nothing to reclaim); any that appear are mapping-side
+            // bookkeeping already applied, with no simulated cost.
+            self.ftl.plan_write_into(lpn, &mut self.ftl_ops);
+            self.ftl_ops.clear();
+        }
+    }
+
+    /// Write amplification factor: total NAND programs over host-attributed
+    /// programs. Cache write-back flushes carry deferred host data, so they
+    /// count on the host side; only GC/wear-leveling copy-back amplifies.
+    /// 1.0 for runs with no copy-back traffic (and for read-only runs,
+    /// which program nothing).
+    pub fn waf(&self) -> f64 {
+        let total = self.counters.pages_programmed;
+        let internal =
+            self.counters.gc_pages_programmed + self.counters.wl_pages_programmed;
+        let host = total - internal;
+        if host == 0 {
+            1.0
+        } else {
+            total as f64 / host as f64
+        }
+    }
+
+    /// Largest measured per-chip P/E spread ([`Chip::wear_spread`]) across
+    /// the array at end of run.
+    pub fn max_wear_spread(&self) -> u32 {
+        self.channels
+            .iter()
+            .flat_map(|c| c.ways.iter())
+            .map(|w| w.chip.wear_spread())
+            .max()
+            .unwrap_or(0)
     }
 
     /// Logical pages spanned by a request.
@@ -263,11 +351,21 @@ impl SsdSim {
     fn enqueue_write_plan(&mut self, lpn: u64, req: u64) {
         self.ftl_ops.clear();
         let target = self.ftl.plan_write_into(lpn, &mut self.ftl_ops);
+        // GC-stall attribution: a host request whose plan carries
+        // background ops waits behind them on the same way.
+        if req < GC_REQ && !self.ftl_ops.is_empty() {
+            if let Some(st) = self.reqs[req as usize].as_mut() {
+                if !st.gc_hit {
+                    st.gc_hit = true;
+                    self.counters.gc_requests += 1;
+                }
+            }
+        }
         // Index loop: enqueue_ftl_op needs `&mut self` (ops are Copy).
         let mut i = 0;
         while i < self.ftl_ops.len() {
             let op = self.ftl_ops[i];
-            let (ch, _) = self.enqueue_ftl_op(op, INTERNAL_REQ);
+            let (ch, _) = self.enqueue_ftl_op(op, GC_REQ);
             self.kick_list.push(ch);
             i += 1;
         }
@@ -369,6 +467,11 @@ impl SsdSim {
         let lat_us = (sched.now() - st.issued_at).as_us_f64();
         self.latency.push(lat_us);
         self.latency_samples.push(lat_us);
+        if st.gc_hit {
+            self.gc_latency_samples.push(lat_us);
+        } else {
+            self.clean_latency_samples.push(lat_us);
+        }
         self.finished_at = sched.now();
         // Open-loop admission is arrival-driven; a completion-time Admit
         // would be a guaranteed no-op event on the hot path.
@@ -468,8 +571,11 @@ impl SsdSim {
                     .take()
                     .expect("data-out from idle way");
                 self.counters.pages_read += 1;
-                if job.req == INTERNAL_REQ {
+                if job.req >= GC_REQ {
                     self.counters.internal_pages += 1;
+                    if job.req != INTERNAL_REQ {
+                        self.counters.gc_pages_read += 1;
+                    }
                 } else {
                     self.send_read_chunk(job.req, sched);
                 }
@@ -484,20 +590,68 @@ impl SsdSim {
                     PageJobKind::Program => {
                         self.counters.pages_programmed += 1;
                         self.energy.add_nand_program(&self.power.clone(), 1);
-                        if job.req == INTERNAL_REQ {
+                        if job.req >= GC_REQ {
                             self.counters.internal_pages += 1;
+                            // Cache-flush programs (INTERNAL_REQ) carry
+                            // deferred host data: internal dispatch, host
+                            // side of the amplification split.
+                            if job.req == GC_REQ {
+                                self.counters.gc_pages_programmed += 1;
+                                self.energy.add_gc_program(&self.power.clone(), 1);
+                            } else if job.req == WL_REQ {
+                                self.counters.wl_pages_programmed += 1;
+                                self.energy.add_gc_program(&self.power.clone(), 1);
+                            }
                         } else {
                             self.page_programmed(job.req, sched);
                         }
                     }
                     PageJobKind::Erase => {
                         self.counters.blocks_erased += 1;
+                        self.maybe_wear_level(ch, way, sched);
                     }
                     PageJobKind::Read => unreachable!("reads have no status phase"),
                 }
             }
         }
         self.kick_channel(ch, sched);
+    }
+
+    /// Steady-state wear leveling, driven by measured chip state: after an
+    /// erase completes on (ch, way), if that chip's P/E spread
+    /// ([`Chip::wear_spread`]) exceeds the `[steady]` limit, ask the FTL to
+    /// relocate its coldest full block. The copy-back ops enter the DES as
+    /// real [`WL_REQ`] page jobs, so leveling contends with host traffic on
+    /// the same channel and way. The hook only runs when the `[steady]`
+    /// section is enabled *and* the threshold is nonzero — fresh-drive runs
+    /// take the early return and stay bit-identical.
+    fn maybe_wear_level(&mut self, ch: u16, way: u16, sched: &mut Scheduler<Ev>) {
+        let threshold = self.cfg.steady.wear_level_spread;
+        if !self.cfg.steady.enabled || threshold == 0 {
+            return;
+        }
+        let spread = self.channels[ch as usize].ways[way as usize]
+            .chip
+            .wear_spread();
+        if spread <= threshold {
+            return;
+        }
+        // Chip index in FTL order: ppn striping maps chip k to channel
+        // (k % channels), way (k / channels).
+        let chip = way as usize * self.cfg.channels as usize + ch as usize;
+        self.ftl_ops.clear();
+        if !self.ftl.plan_wear_level_into(chip, &mut self.ftl_ops) {
+            return;
+        }
+        debug_assert!(self.kick_list.is_empty());
+        let mut i = 0;
+        while i < self.ftl_ops.len() {
+            let op = self.ftl_ops[i];
+            let (c, _) = self.enqueue_ftl_op(op, WL_REQ);
+            self.kick_list.push(c);
+            i += 1;
+        }
+        self.kick_touched(sched);
     }
 
     fn on_chip_done(&mut self, ch: u16, way: u16, sched: &mut Scheduler<Ev>) {
@@ -555,6 +709,7 @@ impl SsdSim {
                 pages_done: 0,
                 chunks_done: 0,
                 issued_at: sched.now(),
+                gc_hit: false,
             },
         );
         match r.kind {
@@ -631,7 +786,7 @@ impl SsdSim {
             pages_per_block: nand.pages_per_block,
             page_bytes: nand.page_bytes,
         };
-        let logical_pages = (geom.total_pages() as f64 * cfg.utilization) as u64;
+        let logical_pages = cfg.logical_pages(geom.total_pages());
         (
             cfg.channels,
             cfg.ways,
@@ -663,6 +818,7 @@ impl SsdSim {
         self.bus_ctx.fill(None);
         self.sata.reset(cfg.sata);
         self.ftl.reset();
+        self.ftl.set_gc_tuning(cfg.steady.tuning());
         self.cache.reset(cfg.cache);
         self.trace.clear();
         self.trace.extend_from_slice(trace);
@@ -676,6 +832,8 @@ impl SsdSim {
         self.counters = SimCounters::default();
         self.latency = Welford::new();
         self.latency_samples.clear();
+        self.gc_latency_samples.clear();
+        self.clean_latency_samples.clear();
         self.power = PowerModel::for_interface(cfg.iface);
         self.energy = EnergyMeter::default();
         self.finished_at = Ps::ZERO;
@@ -1001,6 +1159,95 @@ mod tests {
         assert_eq!(sim.latency.mean(), fresh.latency.mean());
     }
 
+    /// Fresh-drive sequential fills never amplify: WAF is exactly 1 and no
+    /// internal program traffic exists.
+    #[test]
+    fn fresh_sequential_fill_has_unit_waf() {
+        let mut sim = SsdSim::new(small_cfg(InterfaceKind::Proposed, 2), write_trace(10));
+        sim.run();
+        assert_eq!(sim.waf(), 1.0);
+        assert_eq!(sim.counters.gc_pages_programmed, 0);
+        assert_eq!(sim.counters.wl_pages_programmed, 0);
+        assert_eq!(sim.counters.gc_requests, 0);
+        assert!(sim.gc_latency_samples.is_empty());
+        assert_eq!(sim.clean_latency_samples.len(), 10);
+    }
+
+    /// Steady-state regime: preconditioned drive + rewrites at low
+    /// over-provisioning force GC copy-back; WAF rises above 1 and the
+    /// GC-hit requests are attributed.
+    #[test]
+    fn steady_rewrites_amplify_and_attribute_gc() {
+        let mut cfg = small_cfg(InterfaceKind::Proposed, 2);
+        cfg.blocks_per_chip = 64;
+        cfg.steady.enabled = true;
+        cfg.steady.over_provision = 0.07;
+        // Rewrite the start of the volume repeatedly after a full fill.
+        let mut trace = Vec::new();
+        for round in 0..6u64 {
+            for i in 0..20u64 {
+                trace.push(Request {
+                    kind: RequestKind::Write,
+                    offset: ((round * 7 + i) % 24) * 65536,
+                    bytes: 65536,
+                });
+            }
+        }
+        let n = trace.len() as u64;
+        let mut sim = SsdSim::new(cfg, trace);
+        sim.precondition_fill();
+        sim.run();
+        assert_eq!(sim.counters.requests_done, n);
+        assert!(sim.waf() > 1.0, "waf={}", sim.waf());
+        assert!(sim.counters.gc_pages_programmed > 0);
+        assert!(sim.counters.gc_pages_read > 0);
+        assert!(sim.counters.blocks_erased > 0);
+        assert!(sim.counters.gc_requests > 0);
+        assert_eq!(
+            sim.gc_latency_samples.len() + sim.clean_latency_samples.len(),
+            sim.latency_samples.len()
+        );
+        assert!(!sim.gc_latency_samples.is_empty());
+    }
+
+    /// The coordinator wear-leveling hook consumes `Chip::wear_spread`: with
+    /// a hot/cold split that pins cold blocks, enabling the hook strictly
+    /// reduces the measured end-of-run spread (and emits WL_REQ traffic).
+    #[test]
+    fn wear_level_hook_bounds_measured_chip_spread() {
+        let run = |wl_spread: u32| {
+            let mut cfg = small_cfg(InterfaceKind::Proposed, 1);
+            cfg.blocks_per_chip = 64;
+            cfg.steady.enabled = true;
+            cfg.steady.over_provision = 0.1;
+            // Isolate the coordinator hook from the FTL-internal leveler.
+            cfg.steady.static_wl_threshold = u32::MAX;
+            cfg.steady.wear_level_spread = wl_spread;
+            let mut trace = Vec::new();
+            for _ in 0..40 {
+                for i in 0..8u64 {
+                    trace.push(Request {
+                        kind: RequestKind::Write,
+                        offset: i * 65536, // hot 512 KiB; the fill stays cold
+                        bytes: 65536,
+                    });
+                }
+            }
+            let mut sim = SsdSim::new(cfg, trace);
+            sim.precondition_fill();
+            sim.run();
+            (sim.max_wear_spread(), sim.counters.wl_pages_programmed)
+        };
+        let (spread_off, wl_off) = run(0);
+        let (spread_on, wl_on) = run(4);
+        assert_eq!(wl_off, 0, "disabled hook must emit no WL traffic");
+        assert!(wl_on > 0, "enabled hook must relocate cold blocks");
+        assert!(
+            spread_on < spread_off,
+            "wear leveling must shrink the spread: {spread_on} vs {spread_off}"
+        );
+    }
+
     #[test]
     fn cache_absorbs_rewrites() {
         let mut cfg = small_cfg(InterfaceKind::Conv, 1);
@@ -1015,5 +1262,26 @@ mod tests {
         // nothing is flushed.
         assert_eq!(sim.counters.pages_programmed, 0);
         assert_eq!(sim.counters.requests_done, 2);
+    }
+
+    /// Cache write-back flushes are deferred host data: a cached run that
+    /// does flush to NAND still reports zero GC counters and WAF 1.0
+    /// (flush programs land on the host side of the amplification split).
+    #[test]
+    fn cache_flushes_are_host_attributed_not_gc() {
+        let mut cfg = small_cfg(InterfaceKind::Conv, 1);
+        // Tiny cache over a larger footprint: every new write evicts a
+        // dirty page, so flush traffic definitely reaches NAND.
+        cfg.cache.capacity_pages = 16;
+        let mut sim = SsdSim::new(cfg, write_trace(8));
+        sim.run();
+        assert!(
+            sim.counters.internal_pages > 0,
+            "the tiny cache must have flushed evictions to NAND"
+        );
+        assert_eq!(sim.counters.gc_pages_programmed, 0);
+        assert_eq!(sim.counters.wl_pages_programmed, 0);
+        assert_eq!(sim.waf(), 1.0);
+        assert_eq!(sim.energy.gc_share(), 0.0);
     }
 }

@@ -47,6 +47,10 @@ impl PowerModel {
 pub struct EnergyMeter {
     pub controller_nj: f64,
     pub nand_nj: f64,
+    /// Subset of `nand_nj` spent on GC/wear-leveling copy-back programs —
+    /// the energy face of write amplification (steady-state accounting;
+    /// zero on fresh-drive runs).
+    pub gc_nj: f64,
     pub bytes: u64,
 }
 
@@ -63,6 +67,24 @@ impl EnergyMeter {
 
     pub fn add_nand_read(&mut self, model: &PowerModel, pages: u64) {
         self.nand_nj += model.nand_read_nj_per_page * pages as f64;
+    }
+
+    /// Attribute `pages` already-counted programs to GC/wear-leveling
+    /// copy-back. Call *in addition to*
+    /// [`add_nand_program`](Self::add_nand_program): this splits the
+    /// already-metered energy, it does not add more.
+    pub fn add_gc_program(&mut self, model: &PowerModel, pages: u64) {
+        self.gc_nj += model.nand_prog_nj_per_page * pages as f64;
+    }
+
+    /// Fraction of NAND array energy spent on GC/WL copy-back programs
+    /// (0 when no NAND energy was spent).
+    pub fn gc_share(&self) -> f64 {
+        if self.nand_nj == 0.0 {
+            0.0
+        } else {
+            self.gc_nj / self.nand_nj
+        }
     }
 
     pub fn add_bytes(&mut self, bytes: u64) {
@@ -131,6 +153,20 @@ mod tests {
         m.add_nand_program(&model, 10);
         m.add_nand_read(&model, 10);
         assert!((m.nand_nj - 430.0).abs() < 1e-9);
+    }
+
+    /// GC attribution splits already-counted program energy; the share is
+    /// gc programs over all NAND energy and never exceeds 1.
+    #[test]
+    fn gc_share_splits_program_energy() {
+        let model = PowerModel::for_interface(InterfaceKind::Conv);
+        let mut m = EnergyMeter::default();
+        assert_eq!(m.gc_share(), 0.0);
+        m.add_nand_program(&model, 10); // 4 of which are GC copy-back
+        m.add_gc_program(&model, 4);
+        assert!((m.nand_nj - 330.0).abs() < 1e-9, "split must not add");
+        assert!((m.gc_share() - 0.4).abs() < 1e-12, "share={}", m.gc_share());
+        assert!(m.gc_share() <= 1.0);
     }
 
     #[test]

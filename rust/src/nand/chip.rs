@@ -153,10 +153,20 @@ impl Chip {
     }
 
     /// Wear spread: max - min P/E cycles (wear leveling aims to keep small).
+    /// Single pass: the steady-state coordinator consults this after every
+    /// completed erase, so it sits on the sustained-write hot path.
     pub fn wear_spread(&self) -> u32 {
-        let max = self.pe_cycles.iter().copied().max().unwrap_or(0);
-        let min = self.pe_cycles.iter().copied().min().unwrap_or(0);
-        max - min
+        let mut min = u32::MAX;
+        let mut max = 0u32;
+        for &w in &self.pe_cycles {
+            min = min.min(w);
+            max = max.max(w);
+        }
+        if min == u32::MAX {
+            0
+        } else {
+            max - min
+        }
     }
 }
 

@@ -21,6 +21,13 @@ where
     for case in 0..cases {
         let input = gen(&mut rng);
         if let Err(reason) = prop(&input) {
+            // Surface the reproduction seed immediately, before shrinking:
+            // if shrinking itself panics or stalls, the CI log still holds
+            // everything needed to reproduce the failure.
+            eprintln!(
+                "property '{name}' failed at case {case}; reproduce with seed {seed} \
+                 (shrinking now...)"
+            );
             // Greedy shrink: first failing smaller candidate, repeat.
             let mut minimal = input.clone();
             let mut why = reason;

@@ -105,6 +105,28 @@ pub fn summarize(r: &SimReport) -> String {
             r.offered_mbps, r.latency_p50_us, r.latency_p95_us, r.latency_p99_us
         ));
     }
+    if r.gc_pages_programmed > 0 || r.wl_pages_programmed > 0 {
+        // The gc/clean p99 pair only exists when some host request's own
+        // plan carried GC work (cache-flush- or WL-only amplification
+        // leaves the GC-hit population empty).
+        let p99_pair = if r.gc_requests > 0 {
+            format!("{:.1}/{:.1}", r.latency_p99_gc_us, r.latency_p99_clean_us)
+        } else {
+            "n/a".to_string()
+        };
+        s.push_str(&format!(
+            "\n  steady state: WAF {:.3}, copy-back {} reads / {} programs (+{} wear-level), \
+             {} GC-hit reqs, p99 gc/clean = {} us, wear spread {}, gc energy {:.1}%",
+            r.waf,
+            r.gc_pages_read,
+            r.gc_pages_programmed,
+            r.wl_pages_programmed,
+            r.gc_requests,
+            p99_pair,
+            r.wear_spread,
+            r.gc_energy_share * 100.0
+        ));
+    }
     s
 }
 

@@ -545,6 +545,68 @@ mod tests {
         }
     }
 
+    /// Randomized oracle over the *open-loop arrival* shape (PR 2's
+    /// `Ev::Arrive` chain, which postdates the original oracle): one
+    /// far-future arrival is pending at a time — popping it schedules a
+    /// burst of near-term "service" events plus the next arrival at an
+    /// exponential (Poisson) gap, and service events chain short
+    /// follow-ups (the BusDone → ChipDone pattern). Arrival gaps span many
+    /// bucket windows, so pushes constantly land in the overflow tier
+    /// while same-instant burst members exercise FIFO ties; the calendar
+    /// must match the heap reference exactly throughout.
+    #[test]
+    fn matches_heap_reference_on_open_loop_arrival_traces() {
+        const ARRIVAL_TAG: u32 = 1 << 31;
+        for seed in 0..12u64 {
+            let mut rng = Prng::new(0x09E2_A221 + seed);
+            // Narrow buckets force the multi-window/overflow machinery.
+            let mut cal: EventQueue<u32> =
+                EventQueue::with_bucket_ps(1 + (seed as i64 % 7) * 431);
+            let mut heap: HeapEventQueue<u32> = HeapEventQueue::new();
+            let mean_gap_ps = 50_000.0 + seed as f64 * 400_000.0; // 50 ns – 4.5 µs
+            let push = |cal: &mut EventQueue<u32>,
+                        heap: &mut HeapEventQueue<u32>,
+                        at: Ps,
+                        ev: u32| {
+                cal.push(at, ev);
+                heap.push(at, ev);
+            };
+            let mut id = 0u32;
+            let mut arrivals_left = 300u32;
+            push(&mut cal, &mut heap, Ps::ZERO, ARRIVAL_TAG);
+            loop {
+                let expect = heap.pop();
+                let got = cal.pop();
+                assert_eq!(got, expect, "seed {seed}");
+                assert_eq!(cal.len(), heap.len(), "seed {seed}");
+                assert_eq!(cal.peek_time(), heap.peek_time(), "seed {seed}");
+                let Some((now, ev)) = got else { break };
+                if ev & ARRIVAL_TAG != 0 {
+                    // An arrival admits a burst of service events "now"
+                    // (same-instant FIFO ties) and near-now.
+                    for _ in 0..1 + rng.next_bounded(4) {
+                        let delay = Ps::ps(rng.next_bounded(3_000) as i64);
+                        push(&mut cal, &mut heap, now + delay, id);
+                        id += 1;
+                    }
+                    // Chain the next arrival at an exponential gap.
+                    if arrivals_left > 0 {
+                        arrivals_left -= 1;
+                        let gap = (mean_gap_ps * rng.next_exponential()).round() as i64;
+                        push(&mut cal, &mut heap, now + Ps::ps(gap), ARRIVAL_TAG | id);
+                        id += 1;
+                    }
+                } else if rng.next_bool(0.6) && id < ARRIVAL_TAG {
+                    // Service follow-up (bus phase -> array completion).
+                    let delay = Ps::ps(1 + rng.next_bounded(40_000) as i64);
+                    push(&mut cal, &mut heap, now + delay, id);
+                    id += 1;
+                }
+            }
+            assert!(cal.is_empty() && heap.is_empty(), "seed {seed}");
+        }
+    }
+
     /// The heap reference itself honours FIFO ties (oracle sanity).
     #[test]
     fn heap_reference_fifo_on_ties() {

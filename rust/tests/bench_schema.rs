@@ -1,0 +1,97 @@
+//! The BENCH_engine.json pipeline: the committed artifact at the repo root
+//! and every freshly generated perf log must conform to the
+//! `ddrnand-bench-v1` schema, so drift between the writer
+//! (`src/bench.rs::PerfLog`), the CI bench job and downstream consumers
+//! fails loudly instead of rotting.
+//!
+//! CI runs this suite twice: once in the normal test step (validates the
+//! committed file), and once right after `cargo bench --bench bench_engine`
+//! with `BENCH_REQUIRE_RESULTS=1`, which additionally demands a non-empty
+//! results array — i.e. the bench actually recorded real numbers.
+
+use ddrnand::bench::{validate_bench_json, PerfLog};
+
+fn repo_root_log() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_engine.json")
+}
+
+#[test]
+fn committed_bench_log_is_schema_valid() {
+    let path = repo_root_log();
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+    let summary = validate_bench_json(&text)
+        .unwrap_or_else(|e| panic!("{}: schema drift: {e}", path.display()));
+    assert_eq!(summary.bench, "bench_engine");
+    if std::env::var_os("BENCH_REQUIRE_RESULTS").is_some() {
+        assert!(
+            summary.results > 0,
+            "{}: bench ran but recorded no results — writer/pipeline drift",
+            path.display()
+        );
+    }
+}
+
+/// The writer and the validator agree: whatever `PerfLog` emits validates,
+/// including escapes and non-finite values.
+#[test]
+fn generated_log_round_trips_through_validator() {
+    let mut log = PerfLog::new("bench_engine");
+    log.push("event_queue_100k/calendar", "ms_per_iter_mean", 1.25, 20);
+    log.push("speedup \"quoted\"\n", "ratio", 1.7, 1);
+    log.push("nan_case", "ms", f64::NAN, 3);
+    let summary = validate_bench_json(&log.to_json()).expect("writer output must validate");
+    assert_eq!(summary.results, 3);
+    // The empty log (a fresh checkout before any bench run) validates too.
+    let empty = PerfLog::new("bench_engine");
+    assert_eq!(validate_bench_json(&empty.to_json()).unwrap().results, 0);
+}
+
+#[test]
+fn validator_rejects_drifted_logs() {
+    // Missing schema key.
+    assert!(validate_bench_json(r#"{"bench": "x", "results": []}"#).is_err());
+    // Wrong schema version.
+    assert!(validate_bench_json(
+        r#"{"schema": "ddrnand-bench-v2", "bench": "x", "results": []}"#
+    )
+    .is_err());
+    // results not an array.
+    assert!(validate_bench_json(
+        r#"{"schema": "ddrnand-bench-v1", "bench": "x", "results": {}}"#
+    )
+    .is_err());
+    // Record missing a required field.
+    assert!(validate_bench_json(
+        r#"{"schema": "ddrnand-bench-v1", "bench": "x",
+            "results": [{"name": "a", "metric": "ms", "value": 1}]}"#
+    )
+    .is_err());
+    // n must be a positive integer.
+    assert!(validate_bench_json(
+        r#"{"schema": "ddrnand-bench-v1", "bench": "x",
+            "results": [{"name": "a", "metric": "ms", "value": 1, "n": 0}]}"#
+    )
+    .is_err());
+    assert!(validate_bench_json(
+        r#"{"schema": "ddrnand-bench-v1", "bench": "x",
+            "results": [{"name": "a", "metric": "ms", "value": 1, "n": 2.5}]}"#
+    )
+    .is_err());
+    // value must be numeric or null.
+    assert!(validate_bench_json(
+        r#"{"schema": "ddrnand-bench-v1", "bench": "x",
+            "results": [{"name": "a", "metric": "ms", "value": "fast", "n": 1}]}"#
+    )
+    .is_err());
+    // Not JSON at all / trailing garbage.
+    assert!(validate_bench_json("schema: yaml").is_err());
+    assert!(validate_bench_json(r#"{"schema": "ddrnand-bench-v1"} extra"#).is_err());
+    // Unknown top-level keys are tolerated (created_unix, note).
+    assert!(validate_bench_json(
+        r#"{"schema": "ddrnand-bench-v1", "bench": "x", "created_unix": 0,
+            "note": "free text", "results": [
+              {"name": "a", "metric": "ms", "value": null, "n": 1}]}"#
+    )
+    .is_ok());
+}

@@ -52,6 +52,27 @@ fn cli_sweep_load_succeeds() {
 }
 
 #[test]
+fn cli_sweep_steady_succeeds() {
+    assert_eq!(
+        cli::run(&argv(
+            "sweep-steady --requests 40 --ways 2 --op 0.07,0.25 --offered-mbps 0 --csv"
+        )),
+        0
+    );
+}
+
+#[test]
+fn cli_sweep_steady_rejects_bad_flags() {
+    assert_eq!(cli::run(&argv("sweep-steady --op 0.9")), 1);
+    assert_eq!(cli::run(&argv("sweep-steady --ways 0")), 1);
+    assert_eq!(cli::run(&argv("sweep-steady --blocks 4")), 1);
+    assert_eq!(cli::run(&argv("sweep-steady --arrival uniform")), 1);
+    // 20 blocks x 7% OP = 1.4 spare blocks < the GC floor of 3: the CLI
+    // must refuse cleanly instead of live-lock-asserting mid-sweep.
+    assert_eq!(cli::run(&argv("sweep-steady --blocks 20 --op 0.07")), 1);
+}
+
+#[test]
 fn cli_sweep_load_rejects_bad_flags() {
     assert_eq!(cli::run(&argv("sweep-load --arrival uniform")), 1);
     assert_eq!(cli::run(&argv("sweep-load --ways 0")), 1);

@@ -1,0 +1,228 @@
+//! Steady-state subsystem integration tests (E7): write amplification and
+//! GC-attributed tail inflation under sustained random writes at low
+//! over-provisioning, the PROPOSED-shrinks-the-GC-tax headline, the golden
+//! guarantee that the steady machinery leaves no trace when disabled, and
+//! determinism of the whole pipeline across thread-pool sizes and
+//! workspace reuse.
+
+use ddrnand::config::SsdConfig;
+use ddrnand::coordinator::campaign::{Campaign, SimReport, SimWorkspace};
+use ddrnand::coordinator::experiments::{run_steady_state, SteadySweepSpec};
+use ddrnand::coordinator::pool::ThreadPool;
+use ddrnand::host::trace::RequestKind;
+use ddrnand::iface::timing::InterfaceKind;
+
+fn steady_cfg(iface: InterfaceKind, ways: u16, over_provision: f64) -> SsdConfig {
+    let mut cfg = SsdConfig {
+        iface,
+        channels: 1,
+        ways,
+        blocks_per_chip: 64,
+        ..SsdConfig::default()
+    };
+    cfg.steady.enabled = true;
+    cfg.steady.over_provision = over_provision;
+    cfg.steady.wear_level_spread = 16;
+    cfg
+}
+
+/// The E7 acceptance property: a sustained-random-write run at ~7%
+/// over-provisioning reports WAF > 1.0 with GC-attributed p99 inflation
+/// (GC-hit requests' p99 strictly above the clean requests' p99).
+#[test]
+fn e7_at_7pct_op_reports_waf_and_gc_p99_inflation() {
+    let cfg = steady_cfg(InterfaceKind::Proposed, 2, 0.07);
+    // Physical 1x2x64x64x2KiB = 16 MiB, logical ~14.9 MiB (~238 requests'
+    // worth): 500 requests rewrite the volume ~2.1x past preconditioning.
+    let r = Campaign::new(cfg, RequestKind::Write, 500).run();
+    assert_eq!(r.requests, 500);
+    assert!(r.waf > 1.0, "7% OP must amplify: waf={}", r.waf);
+    assert!(r.waf < 20.0, "waf={} is implausible", r.waf);
+    assert!(r.gc_pages_programmed > 0 && r.gc_pages_read > 0);
+    assert!(r.blocks_erased > 0);
+    assert!(r.gc_requests > 0, "some host writes must hit GC in-plan");
+    assert!(
+        r.latency_p99_gc_us > r.latency_p99_clean_us,
+        "GC-hit requests must pay a visible p99 tax: gc {} vs clean {} us",
+        r.latency_p99_gc_us,
+        r.latency_p99_clean_us
+    );
+    assert!(r.gc_energy_share > 0.0 && r.gc_energy_share < 1.0);
+    // More over-provisioning buys the amplification back down.
+    let roomy = Campaign::new(steady_cfg(InterfaceKind::Proposed, 2, 0.30), RequestKind::Write, 500)
+        .run();
+    assert!(
+        roomy.waf < r.waf,
+        "30% OP must amplify less than 7%: {} vs {}",
+        roomy.waf,
+        r.waf
+    );
+}
+
+/// The E7 headline: under the PR 2 open-loop load machinery, PROPOSED's
+/// doubled transfer rate shrinks the GC tax on p99 latency — at an offered
+/// load a GC-taxed CONV drive cannot sustain, PROPOSED still can.
+#[test]
+fn proposed_shrinks_gc_tax_on_p99_under_offered_load() {
+    let run = |iface| {
+        let mut cfg = steady_cfg(iface, 4, 0.07);
+        cfg.load.offered_mbps = Some(20.0);
+        cfg.seed = 0xE7;
+        Campaign::new(cfg, RequestKind::Write, 250).run()
+    };
+    let conv = run(InterfaceKind::Conv);
+    let prop = run(InterfaceKind::Proposed);
+    assert!(conv.waf > 1.0 && prop.waf > 1.0, "both drives must be in GC");
+    assert!(
+        prop.latency_p99_us < conv.latency_p99_us,
+        "PROPOSED must shrink the GC tax on p99: {} vs {} us",
+        prop.latency_p99_us,
+        conv.latency_p99_us
+    );
+    assert!(
+        prop.bandwidth_mbps > conv.bandwidth_mbps,
+        "and sustain more of the offered load: {} vs {}",
+        prop.bandwidth_mbps,
+        conv.bandwidth_mbps
+    );
+}
+
+/// Golden guarantee: with `[steady]` disabled nothing changes — a
+/// workspace dirtied by a steady-state run (same geometry fingerprint, so
+/// the simulator is *reused*, not rebuilt) reproduces the fresh-drive
+/// closed-loop results bit-identically, GC columns included.
+#[test]
+fn gc_disabled_run_bit_identical_after_steady_reuse() {
+    // over_provision 0.10 and utilization 0.90 size the FTL identically,
+    // so the reuse fingerprint matches across the regime switch.
+    let mut plain = SsdConfig {
+        channels: 1,
+        ways: 2,
+        blocks_per_chip: 64,
+        ..SsdConfig::default()
+    };
+    plain.utilization = 0.90;
+    let steady = {
+        let mut c = steady_cfg(InterfaceKind::Proposed, 2, 0.10);
+        c.load.offered_mbps = Some(15.0);
+        c
+    };
+    let fresh = Campaign::new(plain.clone(), RequestKind::Write, 60).run();
+    let mut ws = SimWorkspace::new();
+    let dirty = Campaign::new(steady, RequestKind::Write, 200).run_in(&mut ws);
+    assert!(dirty.waf > 1.0, "the dirtying run must actually GC");
+    let reused = Campaign::new(plain, RequestKind::Write, 60).run_in(&mut ws);
+    assert!(ws.reuses >= 1, "the regime switch must reuse the simulator");
+    assert_eq!(fresh.events, reused.events);
+    assert_eq!(fresh.sim_time, reused.sim_time);
+    assert_eq!(fresh.bandwidth_mbps, reused.bandwidth_mbps);
+    assert_eq!(fresh.energy_nj_per_byte, reused.energy_nj_per_byte);
+    assert_eq!(fresh.latency_mean_us, reused.latency_mean_us);
+    assert_eq!(fresh.latency_p99_us, reused.latency_p99_us);
+    assert_eq!(fresh.pages_programmed, reused.pages_programmed);
+    // The steady columns must read fresh-drive: no amplification residue.
+    assert_eq!(reused.waf, 1.0);
+    assert_eq!(reused.gc_pages_programmed, 0);
+    assert_eq!(reused.wl_pages_programmed, 0);
+    assert_eq!(reused.gc_requests, 0);
+    assert_eq!(reused.wear_spread, 0);
+    assert!(reused.latency_p99_gc_us.is_nan());
+}
+
+/// Exact fingerprint of everything a steady-state report measures.
+fn fingerprint(r: &SimReport) -> (u64, i64, u64, u64, u64, u64, u32, [u64; 7]) {
+    (
+        r.events,
+        r.sim_time.as_ps(),
+        r.pages_programmed,
+        r.gc_pages_programmed,
+        r.wl_pages_programmed,
+        r.gc_requests,
+        r.wear_spread,
+        [
+            r.bandwidth_mbps.to_bits(),
+            r.energy_nj_per_byte.to_bits(),
+            r.waf.to_bits(),
+            r.latency_p50_us.to_bits(),
+            r.latency_p99_us.to_bits(),
+            r.latency_p99_gc_us.to_bits(),
+            r.latency_p99_clean_us.to_bits(),
+        ],
+    )
+}
+
+/// Determinism (same seed -> identical `SimReport`) across worker-pool
+/// sizes 1/2/8 and after `SimWorkspace` reuse: latencies, energy and WAF
+/// must agree to the bit, no matter how jobs land on workers.
+#[test]
+fn identical_reports_across_pool_sizes_and_workspace_reuse() {
+    let jobs = || {
+        let mut out = Vec::new();
+        for iface in [InterfaceKind::Conv, InterfaceKind::Proposed] {
+            for ways in [1u16, 2] {
+                let mut cfg = steady_cfg(iface, ways, 0.07);
+                cfg.load.offered_mbps = Some(10.0);
+                out.push(move |ws: &mut SimWorkspace| {
+                    Campaign::new(cfg, RequestKind::Write, 120).run_in(ws)
+                });
+            }
+        }
+        out
+    };
+    let run = |threads| {
+        ThreadPool::new(threads)
+            .run_all_with(jobs(), SimWorkspace::new)
+            .iter()
+            .map(fingerprint)
+            .collect::<Vec<_>>()
+    };
+    let p1 = run(1);
+    let p2 = run(2);
+    let p8 = run(8);
+    assert_eq!(p1, p2, "pool size 1 vs 2 must not change any report");
+    assert_eq!(p1, p8, "pool size 1 vs 8 must not change any report");
+    assert!(
+        p1.iter().any(|f| f.3 > 0),
+        "the grid must include GC-active points for the comparison to bite"
+    );
+    // Workspace reuse: running the same steady campaign twice through one
+    // workspace reproduces the fresh report exactly.
+    let campaign = || {
+        let mut cfg = steady_cfg(InterfaceKind::Proposed, 2, 0.07);
+        cfg.load.offered_mbps = Some(10.0);
+        Campaign::new(cfg, RequestKind::Write, 120)
+    };
+    let mut ws = SimWorkspace::new();
+    let first = campaign().run_in(&mut ws);
+    let second = campaign().run_in(&mut ws);
+    assert!(ws.reuses >= 1);
+    assert_eq!(fingerprint(&first), fingerprint(&second));
+    assert_eq!(fingerprint(&first), fingerprint(&campaign().run()));
+}
+
+/// The E7 driver is itself deterministic and orders interfaces correctly
+/// on the WAF-free axis: at equal over-provisioning PROPOSED never loses
+/// to CONV on achieved throughput.
+#[test]
+fn e7_driver_deterministic_and_ordered() {
+    let spec = SteadySweepSpec {
+        ways: vec![2],
+        over_provision: vec![0.07],
+        requests: 100,
+        offered_mbps: Some(10.0),
+        ..SteadySweepSpec::default()
+    };
+    let a = run_steady_state(&spec, &ThreadPool::new(4));
+    let b = run_steady_state(&spec, &ThreadPool::new(1));
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(fingerprint(&x.report), fingerprint(&y.report));
+    }
+    let bw = |iface| {
+        a.iter()
+            .find(|c| c.iface == iface)
+            .map(|c| c.report.bandwidth_mbps)
+            .unwrap()
+    };
+    assert!(bw(InterfaceKind::Proposed) >= bw(InterfaceKind::Conv));
+}
