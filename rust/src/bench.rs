@@ -201,8 +201,16 @@ pub fn validate_bench_json(text: &str) -> Result<BenchLogSummary, String> {
         if !matches!(field("metric")?, json::Value::Str(_)) {
             return Err(format!("results[{i}].metric must be a string"));
         }
-        if !matches!(field("value")?, json::Value::Num(_) | json::Value::Null) {
-            return Err(format!("results[{i}].value must be a number or null"));
+        match field("value")? {
+            json::Value::Null => {}
+            // `1e999` is lexically valid JSON but overflows f64 to ∞; a
+            // non-finite value in the log means an empty/NaN accumulator
+            // leaked through a writer — reject it loudly.
+            json::Value::Num(v) if v.is_finite() => {}
+            json::Value::Num(v) => {
+                return Err(format!("results[{i}].value must be finite, got {v}"));
+            }
+            _ => return Err(format!("results[{i}].value must be a number or null")),
         }
         match field("n")? {
             json::Value::Num(n) if *n >= 1.0 && n.fract() == 0.0 => {}
@@ -473,6 +481,23 @@ mod tests {
         // Exactly one trailing record without a comma, valid bracket close.
         assert!(json.trim_end().ends_with('}'));
         assert_eq!(json.matches("\"name\":").count(), 3);
+    }
+
+    /// Regression for the Welford ±∞ leak: a record whose value overflows
+    /// f64 (the only way JSON can smuggle in an infinity) is rejected, and
+    /// the writer's own output for a NaN record (null) still validates.
+    #[test]
+    fn validator_rejects_non_finite_values() {
+        let inf = r#"{"schema": "ddrnand-bench-v1", "bench": "b",
+            "results": [{"name": "x", "metric": "m", "value": 1e999, "n": 1}]}"#;
+        let err = validate_bench_json(inf).unwrap_err();
+        assert!(err.contains("finite"), "{err}");
+        let neg = inf.replace("1e999", "-1e999");
+        assert!(validate_bench_json(&neg).is_err());
+        // The writer emits null for non-finite values; null stays valid.
+        let mut log = PerfLog::new("b");
+        log.push("x", "m", f64::INFINITY, 1);
+        validate_bench_json(&log.to_json()).expect("writer output must validate");
     }
 
     #[test]

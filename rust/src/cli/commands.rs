@@ -277,6 +277,175 @@ pub fn cmd_sweep_steady(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
+/// E8 — `ddrnand sweep-tiered`: fixed-capacity MLC-geometry drives whose
+/// SLC-tier chip fraction is swept from pure MLC (0) to all-SLC (1), per
+/// interface × way count; prints write latency, migration traffic and WAF
+/// per point (EXPERIMENTS.md §Tiering).
+pub fn cmd_sweep_tiered(args: &mut Args) -> Result<()> {
+    let mut spec = exp::TieredSweepSpec {
+        requests: requests(args)?,
+        ..exp::TieredSweepSpec::default()
+    };
+    let p = pool(args)?;
+    if let Some(w) = args.get("ways") {
+        spec.ways = w
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<u16>()
+                    .map_err(|e| anyhow!("--ways {s:?}: {e}"))
+            })
+            .collect::<Result<Vec<u16>>>()?;
+        if spec.ways.is_empty() || spec.ways.contains(&0) {
+            return Err(anyhow!("--ways needs a comma-separated list of counts >= 1"));
+        }
+    }
+    if let Some(f) = args.get("fractions") {
+        spec.slc_fractions = f
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<f64>()
+                    .map_err(|e| anyhow!("--fractions {s:?}: {e}"))
+            })
+            .collect::<Result<Vec<f64>>>()?;
+        if spec.slc_fractions.is_empty()
+            || spec
+                .slc_fractions
+                .iter()
+                .any(|&v| !(0.0..=1.0).contains(&v))
+        {
+            return Err(anyhow!(
+                "--fractions needs comma-separated SLC-tier fractions in [0, 1] \
+                 (0 = pure MLC baseline)"
+            ));
+        }
+    }
+    if spec.slc_fractions.iter().any(|&f| f > 0.0)
+        && spec
+            .ways
+            .iter()
+            .any(|&w| (spec.channels as u32) * (w as u32) < 2)
+    {
+        return Err(anyhow!(
+            "tiering needs at least 2 chips: every --ways entry must give \
+             channels x ways >= 2"
+        ));
+    }
+    if let Some(i) = args.get("ifaces") {
+        spec.ifaces = i
+            .split(',')
+            .map(|s| match s.trim() {
+                "conv" => Ok(InterfaceKind::Conv),
+                "sync_only" => Ok(InterfaceKind::SyncOnly),
+                "proposed" => Ok(InterfaceKind::Proposed),
+                other => Err(anyhow!("--ifaces {other:?} (conv|sync_only|proposed)")),
+            })
+            .collect::<Result<Vec<InterfaceKind>>>()?;
+        if spec.ifaces.is_empty() {
+            return Err(anyhow!("--ifaces needs at least one interface"));
+        }
+    }
+    let offered = args
+        .get_f64("offered-mbps", spec.offered_mbps.unwrap_or(0.0))
+        .map_err(anyhow::Error::msg)?;
+    if offered < 0.0 || !offered.is_finite() {
+        return Err(anyhow!(
+            "--offered-mbps must be >= 0 (0 = closed loop), got {offered}"
+        ));
+    }
+    spec.offered_mbps = if offered > 0.0 { Some(offered) } else { None };
+    spec.arrival = match args.get("arrival").as_deref() {
+        None | Some("poisson") => ArrivalKind::Poisson,
+        Some("bursty") => ArrivalKind::Bursty,
+        Some(other) => return Err(anyhow!("unknown --arrival {other} (poisson|bursty)")),
+    };
+    spec.burst = args
+        .get_usize("burst", spec.burst as usize)
+        .map_err(anyhow::Error::msg)? as u32;
+    if spec.burst == 0 {
+        return Err(anyhow!("--burst must be >= 1"));
+    }
+    spec.blocks_per_chip = args
+        .get_usize("blocks", spec.blocks_per_chip as usize)
+        .map_err(anyhow::Error::msg)? as u32;
+    if spec.blocks_per_chip < 16 {
+        return Err(anyhow!("--blocks must be >= 16 (migration and GC need room)"));
+    }
+    spec.migrate_free_blocks = args
+        .get_usize("migrate-free", spec.migrate_free_blocks as usize)
+        .map_err(anyhow::Error::msg)? as u32;
+    let gc_floor = SteadyConfig::default().gc_threshold_blocks;
+    let migrate = spec.migrate_free_blocks;
+    if migrate <= gc_floor || migrate >= spec.blocks_per_chip {
+        return Err(anyhow!(
+            "--migrate-free must be in ({gc_floor}, --blocks): migration must fire \
+             above the GC trigger"
+        ));
+    }
+    spec.steady = args.has("steady");
+    if spec.steady {
+        spec.over_provision = args
+            .get_f64("op", spec.over_provision)
+            .map_err(anyhow::Error::msg)?;
+        if !(spec.over_provision > 0.0 && spec.over_provision < 0.5) {
+            return Err(anyhow!("--op must be in (0, 0.5)"));
+        }
+        let steady = SteadyConfig {
+            over_provision: spec.over_provision,
+            ..SteadyConfig::default()
+        };
+        if !steady.gc_headroom_ok(spec.blocks_per_chip) {
+            return Err(anyhow!(
+                "--op {} is too small for --blocks {}: GC needs spare blocks beyond \
+                 its trigger threshold",
+                spec.over_provision,
+                spec.blocks_per_chip
+            ));
+        }
+    }
+    // Pre-flight every grid point through the shared config validation
+    // (capacity feasibility included), so an impossible combination is a
+    // clean error here instead of a panic mid-sweep.
+    for iface in spec.ifaces.clone() {
+        for &ways in &spec.ways {
+            for &fraction in &spec.slc_fractions {
+                if let Err(errs) = exp::tiered_point_config(&spec, iface, ways, fraction) {
+                    return Err(anyhow!(
+                        "sweep point ({iface}, {ways} ways, fraction {fraction}) is \
+                         invalid: {}",
+                        errs.join("; ")
+                    ));
+                }
+            }
+        }
+    }
+    let csv = args.has("csv");
+    let cells = exp::run_tiered_sweep(&spec, &p);
+    println!(
+        "{}",
+        exp::render_tiered_sweep(
+            &format!(
+                "E8 — tiered SLC/MLC sweep (MLC geometry, {}, {}{}; write latency and \
+                 migration traffic vs SLC-tier fraction)",
+                if spec.channels == 1 {
+                    "1-channel".to_string()
+                } else {
+                    format!("{}-channel", spec.channels)
+                },
+                match spec.offered_mbps {
+                    Some(o) => format!("open loop {o:.1} MB/s offered"),
+                    None => "closed loop".to_string(),
+                },
+                if spec.steady { ", steady-state composed" } else { "" },
+            ),
+            &cells,
+            csv
+        )
+    );
+    Ok(())
+}
+
 pub fn cmd_dse(args: &mut Args) -> Result<()> {
     let mut space = dse::Space::default();
     if args.has("sweep-tbyte") {

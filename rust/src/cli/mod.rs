@@ -10,6 +10,7 @@
 //! ddrnand paper [...]                 E1–E5 in one go
 //! ddrnand sweep-load [...]            E6: open-loop offered-load sweep
 //! ddrnand sweep-steady [...]          E7: steady-state GC/WAF sweep
+//! ddrnand sweep-tiered [...]          E8: tiered SLC/MLC fraction sweep
 //! ddrnand dse [--sweep-tbyte] [--native]   DSE through the AOT artifact
 //! ddrnand pvt [--margin X]            A3: PVT Monte Carlo ablation
 //! ddrnand simulate --config FILE      one simulation from a TOML config
@@ -43,6 +44,7 @@ pub fn run(argv: &[String]) -> i32 {
         "paper" => commands::cmd_paper(&mut args),
         "sweep-load" => commands::cmd_sweep_load(&mut args),
         "sweep-steady" => commands::cmd_sweep_steady(&mut args),
+        "sweep-tiered" => commands::cmd_sweep_tiered(&mut args),
         "dse" => commands::cmd_dse(&mut args),
         "pvt" => commands::cmd_pvt(&mut args),
         "simulate" => commands::cmd_simulate(&mut args),
@@ -80,6 +82,7 @@ SUBCOMMANDS
   paper            E1–E5: all experiments, paper-vs-measured
   sweep-load       E6: open-loop offered-load sweep (latency under load)
   sweep-steady     E7: steady-state GC sweep (WAF, wear, GC tax on p99)
+  sweep-tiered     E8: tiered SLC/MLC sweep (write latency vs SLC-tier fraction)
   dse              design-space exploration via the AOT analytic model
   pvt              A3: PVT Monte Carlo ablation
   simulate         run one simulation from a TOML config
@@ -114,6 +117,18 @@ SWEEP-STEADY FLAGS
   --burst N        requests per burst for bursty arrivals (default 4)
   --blocks N       blocks per chip (default 64)
   --wl-spread N    chip P/E-spread threshold for wear leveling; 0 = off (default 16)
+
+SWEEP-TIERED FLAGS
+  --ways LIST      comma-separated way counts (default 4)
+  --fractions LIST SLC-tier chip fractions in [0,1]; 0 = pure MLC (default 0,0.25,0.5,1)
+  --ifaces LIST    interfaces to sweep (default conv,proposed)
+  --offered-mbps X offered write load; 0 = closed loop (default 12)
+  --arrival KIND   arrival process: poisson|bursty (default poisson)
+  --burst N        requests per burst for bursty arrivals (default 4)
+  --blocks N       blocks per chip (default 64)
+  --migrate-free N SLC free-block threshold that triggers migration (default 4)
+  --steady         compose with the [steady] regime (preconditioned random writes)
+  --op X           over-provisioning fraction for --steady (default 0.07)
 "
     .to_string()
 }

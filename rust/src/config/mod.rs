@@ -130,6 +130,65 @@ impl SteadyConfig {
     }
 }
 
+/// Tiered-flash subsystem knobs (`[tiering]` in TOML). Disabled by
+/// default: with `enabled = false` every run behaves bit-identically to
+/// the homogeneous-array simulator (golden-tested).
+///
+/// When enabled, the drive becomes the combined SLC/MLC architecture of
+/// multi-tiered SSD proposals (Batni & Safaei): a fraction of the chips
+/// forms an **SLC write-buffer tier** — the base (MLC) geometry driven
+/// with SLC-mode program/read latencies — in front of the remaining
+/// **MLC capacity tier**. All host writes land in the SLC tier; when an
+/// SLC chip runs low on free blocks, its *oldest* full block (fill-order
+/// FIFO = coldest data) is migrated to the MLC tier as real DES copy-back
+/// jobs that contend with host traffic, exactly like GC and wear
+/// leveling do. Each tier may run its own controller↔flash interface
+/// kind (E8, `ddrnand sweep-tiered`, EXPERIMENTS.md §Tiering).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TieringConfig {
+    /// Master switch for the tiered-flash subsystem.
+    pub enabled: bool,
+    /// Fraction of chips assigned to the SLC tier, in (0, 1]. At least one
+    /// chip is always SLC; a fraction of 1 makes every chip SLC-mode (no
+    /// capacity tier, migration off).
+    pub slc_fraction: f64,
+    /// Interface kind of the SLC tier's channels; `None` = the top-level
+    /// `iface`.
+    pub slc_iface: Option<InterfaceKind>,
+    /// Interface kind of the MLC tier's channels; `None` = the top-level
+    /// `iface`.
+    pub mlc_iface: Option<InterfaceKind>,
+    /// Migration triggers when an SLC-tier chip's free blocks fall to this
+    /// threshold. Must sit above the GC trigger so migration, not GC
+    /// churn, is the SLC tier's primary reclamation path.
+    pub migrate_free_blocks: u32,
+}
+
+impl Default for TieringConfig {
+    fn default() -> Self {
+        TieringConfig {
+            enabled: false,
+            slc_fraction: 0.25,
+            slc_iface: None,
+            mlc_iface: None,
+            migrate_free_blocks: 4,
+        }
+    }
+}
+
+impl TieringConfig {
+    /// Number of SLC-tier chips for an array of `chips` (0 when the
+    /// subsystem is disabled). Shared by simulator construction and the
+    /// sweep-reuse fingerprint so the two can never disagree.
+    pub fn slc_chips(&self, chips: u32) -> u32 {
+        if !self.enabled {
+            0
+        } else {
+            ((chips as f64 * self.slc_fraction).round() as u32).clamp(1, chips)
+        }
+    }
+}
+
 /// Full configuration of one simulated SSD.
 #[derive(Debug, Clone)]
 pub struct SsdConfig {
@@ -169,6 +228,9 @@ pub struct SsdConfig {
     /// default, in which case runs are bit-identical to the fresh-drive
     /// simulator.
     pub steady: SteadyConfig,
+    /// Tiered SLC/MLC flash knobs; disabled by default, in which case runs
+    /// are bit-identical to the homogeneous-array simulator.
+    pub tiering: TieringConfig,
 }
 
 impl Default for SsdConfig {
@@ -190,6 +252,7 @@ impl Default for SsdConfig {
             seed: 0xDD12_7A5D,
             load: LoadConfig::default(),
             steady: SteadyConfig::default(),
+            tiering: TieringConfig::default(),
         }
     }
 }
@@ -267,6 +330,10 @@ impl SsdConfig {
         if !(0.0..=0.5).contains(&self.params.alpha) {
             errs.push("alpha must be in [0, 1/2] (Eq. 1)".into());
         }
+        // Degenerate timing parameters (all-zero TOML, negative deltas)
+        // would otherwise surface as a 0 MHz clock and a divide-by-zero
+        // deep in the bus model.
+        errs.extend(self.params.validate());
         if let Some(mbps) = self.load.offered_mbps {
             if !(mbps > 0.0 && mbps.is_finite()) {
                 errs.push("load.offered_mbps must be a positive number".into());
@@ -297,6 +364,62 @@ impl SsdConfig {
                 );
             }
         }
+        if self.tiering.enabled {
+            if self.cell != CellType::Mlc {
+                errs.push(
+                    "tiering.enabled requires cell = \"mlc\" (the SLC tier is the MLC \
+                     geometry driven with SLC-mode latencies)"
+                        .into(),
+                );
+            }
+            if self.ftl != FtlKind::PageMap {
+                errs.push("tiering.enabled requires ftl = \"page_map\"".into());
+            }
+            if self.chips() < 2 {
+                errs.push("tiering needs at least 2 chips (channels x ways >= 2)".into());
+            }
+            if !(self.tiering.slc_fraction > 0.0 && self.tiering.slc_fraction <= 1.0) {
+                errs.push("tiering.slc_fraction must be in (0, 1]".into());
+            }
+            let gc_floor = self.steady.tuning().gc_threshold_blocks;
+            if self.tiering.migrate_free_blocks <= gc_floor {
+                errs.push(format!(
+                    "tiering.migrate_free_blocks must exceed the GC trigger threshold \
+                     ({gc_floor}) so migration, not GC churn, reclaims the SLC tier"
+                ));
+            }
+            if self.tiering.migrate_free_blocks >= self.blocks_per_chip {
+                errs.push("tiering.migrate_free_blocks must be < blocks_per_chip".into());
+            }
+            // Capacity feasibility in the worst case (fully-valid data,
+            // nothing for GC to reclaim — a sequential preconditioning
+            // fill): migration refuses to fill an MLC chip past its
+            // reserve (GC floor + 2 blocks), and the SLC tier can park
+            // blocks down to its own GC floor + 1. If the exported
+            // logical volume exceeds what both tiers can hold under those
+            // rules, the run would panic mid-fill with "over-provisioning
+            // exhausted" — reject it at config load instead.
+            let nand = self.nand_timing();
+            let ppb = nand.pages_per_block as u64;
+            let blocks = self.blocks_per_chip as u64;
+            let chips = self.chips() as u64;
+            let slc = self.tiering.slc_chips(self.chips()) as u64;
+            let mlc = chips - slc;
+            let gc = self.steady.tuning().gc_threshold_blocks as u64;
+            let park_blocks =
+                slc * blocks.saturating_sub(gc + 1) + mlc * blocks.saturating_sub(gc + 2);
+            let logical = self.logical_pages(chips * blocks * ppb);
+            if logical > park_blocks * ppb {
+                errs.push(format!(
+                    "tiering: logical capacity ({} pages) exceeds what the tiers can \
+                     hold with fully-valid data ({} pages: SLC parks to its GC floor, \
+                     migration stops at the MLC reserve) — raise over-provisioning, \
+                     lower utilization, or grow the MLC tier",
+                    logical,
+                    park_blocks * ppb
+                ));
+            }
+        }
         errs
     }
 
@@ -304,16 +427,17 @@ impl SsdConfig {
     pub fn from_toml(text: &str) -> Result<SsdConfig, String> {
         let doc = toml::parse(text)?;
         let mut cfg = SsdConfig::default();
+        let iface_of = |key: &str, val: &toml::Value| -> Result<InterfaceKind, String> {
+            match val.as_str() {
+                Some("conv") | Some("CONV") => Ok(InterfaceKind::Conv),
+                Some("sync_only") | Some("SYNC_ONLY") => Ok(InterfaceKind::SyncOnly),
+                Some("proposed") | Some("PROPOSED") => Ok(InterfaceKind::Proposed),
+                other => Err(format!("bad {key} {other:?}")),
+            }
+        };
         for (key, val) in &doc.entries {
             match key.as_str() {
-                "iface" => {
-                    cfg.iface = match val.as_str() {
-                        Some("conv") | Some("CONV") => InterfaceKind::Conv,
-                        Some("sync_only") | Some("SYNC_ONLY") => InterfaceKind::SyncOnly,
-                        Some("proposed") | Some("PROPOSED") => InterfaceKind::Proposed,
-                        other => return Err(format!("bad iface {other:?}")),
-                    }
-                }
+                "iface" => cfg.iface = iface_of(key, val)?,
                 "cell" => {
                     cfg.cell = match val.as_str() {
                         Some("slc") | Some("SLC") => CellType::Slc,
@@ -370,6 +494,16 @@ impl SsdConfig {
                 "steady.precondition" => {
                     cfg.steady.precondition =
                         val.as_bool().ok_or_else(|| format!("{key}: want bool"))?
+                }
+                "tiering.enabled" => {
+                    cfg.tiering.enabled =
+                        val.as_bool().ok_or_else(|| format!("{key}: want bool"))?
+                }
+                "tiering.slc_fraction" => cfg.tiering.slc_fraction = req_f64(key, val)?,
+                "tiering.slc_iface" => cfg.tiering.slc_iface = Some(iface_of(key, val)?),
+                "tiering.mlc_iface" => cfg.tiering.mlc_iface = Some(iface_of(key, val)?),
+                "tiering.migrate_free_blocks" => {
+                    cfg.tiering.migrate_free_blocks = req_u32(key, val)?
                 }
                 "cache.capacity_pages" => cfg.cache.capacity_pages = req_u32(key, val)?,
                 "cache.write_back" => {
@@ -528,6 +662,101 @@ precondition = false
         )
         .is_err());
         assert!(SsdConfig::from_toml("[steady]\nover_provision = 0.9").is_ok());
+    }
+
+    #[test]
+    fn tiering_section_parses_and_validates() {
+        let cfg = SsdConfig::from_toml(
+            r#"
+cell = "mlc"
+channels = 2
+ways = 4
+[tiering]
+enabled = true
+slc_fraction = 0.5
+slc_iface = "proposed"
+mlc_iface = "conv"
+migrate_free_blocks = 5
+"#,
+        )
+        .unwrap();
+        assert!(cfg.tiering.enabled);
+        assert_eq!(cfg.tiering.slc_fraction, 0.5);
+        assert_eq!(cfg.tiering.slc_iface, Some(InterfaceKind::Proposed));
+        assert_eq!(cfg.tiering.mlc_iface, Some(InterfaceKind::Conv));
+        assert_eq!(cfg.tiering.migrate_free_blocks, 5);
+        assert_eq!(cfg.tiering.slc_chips(cfg.chips()), 4);
+        // Disabled by default and dormant sections cost nothing.
+        let d = SsdConfig::default();
+        assert!(!d.tiering.enabled);
+        assert_eq!(d.tiering.slc_chips(d.chips()), 0);
+        assert!(SsdConfig::from_toml("[tiering]\nslc_fraction = 0.9").is_ok());
+        // The SLC tier always gets at least one chip, never all of them
+        // unless asked.
+        let t = TieringConfig {
+            enabled: true,
+            slc_fraction: 0.01,
+            ..TieringConfig::default()
+        };
+        assert_eq!(t.slc_chips(4), 1);
+        let t = TieringConfig {
+            enabled: true,
+            slc_fraction: 1.0,
+            ..TieringConfig::default()
+        };
+        assert_eq!(t.slc_chips(4), 4);
+        // Bad values rejected (only when enabled).
+        let tiered = |body: &str| {
+            SsdConfig::from_toml(&format!("cell = \"mlc\"\nways = 4\n{body}"))
+        };
+        assert!(tiered("[tiering]\nenabled = true").is_ok());
+        assert!(tiered("[tiering]\nenabled = true\nslc_fraction = 0.0").is_err());
+        assert!(tiered("[tiering]\nenabled = true\nslc_fraction = 1.5").is_err());
+        assert!(tiered("[tiering]\nenabled = true\nmigrate_free_blocks = 2").is_err());
+        assert!(tiered("[tiering]\nenabled = true\nslc_iface = \"quantum\"").is_err());
+        // The SLC tier needs the MLC geometry, a page-map FTL and >= 2 chips.
+        assert!(SsdConfig::from_toml("cell = \"slc\"\nways = 4\n[tiering]\nenabled = true")
+            .is_err());
+        assert!(SsdConfig::from_toml(
+            "cell = \"mlc\"\nways = 4\nftl = \"hybrid\"\n[tiering]\nenabled = true"
+        )
+        .is_err());
+        assert!(SsdConfig::from_toml("cell = \"mlc\"\n[tiering]\nenabled = true").is_err());
+        // Capacity feasibility: a tiny SLC tier on a tight volume cannot
+        // park fully-valid data — 8 chips x 32 blocks at 10% OP exports
+        // 230.4 blocks, but 1 SLC chip (parks 29) + 7 MLC chips (absorb
+        // 28 each) hold only 225. Must be a load error, not a mid-run
+        // panic.
+        let err = SsdConfig::from_toml(
+            "cell = \"mlc\"\nways = 8\nblocks_per_chip = 32\n\
+             [steady]\nenabled = true\nover_provision = 0.1\n\
+             [tiering]\nenabled = true\nslc_fraction = 0.125",
+        )
+        .unwrap_err();
+        assert!(err.contains("logical capacity"), "{err}");
+        // The same partition with more blocks per chip fits (the reserve
+        // is a fixed block count, so it amortizes).
+        assert!(SsdConfig::from_toml(
+            "cell = \"mlc\"\nways = 8\nblocks_per_chip = 64\n\
+             [steady]\nenabled = true\nover_provision = 0.1\n\
+             [tiering]\nenabled = true\nslc_fraction = 0.125",
+        )
+        .is_ok());
+    }
+
+    /// Regression: the all-zero interface-parameter TOML must be rejected
+    /// at load, before any simulator derives a 0 MHz clock from it.
+    #[test]
+    fn degenerate_iface_params_rejected_at_load() {
+        let err = SsdConfig::from_toml(
+            "[params]\nt_out_ns = 0.0\nt_in_ns = 0.0\nt_rea_ns = 0.0\nt_byte_ns = 0.0\n\
+             t_diff_ns = 0.0",
+        )
+        .unwrap_err();
+        assert!(err.contains("t_byte_ns"), "{err}");
+        assert!(SsdConfig::from_toml("[params]\nt_rea_ns = -5.0").is_err());
+        // A period above 1 us floors to 0 MHz: caught by validation.
+        assert!(SsdConfig::from_toml("[params]\nt_byte_ns = 2000.0").is_err());
     }
 
     #[test]

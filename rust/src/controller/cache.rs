@@ -6,7 +6,7 @@
 //! writes. Disabled (capacity 0) for the paper's Table 3–5 runs, which
 //! measure the raw NAND path; exercised by its own tests and ablations.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 /// Cache configuration.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -39,10 +39,19 @@ pub enum CacheOutcome {
 }
 
 /// Page-granular LRU cache with dirty tracking.
+///
+/// Recency is a monotone tick; every entry holds its tick and the
+/// `by_tick` index mirrors `entries` keyed by it. Ticks are unique (one
+/// per access), so the index's smallest key *is* the LRU entry and
+/// eviction is O(log n) instead of the full-map scan it replaced —
+/// bit-identical eviction order, since the old scan minimized the same
+/// unique tick (regression-tested against the scan oracle below).
 pub struct DramCache {
     cfg: CacheConfig,
     /// lpn -> (lru tick, dirty)
     entries: HashMap<u64, (u64, bool)>,
+    /// lru tick -> lpn (recency index; exactly one entry per cached lpn).
+    by_tick: BTreeMap<u64, u64>,
     tick: u64,
     pub hits: u64,
     pub misses: u64,
@@ -54,6 +63,7 @@ impl DramCache {
         DramCache {
             cfg,
             entries: HashMap::new(),
+            by_tick: BTreeMap::new(),
             tick: 0,
             hits: 0,
             misses: 0,
@@ -66,6 +76,7 @@ impl DramCache {
     pub fn reset(&mut self, cfg: CacheConfig) {
         self.cfg = cfg;
         self.entries.clear();
+        self.by_tick.clear();
         self.tick = 0;
         self.hits = 0;
         self.misses = 0;
@@ -75,15 +86,19 @@ impl DramCache {
     fn touch(&mut self, lpn: u64, dirty: bool) {
         self.tick += 1;
         let e = self.entries.entry(lpn).or_insert((0, false));
+        if e.0 != 0 {
+            self.by_tick.remove(&e.0);
+        }
         e.0 = self.tick;
         e.1 |= dirty;
+        self.by_tick.insert(self.tick, lpn);
     }
 
     /// Evict the LRU entry; returns `Some(lpn)` if it was dirty (needs
     /// flushing to NAND).
     fn evict_lru(&mut self) -> Option<u64> {
-        let (&lpn, &(_, dirty)) = self.entries.iter().min_by_key(|(_, (t, _))| *t)?;
-        self.entries.remove(&lpn);
+        let (_, lpn) = self.by_tick.pop_first()?;
+        let (_, dirty) = self.entries.remove(&lpn).expect("index entry without map entry");
         if dirty {
             self.flushes += 1;
             Some(lpn)
@@ -226,5 +241,127 @@ mod tests {
         c.read(1);
         c.read(1);
         assert!((c.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    /// The pre-rewrite cache, verbatim: full-map `min_by_key` scan per
+    /// eviction. Kept as the oracle the indexed implementation must match
+    /// access-for-access.
+    struct ScanOracle {
+        cfg: CacheConfig,
+        entries: HashMap<u64, (u64, bool)>,
+        tick: u64,
+        hits: u64,
+        misses: u64,
+        flushes: u64,
+    }
+
+    impl ScanOracle {
+        fn new(cfg: CacheConfig) -> ScanOracle {
+            ScanOracle {
+                cfg,
+                entries: HashMap::new(),
+                tick: 0,
+                hits: 0,
+                misses: 0,
+                flushes: 0,
+            }
+        }
+
+        fn touch(&mut self, lpn: u64, dirty: bool) {
+            self.tick += 1;
+            let e = self.entries.entry(lpn).or_insert((0, false));
+            e.0 = self.tick;
+            e.1 |= dirty;
+        }
+
+        fn evict_lru(&mut self) -> Option<u64> {
+            let (&lpn, &(_, dirty)) = self.entries.iter().min_by_key(|(_, (t, _))| *t)?;
+            self.entries.remove(&lpn);
+            if dirty {
+                self.flushes += 1;
+                Some(lpn)
+            } else {
+                None
+            }
+        }
+
+        fn access(&mut self, lpn: u64, write: bool) -> CacheOutcome {
+            if self.cfg.capacity_pages == 0 || (write && !self.cfg.write_back) {
+                return CacheOutcome::Bypass;
+            }
+            if self.entries.contains_key(&lpn) {
+                self.hits += 1;
+                self.touch(lpn, write);
+                CacheOutcome::Hit
+            } else {
+                self.misses += 1;
+                let mut evict_flush = None;
+                if self.entries.len() as u32 >= self.cfg.capacity_pages {
+                    evict_flush = self.evict_lru();
+                }
+                self.touch(lpn, write);
+                CacheOutcome::Miss { evict_flush }
+            }
+        }
+
+        fn dirty_pages(&self) -> Vec<u64> {
+            let mut v: Vec<u64> = self
+                .entries
+                .iter()
+                .filter(|(_, (_, d))| *d)
+                .map(|(&l, _)| l)
+                .collect();
+            v.sort();
+            v
+        }
+    }
+
+    /// Randomized oracle check: a long random mix of reads and writes over
+    /// a footprint several times the capacity must produce *identical*
+    /// outcomes — every hit/miss, every eviction victim, every flush — on
+    /// the O(log n) index and the old O(n) scan.
+    #[test]
+    fn indexed_lru_matches_scan_oracle() {
+        use crate::util::prng::Prng;
+        for (seed, cap) in [(1u64, 1u32), (2, 7), (3, 32), (4, 128)] {
+            let cfg = CacheConfig {
+                capacity_pages: cap,
+                write_back: true,
+            };
+            let mut fast = DramCache::new(cfg);
+            let mut oracle = ScanOracle::new(cfg);
+            let mut rng = Prng::new(0xCAC4E + seed);
+            for step in 0..4000u32 {
+                let lpn = rng.next_bounded(cap as u64 * 4);
+                let write = rng.next_bounded(2) == 0;
+                let got = if write { fast.write(lpn) } else { fast.read(lpn) };
+                let want = oracle.access(lpn, write);
+                assert_eq!(got, want, "seed {seed} cap {cap} step {step} lpn {lpn}");
+            }
+            assert_eq!(fast.hits, oracle.hits);
+            assert_eq!(fast.misses, oracle.misses);
+            assert_eq!(fast.flushes, oracle.flushes);
+            assert_eq!(fast.dirty_pages(), oracle.dirty_pages());
+            assert_eq!(fast.len(), oracle.entries.len());
+        }
+    }
+
+    /// The recency index never leaks: one index entry per cached lpn,
+    /// through heavy churn and reset.
+    #[test]
+    fn index_stays_in_lockstep_with_entries() {
+        let mut c = cache(4);
+        for lpn in 0..64 {
+            c.write(lpn % 9);
+            c.read(lpn % 5);
+            assert_eq!(c.by_tick.len(), c.entries.len());
+        }
+        c.reset(CacheConfig {
+            capacity_pages: 2,
+            write_back: true,
+        });
+        assert!(c.by_tick.is_empty() && c.entries.is_empty());
+        c.write(1);
+        assert_eq!(c.by_tick.len(), 1);
     }
 }

@@ -86,10 +86,9 @@ impl HybridFtl {
     /// coordinator's ppn→(channel, way) resolution is uniform across FTLs.
     fn ppn(&self, pblock: u64, page: u32) -> u64 {
         let chips = self.geom.chips() as u64;
-        let chip = pblock % chips;
+        let chip = (pblock % chips) as usize;
         let block = (pblock / chips) as u32;
-        let channel = (chip % self.geom.channels as u64) as u16;
-        let way = (chip / self.geom.channels as u64) as u16;
+        let (channel, way) = self.geom.chip_addr(chip);
         self.geom.ppn(crate::nand::geometry::PageAddr {
             channel,
             way,

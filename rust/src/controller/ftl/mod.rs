@@ -16,6 +16,7 @@
 pub mod hybrid;
 pub mod page_map;
 pub mod steady;
+pub mod tiered;
 
 use crate::nand::geometry::Geometry;
 
@@ -28,6 +29,13 @@ pub enum FtlOp {
     ProgramPage { ppn: u64 },
     /// Erase the block containing physical page `ppn`'s (chip, block).
     EraseBlock { chip: usize, block: u32 },
+    /// Tier-migration copy-back read (SLC-tier source page). Same bus/array
+    /// cost as [`ReadPage`](FtlOp::ReadPage); the distinct variant lets the
+    /// coordinator tag the job `MIG_REQ` so migration traffic is counted
+    /// apart from GC (see [`tiered`]).
+    MigReadPage { ppn: u64 },
+    /// Tier-migration program (MLC-tier destination page).
+    MigProgramPage { ppn: u64 },
 }
 
 /// The plan for servicing one logical page write: any GC/merge traffic

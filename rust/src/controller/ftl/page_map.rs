@@ -64,12 +64,9 @@ impl PageMapFtl {
     }
 
     fn compose_ppn(&self, chip: usize, block: u32, page: u32) -> u64 {
-        let channels = self.geom.channels as u64;
-        let ways = self.geom.ways as u64;
-        let ch = (chip as u64 % channels) as u16;
-        let way = (chip as u64 / channels % ways) as u16;
+        let (channel, way) = self.geom.chip_addr(chip);
         self.geom.ppn(PageAddr {
-            channel: ch,
+            channel,
             way,
             block,
             page,
@@ -78,8 +75,7 @@ impl PageMapFtl {
 
     fn decompose(&self, ppn: u64) -> (usize, u32, u32) {
         let a = self.geom.page_addr(ppn);
-        let chip = a.way as usize * self.geom.channels as usize + a.channel as usize;
-        (chip, a.block, a.page)
+        (self.geom.chip_of(a.channel, a.way), a.block, a.page)
     }
 
     /// Allocate the next physical page on `chip`, rolling the active block

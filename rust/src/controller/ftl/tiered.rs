@@ -1,0 +1,575 @@
+//! Tiered SLC/MLC flash translation layer.
+//!
+//! The combined-flash architecture of multi-tiered SSD proposals
+//! (Batni & Safaei, "A New Multi-Tiered Solid State Disk Using SLC/MLC
+//! Combined Flash Memory"): chips `[0, slc_chips)` form an **SLC
+//! write-buffer tier** — the base geometry driven with SLC-mode array
+//! latencies — and the remaining chips form the **MLC capacity tier**.
+//!
+//! * **Host writes** always land in the SLC tier, striped round-robin
+//!   across its chips, so the host sees SLC program latency.
+//! * **Migration** is the SLC tier's primary reclamation path: when an SLC
+//!   chip's free blocks fall to `migrate_free_blocks`, its oldest full
+//!   block (fill-order FIFO ≈ coldest data) is copied page-by-page into
+//!   the MLC tier ([`FtlOp::MigReadPage`]/[`FtlOp::MigProgramPage`], which
+//!   the coordinator tags `MIG_REQ`) and erased. Like GC, migration is
+//!   planned inline on the write path, so its copy-back jobs queue ahead
+//!   of the host program and contend for the same channels and ways.
+//! * **GC** runs per chip within each tier (greedy min-valid victims via
+//!   [`ChipAllocator`]), reclaiming rewritten pages without crossing
+//!   tiers; migration and GC therefore interact in one simulation when
+//!   the `[steady]` regime is enabled on top.
+//! * **Wear leveling** (FTL-internal static and the coordinator-driven
+//!   hook) relocates within a chip, exactly as in
+//!   [`super::page_map::PageMapFtl`].
+//!
+//! Reads are served from wherever the page lives — recently written data
+//! from the SLC tier at SLC read latency, migrated cold data from MLC.
+//! The mapping tables span both tiers, so [`Ftl::translate`] and the
+//! shared consistency checks are tier-agnostic.
+//!
+//! Cross-chip migration has no data-dependency tracking in the DES: the
+//! MLC program of a migrated page may be scheduled while its SLC read is
+//! still queued on the source way. This slightly flatters migration
+//! latency and is an accepted behavioral-model simplification (internal
+//! jobs never complete host requests).
+
+use crate::controller::ftl::steady::{ChipAllocator, GcTuning};
+use crate::controller::ftl::{Ftl, FtlOp};
+use crate::nand::geometry::{Geometry, PageAddr};
+
+const INVALID: u64 = u64::MAX;
+
+/// Tiered SLC/MLC FTL (see the module docs).
+pub struct TieredFtl {
+    geom: Geometry,
+    /// lpn -> ppn.
+    map: Vec<u64>,
+    /// ppn -> lpn (reverse map, for GC and migration).
+    rmap: Vec<u64>,
+    chips: Vec<ChipAllocator>,
+    /// Chips `[0, slc_chips)` are the SLC tier; the rest are MLC.
+    slc_chips: usize,
+    /// Next SLC chip for striped host-write allocation.
+    next_slc: usize,
+    /// Next MLC chip for striped migration destinations.
+    next_mlc: usize,
+    /// Migration triggers when an SLC chip's free blocks fall to this.
+    migrate_free_blocks: u32,
+    /// Running valid-page total per chip (mirrors the sum of each
+    /// allocator's `valid[]`), so the migration headroom check on the
+    /// host-write hot path is O(mlc_chips) instead of a full per-block
+    /// scan of every MLC chip.
+    chip_valid: Vec<u64>,
+    /// GC/wear-leveling thresholds (the `[steady]` TOML section).
+    pub tuning: GcTuning,
+    /// Re-entrancy guard shared with the GC path: relocations allocate
+    /// pages, which must not recursively trigger another reclaim.
+    in_gc: bool,
+    free_pages: u64,
+    relocations: u64,
+    erases: u64,
+    migrated_pages: u64,
+}
+
+impl TieredFtl {
+    /// `logical_pages` is the exported capacity; `slc_chips` in
+    /// `[1, chips]` partitions the array (chips == slc_chips means every
+    /// chip is SLC-mode and migration is off).
+    pub fn new(
+        geom: Geometry,
+        logical_pages: u64,
+        slc_chips: usize,
+        migrate_free_blocks: u32,
+    ) -> TieredFtl {
+        let chips: Vec<ChipAllocator> = (0..geom.chips())
+            .map(|_| ChipAllocator::new(geom.blocks_per_chip))
+            .collect();
+        assert!(
+            (1..=chips.len()).contains(&slc_chips),
+            "slc_chips {slc_chips} out of [1, {}]",
+            chips.len()
+        );
+        assert!(
+            logical_pages <= geom.total_pages(),
+            "logical capacity exceeds physical"
+        );
+        let chip_valid = vec![0; chips.len()];
+        TieredFtl {
+            map: vec![INVALID; logical_pages as usize],
+            rmap: vec![INVALID; geom.total_pages() as usize],
+            chips,
+            slc_chips,
+            next_slc: 0,
+            next_mlc: 0,
+            migrate_free_blocks,
+            chip_valid,
+            tuning: GcTuning::default(),
+            in_gc: false,
+            free_pages: geom.total_pages(),
+            geom,
+            relocations: 0,
+            erases: 0,
+            migrated_pages: 0,
+        }
+    }
+
+    fn compose_ppn(&self, chip: usize, block: u32, page: u32) -> u64 {
+        let (channel, way) = self.geom.chip_addr(chip);
+        self.geom.ppn(PageAddr {
+            channel,
+            way,
+            block,
+            page,
+        })
+    }
+
+    fn decompose(&self, ppn: u64) -> (usize, u32, u32) {
+        let a = self.geom.page_addr(ppn);
+        (self.geom.chip_of(a.channel, a.way), a.block, a.page)
+    }
+
+    /// Is `chip` in the SLC tier?
+    pub fn is_slc_chip(&self, chip: usize) -> bool {
+        chip < self.slc_chips
+    }
+
+    /// Pages SLC→MLC migration has moved so far.
+    pub fn migrated_pages(&self) -> u64 {
+        self.migrated_pages
+    }
+
+    /// Allocate the next physical page on `chip`, rolling the active block
+    /// and triggering within-chip GC as needed (identical policy to the
+    /// page-map FTL). Appends any GC ops to `out`.
+    fn alloc_on_chip(&mut self, chip: usize, out: &mut Vec<FtlOp>) -> u64 {
+        let mut attempts = 0u32;
+        while !self.in_gc
+            && self.chips[chip].free_len() <= self.tuning.gc_threshold_blocks
+            && self.chips[chip].reclaimable(self.geom.pages_per_block)
+        {
+            attempts += 1;
+            assert!(
+                attempts <= self.geom.blocks_per_chip,
+                "GC cannot reclaim space: utilization too high for over-provisioning"
+            );
+            self.in_gc = true;
+            self.gc_chip(chip, out);
+            self.in_gc = false;
+        }
+        let (block, page) = self.chips[chip].alloc_page(self.geom.pages_per_block);
+        self.free_pages -= 1;
+        self.compose_ppn(chip, block, page)
+    }
+
+    /// Greedy within-chip GC: victim = full block with fewest valid pages.
+    fn gc_chip(&mut self, chip: usize, out: &mut Vec<FtlOp>) {
+        let vblock = self.chips[chip]
+            .take_gc_victim()
+            .expect("gc called with no full blocks");
+        self.relocate_within(chip, vblock, out);
+    }
+
+    /// Copy-back loop shared by GC and wear leveling: relocate every valid
+    /// page of `vblock` into freshly allocated pages *of the same chip*,
+    /// then erase it. The caller has already removed `vblock` from the
+    /// full-block list.
+    fn relocate_within(&mut self, chip: usize, vblock: u32, out: &mut Vec<FtlOp>) {
+        for page in 0..self.geom.pages_per_block {
+            let src = self.compose_ppn(chip, vblock, page);
+            let lpn = self.rmap[src as usize];
+            if lpn != INVALID {
+                out.push(FtlOp::ReadPage { ppn: src });
+                let dst = self.alloc_on_chip(chip, out);
+                out.push(FtlOp::ProgramPage { ppn: dst });
+                self.remap(lpn, src, dst, chip, vblock);
+                self.relocations += 1;
+            }
+        }
+        self.finish_erase(chip, vblock, out);
+    }
+
+    /// Move `lpn` from `src` (in `vblock` of `src_chip`) to `dst`,
+    /// updating both maps and both valid counters.
+    fn remap(&mut self, lpn: u64, src: u64, dst: u64, src_chip: usize, vblock: u32) {
+        self.map[lpn as usize] = dst;
+        self.rmap[dst as usize] = lpn;
+        self.rmap[src as usize] = INVALID;
+        let (dchip, dblock, _) = self.decompose(dst);
+        self.chips[dchip].valid[dblock as usize] += 1;
+        self.chips[src_chip].valid[vblock as usize] -= 1;
+        self.chip_valid[dchip] += 1;
+        self.chip_valid[src_chip] -= 1;
+    }
+
+    /// Emit the erase of a fully-drained victim block and return it to the
+    /// free pool.
+    fn finish_erase(&mut self, chip: usize, vblock: u32, out: &mut Vec<FtlOp>) {
+        debug_assert_eq!(self.chips[chip].valid[vblock as usize], 0);
+        out.push(FtlOp::EraseBlock {
+            chip,
+            block: vblock,
+        });
+        self.chips[chip].note_erased(vblock);
+        self.free_pages += self.geom.pages_per_block as u64;
+        self.erases += 1;
+    }
+
+    /// Migration pump for one SLC chip: while its free pool sits at or
+    /// below the migration threshold and the MLC tier has headroom, move
+    /// its oldest full block to MLC. Each iteration frees exactly one
+    /// block, so the loop terminates.
+    fn maybe_migrate(&mut self, chip: usize, out: &mut Vec<FtlOp>) {
+        if self.in_gc || self.slc_chips == self.chips.len() {
+            return;
+        }
+        while self.chips[chip].free_len() <= self.migrate_free_blocks
+            && !self.chips[chip].full_blocks.is_empty()
+            && self.mlc_headroom_ok()
+        {
+            // Oldest full block in fill order ≈ coldest data (the order is
+            // perturbed by GC's swap_remove but stays deterministic).
+            let vblock = self.chips[chip].full_blocks.remove(0);
+            self.migrate_block(chip, vblock, out);
+        }
+    }
+
+    /// Every MLC chip must keep its GC floor plus one block of slack free
+    /// or reclaimable before we pour another block into the tier —
+    /// otherwise a crammed destination chip would exhaust its
+    /// over-provisioning mid-copy. O(mlc_chips) via the running per-chip
+    /// valid totals: this sits in `maybe_migrate`'s loop condition on the
+    /// host-write hot path.
+    fn mlc_headroom_ok(&self) -> bool {
+        let ppb = self.geom.pages_per_block as u64;
+        let per_chip = self.geom.blocks_per_chip as u64 * ppb;
+        let reserve = (self.tuning.gc_threshold_blocks as u64 + 2) * ppb;
+        self.chip_valid[self.slc_chips..]
+            .iter()
+            .all(|&valid| per_chip - valid >= reserve)
+    }
+
+    /// Copy every valid page of SLC block `vblock` into the MLC tier
+    /// (striped round-robin), then erase it. Destination allocations may
+    /// trigger MLC-tier GC inline; those ops are plain (GC-tagged)
+    /// read/program/erase, while the migration copies themselves are the
+    /// `Mig*` variants.
+    fn migrate_block(&mut self, chip: usize, vblock: u32, out: &mut Vec<FtlOp>) {
+        debug_assert!(chip < self.slc_chips);
+        for page in 0..self.geom.pages_per_block {
+            let src = self.compose_ppn(chip, vblock, page);
+            let lpn = self.rmap[src as usize];
+            if lpn != INVALID {
+                out.push(FtlOp::MigReadPage { ppn: src });
+                let mlc_count = self.chips.len() - self.slc_chips;
+                let dst_chip = self.slc_chips + self.next_mlc;
+                self.next_mlc = (self.next_mlc + 1) % mlc_count;
+                let dst = self.alloc_on_chip(dst_chip, out);
+                out.push(FtlOp::MigProgramPage { ppn: dst });
+                self.remap(lpn, src, dst, chip, vblock);
+                self.migrated_pages += 1;
+            }
+        }
+        self.finish_erase(chip, vblock, out);
+    }
+
+    /// FTL-internal static wear leveling, within one chip (same policy as
+    /// the page-map FTL).
+    fn maybe_static_wl(&mut self, chip: usize, out: &mut Vec<FtlOp>) {
+        if self.in_gc {
+            return;
+        }
+        let Some(vblock) = self.chips[chip].take_wl_victim(self.tuning.static_wl_threshold)
+        else {
+            return;
+        };
+        self.in_gc = true;
+        self.relocate_within(chip, vblock, out);
+        self.in_gc = false;
+    }
+
+    /// Max-min wear spread across all blocks of all chips.
+    pub fn wear_spread(&self) -> u32 {
+        let all = self.chips.iter().flat_map(|c| c.wear.iter().copied());
+        let max = all.clone().max().unwrap_or(0);
+        let min = all.min().unwrap_or(0);
+        max - min
+    }
+
+    /// Total valid (live) pages across all chips (GC/migration
+    /// conservation invariant; used by the property tests).
+    pub fn valid_pages_total(&self) -> u64 {
+        self.chips
+            .iter()
+            .map(|c| c.valid.iter().map(|&v| v as u64).sum::<u64>())
+            .sum()
+    }
+
+    /// Valid pages currently resident in the SLC tier.
+    pub fn slc_valid_pages(&self) -> u64 {
+        self.chips[..self.slc_chips]
+            .iter()
+            .map(|c| c.valid.iter().map(|&v| v as u64).sum::<u64>())
+            .sum()
+    }
+
+    /// Smallest per-chip free-block count across the whole array.
+    pub fn min_free_blocks(&self) -> u32 {
+        self.chips.iter().map(|c| c.free_len()).min().unwrap_or(0)
+    }
+}
+
+impl Ftl for TieredFtl {
+    fn translate(&self, lpn: u64) -> Option<u64> {
+        let p = *self.map.get(lpn as usize)?;
+        (p != INVALID).then_some(p)
+    }
+
+    fn plan_write_into(&mut self, lpn: u64, out: &mut Vec<FtlOp>) -> u64 {
+        assert!((lpn as usize) < self.map.len(), "lpn out of range");
+        // Invalidate the old location (either tier).
+        let old = self.map[lpn as usize];
+        if old != INVALID {
+            self.rmap[old as usize] = INVALID;
+            let (chip, block, _) = self.decompose(old);
+            self.chips[chip].valid[block as usize] -= 1;
+            self.chip_valid[chip] -= 1;
+        }
+        // Host writes stripe across the SLC tier only.
+        let chip = self.next_slc;
+        self.next_slc = (self.next_slc + 1) % self.slc_chips;
+        if self.chips[chip].next_page == 0 {
+            self.maybe_static_wl(chip, out);
+        }
+        // Migration first (frees whole cold blocks), then within-chip GC
+        // inside the allocation as a fallback for rewritten pages.
+        self.maybe_migrate(chip, out);
+        let ppn = self.alloc_on_chip(chip, out);
+        self.map[lpn as usize] = ppn;
+        self.rmap[ppn as usize] = lpn;
+        let (c, block, _) = self.decompose(ppn);
+        self.chips[c].valid[block as usize] += 1;
+        self.chip_valid[c] += 1;
+        ppn
+    }
+
+    fn set_gc_tuning(&mut self, tuning: GcTuning) {
+        self.tuning = tuning;
+    }
+
+    fn plan_wear_level_into(&mut self, chip: usize, out: &mut Vec<FtlOp>) -> bool {
+        if self.in_gc || chip >= self.chips.len() {
+            return false;
+        }
+        let Some(vblock) = self.chips[chip].take_wl_victim(0) else {
+            return false;
+        };
+        self.in_gc = true;
+        self.relocate_within(chip, vblock, out);
+        self.in_gc = false;
+        true
+    }
+
+    fn reset(&mut self) {
+        self.map.fill(INVALID);
+        self.rmap.fill(INVALID);
+        let blocks = self.geom.blocks_per_chip;
+        for c in &mut self.chips {
+            c.reset(blocks);
+        }
+        self.next_slc = 0;
+        self.next_mlc = 0;
+        self.chip_valid.fill(0);
+        self.in_gc = false;
+        self.free_pages = self.geom.total_pages();
+        self.relocations = 0;
+        self.erases = 0;
+        self.migrated_pages = 0;
+    }
+
+    fn geometry(&self) -> &Geometry {
+        &self.geom
+    }
+    fn logical_capacity(&self) -> u64 {
+        self.map.len() as u64
+    }
+    fn free_pages(&self) -> u64 {
+        self.free_pages
+    }
+    fn relocations(&self) -> u64 {
+        self.relocations
+    }
+    fn erases(&self) -> u64 {
+        self.erases
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::controller::ftl::check_mapping_consistency;
+
+    fn geom(channels: u16, ways: u16) -> Geometry {
+        Geometry {
+            channels,
+            ways,
+            blocks_per_chip: 8,
+            pages_per_block: 16,
+            page_bytes: 4096,
+        }
+    }
+
+    /// 4 chips, 1 SLC: host writes only ever land on chip 0.
+    #[test]
+    fn host_writes_stay_in_slc_tier() {
+        let g = geom(2, 2);
+        let mut f = TieredFtl::new(g, 64, 1, 4);
+        for lpn in 0..16 {
+            let plan = f.plan_write(lpn);
+            let (chip, _, _) = f.decompose(plan.target_ppn);
+            assert_eq!(chip, 0, "lpn {lpn} must land on the SLC chip");
+        }
+        assert_eq!(f.slc_valid_pages(), 16);
+        check_mapping_consistency(&f, &(0..64).collect::<Vec<_>>()).unwrap();
+    }
+
+    /// Two SLC chips stripe host writes round robin.
+    #[test]
+    fn slc_tier_stripes_round_robin() {
+        let g = geom(2, 2);
+        let mut f = TieredFtl::new(g, 64, 2, 4);
+        let chips: Vec<usize> = (0..8)
+            .map(|lpn| {
+                let p = f.plan_write(lpn).target_ppn;
+                f.decompose(p).0
+            })
+            .collect();
+        assert_eq!(chips, vec![0, 1, 0, 1, 0, 1, 0, 1]);
+    }
+
+    /// Filling past the SLC tier's capacity forces migration: Mig ops
+    /// appear, cold data ends up on MLC chips, and every lpn stays
+    /// readable.
+    #[test]
+    fn overflow_migrates_cold_blocks_to_mlc() {
+        let g = geom(1, 2); // 2 chips x 8 blocks x 16 pages = 256 phys
+        let mut f = TieredFtl::new(g, 160, 1, 4); // SLC chip: 128 pages
+        let mut mig_reads = 0;
+        let mut mig_progs = 0;
+        for lpn in 0..160 {
+            let plan = f.plan_write(lpn);
+            for op in &plan.background {
+                match op {
+                    FtlOp::MigReadPage { .. } => mig_reads += 1,
+                    FtlOp::MigProgramPage { .. } => mig_progs += 1,
+                    _ => {}
+                }
+            }
+        }
+        assert!(f.migrated_pages() > 0, "the fill must overflow the SLC tier");
+        assert_eq!(mig_reads, mig_progs);
+        assert_eq!(mig_progs as u64, f.migrated_pages());
+        // Migrated pages live on the MLC chip now.
+        let on_mlc = (0..160u64)
+            .filter(|&lpn| {
+                let ppn = f.translate(lpn).expect("every lpn written");
+                !f.is_slc_chip(f.decompose(ppn).0)
+            })
+            .count();
+        assert_eq!(on_mlc as u64, f.migrated_pages());
+        assert!(f.slc_valid_pages() < 160);
+        check_mapping_consistency(&f, &(0..160).collect::<Vec<_>>()).unwrap();
+    }
+
+    /// Sustained rewrites over a tier-overflowing volume keep every
+    /// invariant: conservation of valid pages, the free-block floor, and
+    /// mapping consistency — with GC and migration interleaved.
+    #[test]
+    fn rewrites_keep_invariants_under_gc_plus_migration() {
+        let g = geom(1, 2);
+        let mut f = TieredFtl::new(g, 160, 1, 4);
+        let mut mapped = std::collections::BTreeSet::new();
+        for round in 0..8u64 {
+            for i in 0..160u64 {
+                let lpn = (i * 7 + round) % 160;
+                f.plan_write(lpn);
+                mapped.insert(lpn);
+                assert_eq!(f.valid_pages_total(), mapped.len() as u64);
+            }
+        }
+        assert!(f.erases() > 0, "the loop must exercise reclamation");
+        assert!(f.migrated_pages() > 0);
+        assert!(f.min_free_blocks() >= 1, "no chip may run dry");
+        // The running per-chip totals (the O(1)-per-update headroom
+        // counters) stay in lockstep with the allocators' ground truth.
+        for (chip, alloc) in f.chips.iter().enumerate() {
+            let truth: u64 = alloc.valid.iter().map(|&v| v as u64).sum();
+            assert_eq!(f.chip_valid[chip], truth, "chip {chip} total drifted");
+        }
+        check_mapping_consistency(&f, &(0..160).collect::<Vec<_>>()).unwrap();
+    }
+
+    /// With every chip in the SLC tier migration is off and the FTL
+    /// degenerates to striped within-chip GC.
+    #[test]
+    fn all_slc_partition_never_migrates() {
+        let g = geom(1, 2);
+        let mut f = TieredFtl::new(g, 160, 2, 4);
+        for round in 0..5u64 {
+            for lpn in 0..160 {
+                f.plan_write((lpn + round) % 160);
+            }
+        }
+        assert_eq!(f.migrated_pages(), 0);
+        assert!(f.erases() > 0, "GC must still reclaim rewrites");
+        check_mapping_consistency(&f, &(0..160).collect::<Vec<_>>()).unwrap();
+    }
+
+    /// Reset restores factory state and determinism (sweep-worker reuse).
+    #[test]
+    fn reset_restores_factory_state_and_determinism() {
+        let g = geom(1, 2);
+        let run = |f: &mut TieredFtl| -> Vec<u64> {
+            (0..150).map(|lpn| f.plan_write(lpn).target_ppn).collect()
+        };
+        let mut fresh = TieredFtl::new(g, 160, 1, 4);
+        let expect = run(&mut fresh);
+        let mut reused = TieredFtl::new(g, 160, 1, 4);
+        for round in 0..6 {
+            for lpn in 0..160 {
+                reused.plan_write((lpn + round) % 160);
+            }
+        }
+        reused.reset();
+        assert_eq!(reused.free_pages(), g.total_pages());
+        assert_eq!(reused.migrated_pages(), 0);
+        assert_eq!(reused.erases(), 0);
+        assert_eq!(reused.translate(0), None);
+        assert_eq!(run(&mut reused), expect);
+    }
+
+    /// The coordinator wear-leveling entry relocates within the chip and
+    /// preserves mappings, for chips of either tier.
+    #[test]
+    fn plan_wear_level_stays_within_chip() {
+        let g = geom(1, 2);
+        let mut f = TieredFtl::new(g, 160, 1, 4);
+        f.tuning.static_wl_threshold = u32::MAX;
+        for round in 0..6u64 {
+            for lpn in 0..160 {
+                f.plan_write((lpn + round) % 160);
+            }
+        }
+        let mut out = Vec::new();
+        if f.plan_wear_level_into(0, &mut out) {
+            assert!(out
+                .iter()
+                .any(|op| matches!(op, FtlOp::EraseBlock { chip: 0, .. })));
+            assert!(!out
+                .iter()
+                .any(|op| matches!(op, FtlOp::MigReadPage { .. })));
+        }
+        check_mapping_consistency(&f, &(0..160).collect::<Vec<_>>()).unwrap();
+        assert!(!f.plan_wear_level_into(99, &mut Vec::new()));
+    }
+}

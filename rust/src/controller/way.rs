@@ -37,7 +37,8 @@ pub enum JobPhase {
 pub struct PageJob {
     /// Host request this job belongs to. Values at the top of the range
     /// mark internal traffic (see `coordinator::ssd`: `INTERNAL_REQ` cache
-    /// flushes, `WL_REQ` wear leveling, `GC_REQ` GC copy-back).
+    /// flushes, `WL_REQ` wear leveling, `GC_REQ` GC copy-back, `MIG_REQ`
+    /// tier migration).
     pub req: u64,
     pub kind: PageJobKind,
     pub block: u32,

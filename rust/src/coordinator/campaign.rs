@@ -73,6 +73,21 @@ pub struct SimReport {
     pub wear_spread: u32,
     /// Fraction of NAND array energy spent on GC/WL copy-back programs.
     pub gc_energy_share: f64,
+    /// Tiered-flash accounting (EXPERIMENTS.md §Tiering; all zero when the
+    /// `[tiering]` section is disabled). SLC→MLC migration copy-back reads
+    /// (subset of `pages_read`).
+    pub mig_pages_read: u64,
+    /// SLC→MLC migration programs (subset of `pages_programmed`, in the
+    /// write-amplification numerator alongside GC/WL).
+    pub mig_pages_programmed: u64,
+    /// Host-read pages served from the SLC tier / the MLC tier.
+    pub slc_reads: u64,
+    pub mlc_reads: u64,
+    /// Fraction of host NAND reads served by the SLC tier (NaN when the
+    /// run performed no tier-attributed reads).
+    pub slc_read_share: f64,
+    /// Fraction of NAND array energy spent on migration programs.
+    pub mig_energy_share: f64,
 }
 
 /// Run `cfg` over an explicit trace (one-shot; sweeps should prefer a
@@ -133,6 +148,19 @@ fn report_from(
         latency_p99_clean_us: p99_of(&sim.clean_latency_samples),
         wear_spread: sim.max_wear_spread(),
         gc_energy_share: sim.energy.gc_share(),
+        mig_pages_read: sim.counters.mig_pages_read,
+        mig_pages_programmed: sim.counters.mig_pages_programmed,
+        slc_reads: sim.counters.slc_reads,
+        mlc_reads: sim.counters.mlc_reads,
+        slc_read_share: {
+            let total = sim.counters.slc_reads + sim.counters.mlc_reads;
+            if total == 0 {
+                f64::NAN
+            } else {
+                sim.counters.slc_reads as f64 / total as f64
+            }
+        },
+        mig_energy_share: sim.energy.mig_share(),
     }
 }
 

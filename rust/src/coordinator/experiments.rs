@@ -516,6 +516,206 @@ pub fn render_steady_sweep(title: &str, cells: &[SteadyCell], csv: bool) -> Stri
     out
 }
 
+/// Specification of the E8 tiered-flash sweep (`ddrnand sweep-tiered`):
+/// a fixed-capacity MLC-geometry drive whose SLC-tier chip fraction is
+/// swept from pure MLC (fraction 0 — tiering disabled) through combined
+/// SLC/MLC partitions to every chip in SLC mode (fraction 1), per
+/// interface × way count. Measures the write-latency face of the SLC
+/// write-buffer architecture, plus migration traffic and its WAF cost
+/// (EXPERIMENTS.md §Tiering).
+#[derive(Debug, Clone)]
+pub struct TieredSweepSpec {
+    pub channels: u16,
+    /// Way counts to sweep.
+    pub ways: Vec<u16>,
+    /// SLC-tier chip fractions in [0, 1]; 0 = tiering disabled (pure MLC).
+    pub slc_fractions: Vec<f64>,
+    /// Interfaces to sweep (applied to both tiers).
+    pub ifaces: Vec<InterfaceKind>,
+    /// Requests per point.
+    pub requests: usize,
+    /// Offered write load in MB/s driving the open-loop arrival track;
+    /// `None` = closed loop.
+    pub offered_mbps: Option<f64>,
+    pub arrival: ArrivalKind,
+    pub burst: u32,
+    /// Blocks per chip — small enough that the SLC tier overflows (and
+    /// migration runs) within `requests`.
+    pub blocks_per_chip: u32,
+    /// SLC-chip free-block threshold that triggers migration.
+    pub migrate_free_blocks: u32,
+    /// Compose with the `[steady]` regime: preconditioned drive + uniform
+    /// random writes, so migration and GC traffic interact.
+    pub steady: bool,
+    /// Over-provisioning fraction for the steady composition.
+    pub over_provision: f64,
+    pub seed: u64,
+}
+
+impl Default for TieredSweepSpec {
+    fn default() -> Self {
+        TieredSweepSpec {
+            channels: 1,
+            ways: vec![4],
+            slc_fractions: vec![0.0, 0.25, 0.5, 1.0],
+            ifaces: vec![InterfaceKind::Conv, InterfaceKind::Proposed],
+            requests: DEFAULT_REQUESTS,
+            // Sustainable by every partition (pure MLC 4-way sustains
+            // ~19 MB/s of t_PROG-bound writes) so the latency axis, not
+            // saturation, separates the fractions.
+            offered_mbps: Some(12.0),
+            arrival: ArrivalKind::Poisson,
+            burst: 4,
+            blocks_per_chip: 64,
+            migrate_free_blocks: 4,
+            steady: false,
+            over_provision: 0.07,
+            seed: 0xDD12_7A5D,
+        }
+    }
+}
+
+/// One measured point of the E8 tiered sweep.
+#[derive(Debug, Clone)]
+pub struct TieredCell {
+    pub iface: InterfaceKind,
+    pub ways: u16,
+    /// SLC-tier chip fraction of the grid point (0 = tiering disabled).
+    pub slc_fraction: f64,
+    pub report: SimReport,
+}
+
+/// The configuration of one E8 grid point — shared by the driver and the
+/// CLI's pre-flight validation so the two can never disagree. Returns the
+/// config or every problem `SsdConfig::validate` found with it (e.g. the
+/// tiering capacity-feasibility rule).
+pub fn tiered_point_config(
+    spec: &TieredSweepSpec,
+    iface: InterfaceKind,
+    ways: u16,
+    fraction: f64,
+) -> Result<SsdConfig, Vec<String>> {
+    assert!(
+        (0.0..=1.0).contains(&fraction),
+        "SLC-tier fraction {fraction} out of [0, 1]"
+    );
+    let mut c = cfg(iface, CellType::Mlc, spec.channels, ways);
+    c.blocks_per_chip = spec.blocks_per_chip;
+    c.seed = spec.seed;
+    if fraction > 0.0 {
+        c.tiering.enabled = true;
+        c.tiering.slc_fraction = fraction;
+        c.tiering.migrate_free_blocks = spec.migrate_free_blocks;
+    }
+    if spec.steady {
+        c.steady.enabled = true;
+        c.steady.over_provision = spec.over_provision;
+    }
+    if let Some(offered) = spec.offered_mbps {
+        c.load.offered_mbps = Some(offered);
+        c.load.arrival = spec.arrival;
+        c.load.burst = spec.burst;
+    }
+    let errs = c.validate();
+    if errs.is_empty() {
+        Ok(c)
+    } else {
+        Err(errs)
+    }
+}
+
+/// E8 — tiered-flash sweep: SLC-tier fraction × interface × way count at
+/// fixed total capacity. The caller (CLI) pre-validates each grid point
+/// via [`tiered_point_config`]; an invalid point here is a bug and
+/// panics.
+pub fn run_tiered_sweep(spec: &TieredSweepSpec, pool: &ThreadPool) -> Vec<TieredCell> {
+    assert!(!spec.ways.is_empty(), "need at least one way count");
+    assert!(!spec.ifaces.is_empty(), "need at least one interface");
+    assert!(
+        !spec.slc_fractions.is_empty(),
+        "need at least one SLC-tier fraction"
+    );
+    let mut jobs = Vec::new();
+    let mut meta = Vec::new();
+    for iface in &spec.ifaces {
+        for &ways in &spec.ways {
+            for &fraction in &spec.slc_fractions {
+                let c = tiered_point_config(spec, *iface, ways, fraction)
+                    .unwrap_or_else(|e| panic!("tiered sweep point invalid: {e:?}"));
+                let requests = spec.requests;
+                meta.push((*iface, ways, fraction));
+                jobs.push(move |ws: &mut SimWorkspace| {
+                    Campaign::new(c, RequestKind::Write, requests).run_in(ws)
+                });
+            }
+        }
+    }
+    let reports = pool.run_all_with(jobs, SimWorkspace::new);
+    meta.into_iter()
+        .zip(reports)
+        .map(|((iface, ways, slc_fraction), report)| TieredCell {
+            iface,
+            ways,
+            slc_fraction,
+            report,
+        })
+        .collect()
+}
+
+/// Render the tiered sweep as a table plus a per-configuration
+/// pure-MLC-vs-tiered-vs-pure-SLC latency summary. In CSV mode only the
+/// machine-readable table is emitted.
+pub fn render_tiered_sweep(title: &str, cells: &[TieredCell], csv: bool) -> String {
+    let mut t = Table::new(vec![
+        "iface", "ways", "slc_frac", "achieved", "p50_us", "p99_us", "waf", "mig_prog",
+        "mig_read", "erases",
+    ]);
+    for c in cells {
+        t.row(vec![
+            c.iface.name().to_string(),
+            c.ways.to_string(),
+            format!("{:.2}", c.slc_fraction),
+            format!("{:.2}", c.report.bandwidth_mbps),
+            format!("{:.1}", c.report.latency_p50_us),
+            format!("{:.1}", c.report.latency_p99_us),
+            format!("{:.3}", c.report.waf),
+            c.report.mig_pages_programmed.to_string(),
+            c.report.mig_pages_read.to_string(),
+            c.report.blocks_erased.to_string(),
+        ]);
+    }
+    if csv {
+        return t.to_csv();
+    }
+    let mut out = format!("{title}\n\n{}\n", t.render());
+    let mut seen: Vec<(InterfaceKind, u16)> = Vec::new();
+    for c in cells {
+        if !seen.contains(&(c.iface, c.ways)) {
+            seen.push((c.iface, c.ways));
+        }
+    }
+    out.push_str("write p50 across the SLC-fraction grid (first -> last point):\n");
+    for (iface, ways) in seen {
+        let pts: Vec<&TieredCell> = cells
+            .iter()
+            .filter(|c| c.iface == iface && c.ways == ways)
+            .collect();
+        let (first, last) = (pts.first().expect("seen implies cells"), pts.last().unwrap());
+        out.push_str(&format!(
+            "  {:<9} x{:<2} way: frac {:.2} -> {:.2}: p50 {:.1} -> {:.1} us, WAF {:.3} -> {:.3}\n",
+            iface.name(),
+            ways,
+            first.slc_fraction,
+            last.slc_fraction,
+            first.report.latency_p50_us,
+            last.report.latency_p50_us,
+            first.report.waf,
+            last.report.waf,
+        ));
+    }
+    out
+}
+
 /// E5 — §6 headline: min/max PROPOSED/CONV ratios from Table 3 cells.
 pub fn headline(cells: &[Cell]) -> String {
     let mut out = String::from("E5 / §6 headline — PROPOSED/CONV ratio ranges (paper: SLC read 1.65–2.76x, write 1.09–2.45x; MLC read 1.64–2.66x, write 1.05–1.76x)\n\n");
@@ -656,6 +856,35 @@ mod tests {
         assert!(rendered.contains("PROPOSED"));
         let csv = render_steady_sweep("t", &cells, true);
         assert!(csv.contains("iface,ways,op,waf"));
+    }
+
+    #[test]
+    fn tiered_sweep_grid_shape_and_rendering() {
+        let pool = ThreadPool::new(0);
+        let spec = TieredSweepSpec {
+            ways: vec![2],
+            slc_fractions: vec![0.0, 0.5],
+            ifaces: vec![InterfaceKind::Proposed],
+            requests: 12,
+            offered_mbps: None, // closed loop keeps the unit test fast
+            blocks_per_chip: 64,
+            ..TieredSweepSpec::default()
+        };
+        let cells = run_tiered_sweep(&spec, &pool);
+        assert_eq!(cells.len(), 1 * 1 * 2); // 1 iface x 1 way count x 2 fractions
+        for c in &cells {
+            assert!(c.report.bandwidth_mbps > 0.0);
+            assert!(c.report.requests == 12);
+        }
+        // The fraction-0 baseline is a plain MLC drive.
+        let base = cells.iter().find(|c| c.slc_fraction == 0.0).unwrap();
+        assert_eq!(base.report.mig_pages_programmed, 0);
+        assert_eq!(base.report.waf, 1.0);
+        let rendered = render_tiered_sweep("t", &cells, false);
+        assert!(rendered.contains("SLC-fraction grid"));
+        assert!(rendered.contains("PROPOSED"));
+        let csv = render_tiered_sweep("t", &cells, true);
+        assert!(csv.contains("iface,ways,slc_frac"));
     }
 
     #[test]

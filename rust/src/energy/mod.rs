@@ -40,6 +40,20 @@ impl PowerModel {
             nand_read_nj_per_page: 10.0,
         }
     }
+
+    /// Controller power of a tiered drive whose two NAND_IF clusters run
+    /// (possibly) different interface kinds: the controller clocks the
+    /// faster domain, so the active power is the larger of the two
+    /// per-interface constants. With equal kinds this is exactly
+    /// [`for_interface`](Self::for_interface).
+    pub fn for_tiered(slc_iface: InterfaceKind, mlc_iface: InterfaceKind) -> PowerModel {
+        let a = PowerModel::for_interface(slc_iface);
+        let b = PowerModel::for_interface(mlc_iface);
+        PowerModel {
+            controller_mw: a.controller_mw.max(b.controller_mw),
+            ..a
+        }
+    }
 }
 
 /// Accumulated energy over a simulation run.
@@ -51,6 +65,9 @@ pub struct EnergyMeter {
     /// the energy face of write amplification (steady-state accounting;
     /// zero on fresh-drive runs).
     pub gc_nj: f64,
+    /// Subset of `nand_nj` spent on SLC→MLC tier-migration programs
+    /// (disjoint from `gc_nj`; zero when tiering is disabled).
+    pub mig_nj: f64,
     pub bytes: u64,
 }
 
@@ -77,6 +94,14 @@ impl EnergyMeter {
         self.gc_nj += model.nand_prog_nj_per_page * pages as f64;
     }
 
+    /// Attribute `pages` already-counted programs to SLC→MLC tier
+    /// migration. Like [`add_gc_program`](Self::add_gc_program), this
+    /// splits already-metered energy — call in addition to
+    /// [`add_nand_program`](Self::add_nand_program).
+    pub fn add_mig_program(&mut self, model: &PowerModel, pages: u64) {
+        self.mig_nj += model.nand_prog_nj_per_page * pages as f64;
+    }
+
     /// Fraction of NAND array energy spent on GC/WL copy-back programs
     /// (0 when no NAND energy was spent).
     pub fn gc_share(&self) -> f64 {
@@ -84,6 +109,16 @@ impl EnergyMeter {
             0.0
         } else {
             self.gc_nj / self.nand_nj
+        }
+    }
+
+    /// Fraction of NAND array energy spent on tier-migration programs
+    /// (0 when no NAND energy was spent).
+    pub fn mig_share(&self) -> f64 {
+        if self.nand_nj == 0.0 {
+            0.0
+        } else {
+            self.mig_nj / self.nand_nj
         }
     }
 
@@ -167,6 +202,34 @@ mod tests {
         assert!((m.nand_nj - 330.0).abs() < 1e-9, "split must not add");
         assert!((m.gc_share() - 0.4).abs() < 1e-12, "share={}", m.gc_share());
         assert!(m.gc_share() <= 1.0);
+    }
+
+    /// Tiered controller power is the max of the two tier interfaces, and
+    /// collapses to the plain per-interface model when the tiers agree.
+    #[test]
+    fn tiered_power_takes_faster_domain() {
+        let same = PowerModel::for_tiered(InterfaceKind::Conv, InterfaceKind::Conv);
+        assert_eq!(same, PowerModel::for_interface(InterfaceKind::Conv));
+        let mixed = PowerModel::for_tiered(InterfaceKind::Conv, InterfaceKind::Proposed);
+        assert_eq!(
+            mixed.controller_mw,
+            PowerModel::for_interface(InterfaceKind::Proposed).controller_mw
+        );
+    }
+
+    /// Migration energy splits like GC energy and the two shares are
+    /// disjoint.
+    #[test]
+    fn mig_share_splits_program_energy() {
+        let model = PowerModel::for_interface(InterfaceKind::Conv);
+        let mut m = EnergyMeter::default();
+        m.add_nand_program(&model, 10);
+        m.add_gc_program(&model, 2);
+        m.add_mig_program(&model, 3);
+        assert!((m.nand_nj - 330.0).abs() < 1e-9, "splits must not add");
+        assert!((m.gc_share() - 0.2).abs() < 1e-12);
+        assert!((m.mig_share() - 0.3).abs() < 1e-12);
+        assert!(m.gc_share() + m.mig_share() <= 1.0);
     }
 
     #[test]

@@ -137,16 +137,84 @@ impl IfaceParams {
         }
     }
 
-    /// The paper's frequency setting rule (§5.2): the operating frequency is
-    /// t_P,min rounded **down** to a whole MHz (19.81 ns → 50 MHz,
-    /// 12 ns → 83 MHz).
+    /// The paper's frequency setting rule (§5.2) with its failure modes
+    /// surfaced: the operating frequency is t_P,min rounded **down** to a
+    /// whole MHz (19.81 ns → 50 MHz, 12 ns → 83 MHz). Degenerate parameter
+    /// sets (all-zero timings from a hand-edited TOML, negative deltas)
+    /// produce a non-positive or non-finite t_P,min — the unchecked floor
+    /// then yields 0 MHz or an absurd clock and a divide-by-zero in
+    /// [`operating_tp_ns`](Self::operating_tp_ns); those return `Err` here.
+    pub fn checked_operating_freq_mhz(&self, kind: InterfaceKind) -> Result<u32, String> {
+        let tp = self.tp_min_ns(kind);
+        if !tp.is_finite() || tp <= 0.0 {
+            return Err(format!(
+                "{kind}: t_P,min = {tp} ns is not a positive finite period \
+                 (degenerate interface parameters)"
+            ));
+        }
+        let freq = (1000.0 / tp).floor();
+        if freq < 1.0 {
+            return Err(format!(
+                "{kind}: t_P,min = {tp:.2} ns rounds down to 0 MHz (period above 1 µs)"
+            ));
+        }
+        Ok(freq as u32)
+    }
+
+    /// Unchecked convenience over
+    /// [`checked_operating_freq_mhz`](Self::checked_operating_freq_mhz).
+    /// Panics on degenerate parameters — config loading runs
+    /// [`validate`](Self::validate) first, so a parameter set that reaches
+    /// the simulator can never trip this.
     pub fn operating_freq_mhz(&self, kind: InterfaceKind) -> u32 {
-        (1000.0 / self.tp_min_ns(kind)).floor() as u32
+        self.checked_operating_freq_mhz(kind)
+            .expect("degenerate IfaceParams reached frequency derivation")
     }
 
     /// Operating clock period in ns from the whole-MHz frequency.
     pub fn operating_tp_ns(&self, kind: InterfaceKind) -> f64 {
         1000.0 / self.operating_freq_mhz(kind) as f64
+    }
+
+    /// Validate the parameter set: every timing must be finite and
+    /// non-negative, the t_BYTE floor strictly positive, and each
+    /// interface's derived operating frequency well-defined. Returns every
+    /// problem found (empty = ok); `SsdConfig::validate` folds these into
+    /// config-load errors, so degenerate TOML is rejected before any
+    /// simulator is built.
+    pub fn validate(&self) -> Vec<String> {
+        let mut errs = Vec::new();
+        let fields = [
+            ("t_out_ns", self.t_out_ns),
+            ("t_in_ns", self.t_in_ns),
+            ("t_s_ns", self.t_s_ns),
+            ("t_h_ns", self.t_h_ns),
+            ("t_diff_ns", self.t_diff_ns),
+            ("t_rea_ns", self.t_rea_ns),
+            ("t_byte_ns", self.t_byte_ns),
+            ("alpha", self.alpha),
+            ("t_ios_ns", self.t_ios_ns),
+            ("t_ioh_ns", self.t_ioh_ns),
+        ];
+        for (name, v) in fields {
+            if !v.is_finite() || v < 0.0 {
+                errs.push(format!("params.{name} must be finite and >= 0, got {v}"));
+            }
+        }
+        if !(self.t_byte_ns > 0.0) {
+            errs.push(format!(
+                "params.t_byte_ns must be > 0 (device floor on t_P), got {}",
+                self.t_byte_ns
+            ));
+        }
+        if errs.is_empty() {
+            for kind in InterfaceKind::ALL {
+                if let Err(e) = self.checked_operating_freq_mhz(kind) {
+                    errs.push(e);
+                }
+            }
+        }
+        errs
     }
 
     /// Per-byte data transfer time on the bus at the operating point:
@@ -230,6 +298,57 @@ mod tests {
             assert!(tp <= last + 1e-12, "not monotone at alpha={alpha}");
             last = tp;
         }
+    }
+
+    /// Regression: degenerate parameter sets (the all-zero TOML case, huge
+    /// periods, NaN) must fail the checked derivation and `validate`
+    /// instead of producing a 0 MHz clock and a later divide-by-zero.
+    #[test]
+    fn degenerate_params_rejected_not_divided_by() {
+        // All-zero timings: t_P,min collapses to 0.
+        let zero = IfaceParams {
+            t_out_ns: 0.0,
+            t_in_ns: 0.0,
+            t_s_ns: 0.0,
+            t_h_ns: 0.0,
+            t_diff_ns: 0.0,
+            t_rea_ns: 0.0,
+            t_byte_ns: 0.0,
+            alpha: 0.0,
+            t_ios_ns: 0.0,
+            t_ioh_ns: 0.0,
+        };
+        for kind in InterfaceKind::ALL {
+            assert!(zero.checked_operating_freq_mhz(kind).is_err(), "{kind}");
+        }
+        assert!(!zero.validate().is_empty());
+        // A period above 1 µs floors to 0 MHz: checked, not divided by.
+        let slow = IfaceParams {
+            t_byte_ns: 1500.0,
+            ..IfaceParams::default()
+        };
+        assert!(slow
+            .checked_operating_freq_mhz(InterfaceKind::Proposed)
+            .unwrap_err()
+            .contains("0 MHz"));
+        assert!(!slow.validate().is_empty());
+        // Negative and non-finite fields are named in the report.
+        let neg = IfaceParams {
+            t_rea_ns: -3.0,
+            ..IfaceParams::default()
+        };
+        assert!(neg.validate().iter().any(|e| e.contains("t_rea_ns")));
+        let nan = IfaceParams {
+            t_diff_ns: f64::NAN,
+            ..IfaceParams::default()
+        };
+        assert!(!nan.validate().is_empty());
+        // The paper's parameters stay clean.
+        assert!(IfaceParams::default().validate().is_empty());
+        assert_eq!(
+            IfaceParams::default().checked_operating_freq_mhz(InterfaceKind::Conv),
+            Ok(50)
+        );
     }
 
     #[test]

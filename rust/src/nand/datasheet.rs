@@ -85,6 +85,23 @@ impl NandTiming {
     pub fn transfer_bytes(&self) -> u32 {
         self.page_bytes + self.spare_bytes
     }
+
+    /// SLC-mode timing on *this* device's geometry: the SLC datasheet's
+    /// array latencies (t_R / t_PROG / t_BERS) with the host device's page
+    /// and block shape unchanged. This is the per-tier timing of the
+    /// tiered-flash subsystem — an MLC-capable chip driven with fast
+    /// single-level programming (SLC-mode write buffering, as in
+    /// SLC/MLC combined-flash SSDs). Keeping the geometry uniform is what
+    /// lets one [`crate::nand::geometry::Geometry`] address both tiers.
+    pub fn slc_mode(self) -> NandTiming {
+        let slc = NandTiming::slc();
+        NandTiming {
+            t_r: slc.t_r,
+            t_prog: slc.t_prog,
+            t_bers: slc.t_bers,
+            ..self
+        }
+    }
 }
 
 #[cfg(test)]
@@ -115,5 +132,21 @@ mod tests {
     fn for_cell_dispatch() {
         assert_eq!(NandTiming::for_cell(CellType::Slc), NandTiming::slc());
         assert_eq!(NandTiming::for_cell(CellType::Mlc), NandTiming::mlc());
+    }
+
+    /// SLC-mode keeps the host geometry (addressing stays uniform across
+    /// tiers) while taking the SLC array latencies.
+    #[test]
+    fn slc_mode_swaps_latency_not_geometry() {
+        let m = NandTiming::mlc().slc_mode();
+        let s = NandTiming::slc();
+        assert_eq!(m.t_prog, s.t_prog);
+        assert_eq!(m.t_r, s.t_r);
+        assert_eq!(m.t_bers, s.t_bers);
+        assert_eq!(m.page_bytes, NandTiming::mlc().page_bytes);
+        assert_eq!(m.pages_per_block, NandTiming::mlc().pages_per_block);
+        assert_eq!(m.spare_bytes, NandTiming::mlc().spare_bytes);
+        // SLC-mode on an SLC device is the identity.
+        assert_eq!(NandTiming::slc().slc_mode(), NandTiming::slc());
     }
 }

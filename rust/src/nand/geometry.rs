@@ -63,9 +63,23 @@ impl Geometry {
         (within_chip * self.ways as u64 + a.way as u64) * self.channels as u64 + a.channel as u64
     }
 
-    /// Linear chip index of an address.
-    pub fn chip_index(&self, a: PageAddr) -> usize {
-        a.channel as usize * self.ways as usize + a.way as usize
+    /// Linear chip index of `(channel, way)` in FTL order. Sequential
+    /// ppns stripe across channels first (see [`Geometry::page_addr`]),
+    /// so chip `k` sits at channel `k % channels`, way `k / channels` —
+    /// the single definition every layer (FTL allocators, the
+    /// coordinator's tier/wear-leveling lookups) must share.
+    pub fn chip_of(&self, channel: u16, way: u16) -> usize {
+        way as usize * self.channels as usize + channel as usize
+    }
+
+    /// Inverse of [`Geometry::chip_of`]: the `(channel, way)` of a linear
+    /// chip index.
+    pub fn chip_addr(&self, chip: usize) -> (u16, u16) {
+        debug_assert!(chip < self.chips() as usize);
+        (
+            (chip % self.channels as usize) as u16,
+            (chip / self.channels as usize) as u16,
+        )
     }
 }
 
@@ -112,6 +126,22 @@ mod tests {
         for ppn in 4..8u64 {
             assert_eq!(g.page_addr(ppn).channel, (ppn % 4) as u16);
             assert_eq!(g.page_addr(ppn).way, 1);
+        }
+    }
+
+    /// chip_of/chip_addr round-trip and agree with page_addr's layout:
+    /// every page of a chip decomposes to that chip's (channel, way).
+    #[test]
+    fn chip_linearization_roundtrip_and_layout() {
+        let g = g();
+        for chip in 0..g.chips() as usize {
+            let (ch, way) = g.chip_addr(chip);
+            assert_eq!(g.chip_of(ch, way), chip);
+        }
+        for ppn in [0u64, 1, 5, 63, 1000, 131071] {
+            let a = g.page_addr(ppn);
+            let chip = g.chip_of(a.channel, a.way);
+            assert_eq!(g.chip_addr(chip), (a.channel, a.way), "ppn={ppn}");
         }
     }
 

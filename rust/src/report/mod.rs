@@ -127,6 +127,23 @@ pub fn summarize(r: &SimReport) -> String {
             r.gc_energy_share * 100.0
         ));
     }
+    if r.mig_pages_programmed > 0 || r.slc_reads + r.mlc_reads > 0 {
+        let share = if (r.slc_reads + r.mlc_reads) > 0 {
+            format!("{:.1}%", r.slc_read_share * 100.0)
+        } else {
+            "n/a".to_string()
+        };
+        s.push_str(&format!(
+            "\n  tiering: {} migration reads / {} programs, SLC read share {} \
+             ({} SLC / {} MLC), mig energy {:.1}%",
+            r.mig_pages_read,
+            r.mig_pages_programmed,
+            share,
+            r.slc_reads,
+            r.mlc_reads,
+            r.mig_energy_share * 100.0
+        ));
+    }
     s
 }
 

@@ -73,13 +73,21 @@ pub fn mean(xs: &[f64]) -> f64 {
 }
 
 /// Online (Welford) accumulator for streaming metrics.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct Welford {
     n: u64,
     mean: f64,
     m2: f64,
     min: f64,
     max: f64,
+}
+
+impl Default for Welford {
+    /// Same as [`Welford::new`] — a derived zeroed `min`/`max` would
+    /// corrupt the extrema of any positive sample stream.
+    fn default() -> Self {
+        Welford::new()
+    }
 }
 
 impl Welford {
@@ -122,11 +130,23 @@ impl Welford {
     pub fn stddev(&self) -> f64 {
         self.variance().sqrt()
     }
+    /// Smallest pushed value; NaN on an empty accumulator (consistent with
+    /// [`mean`](Self::mean) — the old ±∞ sentinels leaked straight into
+    /// BENCH JSON, which has no representation for them).
     pub fn min(&self) -> f64 {
-        self.min
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.min
+        }
     }
+    /// Largest pushed value; NaN on an empty accumulator (see [`min`](Self::min)).
     pub fn max(&self) -> f64 {
-        self.max
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.max
+        }
     }
 }
 
@@ -178,5 +198,23 @@ mod tests {
         assert!((w.stddev() - s.stddev).abs() < 1e-9);
         assert_eq!(w.min(), s.min);
         assert_eq!(w.max(), s.max);
+    }
+
+    /// Regression: an empty accumulator must report NaN across the board,
+    /// never the ±∞ seed sentinels (which are unrepresentable in JSON and
+    /// used to reach `bench.rs` emission verbatim).
+    #[test]
+    fn welford_empty_is_nan_not_infinite() {
+        let w = Welford::new();
+        assert_eq!(w.count(), 0);
+        assert!(w.mean().is_nan());
+        assert!(w.min().is_nan(), "empty min leaked {}", w.min());
+        assert!(w.max().is_nan(), "empty max leaked {}", w.max());
+        assert!(!w.min().is_infinite() && !w.max().is_infinite());
+        // One sample restores exact reporting.
+        let mut w = Welford::new();
+        w.push(3.5);
+        assert_eq!(w.min(), 3.5);
+        assert_eq!(w.max(), 3.5);
     }
 }

@@ -1,0 +1,139 @@
+//! DRAM-cache DES-path integration tests (`coordinator/ssd.rs`):
+//! dirty-eviction flush ordering on both the write and the read path,
+//! end-of-run dirty-page accounting (the shutdown-flush set), and the
+//! golden guarantee that cache-disabled runs are untouched by the LRU
+//! index rewrite — exercised through `SimWorkspace` reuse.
+
+use ddrnand::config::SsdConfig;
+use ddrnand::coordinator::campaign::{Campaign, SimWorkspace};
+use ddrnand::coordinator::ssd::SsdSim;
+use ddrnand::host::trace::{Request, RequestKind, TraceGen};
+use ddrnand::iface::timing::InterfaceKind;
+
+fn cfg(cache_pages: u32) -> SsdConfig {
+    let mut cfg = SsdConfig {
+        iface: InterfaceKind::Proposed,
+        channels: 1,
+        ways: 2,
+        blocks_per_chip: 256,
+        ..SsdConfig::default()
+    };
+    cfg.cache.capacity_pages = cache_pages;
+    cfg
+}
+
+fn writes(n: usize) -> Vec<Request> {
+    TraceGen::default()
+        .sequential(RequestKind::Write, n)
+        .requests
+}
+
+/// Write-path dirty evictions flush to NAND as internal traffic, ordered
+/// ahead of the request completion that caused them: with a cache smaller
+/// than the footprint, exactly the evicted portion reaches NAND.
+#[test]
+fn write_path_dirty_evictions_flush_to_nand() {
+    // 3 requests x 32 SLC pages = 96 dirty pages through a 32-page cache.
+    let mut sim = SsdSim::new(cfg(32), writes(3));
+    sim.run();
+    assert_eq!(sim.counters.requests_done, 3);
+    // 64 pages must have been evicted dirty and flushed; 32 stay cached.
+    assert_eq!(sim.counters.pages_programmed, 64);
+    assert_eq!(sim.counters.internal_pages, 64);
+    assert_eq!(sim.cache_dirty_pages().len(), 32);
+    // Flushes are host-attributed deferred data, never GC.
+    assert_eq!(sim.counters.gc_pages_programmed, 0);
+    assert_eq!(sim.waf(), 1.0);
+}
+
+/// Regression (read-path flush drop): a read miss whose eviction victim is
+/// dirty must flush that page to NAND *before* the miss fill. The pre-fix
+/// code silently discarded the flush — zero NAND programs, dirty data
+/// lost; this test fails on that code.
+#[test]
+fn read_miss_dirty_eviction_flushes_before_fill() {
+    // Cache holds 64 pages: one 64 KiB write (32 pages, dirty) + one read
+    // (32 pages, clean) fill it; the second read evicts the 32 dirty
+    // write pages.
+    let mut trace = writes(1); // lpns 0..32 at offset 0
+    let read_at = |mib: u64| Request {
+        kind: RequestKind::Read,
+        offset: mib * 1024 * 1024,
+        bytes: 65536,
+    };
+    trace.push(read_at(2));
+    trace.push(read_at(4));
+    // Queue depth 1 pins the order: write caches its pages, then the two
+    // reads fill and finally evict them.
+    let mut c = cfg(64);
+    c.queue_depth = 1;
+    let mut sim = SsdSim::new(c, trace);
+    sim.prefill_for_reads();
+    sim.run();
+    assert_eq!(sim.counters.requests_done, 3);
+    assert_eq!(
+        sim.counters.pages_programmed, 32,
+        "the 32 dirty write pages must be flushed by the read evictions"
+    );
+    assert_eq!(sim.counters.internal_pages, 32);
+    // The cache's own flush ledger agrees with the DES traffic.
+    assert_eq!(sim.counters.pages_read, 64);
+    assert!(sim.cache_dirty_pages().is_empty(), "all dirty pages evicted");
+}
+
+/// Shutdown accounting: what the run leaves dirty in DRAM is exactly the
+/// written footprint minus what eviction already flushed — the set a
+/// power-down flush would write (conservation of host pages).
+#[test]
+fn shutdown_dirty_set_conserves_host_pages() {
+    let mut sim = SsdSim::new(cfg(4096), writes(4)); // cache > footprint
+    sim.run();
+    let host_pages = 4 * 32u64;
+    assert_eq!(sim.counters.pages_programmed, 0, "nothing evicted");
+    let dirty = sim.cache_dirty_pages();
+    assert_eq!(dirty.len() as u64, host_pages);
+    // Sorted, contiguous lpns from offset 0.
+    assert_eq!(dirty, (0..host_pages).collect::<Vec<u64>>());
+    // Small cache: flushed + still-dirty = host pages, bit for bit.
+    let mut sim = SsdSim::new(cfg(32), writes(4));
+    sim.run();
+    assert_eq!(
+        sim.counters.pages_programmed + sim.cache_dirty_pages().len() as u64,
+        host_pages
+    );
+}
+
+/// Golden: cache-disabled runs are bit-identical before/after the LRU
+/// rewrite — pinned by fingerprint equality between a fresh simulator and
+/// one reused (via the workspace) after cache-enabled runs dirtied it.
+#[test]
+fn cache_disabled_runs_bit_identical_through_reuse() {
+    let fingerprint = |c: SsdConfig| {
+        let mut ws = SimWorkspace::new();
+        let r = Campaign::new(c, RequestKind::Write, 40).run_in(&mut ws);
+        (
+            r.events,
+            r.sim_time,
+            r.pages_programmed,
+            r.bandwidth_mbps.to_bits(),
+            r.latency_p99_us.to_bits(),
+        )
+    };
+    let fresh = fingerprint(cfg(0));
+    // Same geometry key: the cached → uncached switch reuses the simulator.
+    let mut ws = SimWorkspace::new();
+    let cached = Campaign::new(cfg(64), RequestKind::Write, 40).run_in(&mut ws);
+    assert!(cached.pages_programmed > 0, "the tiny cache must flush");
+    let reused = Campaign::new(cfg(0), RequestKind::Write, 40).run_in(&mut ws);
+    assert!(ws.reuses >= 1, "the cache switch must not rebuild");
+    assert_eq!(
+        fresh,
+        (
+            reused.events,
+            reused.sim_time,
+            reused.pages_programmed,
+            reused.bandwidth_mbps.to_bits(),
+            reused.latency_p99_us.to_bits(),
+        )
+    );
+}

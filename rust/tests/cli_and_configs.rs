@@ -62,6 +62,36 @@ fn cli_sweep_steady_succeeds() {
 }
 
 #[test]
+fn cli_sweep_tiered_succeeds() {
+    assert_eq!(
+        cli::run(&argv(
+            "sweep-tiered --requests 10 --ways 2 --fractions 0,0.5 --offered-mbps 0 --csv"
+        )),
+        0
+    );
+}
+
+#[test]
+fn cli_sweep_tiered_rejects_bad_flags() {
+    assert_eq!(cli::run(&argv("sweep-tiered --fractions 1.5")), 1);
+    assert_eq!(cli::run(&argv("sweep-tiered --ways 0")), 1);
+    assert_eq!(cli::run(&argv("sweep-tiered --blocks 8")), 1);
+    assert_eq!(cli::run(&argv("sweep-tiered --migrate-free 2")), 1);
+    assert_eq!(cli::run(&argv("sweep-tiered --ifaces quantum")), 1);
+    assert_eq!(cli::run(&argv("sweep-tiered --ways 1")), 1);
+    assert_eq!(cli::run(&argv("sweep-tiered --arrival uniform")), 1);
+    assert_eq!(cli::run(&argv("sweep-tiered --steady --op 0.9")), 1);
+    // Capacity-infeasible grid point (tiny SLC tier, tight OP): must be a
+    // clean pre-flight error, not a mid-sweep panic.
+    assert_eq!(
+        cli::run(&argv(
+            "sweep-tiered --steady --op 0.1 --blocks 32 --ways 8 --fractions 0.125"
+        )),
+        1
+    );
+}
+
+#[test]
 fn cli_sweep_steady_rejects_bad_flags() {
     assert_eq!(cli::run(&argv("sweep-steady --op 0.9")), 1);
     assert_eq!(cli::run(&argv("sweep-steady --ways 0")), 1);

@@ -1,0 +1,218 @@
+//! Tiered-flash subsystem integration tests (E8): the SLC-fraction sweep
+//! headline (tiered beats pure-MLC write latency, converging to pure-SLC
+//! as the fraction grows, on both CONV and PROPOSED), migration under a
+//! full campaign, composition with the steady-state GC regime, and the
+//! golden guarantee that a disabled `[tiering]` section leaves every run
+//! bit-identical through `SimWorkspace` reuse.
+
+use ddrnand::config::SsdConfig;
+use ddrnand::coordinator::campaign::{Campaign, SimReport, SimWorkspace};
+use ddrnand::coordinator::experiments::{run_tiered_sweep, TieredSweepSpec};
+use ddrnand::coordinator::pool::ThreadPool;
+use ddrnand::host::trace::RequestKind;
+use ddrnand::iface::timing::InterfaceKind;
+use ddrnand::nand::datasheet::CellType;
+
+fn tiered_cfg(iface: InterfaceKind, ways: u16, slc_fraction: f64) -> SsdConfig {
+    let mut cfg = SsdConfig {
+        iface,
+        cell: CellType::Mlc,
+        channels: 1,
+        ways,
+        blocks_per_chip: 64,
+        ..SsdConfig::default()
+    };
+    if slc_fraction > 0.0 {
+        cfg.tiering.enabled = true;
+        cfg.tiering.slc_fraction = slc_fraction;
+    }
+    cfg
+}
+
+/// The E8 headline: at fixed total capacity under an offered write load
+/// both partitions sustain, the tiered drive's write p50 beats pure MLC
+/// and converges toward pure SLC as the SLC-tier fraction grows — for
+/// CONV and PROPOSED alike.
+#[test]
+fn e8_fraction_sweep_orders_write_latency() {
+    for iface in [InterfaceKind::Conv, InterfaceKind::Proposed] {
+        let run = |fraction: f64| {
+            let mut cfg = tiered_cfg(iface, 4, fraction);
+            cfg.load.offered_mbps = Some(12.0);
+            cfg.seed = 0xE8;
+            Campaign::new(cfg, RequestKind::Write, 100).run()
+        };
+        let pure_mlc = run(0.0);
+        let tiered = run(0.5);
+        let pure_slc = run(1.0);
+        assert_eq!(pure_mlc.mig_pages_programmed, 0);
+        assert_eq!(pure_mlc.waf, 1.0);
+        assert!(
+            tiered.latency_p50_us < pure_mlc.latency_p50_us,
+            "{iface}: tiered p50 must beat pure MLC: {} vs {} us",
+            tiered.latency_p50_us,
+            pure_mlc.latency_p50_us
+        );
+        assert!(
+            pure_slc.latency_p50_us < tiered.latency_p50_us,
+            "{iface}: all-SLC p50 must undercut the half partition: {} vs {} us",
+            pure_slc.latency_p50_us,
+            tiered.latency_p50_us
+        );
+        assert!(
+            pure_slc.latency_p50_us < pure_mlc.latency_p50_us,
+            "{iface}: the sweep must span MLC down to SLC latency"
+        );
+    }
+}
+
+/// A campaign whose sequential volume overflows the SLC tier migrates
+/// through the real DES: migration counters populate, WAF rises above 1,
+/// and reading everything back hits both tiers.
+#[test]
+fn overflowing_campaign_migrates_and_reads_back_from_both_tiers() {
+    let mut cfg = tiered_cfg(InterfaceKind::Proposed, 2, 0.5);
+    cfg.blocks_per_chip = 16; // SLC tier: 1 chip x 16 blocks x 128 pages = 8 MiB
+    let mut ws = SimWorkspace::new();
+    // 180 x 64 KiB = 11.25 MiB of writes into an 8 MiB SLC tier.
+    let w = Campaign::new(cfg.clone(), RequestKind::Write, 180).run_in(&mut ws);
+    assert_eq!(w.requests, 180);
+    assert!(w.mig_pages_programmed > 0, "the fill must overflow the SLC tier");
+    assert_eq!(w.mig_pages_read, w.mig_pages_programmed);
+    assert!(w.waf > 1.0, "migration is write amplification: {}", w.waf);
+    assert!(w.mig_energy_share > 0.0 && w.mig_energy_share < 1.0);
+    // Read the same span back: the cold prefix was migrated to MLC, the
+    // hot tail still lives in SLC.
+    let r = Campaign::new(cfg, RequestKind::Read, 180).run_in(&mut ws);
+    assert_eq!(r.requests, 180);
+    assert!(r.slc_reads > 0, "recent data must be read from the SLC tier");
+    assert!(r.mlc_reads > 0, "migrated data must be read from the MLC tier");
+    assert!(r.slc_read_share > 0.0 && r.slc_read_share < 1.0);
+}
+
+/// Tiering composes with the steady-state regime: a preconditioned drive
+/// under sustained random writes runs GC and migration in one simulation,
+/// and both kinds of copy-back traffic are accounted separately.
+#[test]
+fn steady_plus_tiering_compose_gc_and_migration() {
+    let mut cfg = tiered_cfg(InterfaceKind::Proposed, 2, 0.5);
+    cfg.steady.enabled = true;
+    cfg.steady.over_provision = 0.15;
+    let r = Campaign::new(cfg, RequestKind::Write, 400).run();
+    assert_eq!(r.requests, 400);
+    assert!(r.mig_pages_programmed > 0, "steady rewrites must migrate");
+    assert!(
+        r.gc_pages_programmed > 0,
+        "steady rewrites must also garbage-collect"
+    );
+    assert!(r.waf > 1.0, "waf={}", r.waf);
+    assert!(r.blocks_erased > 0);
+    // The amplification split stays disjoint: host programs + GC + WL +
+    // migration = all programs.
+    let internal = r.gc_pages_programmed + r.wl_pages_programmed + r.mig_pages_programmed;
+    assert!(internal < r.pages_programmed);
+    let host = r.pages_programmed - internal;
+    assert!((r.waf - r.pages_programmed as f64 / host as f64).abs() < 1e-12);
+}
+
+/// Per-tier interfaces: a tiered drive with a PROPOSED SLC tier in front
+/// of a CONV MLC tier migrates strictly faster than the all-CONV drive of
+/// the same shape (the DDR interface question answered per tier).
+#[test]
+fn per_tier_interface_speeds_up_the_slc_tier() {
+    let run = |slc_iface: Option<InterfaceKind>| {
+        let mut cfg = tiered_cfg(InterfaceKind::Conv, 2, 0.5);
+        cfg.blocks_per_chip = 16;
+        cfg.tiering.slc_iface = slc_iface;
+        let r = Campaign::new(cfg, RequestKind::Write, 180).run();
+        assert!(r.mig_pages_programmed > 0);
+        (r.latency_p50_us, r.bandwidth_mbps)
+    };
+    let (conv_p50, conv_bw) = run(None);
+    let (mixed_p50, mixed_bw) = run(Some(InterfaceKind::Proposed));
+    assert!(
+        mixed_p50 < conv_p50,
+        "a PROPOSED SLC tier must cut write p50 on a CONV drive: {mixed_p50} vs {conv_p50}"
+    );
+    assert!(mixed_bw > conv_bw);
+}
+
+fn fingerprint(r: &SimReport) -> (u64, i64, u64, u64, u64, u64, [u64; 5]) {
+    (
+        r.events,
+        r.sim_time.as_ps(),
+        r.pages_programmed,
+        r.pages_read,
+        r.mig_pages_programmed,
+        r.slc_reads + r.mlc_reads,
+        [
+            r.bandwidth_mbps.to_bits(),
+            r.energy_nj_per_byte.to_bits(),
+            r.waf.to_bits(),
+            r.latency_p50_us.to_bits(),
+            r.latency_p99_us.to_bits(),
+        ],
+    )
+}
+
+/// Golden guarantee: with `[tiering]` disabled nothing changes — fresh-
+/// drive and steady-state runs reproduce their pre-tiering fingerprints
+/// bit-identically through a `SimWorkspace` that also served tiered runs,
+/// and a dormant section (fields set, `enabled = false`) is inert.
+#[test]
+fn tiering_disabled_runs_bit_identical_through_workspace_reuse() {
+    let plain = SsdConfig {
+        channels: 1,
+        ways: 2,
+        blocks_per_chip: 64,
+        ..SsdConfig::default()
+    };
+    let mut steady = plain.clone();
+    steady.steady.enabled = true;
+    steady.steady.over_provision = 0.10;
+    let mut dormant = plain.clone();
+    dormant.tiering.slc_fraction = 0.5;
+    dormant.tiering.migrate_free_blocks = 8;
+    // Reference fingerprints from dedicated fresh workspaces.
+    let fresh_plain = Campaign::new(plain.clone(), RequestKind::Write, 60).run();
+    let fresh_steady = Campaign::new(steady.clone(), RequestKind::Write, 150).run();
+    // One shared workspace serves a tiered run between the golden runs.
+    let mut ws = SimWorkspace::new();
+    let tiered = Campaign::new(tiered_cfg(InterfaceKind::Proposed, 2, 0.5), RequestKind::Write, 60)
+        .run_in(&mut ws);
+    assert_eq!(tiered.cell, "MLC");
+    let again_plain = Campaign::new(dormant, RequestKind::Write, 60).run_in(&mut ws);
+    let again_steady = Campaign::new(steady, RequestKind::Write, 150).run_in(&mut ws);
+    assert_eq!(fingerprint(&fresh_plain), fingerprint(&again_plain));
+    assert_eq!(fingerprint(&fresh_steady), fingerprint(&again_steady));
+    assert_eq!(again_plain.mig_pages_programmed, 0);
+    assert_eq!(again_plain.slc_reads + again_plain.mlc_reads, 0);
+    assert!(again_plain.slc_read_share.is_nan());
+}
+
+/// The E8 driver is deterministic and its grid is ordered: same spec,
+/// same pool → bit-identical reports, fractions ordered per (iface, ways).
+#[test]
+fn e8_driver_deterministic_and_ordered() {
+    let spec = TieredSweepSpec {
+        ways: vec![2],
+        slc_fractions: vec![0.0, 0.5, 1.0],
+        ifaces: vec![InterfaceKind::Conv, InterfaceKind::Proposed],
+        requests: 30,
+        offered_mbps: Some(10.0),
+        blocks_per_chip: 64,
+        ..TieredSweepSpec::default()
+    };
+    let a = run_tiered_sweep(&spec, &ThreadPool::new(1));
+    let b = run_tiered_sweep(&spec, &ThreadPool::new(4));
+    assert_eq!(a.len(), 2 * 3);
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.iface, y.iface);
+        assert_eq!(x.slc_fraction, y.slc_fraction);
+        assert_eq!(fingerprint(&x.report), fingerprint(&y.report));
+    }
+    for pair in a.chunks(3) {
+        assert!(pair.windows(2).all(|w| w[0].slc_fraction < w[1].slc_fraction));
+    }
+}
