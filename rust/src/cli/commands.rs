@@ -3,10 +3,12 @@
 use crate::analytic;
 use crate::cli::args::Args;
 use crate::config::{ArrivalKind, SsdConfig, SteadyConfig};
+use crate::controller::sched::SchedKind;
 use crate::coordinator::campaign::run_trace;
 use crate::coordinator::experiments as exp;
 use crate::coordinator::pool::ThreadPool;
 use crate::dse;
+use crate::host::link::HostLinkKind;
 use crate::host::trace::{RequestKind, Trace, TraceGen};
 use crate::iface::timing::{IfaceParams, InterfaceKind};
 use crate::nand::datasheet::CellType;
@@ -446,6 +448,123 @@ pub fn cmd_sweep_tiered(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
+/// E9 — `ddrnand sweep-qos`: a latency-critical random-read tenant
+/// against a saturating bulk sequential-write tenant, swept over way
+/// scheduler × interface × way count; prints per-tenant achieved
+/// throughput, latency percentiles and the fairness index per point
+/// (EXPERIMENTS.md §QoS).
+pub fn cmd_sweep_qos(args: &mut Args) -> Result<()> {
+    let mut spec = exp::QosSweepSpec {
+        requests: requests(args)?,
+        ..exp::QosSweepSpec::default()
+    };
+    let p = pool(args)?;
+    spec.cell = match args.get("cell").as_deref() {
+        None | Some("slc") => CellType::Slc,
+        Some("mlc") => CellType::Mlc,
+        Some(other) => return Err(anyhow!("unknown --cell {other} (slc|mlc)")),
+    };
+    if let Some(w) = args.get("ways") {
+        spec.ways = w
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<u16>()
+                    .map_err(|e| anyhow!("--ways {s:?}: {e}"))
+            })
+            .collect::<Result<Vec<u16>>>()?;
+        if spec.ways.is_empty() || spec.ways.contains(&0) {
+            return Err(anyhow!("--ways needs a comma-separated list of counts >= 1"));
+        }
+    }
+    if let Some(i) = args.get("ifaces") {
+        spec.ifaces = i
+            .split(',')
+            .map(|s| match s.trim() {
+                "conv" => Ok(InterfaceKind::Conv),
+                "sync_only" => Ok(InterfaceKind::SyncOnly),
+                "proposed" => Ok(InterfaceKind::Proposed),
+                other => Err(anyhow!("--ifaces {other:?} (conv|sync_only|proposed)")),
+            })
+            .collect::<Result<Vec<InterfaceKind>>>()?;
+        if spec.ifaces.is_empty() {
+            return Err(anyhow!("--ifaces needs at least one interface"));
+        }
+    }
+    if let Some(s) = args.get("schedulers") {
+        spec.schedulers = s
+            .split(',')
+            .map(|v| {
+                SchedKind::parse(v.trim()).ok_or_else(|| {
+                    anyhow!("--schedulers {v:?} (round_robin|read_priority|weighted_qos)")
+                })
+            })
+            .collect::<Result<Vec<SchedKind>>>()?;
+        if spec.schedulers.is_empty() {
+            return Err(anyhow!("--schedulers needs at least one policy"));
+        }
+    }
+    if let Some(l) = args.get("link") {
+        spec.link = HostLinkKind::parse(&l)
+            .ok_or_else(|| anyhow!("--link {l:?} (sata|multi_queue)"))?;
+    }
+    spec.read_mbps = args
+        .get_f64("read-mbps", spec.read_mbps)
+        .map_err(anyhow::Error::msg)?;
+    spec.write_mbps = args
+        .get_f64("write-mbps", spec.write_mbps)
+        .map_err(anyhow::Error::msg)?;
+    if !(spec.read_mbps > 0.0 && spec.read_mbps.is_finite())
+        || !(spec.write_mbps > 0.0 && spec.write_mbps.is_finite())
+    {
+        return Err(anyhow!("--read-mbps and --write-mbps must be positive"));
+    }
+    spec.blocks_per_chip = args
+        .get_usize("blocks", spec.blocks_per_chip as usize)
+        .map_err(anyhow::Error::msg)? as u32;
+    if spec.blocks_per_chip < 16 {
+        return Err(anyhow!("--blocks must be >= 16"));
+    }
+    // Pre-flight every grid point through the shared config validation so
+    // an impossible combination is a clean error, not a mid-sweep panic.
+    for &iface in &spec.ifaces {
+        for &ways in &spec.ways {
+            for &sched in &spec.schedulers {
+                if let Err(errs) = exp::qos_point_config(&spec, iface, ways, sched) {
+                    return Err(anyhow!(
+                        "sweep point ({iface}, {ways} ways, {}) is invalid: {}",
+                        sched.name(),
+                        errs.join("; ")
+                    ));
+                }
+            }
+        }
+    }
+    let csv = args.has("csv");
+    let cells = exp::run_qos_sweep(&spec, &p);
+    println!(
+        "{}",
+        exp::render_qos_sweep(
+            &format!(
+                "E9 — QoS sweep ({} read tenant {:.1} MB/s vs write tenant {:.1} MB/s, {} link, \
+                 {}; per-tenant latency and fairness vs way-scheduling policy)",
+                spec.cell.name(),
+                spec.read_mbps,
+                spec.write_mbps,
+                spec.link.name(),
+                if spec.channels == 1 {
+                    "1-channel".to_string()
+                } else {
+                    format!("{}-channel", spec.channels)
+                },
+            ),
+            &cells,
+            csv
+        )
+    );
+    Ok(())
+}
+
 pub fn cmd_dse(args: &mut Args) -> Result<()> {
     let mut space = dse::Space::default();
     if args.has("sweep-tbyte") {
@@ -583,6 +702,19 @@ pub fn cmd_replay(args: &mut Args) -> Result<()> {
         }
         None => SsdConfig::default(),
     };
+    // A v3 trace's stream ids must fit the config's submission queues:
+    // catch the mismatch here as a clean error instead of the simulator's
+    // assert.
+    if cfg.host.link == HostLinkKind::MultiQueue
+        && trace.stream_count() > cfg.host.queues as usize
+    {
+        return Err(anyhow!(
+            "trace uses {} streams but the config's host.queues is {} — raise \
+             host.queues or retag the trace",
+            trace.stream_count(),
+            cfg.host.queues
+        ));
+    }
     // Report both DES measurement and the analytic prediction.
     let rep = run_trace(&cfg, &trace);
     println!("{}", report::summarize(&rep));

@@ -11,6 +11,7 @@
 //! ddrnand sweep-load [...]            E6: open-loop offered-load sweep
 //! ddrnand sweep-steady [...]          E7: steady-state GC/WAF sweep
 //! ddrnand sweep-tiered [...]          E8: tiered SLC/MLC fraction sweep
+//! ddrnand sweep-qos [...]             E9: multi-tenant QoS scheduler sweep
 //! ddrnand dse [--sweep-tbyte] [--native]   DSE through the AOT artifact
 //! ddrnand pvt [--margin X]            A3: PVT Monte Carlo ablation
 //! ddrnand simulate --config FILE      one simulation from a TOML config
@@ -45,6 +46,7 @@ pub fn run(argv: &[String]) -> i32 {
         "sweep-load" => commands::cmd_sweep_load(&mut args),
         "sweep-steady" => commands::cmd_sweep_steady(&mut args),
         "sweep-tiered" => commands::cmd_sweep_tiered(&mut args),
+        "sweep-qos" => commands::cmd_sweep_qos(&mut args),
         "dse" => commands::cmd_dse(&mut args),
         "pvt" => commands::cmd_pvt(&mut args),
         "simulate" => commands::cmd_simulate(&mut args),
@@ -83,6 +85,7 @@ SUBCOMMANDS
   sweep-load       E6: open-loop offered-load sweep (latency under load)
   sweep-steady     E7: steady-state GC sweep (WAF, wear, GC tax on p99)
   sweep-tiered     E8: tiered SLC/MLC sweep (write latency vs SLC-tier fraction)
+  sweep-qos        E9: multi-tenant QoS sweep (per-tenant p99 vs way scheduler)
   dse              design-space exploration via the AOT analytic model
   pvt              A3: PVT Monte Carlo ablation
   simulate         run one simulation from a TOML config
@@ -129,6 +132,16 @@ SWEEP-TIERED FLAGS
   --migrate-free N SLC free-block threshold that triggers migration (default 4)
   --steady         compose with the [steady] regime (preconditioned random writes)
   --op X           over-provisioning fraction for --steady (default 0.07)
+
+SWEEP-QOS FLAGS
+  --cell C         flash cell: slc|mlc (default slc)
+  --ways LIST      comma-separated way counts (default 4)
+  --ifaces LIST    interfaces to sweep (default conv,proposed)
+  --schedulers LIST  way schedulers: round_robin|read_priority|weighted_qos (default all)
+  --link KIND      host link: sata|multi_queue (default multi_queue)
+  --read-mbps X    latency-critical read tenant offered load (default 4)
+  --write-mbps X   bulk write tenant offered load (default 55, saturating)
+  --blocks N       blocks per chip (default 512)
 "
     .to_string()
 }

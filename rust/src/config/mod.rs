@@ -3,10 +3,18 @@
 pub mod toml;
 
 use crate::controller::cache::CacheConfig;
+use crate::controller::sched::SchedKind;
+use crate::host::link::{HostLinkKind, QueueArb};
 use crate::host::sata::SataGen;
+use crate::host::trace::NUM_CLASSES;
 use crate::iface::timing::{IfaceParams, InterfaceKind};
 use crate::nand::datasheet::{CellType, NandTiming};
 use crate::util::time::Ps;
+
+/// Default per-class weights (urgent, normal, bulk, background), shared by
+/// the host-side weighted queue arbitration and the `WeightedQos` way
+/// scheduler.
+pub const DEFAULT_CLASS_WEIGHTS: [u32; NUM_CLASSES] = [8, 4, 2, 1];
 
 /// Which FTL mapping scheme to use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -189,6 +197,90 @@ impl TieringConfig {
     }
 }
 
+/// Host-interface knobs (`[host]` in TOML). The default — a single SATA
+/// stream — is bit-identical to the pre-multi-queue simulator
+/// (golden-tested); selecting `multi_queue` switches the front end to N
+/// NVMe-style submission queues with a per-queue depth and pluggable
+/// queue arbitration (DESIGN.md §7, `ddrnand sweep-qos`). The `[sata]`
+/// section's bandwidth/overhead parameters drive whichever link kind is
+/// selected.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HostConfig {
+    /// Which link model fronts the device.
+    pub link: HostLinkKind,
+    /// Submission-queue count (multi-queue only). Stream ids in a trace
+    /// must be below this.
+    pub queues: u16,
+    /// Per-queue depth for closed-loop admission (multi-queue only; the
+    /// single-stream link uses the top-level `queue_depth`).
+    pub queue_depth: u32,
+    /// Queue-arbitration policy for closed-loop fetch.
+    pub arbitration: QueueArb,
+    /// Per-class weights (urgent, normal, bulk, background) consumed by
+    /// weighted queue arbitration: a queue's share follows its stream's
+    /// class weight.
+    pub weights: [u32; NUM_CLASSES],
+}
+
+impl Default for HostConfig {
+    fn default() -> Self {
+        HostConfig {
+            link: HostLinkKind::Sata,
+            queues: 4,
+            queue_depth: 8,
+            arbitration: QueueArb::RoundRobin,
+            weights: DEFAULT_CLASS_WEIGHTS,
+        }
+    }
+}
+
+impl HostConfig {
+    /// The reuse-fingerprint view of this section: dormant fields are
+    /// normalized away so a `[host]` block that selects the default SATA
+    /// link can never fragment sweep reuse (mirrors the `[steady]` /
+    /// `[tiering]` dormancy rule).
+    pub fn reuse_sig(&self) -> (HostLinkKind, u16) {
+        match self.link {
+            HostLinkKind::Sata => (HostLinkKind::Sata, 0),
+            HostLinkKind::MultiQueue => (HostLinkKind::MultiQueue, self.queues),
+        }
+    }
+}
+
+/// Way-scheduling / QoS knobs (`[qos]` in TOML). The default round-robin
+/// policy is bit-identical to the historical hard-coded arbiter
+/// (oracle-tested in `rust/tests/qos.rs`); see
+/// [`crate::controller::sched`] for the policies.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QosConfig {
+    /// The way-scheduling policy every channel runs.
+    pub scheduler: SchedKind,
+    /// Per-class weights (urgent, normal, bulk, background) consumed by
+    /// the `weighted_qos` policy. All must be positive: a zero weight
+    /// would starve its class.
+    pub weights: [u32; NUM_CLASSES],
+}
+
+impl Default for QosConfig {
+    fn default() -> Self {
+        QosConfig {
+            scheduler: SchedKind::RoundRobin,
+            weights: DEFAULT_CLASS_WEIGHTS,
+        }
+    }
+}
+
+impl QosConfig {
+    /// The reuse-fingerprint view of this section (dormant weights are
+    /// normalized away unless the weighted policy consumes them).
+    pub fn reuse_sig(&self) -> (SchedKind, [u32; NUM_CLASSES]) {
+        match self.scheduler {
+            SchedKind::WeightedQos => (self.scheduler, self.weights),
+            _ => (self.scheduler, DEFAULT_CLASS_WEIGHTS),
+        }
+    }
+}
+
 /// Full configuration of one simulated SSD.
 #[derive(Debug, Clone)]
 pub struct SsdConfig {
@@ -231,6 +323,12 @@ pub struct SsdConfig {
     /// Tiered SLC/MLC flash knobs; disabled by default, in which case runs
     /// are bit-identical to the homogeneous-array simulator.
     pub tiering: TieringConfig,
+    /// Host-interface knobs; the SATA default is bit-identical to the
+    /// pre-multi-queue simulator.
+    pub host: HostConfig,
+    /// Way-scheduling / QoS knobs; the round-robin default is
+    /// bit-identical to the historical arbiter.
+    pub qos: QosConfig,
 }
 
 impl Default for SsdConfig {
@@ -253,6 +351,8 @@ impl Default for SsdConfig {
             load: LoadConfig::default(),
             steady: SteadyConfig::default(),
             tiering: TieringConfig::default(),
+            host: HostConfig::default(),
+            qos: QosConfig::default(),
         }
     }
 }
@@ -334,6 +434,32 @@ impl SsdConfig {
         // would otherwise surface as a 0 MHz clock and a divide-by-zero
         // deep in the bus model.
         errs.extend(self.params.validate());
+        // A non-positive link rate would divide by zero (or stall forever)
+        // in the integer transfer-time arithmetic.
+        if !(self.sata.bandwidth_mbps > 0.0 && self.sata.bandwidth_mbps.is_finite()) {
+            errs.push("sata.bandwidth_mbps must be a positive number".into());
+        }
+        if self.host.link == HostLinkKind::MultiQueue {
+            if self.host.queues == 0 {
+                errs.push("host.queues must be >= 1".into());
+            }
+            if self.host.queues > 4096 {
+                errs.push("host.queues must be <= 4096".into());
+            }
+            if self.host.queue_depth == 0 {
+                errs.push("host.queue_depth must be >= 1".into());
+            }
+            if self.host.arbitration == QueueArb::Weighted
+                && self.host.weights.contains(&0)
+            {
+                errs.push(
+                    "host.weights must all be >= 1 (a zero weight starves its class)".into(),
+                );
+            }
+        }
+        if self.qos.scheduler == SchedKind::WeightedQos && self.qos.weights.contains(&0) {
+            errs.push("qos.weights must all be >= 1 (a zero weight starves its class)".into());
+        }
         if let Some(mbps) = self.load.offered_mbps {
             if !(mbps > 0.0 && mbps.is_finite()) {
                 errs.push("load.offered_mbps must be a positive number".into());
@@ -510,6 +636,34 @@ impl SsdConfig {
                     cfg.cache.write_back =
                         val.as_bool().ok_or_else(|| format!("{key}: want bool"))?
                 }
+                "host.link" => {
+                    cfg.host.link = val
+                        .as_str()
+                        .and_then(HostLinkKind::parse)
+                        .ok_or_else(|| format!("bad host.link {val:?} (sata|multi_queue)"))?
+                }
+                "host.queues" => cfg.host.queues = req_u16(key, val)?,
+                "host.queue_depth" => cfg.host.queue_depth = req_u32(key, val)?,
+                "host.arbitration" => {
+                    cfg.host.arbitration = val
+                        .as_str()
+                        .and_then(QueueArb::parse)
+                        .ok_or_else(|| {
+                            format!("bad host.arbitration {val:?} (round_robin|weighted)")
+                        })?
+                }
+                "host.weights" => cfg.host.weights = req_weights(key, val)?,
+                "qos.way_scheduler" => {
+                    cfg.qos.scheduler = val.as_str().and_then(SchedKind::parse).ok_or_else(
+                        || {
+                            format!(
+                                "bad qos.way_scheduler {val:?} \
+                                 (round_robin|read_priority|weighted_qos)"
+                            )
+                        },
+                    )?
+                }
+                "qos.weights" => cfg.qos.weights = req_weights(key, val)?,
                 other => return Err(format!("unknown config key: {other}")),
             }
         }
@@ -539,6 +693,29 @@ fn req_u16(key: &str, v: &toml::Value) -> Result<u16, String> {
     req_u64(key, v)?
         .try_into()
         .map_err(|_| format!("{key}: out of range"))
+}
+/// Per-class weight vector: exactly [`NUM_CLASSES`] non-negative integers
+/// (e.g. `weights = [8, 4, 2, 1]`); positivity is checked by `validate`
+/// only where the weights are actually consumed.
+fn req_weights(key: &str, v: &toml::Value) -> Result<[u32; NUM_CLASSES], String> {
+    let toml::Value::Array(items) = v else {
+        return Err(format!("{key}: want an array of {NUM_CLASSES} integers"));
+    };
+    if items.len() != NUM_CLASSES {
+        return Err(format!(
+            "{key}: want exactly {NUM_CLASSES} per-class weights, got {}",
+            items.len()
+        ));
+    }
+    let mut out = [0u32; NUM_CLASSES];
+    for (slot, item) in out.iter_mut().zip(items) {
+        *slot = item
+            .as_int()
+            .filter(|&i| (0..=1_000_000).contains(&i))
+            .ok_or_else(|| format!("{key}: weights must be integers in 0..=1000000"))?
+            as u32;
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -742,6 +919,68 @@ migrate_free_blocks = 5
              [tiering]\nenabled = true\nslc_fraction = 0.125",
         )
         .is_ok());
+    }
+
+    #[test]
+    fn host_and_qos_sections_parse_and_validate() {
+        let cfg = SsdConfig::from_toml(
+            r#"
+ways = 4
+[host]
+link = "multi_queue"
+queues = 2
+queue_depth = 16
+arbitration = "weighted"
+weights = [9, 4, 2, 1]
+[qos]
+way_scheduler = "weighted_qos"
+weights = [6, 3, 2, 1]
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.host.link, HostLinkKind::MultiQueue);
+        assert_eq!(cfg.host.queues, 2);
+        assert_eq!(cfg.host.queue_depth, 16);
+        assert_eq!(cfg.host.arbitration, QueueArb::Weighted);
+        assert_eq!(cfg.host.weights, [9, 4, 2, 1]);
+        assert_eq!(cfg.qos.scheduler, SchedKind::WeightedQos);
+        assert_eq!(cfg.qos.weights, [6, 3, 2, 1]);
+        // Defaults: single SATA stream, round-robin arbiter.
+        let d = SsdConfig::default();
+        assert_eq!(d.host.link, HostLinkKind::Sata);
+        assert_eq!(d.qos.scheduler, SchedKind::RoundRobin);
+        assert!(d.validate().is_empty());
+        // Bad values rejected.
+        assert!(SsdConfig::from_toml("[host]\nlink = \"warp\"").is_err());
+        assert!(
+            SsdConfig::from_toml("[host]\nlink = \"multi_queue\"\nqueues = 0").is_err()
+        );
+        assert!(
+            SsdConfig::from_toml("[host]\nlink = \"multi_queue\"\nqueue_depth = 0").is_err()
+        );
+        assert!(SsdConfig::from_toml("[host]\narbitration = \"lifo\"").is_err());
+        assert!(SsdConfig::from_toml("[host]\nweights = [1, 2, 3]").is_err());
+        assert!(SsdConfig::from_toml("[qos]\nway_scheduler = \"random\"").is_err());
+        assert!(SsdConfig::from_toml(
+            "[qos]\nway_scheduler = \"weighted_qos\"\nweights = [8, 0, 2, 1]"
+        )
+        .is_err());
+        // Dormant sections are not over-validated: zero weights are fine
+        // while nothing consumes them (the bit-identity dormancy rule)...
+        let dormant =
+            SsdConfig::from_toml("[qos]\nweights = [0, 0, 0, 0]").unwrap();
+        assert!(dormant.validate().is_empty());
+        // ...and they normalize out of the reuse fingerprint.
+        assert_eq!(dormant.qos.reuse_sig(), SsdConfig::default().qos.reuse_sig());
+        let mut h = SsdConfig::default();
+        h.host.queues = 99;
+        assert_eq!(h.host.reuse_sig(), SsdConfig::default().host.reuse_sig());
+    }
+
+    #[test]
+    fn degenerate_sata_bandwidth_rejected_at_load() {
+        assert!(SsdConfig::from_toml("[sata]\nbandwidth_mbps = 0.0").is_err());
+        assert!(SsdConfig::from_toml("[sata]\nbandwidth_mbps = -300.0").is_err());
     }
 
     /// Regression: the all-zero interface-parameter TOML must be rejected

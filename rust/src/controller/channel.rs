@@ -1,36 +1,47 @@
-//! Per-channel state: the shared bus (NAND_IF + ECC) and the round-robin
-//! way pointer implementing way interleaving.
+//! Per-channel state: the shared bus (NAND_IF + ECC) and the pluggable
+//! way scheduler implementing way interleaving.
 
 use crate::controller::ecc::EccModel;
 use crate::controller::nand_if::NandIf;
+use crate::controller::sched::{Grant, WayScheduler};
 use crate::controller::way::WayState;
 use crate::util::time::Ps;
 
-/// One channel: a NAND_IF/ECC pair and its ways (Fig. 2 row).
+/// One channel: a NAND_IF/ECC pair, its ways (Fig. 2 row) and the
+/// scheduling policy that multiplexes the bus across them
+/// ([`crate::controller::sched`]; round robin is the bit-identical
+/// default).
 pub struct ChannelState {
     pub bus: NandIf,
     pub ecc: EccModel,
     pub ways: Vec<WayState>,
-    /// Round-robin pointer: next way to consider for the bus.
-    rr_next: usize,
+    /// The way-scheduling (QoS) policy.
+    sched: Box<dyn WayScheduler>,
     /// Set when a bus-free event is already scheduled (avoid duplicates).
     pub kick_scheduled: bool,
 }
 
 impl ChannelState {
-    pub fn new(bus: NandIf, ecc: EccModel, ways: Vec<WayState>) -> ChannelState {
+    pub fn new(
+        bus: NandIf,
+        ecc: EccModel,
+        ways: Vec<WayState>,
+        sched: Box<dyn WayScheduler>,
+    ) -> ChannelState {
         ChannelState {
             bus,
             ecc,
             ways,
-            rr_next: 0,
+            sched,
             kick_scheduled: false,
         }
     }
 
     /// Reset the channel for a new run without dropping way/queue storage
     /// (sweep-worker reuse). Bus timing, ECC grade and NAND timing may all
-    /// change between sweep points; the way *count* may not.
+    /// change between sweep points; the way *count* and the scheduler
+    /// policy may not (both are part of [`crate::coordinator::ssd::SsdSim::
+    /// reuse_key`]); the scheduler's arbitration state is rewound.
     pub fn reset(
         &mut self,
         params: &crate::iface::timing::IfaceParams,
@@ -43,34 +54,20 @@ impl ChannelState {
         for w in &mut self.ways {
             w.reset(timing);
         }
-        self.rr_next = 0;
+        self.sched.reset();
         self.kick_scheduled = false;
     }
 
-    /// Pick the next way to grant the bus: highest scheduling class first
-    /// (status > command dispatch > data-out; see
-    /// [`crate::controller::way::WayState::bus_class`]), round-robin within
-    /// a class. Advances the pointer past the chosen way.
-    pub fn next_way_wanting_bus(&mut self, now: Ps) -> Option<usize> {
-        let n = self.ways.len();
-        let mut best: Option<(u8, usize, usize)> = None; // (class, rr-dist, idx)
-        for off in 0..n {
-            let i = (self.rr_next + off) % n;
-            if let Some(class) = self.ways[i].bus_class(now) {
-                if class == 0 {
-                    self.rr_next = (i + 1) % n;
-                    return Some(i);
-                }
-                match best {
-                    Some((c, _, _)) if c <= class => {}
-                    _ => best = Some((class, off, i)),
-                }
-            }
-        }
-        best.map(|(_, _, i)| {
-            self.rr_next = (i + 1) % n;
-            i
-        })
+    /// Replace the way scheduler (testing hook: the scheduler-equivalence
+    /// oracle in `rust/tests/qos.rs` injects the pre-refactor arbiter).
+    pub fn set_scheduler(&mut self, sched: Box<dyn WayScheduler>) {
+        self.sched = sched;
+    }
+
+    /// Ask the policy for the next bus grant: which way, and — when that
+    /// way has no in-flight job — which queued job to dispatch.
+    pub fn next_grant(&mut self, now: Ps) -> Option<Grant> {
+        self.sched.pick(&self.ways, now)
     }
 
     /// Earliest future time any way will want the bus (array completions),
@@ -97,6 +94,7 @@ impl ChannelState {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::controller::sched::{self, SchedKind};
     use crate::controller::way::{JobPhase, PageJob, PageJobKind};
     use crate::iface::timing::{IfaceParams, InterfaceKind};
     use crate::nand::chip::Chip;
@@ -110,12 +108,15 @@ mod tests {
             NandIf::new(&IfaceParams::default(), InterfaceKind::Proposed),
             EccModel::default(),
             ways,
+            sched::build(SchedKind::RoundRobin, [8, 4, 2, 1]),
         )
     }
 
     fn job() -> PageJob {
         PageJob {
             req: 0,
+            stream: 0,
+            class: 1,
             kind: PageJobKind::Read,
             block: 0,
             page: 0,
@@ -130,27 +131,27 @@ mod tests {
         for w in 0..4 {
             c.ways[w].push(job());
         }
-        // Consume the granted way's job each time, as the scheduler does.
+        // Consume the granted job each time, as the coordinator does.
         let order: Vec<usize> = (0..4)
             .map(|_| {
-                let w = c.next_way_wanting_bus(Ps::ZERO).unwrap();
-                c.ways[w].queue.pop_front();
-                w
+                let g = c.next_grant(Ps::ZERO).unwrap();
+                c.ways[g.way].take_job(g.job);
+                g.way
             })
             .collect();
         assert_eq!(order, vec![0, 1, 2, 3]);
         // Pointer wraps.
         c.ways[1].push(job());
-        assert_eq!(c.next_way_wanting_bus(Ps::ZERO), Some(1));
+        assert_eq!(c.next_grant(Ps::ZERO).map(|g| g.way), Some(1));
     }
 
     #[test]
     fn skips_ways_not_wanting() {
         let mut c = chan(4);
         c.ways[2].push(job());
-        assert_eq!(c.next_way_wanting_bus(Ps::ZERO), Some(2));
-        c.ways[2].queue.pop_front();
-        assert_eq!(c.next_way_wanting_bus(Ps::ZERO), None);
+        assert_eq!(c.next_grant(Ps::ZERO).map(|g| g.way), Some(2));
+        c.ways[2].take_job(0);
+        assert!(c.next_grant(Ps::ZERO).is_none());
     }
 
     #[test]
@@ -173,5 +174,22 @@ mod tests {
         c.ways[0].push(job());
         assert!(!c.is_drained());
         assert_eq!(c.backlog(), 1);
+    }
+
+    /// Swapping the policy changes which queued job a grant names.
+    #[test]
+    fn scheduler_is_pluggable() {
+        let mut c = chan(1);
+        let mut w = job();
+        w.kind = PageJobKind::Program;
+        c.ways[0].push(w);
+        c.ways[0].push(job()); // a read behind the program
+        assert_eq!(c.next_grant(Ps::ZERO).map(|g| g.job), Some(0), "FIFO");
+        c.set_scheduler(sched::build(SchedKind::ReadPriority, [8, 4, 2, 1]));
+        assert_eq!(
+            c.next_grant(Ps::ZERO).map(|g| g.job),
+            Some(1),
+            "the read preempts the queued program"
+        );
     }
 }

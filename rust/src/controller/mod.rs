@@ -10,10 +10,12 @@ pub mod channel;
 pub mod ecc;
 pub mod ftl;
 pub mod nand_if;
+pub mod sched;
 pub mod way;
 
 pub use cache::{CacheConfig, DramCache};
 pub use channel::ChannelState;
 pub use ecc::EccModel;
 pub use nand_if::NandIf;
+pub use sched::{Grant, SchedKind, WayScheduler};
 pub use way::{PageJob, PageJobKind, WayState};

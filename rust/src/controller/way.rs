@@ -5,6 +5,7 @@
 //! across these way queues in round-robin order, so that one way's t_R /
 //! t_PROG busy time is hidden behind other ways' bus phases.
 
+use crate::host::trace::{CLASS_BACKGROUND, NUM_CLASSES};
 use crate::nand::chip::Chip;
 use crate::util::time::Ps;
 use std::collections::VecDeque;
@@ -40,6 +41,15 @@ pub struct PageJob {
     /// flushes, `WL_REQ` wear leveling, `GC_REQ` GC copy-back, `MIG_REQ`
     /// tier migration).
     pub req: u64,
+    /// Originating host stream (`u16::MAX` for internal traffic) — the
+    /// tenant this job's latency is attributed to.
+    pub stream: u16,
+    /// Priority class consumed by the way schedulers
+    /// ([`crate::controller::sched`]): host classes 0..=2, with internal
+    /// GC/WL/migration traffic always at the explicit lowest class
+    /// ([`crate::host::trace::CLASS_BACKGROUND`]) instead of relying on
+    /// implicit queue ordering.
+    pub class: u8,
     pub kind: PageJobKind,
     pub block: u32,
     pub page: u32,
@@ -51,7 +61,15 @@ pub struct PageJob {
 /// A way: one chip + its pending job queue + the in-flight job.
 pub struct WayState {
     pub chip: Chip,
+    /// The pending jobs. Mutate through [`push`](Self::push) /
+    /// [`take_job`](Self::take_job) so the per-class counts below stay in
+    /// sync — the QoS schedulers treat them as authoritative.
     pub queue: VecDeque<PageJob>,
+    /// Queued jobs per priority class (scheduler fast path: skip ways
+    /// without a candidate class in O(1)).
+    class_counts: [u32; NUM_CLASSES],
+    /// Queued read jobs (scheduler fast path for read preemption).
+    queued_reads: u32,
     /// Job currently owning the chip (ArrayBusy/AwaitXferOut/AwaitStatus).
     pub inflight: Option<PageJob>,
     /// Completion time of the in-flight array op, if any.
@@ -63,14 +81,67 @@ impl WayState {
         WayState {
             chip,
             queue: VecDeque::new(),
+            class_counts: [0; NUM_CLASSES],
+            queued_reads: 0,
             inflight: None,
             array_done_at: Ps::ZERO,
         }
     }
 
-    /// Enqueue a job (FIFO per way).
-    pub fn push(&mut self, job: PageJob) {
+    /// Enqueue a job (FIFO per way). An out-of-range priority class is
+    /// clamped to background here, at the boundary, so the class counts,
+    /// the stored job and the schedulers' exact-match lookups can never
+    /// disagree (mirrors `WeightedQos::new`'s zero-weight clamp).
+    pub fn push(&mut self, mut job: PageJob) {
+        job.class = job.class.min(CLASS_BACKGROUND);
+        self.class_counts[job.class as usize] += 1;
+        if job.kind == PageJobKind::Read {
+            self.queued_reads += 1;
+        }
         self.queue.push_back(job);
+    }
+
+    /// Remove and return the queued job at `idx` (the grant-consumption
+    /// path; keeps the class/read counts in sync with the queue).
+    pub fn take_job(&mut self, idx: usize) -> Option<PageJob> {
+        let job = self.queue.remove(idx)?;
+        self.class_counts[job.class as usize] -= 1;
+        if job.kind == PageJobKind::Read {
+            self.queued_reads -= 1;
+        }
+        Some(job)
+    }
+
+    /// Queued jobs of a priority class.
+    pub fn queued_of_class(&self, class: u8) -> u32 {
+        self.class_counts[(class as usize).min(NUM_CLASSES - 1)]
+    }
+
+    /// Queued read jobs.
+    pub fn queued_reads(&self) -> u32 {
+        self.queued_reads
+    }
+
+    /// The reorder window: queued background jobs (GC / wear-leveling /
+    /// migration / cache-flush copy-back) are **plan-order barriers** —
+    /// an FTL write plan queues its copy-back and erase ops ahead of the
+    /// host program on the same way, and that relative order is load-
+    /// bearing (the erase must not run after a host program into the
+    /// reclaimed block; the request's GC-stall attribution depends on it).
+    /// Scheduling policies may therefore pull a job forward only from the
+    /// queue prefix strictly before the first background job; the first
+    /// background job itself is dispatchable (it is, by FIFO, the next of
+    /// its class). Returns that prefix length (= queue length when no
+    /// background job is queued, computed in O(1) from the class counts).
+    pub fn reorder_window(&self) -> usize {
+        if self.class_counts[CLASS_BACKGROUND as usize] == 0 {
+            self.queue.len()
+        } else {
+            self.queue
+                .iter()
+                .position(|j| j.class >= CLASS_BACKGROUND)
+                .unwrap_or(self.queue.len())
+        }
     }
 
     /// Drop all queued/in-flight work and reset the chip, keeping the
@@ -78,6 +149,8 @@ impl WayState {
     /// re-fills the same storage allocation-free).
     pub fn reset(&mut self, timing: crate::nand::datasheet::NandTiming) {
         self.queue.clear();
+        self.class_counts = [0; NUM_CLASSES];
+        self.queued_reads = 0;
         self.inflight = None;
         self.array_done_at = Ps::ZERO;
         self.chip.reset(timing);
@@ -135,6 +208,8 @@ mod tests {
     fn job(kind: PageJobKind) -> PageJob {
         PageJob {
             req: 0,
+            stream: 0,
+            class: 1,
             kind,
             block: 0,
             page: 0,

@@ -11,8 +11,8 @@ use crate::config::{ArrivalKind, SsdConfig};
 use crate::coordinator::ssd::{Ev, SsdSim};
 use crate::host::trace::{RequestKind, Trace, TraceGen};
 use crate::sim::{RunResult, Scheduler};
-use crate::util::stats::Summary;
-use crate::util::time::Ps;
+use crate::util::stats::{jain_fairness, Summary};
+use crate::util::time::{mbps, Ps};
 
 /// Everything measured from one simulation run.
 #[derive(Debug, Clone)]
@@ -88,6 +88,31 @@ pub struct SimReport {
     pub slc_read_share: f64,
     /// Fraction of NAND array energy spent on migration programs.
     pub mig_energy_share: f64,
+    /// Per-stream results, indexed by stream id (empty for single-stream
+    /// traces — the paper's regime costs nothing).
+    pub streams: Vec<StreamReport>,
+    /// Jain's fairness index over per-stream achieved throughput; NaN for
+    /// fewer than two streams.
+    pub fairness: f64,
+}
+
+/// Per-stream (tenant) slice of a [`SimReport`].
+#[derive(Debug, Clone)]
+pub struct StreamReport {
+    pub stream: u16,
+    /// Priority class of the stream's requests (0 latency-critical ..
+    /// 2 bulk).
+    pub class: u8,
+    pub requests: u64,
+    pub bytes: u64,
+    /// Achieved throughput over the shared run window, MB/s.
+    pub bandwidth_mbps: f64,
+    /// Latency stats (µs) over this stream's completions; NaN when the
+    /// stream completed nothing.
+    pub latency_mean_us: f64,
+    pub latency_p50_us: f64,
+    pub latency_p95_us: f64,
+    pub latency_p99_us: f64,
 }
 
 /// Run `cfg` over an explicit trace (one-shot; sweeps should prefer a
@@ -114,6 +139,36 @@ fn report_from(
         Summary::from_samples(samples)
             .map(|s| s.p99)
             .unwrap_or(f64::NAN)
+    };
+    // Sparse stream ids are allowed (v3 traces need not be dense): skip
+    // the phantom ids nothing was tagged with — every tagged stream
+    // completes at least one request by end of run, so `requests == 0`
+    // identifies them — or they would surface as bogus zero-throughput
+    // rows and drag the fairness index down.
+    let streams: Vec<StreamReport> = (0..sim.stream_class.len())
+        .filter(|&s| sim.stream_requests[s] > 0)
+        .map(|s| {
+            let (mean, p50, p95, p99) = match Summary::from_samples(&sim.stream_latency_samples[s])
+            {
+                Some(st) => (st.mean, st.median, st.p95, st.p99),
+                None => (f64::NAN, f64::NAN, f64::NAN, f64::NAN),
+            };
+            StreamReport {
+                stream: s as u16,
+                class: sim.stream_class[s],
+                requests: sim.stream_requests[s],
+                bytes: sim.stream_bytes[s],
+                bandwidth_mbps: mbps(sim.stream_bytes[s], sim.finished_at()),
+                latency_mean_us: mean,
+                latency_p50_us: p50,
+                latency_p95_us: p95,
+                latency_p99_us: p99,
+            }
+        })
+        .collect();
+    let fairness = {
+        let bw: Vec<f64> = streams.iter().map(|t| t.bandwidth_mbps).collect();
+        jain_fairness(&bw)
     };
     SimReport {
         iface: sim.cfg.iface.name(),
@@ -161,6 +216,8 @@ fn report_from(
             }
         },
         mig_energy_share: sim.energy.mig_share(),
+        streams,
+        fairness,
     }
 }
 
@@ -203,7 +260,7 @@ impl SimWorkspace {
         let reusable = self
             .sim
             .as_ref()
-            .map_or(false, |s| SsdSim::reuse_key(&s.cfg) == SsdSim::reuse_key(cfg));
+            .is_some_and(|s| SsdSim::reuse_key(&s.cfg) == SsdSim::reuse_key(cfg));
         if reusable {
             self.reuses += 1;
             self.sim
@@ -216,6 +273,7 @@ impl SimWorkspace {
         }
         let sim = self.sim.as_mut().expect("just placed");
         sim.set_arrivals(&trace.arrivals);
+        sim.set_streams(&trace.streams);
         if cfg.steady.enabled && cfg.steady.precondition {
             sim.precondition_fill();
         }
@@ -229,6 +287,32 @@ impl SimWorkspace {
     }
 }
 
+/// Access pattern of one tenant in a multi-tenant campaign.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessPattern {
+    /// Back-to-back extents from the start of the tenant's volume slice.
+    Sequential,
+    /// Uniform-random aligned offsets within the tenant's slice.
+    Random,
+}
+
+/// One tenant (stream) of a multi-tenant campaign: its workload shape,
+/// priority class, and — when every tenant carries one — its own offered
+/// load stamped as a Poisson arrival track before the streams merge.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    pub mode: RequestKind,
+    pub pattern: AccessPattern,
+    /// Priority class (0 latency-critical ..= 2 bulk).
+    pub class: u8,
+    /// Number of 64 KiB requests this tenant issues.
+    pub requests: usize,
+    /// Per-tenant offered load (MB/s) for open-loop arrival stamping;
+    /// `None` = closed loop. All tenants of one campaign must agree on
+    /// which regime they run.
+    pub offered_mbps: Option<f64>,
+}
+
 /// A measurement campaign: a config and a workload recipe.
 #[derive(Debug, Clone)]
 pub struct Campaign {
@@ -238,6 +322,12 @@ pub struct Campaign {
     /// logical capacity (no rewrites → the paper's fresh-SSD sequential
     /// pattern never triggers GC).
     pub requests: usize,
+    /// Per-stream workload mix. Empty = the classic single-stream
+    /// campaign above; otherwise tenant `i` becomes stream `i`, each over
+    /// its own disjoint slice of the logical volume (so tenants contend
+    /// for channels/ways/GC, not for logical pages), merged per
+    /// [`Trace::merge_streams`].
+    pub tenants: Vec<TenantSpec>,
 }
 
 impl Campaign {
@@ -246,6 +336,19 @@ impl Campaign {
             cfg,
             mode,
             requests,
+            tenants: Vec::new(),
+        }
+    }
+
+    /// A multi-tenant campaign (`mode`/`requests` are carried by the
+    /// tenant specs).
+    pub fn multi_tenant(cfg: SsdConfig, tenants: Vec<TenantSpec>) -> Campaign {
+        assert!(!tenants.is_empty(), "need at least one tenant");
+        Campaign {
+            cfg,
+            mode: RequestKind::Write,
+            requests: 0,
+            tenants,
         }
     }
 
@@ -282,6 +385,9 @@ impl Campaign {
     /// request count is not clamped, since wrap-around rewrites are the
     /// point.
     pub fn run_in(&self, ws: &mut SimWorkspace) -> SimReport {
+        if !self.tenants.is_empty() {
+            return self.run_tenants(ws);
+        }
         let gen = TraceGen::default();
         let mut trace = if self.cfg.steady.enabled {
             let nand = self.cfg.nand_timing();
@@ -309,6 +415,60 @@ impl Campaign {
             rep.offered_mbps = offered;
         }
         rep
+    }
+
+    /// Multi-tenant run: generate each tenant's trace over its own slice
+    /// of the logical volume (sequential tenants clamped to 80% of the
+    /// slice, like single-stream campaigns), stamp per-tenant Poisson
+    /// arrivals when every tenant has an offered load, merge the streams
+    /// and run. All tenants must agree on open vs closed loop.
+    fn run_tenants(&self, ws: &mut SimWorkspace) -> SimReport {
+        let gen = TraceGen::default();
+        let nand = self.cfg.nand_timing();
+        let volume = self.cfg.logical_pages(self.physical_pages()) * nand.page_bytes as u64;
+        let n = self.tenants.len() as u64;
+        let req_bytes = gen.request_bytes as u64;
+        // Request-aligned slice per tenant; every tenant must fit at
+        // least one request inside the logical volume, or later tenants'
+        // offsets would land past the exported space.
+        let slots = volume / req_bytes;
+        assert!(
+            slots >= n,
+            "logical volume ({slots} request-sized slots) too small for {n} tenants"
+        );
+        let slice = (slots / n) * req_bytes;
+        let open = self.tenants[0].offered_mbps.is_some();
+        assert!(
+            self.tenants
+                .iter()
+                .all(|t| t.offered_mbps.is_some() == open),
+            "all tenants must agree on open vs closed loop"
+        );
+        let parts: Vec<(Trace, u8)> = self
+            .tenants
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                let seed = self.cfg.seed.wrapping_add(0x9E37_79B9 * (i as u64 + 1));
+                let mut tr = match t.pattern {
+                    AccessPattern::Sequential => {
+                        let cap = ((slice * 8 / 10) / req_bytes).max(1) as usize;
+                        gen.sequential(t.mode, t.requests.min(cap))
+                    }
+                    AccessPattern::Random => gen.random(t.mode, t.requests, slice, seed),
+                };
+                let base = slice * i as u64;
+                for r in &mut tr.requests {
+                    r.offset += base;
+                }
+                if let Some(offered) = t.offered_mbps {
+                    tr = gen.poisson_arrivals(tr, offered, seed);
+                }
+                (tr, t.class)
+            })
+            .collect();
+        let trace = Trace::merge_streams(&parts).expect("tenant parts agree by construction");
+        ws.run_trace(&self.cfg, &trace)
     }
 }
 
@@ -387,6 +547,67 @@ mod tests {
         assert_eq!(clean.waf, 1.0);
         assert_eq!(clean.gc_pages_programmed, 0);
         assert!(clean.latency_p99_gc_us.is_nan());
+    }
+
+    /// A two-tenant campaign reports per-stream latency/throughput plus a
+    /// fairness index, and the per-stream totals add up to the run totals.
+    #[test]
+    fn multi_tenant_campaign_reports_per_stream() {
+        use crate::host::trace::{CLASS_BULK, CLASS_URGENT};
+        let tenants = vec![
+            TenantSpec {
+                mode: RequestKind::Read,
+                pattern: AccessPattern::Random,
+                class: CLASS_URGENT,
+                requests: 10,
+                offered_mbps: Some(8.0),
+            },
+            TenantSpec {
+                mode: RequestKind::Write,
+                pattern: AccessPattern::Sequential,
+                class: CLASS_BULK,
+                requests: 20,
+                offered_mbps: Some(20.0),
+            },
+        ];
+        let r = Campaign::multi_tenant(cfg(), tenants).run();
+        assert_eq!(r.requests, 30);
+        assert_eq!(r.streams.len(), 2);
+        assert_eq!(r.streams[0].class, CLASS_URGENT);
+        assert_eq!(r.streams[1].class, CLASS_BULK);
+        assert_eq!(r.streams[0].requests, 10);
+        assert_eq!(r.streams[1].requests, 20);
+        assert_eq!(
+            r.streams.iter().map(|s| s.bytes).sum::<u64>(),
+            r.bytes,
+            "stream bytes partition the total"
+        );
+        assert!(r.streams.iter().all(|s| s.latency_p99_us > 0.0));
+        assert!(r.fairness > 0.0 && r.fairness <= 1.0 + 1e-12);
+        // Closed-loop tenant mixes work too (round-robin interleave).
+        let closed = vec![
+            TenantSpec {
+                mode: RequestKind::Write,
+                pattern: AccessPattern::Sequential,
+                class: CLASS_URGENT,
+                requests: 6,
+                offered_mbps: None,
+            },
+            TenantSpec {
+                mode: RequestKind::Write,
+                pattern: AccessPattern::Sequential,
+                class: CLASS_BULK,
+                requests: 6,
+                offered_mbps: None,
+            },
+        ];
+        let rc = Campaign::multi_tenant(cfg(), closed).run();
+        assert_eq!(rc.requests, 12);
+        assert_eq!(rc.streams.len(), 2);
+        // Single-stream campaigns stay stream-free (nothing to pay).
+        let single = Campaign::new(cfg(), RequestKind::Write, 5).run();
+        assert!(single.streams.is_empty());
+        assert!(single.fairness.is_nan());
     }
 
     #[test]

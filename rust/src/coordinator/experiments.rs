@@ -9,9 +9,11 @@
 
 use crate::analytic::paper;
 use crate::config::{ArrivalKind, SsdConfig};
-use crate::coordinator::campaign::{Campaign, SimReport, SimWorkspace};
+use crate::controller::sched::SchedKind;
+use crate::coordinator::campaign::{AccessPattern, Campaign, SimReport, SimWorkspace, TenantSpec};
 use crate::coordinator::pool::ThreadPool;
-use crate::host::trace::RequestKind;
+use crate::host::link::HostLinkKind;
+use crate::host::trace::{CLASS_BULK, CLASS_URGENT, RequestKind};
 use crate::iface::timing::{IfaceParams, InterfaceKind};
 use crate::nand::datasheet::CellType;
 use crate::report::Table;
@@ -716,6 +718,215 @@ pub fn render_tiered_sweep(title: &str, cells: &[TieredCell], csv: bool) -> Stri
     out
 }
 
+/// Specification of the E9 QoS sweep (`ddrnand sweep-qos`): a fixed
+/// two-tenant mix — a latency-critical random-read tenant (class 0)
+/// against a saturating bulk sequential-write tenant (class 2), each with
+/// its own Poisson offered load, over the multi-queue host path — swept
+/// across way-scheduler policy × interface × way count. Measures the axis
+/// none of the single-stream sweeps can: **per-tenant latency isolation
+/// under contention**, the read tenant's p99 and the fairness index per
+/// scheduling policy (EXPERIMENTS.md §QoS).
+#[derive(Debug, Clone)]
+pub struct QosSweepSpec {
+    pub cell: CellType,
+    pub channels: u16,
+    /// Way counts to sweep.
+    pub ways: Vec<u16>,
+    /// Interfaces to sweep.
+    pub ifaces: Vec<InterfaceKind>,
+    /// Way-scheduling policies to sweep.
+    pub schedulers: Vec<SchedKind>,
+    /// Host-link kind (the QoS lever is the way scheduler; multi-queue by
+    /// default so per-queue accounting is exercised too).
+    pub link: HostLinkKind,
+    /// Offered load (MB/s) of the latency-critical random-read tenant.
+    pub read_mbps: f64,
+    /// Offered load (MB/s) of the bulk sequential-write tenant — above
+    /// the device's write ceiling by default, so way queues actually
+    /// contend.
+    pub write_mbps: f64,
+    /// Bulk-writer request count per point; the reader's count is derived
+    /// so the two tenants' arrival spans roughly match.
+    pub requests: usize,
+    pub blocks_per_chip: u32,
+    pub seed: u64,
+}
+
+impl Default for QosSweepSpec {
+    fn default() -> Self {
+        QosSweepSpec {
+            cell: CellType::Slc,
+            channels: 1,
+            ways: vec![4],
+            ifaces: vec![InterfaceKind::Conv, InterfaceKind::Proposed],
+            schedulers: SchedKind::ALL.to_vec(),
+            link: HostLinkKind::MultiQueue,
+            read_mbps: 4.0,
+            // Above the ~29–39 MB/s 4-way write ceilings of every
+            // interface: the bulk tenant saturates the ways.
+            write_mbps: 55.0,
+            requests: DEFAULT_REQUESTS,
+            blocks_per_chip: 512,
+            seed: 0xDD12_7A5D,
+        }
+    }
+}
+
+impl QosSweepSpec {
+    /// Reader request count: scaled so both tenants' arrival spans
+    /// roughly coincide (floored so the percentile estimates have
+    /// samples).
+    pub fn read_requests(&self) -> usize {
+        ((self.requests as f64 * self.read_mbps / self.write_mbps) as usize).max(16)
+    }
+
+    /// The two-tenant mix of one grid point.
+    pub fn tenants(&self) -> Vec<TenantSpec> {
+        vec![
+            TenantSpec {
+                mode: RequestKind::Read,
+                pattern: AccessPattern::Random,
+                class: CLASS_URGENT,
+                requests: self.read_requests(),
+                offered_mbps: Some(self.read_mbps),
+            },
+            TenantSpec {
+                mode: RequestKind::Write,
+                pattern: AccessPattern::Sequential,
+                class: CLASS_BULK,
+                requests: self.requests,
+                offered_mbps: Some(self.write_mbps),
+            },
+        ]
+    }
+}
+
+/// One measured point of the E9 QoS sweep.
+#[derive(Debug, Clone)]
+pub struct QosCell {
+    pub iface: InterfaceKind,
+    pub ways: u16,
+    pub sched: SchedKind,
+    pub report: SimReport,
+}
+
+/// The configuration of one E9 grid point — shared by the driver and the
+/// CLI's pre-flight validation so the two can never disagree.
+pub fn qos_point_config(
+    spec: &QosSweepSpec,
+    iface: InterfaceKind,
+    ways: u16,
+    sched: SchedKind,
+) -> Result<SsdConfig, Vec<String>> {
+    let mut c = cfg(iface, spec.cell, spec.channels, ways);
+    c.blocks_per_chip = spec.blocks_per_chip;
+    c.seed = spec.seed;
+    c.host.link = spec.link;
+    c.host.queues = 2;
+    c.qos.scheduler = sched;
+    let errs = c.validate();
+    if errs.is_empty() {
+        Ok(c)
+    } else {
+        Err(errs)
+    }
+}
+
+/// E9 — QoS sweep: two-tenant mix × scheduler policy × interface × way
+/// count, open loop via per-tenant arrival tracks.
+pub fn run_qos_sweep(spec: &QosSweepSpec, pool: &ThreadPool) -> Vec<QosCell> {
+    assert!(!spec.ways.is_empty(), "need at least one way count");
+    assert!(!spec.ifaces.is_empty(), "need at least one interface");
+    assert!(!spec.schedulers.is_empty(), "need at least one scheduler");
+    assert!(
+        spec.read_mbps > 0.0 && spec.write_mbps > 0.0,
+        "tenant offered loads must be positive"
+    );
+    let mut jobs = Vec::new();
+    let mut meta = Vec::new();
+    for iface in &spec.ifaces {
+        for &ways in &spec.ways {
+            for &sched in &spec.schedulers {
+                let c = qos_point_config(spec, *iface, ways, sched)
+                    .unwrap_or_else(|e| panic!("qos sweep point invalid: {e:?}"));
+                let tenants = spec.tenants();
+                meta.push((*iface, ways, sched));
+                jobs.push(move |ws: &mut SimWorkspace| {
+                    Campaign::multi_tenant(c, tenants).run_in(ws)
+                });
+            }
+        }
+    }
+    let reports = pool.run_all_with(jobs, SimWorkspace::new);
+    meta.into_iter()
+        .zip(reports)
+        .map(|((iface, ways, sched), report)| QosCell {
+            iface,
+            ways,
+            sched,
+            report,
+        })
+        .collect()
+}
+
+/// Render the QoS sweep: one row per grid point per stream, plus a
+/// per-configuration summary of the latency-critical tenant's p99 across
+/// scheduling policies. In CSV mode only the machine-readable table is
+/// emitted.
+pub fn render_qos_sweep(title: &str, cells: &[QosCell], csv: bool) -> String {
+    let mut t = Table::new(vec![
+        "iface", "ways", "sched", "stream", "class", "reqs", "achieved", "p50_us", "p99_us",
+        "fairness",
+    ]);
+    for c in cells {
+        for s in &c.report.streams {
+            t.row(vec![
+                c.iface.name().to_string(),
+                c.ways.to_string(),
+                c.sched.name().to_string(),
+                s.stream.to_string(),
+                s.class.to_string(),
+                s.requests.to_string(),
+                format!("{:.2}", s.bandwidth_mbps),
+                format!("{:.1}", s.latency_p50_us),
+                format!("{:.1}", s.latency_p99_us),
+                format!("{:.3}", c.report.fairness),
+            ]);
+        }
+    }
+    if csv {
+        return t.to_csv();
+    }
+    let mut out = format!("{title}\n\n{}\n", t.render());
+    let mut seen: Vec<(InterfaceKind, u16)> = Vec::new();
+    for c in cells {
+        if !seen.contains(&(c.iface, c.ways)) {
+            seen.push((c.iface, c.ways));
+        }
+    }
+    out.push_str("latency-critical tenant p99 / total MB/s by scheduling policy:\n");
+    for (iface, ways) in seen {
+        let mut line = format!("  {:<9} x{:<2} way:", iface.name(), ways);
+        for c in cells.iter().filter(|c| c.iface == iface && c.ways == ways) {
+            let read_p99 = c
+                .report
+                .streams
+                .first()
+                .map(|s| s.latency_p99_us)
+                .unwrap_or(f64::NAN);
+            line.push_str(&format!(
+                "  {} {:.1} us / {:.1}",
+                c.sched.name(),
+                read_p99,
+                c.report.bandwidth_mbps
+            ));
+        }
+        line.push('\n');
+        out.push_str(&line);
+    }
+    out
+}
+
 /// E5 — §6 headline: min/max PROPOSED/CONV ratios from Table 3 cells.
 pub fn headline(cells: &[Cell]) -> String {
     let mut out = String::from("E5 / §6 headline — PROPOSED/CONV ratio ranges (paper: SLC read 1.65–2.76x, write 1.09–2.45x; MLC read 1.64–2.66x, write 1.05–1.76x)\n\n");
@@ -871,7 +1082,7 @@ mod tests {
             ..TieredSweepSpec::default()
         };
         let cells = run_tiered_sweep(&spec, &pool);
-        assert_eq!(cells.len(), 1 * 1 * 2); // 1 iface x 1 way count x 2 fractions
+        assert_eq!(cells.len(), 2); // 1 iface x 1 way count x 2 fractions
         for c in &cells {
             assert!(c.report.bandwidth_mbps > 0.0);
             assert!(c.report.requests == 12);
@@ -885,6 +1096,35 @@ mod tests {
         assert!(rendered.contains("PROPOSED"));
         let csv = render_tiered_sweep("t", &cells, true);
         assert!(csv.contains("iface,ways,slc_frac"));
+    }
+
+    #[test]
+    fn qos_sweep_grid_shape_and_rendering() {
+        let pool = ThreadPool::new(0);
+        let spec = QosSweepSpec {
+            ways: vec![2],
+            ifaces: vec![InterfaceKind::Proposed],
+            schedulers: vec![SchedKind::RoundRobin, SchedKind::ReadPriority],
+            requests: 30,
+            write_mbps: 40.0,
+            read_mbps: 4.0,
+            blocks_per_chip: 128,
+            ..QosSweepSpec::default()
+        };
+        let cells = run_qos_sweep(&spec, &pool);
+        assert_eq!(cells.len(), 2); // 1 iface x 1 way count x 2 policies
+        for c in &cells {
+            assert_eq!(c.report.streams.len(), 2, "two tenants per point");
+            assert_eq!(c.report.streams[0].class, CLASS_URGENT);
+            assert_eq!(c.report.streams[1].class, CLASS_BULK);
+            assert_eq!(c.report.streams[1].requests, 30);
+            assert!(c.report.fairness > 0.0);
+        }
+        let rendered = render_qos_sweep("t", &cells, false);
+        assert!(rendered.contains("latency-critical tenant p99"));
+        assert!(rendered.contains("read_priority"));
+        let csv = render_qos_sweep("t", &cells, true);
+        assert!(csv.contains("iface,ways,sched,stream"));
     }
 
     #[test]

@@ -7,6 +7,6 @@ pub mod experiments;
 pub mod pool;
 pub mod ssd;
 
-pub use campaign::{run_trace, Campaign, SimReport};
+pub use campaign::{run_trace, AccessPattern, Campaign, SimReport, StreamReport, TenantSpec};
 pub use pool::ThreadPool;
 pub use ssd::SsdSim;

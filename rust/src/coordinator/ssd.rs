@@ -1,9 +1,21 @@
 //! The full-SSD discrete-event model.
 //!
-//! Composition (Fig. 1/Fig. 2): a SATA host link feeds requests through the
-//! (optional) DRAM cache and the FTL into per-channel round-robin way
-//! schedulers; each channel's bus (NAND_IF + ECC) is a serialized resource;
-//! each way's chip imposes t_R / t_PROG / t_BERS array busy times.
+//! Composition (Fig. 1/Fig. 2): a host link (single-stream SATA by
+//! default, NVMe-style multi-queue via `[host]`) feeds requests through
+//! the (optional) DRAM cache and the FTL into per-channel pluggable way
+//! schedulers (`[qos]`, [`crate::controller::sched`]); each channel's bus
+//! (NAND_IF + ECC) is a serialized resource; each way's chip imposes
+//! t_R / t_PROG / t_BERS array busy times.
+//!
+//! ## Multi-tenant traffic
+//!
+//! A trace may tag each request with a (stream, priority class) pair
+//! ([`SsdSim::set_streams`]). Streams map to submission queues on the
+//! multi-queue link (closed-loop admission honors a per-queue depth and
+//! the configured queue arbitration), page jobs inherit their request's
+//! class — background GC/WL/migration traffic carries the explicit
+//! lowest class — and completion latency/throughput is additionally
+//! accounted per stream for the QoS reports (`ddrnand sweep-qos`).
 //!
 //! ## Event flow
 //!
@@ -38,10 +50,14 @@ use crate::controller::ftl::page_map::PageMapFtl;
 use crate::controller::ftl::tiered::TieredFtl;
 use crate::controller::ftl::{Ftl, FtlOp};
 use crate::controller::nand_if::NandIf;
+use crate::controller::sched::{self, SchedKind, WayScheduler};
 use crate::controller::way::{JobPhase, PageJob, PageJobKind, WayState};
 use crate::energy::{EnergyMeter, PowerModel};
+use crate::host::link::{HostLink, HostLinkKind, MultiQueueLink, SubmissionQueues};
 use crate::host::sata::SataLink;
-use crate::host::trace::{Request, RequestKind};
+use crate::host::trace::{
+    CLASS_BACKGROUND, CLASS_NORMAL, NUM_CLASSES, Request, RequestKind, StreamTag,
+};
 use crate::iface::bus::BusTiming;
 use crate::iface::timing::InterfaceKind;
 use crate::nand::chip::{Chip, ChipOp};
@@ -114,6 +130,10 @@ struct ReqState {
     pages_done: u32,
     chunks_done: u32,
     issued_at: Ps,
+    /// Originating stream and priority class (stream 0 at the default
+    /// class for untagged traces).
+    stream: u16,
+    class: u8,
     /// True if any of this request's write plans forced GC/merge work —
     /// its copy-back ops are queued ahead of the host program on the same
     /// way, so the request pays the GC stall (steady-state accounting).
@@ -169,14 +189,24 @@ pub struct SsdSim {
     /// channel's own timing and the routing is value-identical.
     slc_bus: BusTiming,
     mlc_bus: BusTiming,
-    sata: SataLink,
+    /// The host link ([`HostLinkKind`] in `[host]`; single-stream SATA by
+    /// default, reuse-key-stable).
+    link: Box<dyn HostLink>,
     ftl: Box<dyn Ftl>,
     cache: DramCache,
     trace: Vec<Request>,
     /// Open-loop arrival timestamps (one per trace entry, non-decreasing);
     /// empty = closed-loop queue-depth admission (the default).
     arrivals: Vec<Ps>,
+    /// Stream tags (one per trace entry); empty = single-stream.
+    streams: Vec<StreamTag>,
+    /// Multi-queue closed-loop admission front end (`None` on the
+    /// single-stream SATA path, and bypassed — like the global queue
+    /// depth — by open-loop arrival admission).
+    subq: Option<SubmissionQueues>,
     next_req: usize,
+    /// Requests issued so far (across both admission paths).
+    issued: usize,
     outstanding: u32,
     /// Request table indexed by request id (= trace index): dense and
     /// allocation-free on the hot path (perf pass, EXPERIMENTS.md §Perf).
@@ -188,6 +218,12 @@ pub struct SsdSim {
     /// request's page jobs; kicked then cleared.
     kick_list: Vec<u16>,
     pub counters: SimCounters,
+    /// Per-stream accounting, indexed by stream id; all empty when the
+    /// trace carries no stream track (single-tenant runs pay nothing).
+    pub stream_class: Vec<u8>,
+    pub stream_requests: Vec<u64>,
+    pub stream_bytes: Vec<u64>,
+    pub stream_latency_samples: Vec<Vec<f64>>,
     pub latency: Welford,
     /// Per-request latency samples in µs, in completion order — the raw
     /// material for the p50/p95/p99 columns of the load sweep (`report`,
@@ -231,6 +267,7 @@ impl SsdSim {
                     NandIf::new(&cfg.params, cfg.iface),
                     EccModel::for_cell(cfg.cell),
                     ways,
+                    Self::build_scheduler(&cfg),
                 )
             })
             .collect();
@@ -255,23 +292,30 @@ impl SsdSim {
             PowerModel::for_interface(cfg.iface)
         };
         let reqs = (0..trace.len()).map(|_| None).collect();
-        SsdSim {
+        let mut sim = SsdSim {
             bus_ctx: vec![None; cfg.channels as usize],
             channels,
             slc_chips,
             slc_bus: BusTiming::from_params(&cfg.params, slc_iface),
             mlc_bus: BusTiming::from_params(&cfg.params, mlc_iface),
-            sata: SataLink::new(cfg.sata),
+            link: Self::build_link(&cfg),
             ftl,
             cache: DramCache::new(cfg.cache),
             trace,
             arrivals: Vec::new(),
+            streams: Vec::new(),
+            subq: None,
             next_req: 0,
+            issued: 0,
             outstanding: 0,
             reqs,
             ftl_ops: Vec::new(),
             kick_list: Vec::new(),
             counters: SimCounters::default(),
+            stream_class: Vec::new(),
+            stream_requests: Vec::new(),
+            stream_bytes: Vec::new(),
+            stream_latency_samples: Vec::new(),
             latency: Welford::new(),
             latency_samples: Vec::new(),
             gc_latency_samples: Vec::new(),
@@ -281,7 +325,50 @@ impl SsdSim {
             finished_at: Ps::ZERO,
             geom,
             cfg,
+        };
+        sim.rebuild_admission();
+        sim
+    }
+
+    /// Build the host link a config selects.
+    fn build_link(cfg: &SsdConfig) -> Box<dyn HostLink> {
+        match cfg.host.link {
+            HostLinkKind::Sata => Box::new(SataLink::new(cfg.sata)),
+            HostLinkKind::MultiQueue => {
+                Box::new(MultiQueueLink::new(cfg.sata, cfg.host.queues))
+            }
         }
+    }
+
+    /// Build the way-scheduling policy a config selects (one per channel).
+    fn build_scheduler(cfg: &SsdConfig) -> Box<dyn WayScheduler> {
+        sched::build(cfg.qos.scheduler, cfg.qos.weights)
+    }
+
+    /// Rebuild the closed-loop admission front end from the current config
+    /// (called on construction, reset and [`set_streams`](Self::set_streams)).
+    /// Queues are *primed* (filled with trace indices) once per run, in
+    /// [`run_with`](Self::run_with), and only for closed-loop runs —
+    /// open-loop admission bypasses them entirely.
+    fn rebuild_admission(&mut self) {
+        self.subq = match self.cfg.host.link {
+            HostLinkKind::Sata => None,
+            HostLinkKind::MultiQueue => Some(SubmissionQueues::new(
+                self.cfg.host.queues,
+                self.cfg.host.queue_depth,
+                self.cfg.host.arbitration,
+                self.cfg.host.weights,
+            )),
+        };
+    }
+
+    /// Stream tag of a trace request (stream 0 at the default class for
+    /// untagged traces).
+    fn stream_tag(&self, req: usize) -> StreamTag {
+        self.streams.get(req).copied().unwrap_or(StreamTag {
+            stream: 0,
+            class: CLASS_NORMAL,
+        })
     }
 
     /// Interface kind per tier: the `[tiering]` overrides, falling back to
@@ -411,8 +498,19 @@ impl SsdSim {
             let a = self.geom.page_addr(ppn_for_addr);
             (a.channel, a.way, a.block, a.page)
         };
+        // Background traffic (GC, wear leveling, migration, cache flush)
+        // carries an explicit lowest class instead of relying on implicit
+        // queue ordering; host jobs inherit their request's stream/class.
+        let (stream, class) = if req >= MIG_REQ {
+            (u16::MAX, CLASS_BACKGROUND)
+        } else {
+            let st = self.reqs[req as usize].as_ref().expect("unknown request");
+            (st.stream, st.class.min(CLASS_BACKGROUND))
+        };
         let job = PageJob {
             req,
+            stream,
+            class,
             kind,
             block,
             page,
@@ -551,7 +649,8 @@ impl SsdSim {
     /// Queue one read-response chunk to the host.
     fn send_read_chunk(&mut self, req: u64, sched: &mut Scheduler<Ev>) {
         let bytes = self.geom.page_bytes as u64;
-        let (_, done_at) = self.sata.reserve(sched.now(), bytes, false);
+        let stream = self.stream_tag(req as usize).stream;
+        let (_, done_at) = self.link.reserve(sched.now(), stream, bytes, false);
         sched.at(
             done_at,
             Ev::SataDone {
@@ -574,10 +673,21 @@ impl SsdSim {
         } else {
             self.clean_latency_samples.push(lat_us);
         }
+        if !self.stream_class.is_empty() {
+            let s = st.stream as usize;
+            self.stream_requests[s] += 1;
+            self.stream_bytes[s] += st.bytes as u64;
+            self.stream_latency_samples[s].push(lat_us);
+        }
         self.finished_at = sched.now();
-        // Open-loop admission is arrival-driven; a completion-time Admit
-        // would be a guaranteed no-op event on the hot path.
+        // Open-loop admission is arrival-driven (and bypasses the
+        // submission queues, whose depth bookkeeping only runs closed
+        // loop); a completion-time Admit would be a guaranteed no-op
+        // event on the hot path.
         if self.arrivals.is_empty() {
+            if let Some(q) = self.subq.as_mut() {
+                q.complete(st.stream);
+            }
             sched.now_ev(Ev::Admit);
         }
     }
@@ -589,9 +699,10 @@ impl SsdSim {
         if !self.channels[chi].bus.is_free(now) || self.bus_ctx[chi].is_some() {
             return; // BusDone will re-kick.
         }
-        let Some(wi) = self.channels[chi].next_way_wanting_bus(now) else {
+        let Some(grant) = self.channels[chi].next_grant(now) else {
             return; // ChipDone events will re-kick when array ops finish.
         };
+        let wi = grant.way;
         // Transfers clock at the target way's tier rate (the channel's own
         // timing when tiering is disabled — value-identical routing).
         let bt = self.bus_timing_for(chi, wi);
@@ -621,8 +732,11 @@ impl SsdSim {
             }
             return;
         }
-        // Dispatch a fresh job from the queue.
-        let mut job = way.queue.pop_front().expect("wants_bus implies queued job");
+        // Dispatch the granted job from the queue (index 0 — FIFO — under
+        // the default policy; QoS policies may pull a later job forward,
+        // never across a background barrier). `take_job` keeps the way's
+        // per-class counts in sync with the queue.
+        let mut job = way.take_job(grant.job).expect("grant names a queued job");
         let nand = way.chip.timing;
         let dur = match job.kind {
             PageJobKind::Read => bt.read_cmd(),
@@ -775,52 +889,73 @@ impl SsdSim {
         self.kick_channel(ch, sched);
     }
 
-    /// Closed-loop admission: refill the device to its queue depth. A
-    /// no-op in open-loop mode, where [`arrive`](Self::arrive) drives
-    /// admission from the arrival track instead.
+    /// Closed-loop admission. Single-stream path: refill the device to
+    /// its global queue depth in trace order. Multi-queue path: let the
+    /// submission-queue front end fetch — per-queue depth, queue
+    /// arbitration — until no queue is eligible. A no-op in open-loop
+    /// mode, where [`arrive`](Self::arrive) drives admission from the
+    /// arrival track instead.
     fn admit(&mut self, sched: &mut Scheduler<Ev>) {
         if !self.arrivals.is_empty() {
             return;
         }
-        while self.outstanding < self.cfg.queue_depth && self.next_req < self.trace.len() {
-            self.issue_next(sched);
+        if self.subq.is_some() {
+            loop {
+                let Some(idx) = self.subq.as_mut().and_then(SubmissionQueues::fetch) else {
+                    break;
+                };
+                self.issue_req(idx as usize, sched);
+            }
+        } else {
+            while self.outstanding < self.cfg.queue_depth && self.next_req < self.trace.len() {
+                let idx = self.next_req;
+                self.next_req += 1;
+                self.issue_req(idx, sched);
+            }
         }
     }
 
     /// Open-loop admission: admit every request whose arrival time has
     /// come (the queue is unbounded — under overload, latency grows
     /// without bound, which is exactly the saturation signal the load
-    /// sweep measures), then re-arm for the next arrival.
+    /// sweep measures; submission-queue depths are bypassed for the same
+    /// reason), then re-arm for the next arrival.
     fn arrive(&mut self, sched: &mut Scheduler<Ev>) {
         while self.next_req < self.trace.len() && self.arrivals[self.next_req] <= sched.now() {
-            self.issue_next(sched);
+            let idx = self.next_req;
+            self.next_req += 1;
+            self.issue_req(idx, sched);
         }
         if self.next_req < self.trace.len() {
             sched.at(self.arrivals[self.next_req], Ev::Arrive);
         }
     }
 
-    /// Admit the next trace request now: create its state and start its
-    /// SATA command/data phase.
-    fn issue_next(&mut self, sched: &mut Scheduler<Ev>) {
-        let id = self.next_req as u64;
-        let r = self.trace[self.next_req];
-        self.next_req += 1;
+    /// Admit trace request `idx` now: create its state and start its host
+    /// command/data phase.
+    fn issue_req(&mut self, idx: usize, sched: &mut Scheduler<Ev>) {
+        let id = idx as u64;
+        let r = self.trace[idx];
+        let tag = self.stream_tag(idx);
+        self.issued += 1;
         self.outstanding += 1;
         let pages = self.lpns(&r).count() as u32;
-        self.reqs[id as usize] = Some(ReqState {
-                kind: r.kind,
-                bytes: r.bytes,
-                pages_total: pages,
-                pages_done: 0,
-                chunks_done: 0,
-                issued_at: sched.now(),
-                gc_hit: false,
-            },
-        );
+        self.reqs[idx] = Some(ReqState {
+            kind: r.kind,
+            bytes: r.bytes,
+            pages_total: pages,
+            pages_done: 0,
+            chunks_done: 0,
+            issued_at: sched.now(),
+            stream: tag.stream,
+            class: tag.class,
+            gc_hit: false,
+        });
         match r.kind {
             RequestKind::Write => {
-                let (_, done) = self.sata.reserve(sched.now(), r.bytes as u64, true);
+                let (_, done) = self
+                    .link
+                    .reserve(sched.now(), tag.stream, r.bytes as u64, true);
                 sched.at(
                     done,
                     Ev::SataDone {
@@ -830,7 +965,7 @@ impl SsdSim {
                 );
             }
             RequestKind::Read => {
-                let (_, done) = self.sata.reserve(sched.now(), 0, true);
+                let (_, done) = self.link.reserve(sched.now(), tag.stream, 0, true);
                 sched.at(
                     done,
                     Ev::SataDone {
@@ -862,9 +997,60 @@ impl SsdSim {
         self.arrivals.extend_from_slice(arrivals);
     }
 
+    /// Install a per-request stream track: request `i` belongs to
+    /// submission queue / tenant `streams[i].stream` at priority class
+    /// `streams[i].class`, enabling per-stream latency accounting and the
+    /// QoS way schedulers' class decisions. Pass an empty slice (or call
+    /// [`reset`](Self::reset)) to restore single-stream behaviour, which
+    /// is bit-identical to a simulator that never had a stream track.
+    pub fn set_streams(&mut self, streams: &[StreamTag]) {
+        assert!(
+            streams.is_empty() || streams.len() == self.trace.len(),
+            "stream track length mismatch: {} tags for {} requests",
+            streams.len(),
+            self.trace.len()
+        );
+        // Same rule as the trace parser and merge_streams: class 3 is the
+        // device's background class; a host stream tagged with it would
+        // silently become a plan-order barrier and be served from the
+        // background scheduling budget.
+        assert!(
+            streams.iter().all(|t| t.class < CLASS_BACKGROUND),
+            "host stream classes must be < {CLASS_BACKGROUND} (background is reserved)"
+        );
+        let nstreams = streams
+            .iter()
+            .map(|t| t.stream as usize + 1)
+            .max()
+            .unwrap_or(0);
+        if self.cfg.host.link == HostLinkKind::MultiQueue {
+            assert!(
+                nstreams <= self.cfg.host.queues as usize,
+                "stream ids reach {} but host.queues = {}",
+                nstreams,
+                self.cfg.host.queues
+            );
+        }
+        self.streams.clear();
+        self.streams.extend_from_slice(streams);
+        self.stream_class = vec![CLASS_NORMAL; nstreams];
+        let mut tagged = vec![false; nstreams];
+        for t in &self.streams {
+            let s = t.stream as usize;
+            if !tagged[s] {
+                tagged[s] = true;
+                self.stream_class[s] = t.class;
+            }
+        }
+        self.stream_requests = vec![0; nstreams];
+        self.stream_bytes = vec![0; nstreams];
+        self.stream_latency_samples = vec![Vec::new(); nstreams];
+        self.rebuild_admission();
+    }
+
     /// All requests issued and completed?
     pub fn is_done(&self) -> bool {
-        self.next_req == self.trace.len() && self.outstanding == 0
+        self.issued == self.trace.len() && self.outstanding == 0
     }
 
     /// Simulated time of the last request completion.
@@ -885,8 +1071,25 @@ impl SsdSim {
     /// queue-depth settings may all differ — they are overwritten in place.
     /// The tier partition and migration threshold are FTL construction
     /// parameters, so they are part of the key (0/0 when tiering is
-    /// disabled).
-    pub fn reuse_key(cfg: &SsdConfig) -> (u16, u16, u32, u32, u32, FtlKind, u64, u32, u32) {
+    /// disabled); likewise the `[host]` link shape and the `[qos]`
+    /// scheduling policy (both normalized when dormant, so dormant
+    /// sections never fragment reuse).
+    #[allow(clippy::type_complexity)]
+    pub fn reuse_key(
+        cfg: &SsdConfig,
+    ) -> (
+        u16,
+        u16,
+        u32,
+        u32,
+        u32,
+        FtlKind,
+        u64,
+        u32,
+        u32,
+        (HostLinkKind, u16),
+        (SchedKind, [u32; NUM_CLASSES]),
+    ) {
         let nand = cfg.nand_timing();
         let geom = Geometry {
             channels: cfg.channels,
@@ -912,6 +1115,8 @@ impl SsdSim {
             logical_pages,
             slc_chips,
             migrate,
+            cfg.host.reuse_sig(),
+            cfg.qos.reuse_sig(),
         )
     }
 
@@ -953,20 +1158,25 @@ impl SsdSim {
             }
         }
         self.bus_ctx.fill(None);
-        self.sata.reset(cfg.sata);
         self.ftl.reset();
         self.ftl.set_gc_tuning(cfg.steady.tuning());
         self.cache.reset(cfg.cache);
         self.trace.clear();
         self.trace.extend_from_slice(trace);
         self.arrivals.clear();
+        self.streams.clear();
         self.next_req = 0;
+        self.issued = 0;
         self.outstanding = 0;
         self.reqs.clear();
         self.reqs.resize_with(self.trace.len(), || None);
         self.ftl_ops.clear();
         self.kick_list.clear();
         self.counters = SimCounters::default();
+        self.stream_class.clear();
+        self.stream_requests.clear();
+        self.stream_bytes.clear();
+        self.stream_latency_samples.clear();
         self.latency = Welford::new();
         self.latency_samples.clear();
         self.gc_latency_samples.clear();
@@ -979,6 +1189,11 @@ impl SsdSim {
         self.energy = EnergyMeter::default();
         self.finished_at = Ps::ZERO;
         self.cfg = cfg;
+        // The link shape is reuse-key-stable but its rate/overhead (and
+        // the queue count's telemetry vector) may change: rebuild both the
+        // link and the admission front end from the new config.
+        self.link = Self::build_link(&self.cfg);
+        self.rebuild_admission();
     }
 
     /// Run the model to completion; returns the engine statistics.
@@ -992,6 +1207,11 @@ impl SsdSim {
     pub fn run_with(&mut self, sched: &mut Scheduler<Ev>) -> RunResult {
         sched.reset();
         if self.arrivals.is_empty() {
+            // Closed loop: fill the submission queues once, now that the
+            // trace and stream track are both final.
+            if let Some(q) = self.subq.as_mut() {
+                q.prime(self.trace.len(), &self.streams);
+            }
             sched.at(Ps::ZERO, Ev::Admit);
         } else {
             sched.at(self.arrivals[0], Ev::Arrive);
@@ -1014,9 +1234,19 @@ impl SsdSim {
             .collect()
     }
 
-    /// SATA link utilization at end of run.
+    /// Host-link utilization at end of run (the name predates the
+    /// pluggable link; it reports whichever link the config selected).
     pub fn sata_utilization(&self) -> f64 {
-        self.sata.utilization(self.finished_at)
+        self.link.utilization(self.finished_at)
+    }
+
+    /// Replace every channel's way scheduler (testing hook — the
+    /// scheduler-equivalence oracle in `rust/tests/qos.rs` injects the
+    /// pre-refactor arbiter verbatim and compares whole reports).
+    pub fn set_way_schedulers<F: Fn() -> Box<dyn WayScheduler>>(&mut self, mk: F) {
+        for ch in &mut self.channels {
+            ch.set_scheduler(mk());
+        }
     }
 
     /// FTL counters: (relocations, erases, free_pages).
@@ -1472,6 +1702,52 @@ mod tests {
         assert_eq!(fingerprint(&sim, rr), fingerprint(&fresh, rf));
         assert_eq!(sim.counters.mig_pages_programmed, 0);
         assert_eq!(sim.counters.slc_reads + sim.counters.mlc_reads, 0);
+    }
+
+    /// Multi-queue closed loop: a two-stream trace completes with
+    /// per-stream accounting that sums to the totals, and per-queue depth
+    /// caps each stream's outstanding requests.
+    #[test]
+    fn multi_queue_two_streams_complete_with_accounting() {
+        use crate::host::trace::{CLASS_BULK, CLASS_URGENT, StreamTag};
+        let mut cfg = small_cfg(InterfaceKind::Proposed, 2);
+        cfg.host.link = HostLinkKind::MultiQueue;
+        cfg.host.queues = 2;
+        cfg.host.queue_depth = 2;
+        let trace = write_trace(12);
+        let tags: Vec<StreamTag> = (0..12)
+            .map(|i| StreamTag {
+                stream: (i % 2) as u16,
+                class: if i % 2 == 0 { CLASS_URGENT } else { CLASS_BULK },
+            })
+            .collect();
+        let mut sim = SsdSim::new(cfg, trace);
+        sim.set_streams(&tags);
+        sim.run();
+        assert!(sim.is_done());
+        assert_eq!(sim.counters.requests_done, 12);
+        assert_eq!(sim.stream_requests, vec![6, 6]);
+        assert_eq!(sim.stream_bytes.iter().sum::<u64>(), sim.counters.host_bytes);
+        assert_eq!(sim.stream_class, vec![CLASS_URGENT, CLASS_BULK]);
+        assert_eq!(
+            sim.stream_latency_samples[0].len() + sim.stream_latency_samples[1].len(),
+            sim.latency_samples.len()
+        );
+    }
+
+    /// Dormant `[host]`/`[qos]` sections keep the reuse fingerprint — and
+    /// therefore sweep-worker retargeting — intact.
+    #[test]
+    fn dormant_host_qos_sections_share_reuse_key() {
+        let base = small_cfg(InterfaceKind::Proposed, 2);
+        let mut dormant = base.clone();
+        dormant.host.queues = 64;
+        dormant.host.queue_depth = 99;
+        dormant.qos.weights = [1, 1, 1, 1];
+        assert_eq!(SsdSim::reuse_key(&base), SsdSim::reuse_key(&dormant));
+        let mut active = base.clone();
+        active.qos.scheduler = crate::controller::sched::SchedKind::ReadPriority;
+        assert_ne!(SsdSim::reuse_key(&base), SsdSim::reuse_key(&active));
     }
 
     #[test]

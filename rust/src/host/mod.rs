@@ -1,7 +1,10 @@
-//! Host side: the SATA link model and workload traces.
+//! Host side: the pluggable host link (SATA / NVMe-style multi-queue) and
+//! workload traces.
 
+pub mod link;
 pub mod sata;
 pub mod trace;
 
+pub use link::{HostLink, HostLinkKind, MultiQueueLink, QueueArb, SubmissionQueues};
 pub use sata::{SataGen, SataLink};
-pub use trace::{Request, RequestKind, Trace, TraceGen};
+pub use trace::{Request, RequestKind, StreamTag, Trace, TraceGen};

@@ -41,9 +41,21 @@ impl SataGen {
         }
     }
 
-    /// Payload transfer time for `bytes`.
+    /// Payload transfer time for `bytes`, computed in checked integer
+    /// arithmetic so the picosecond exactness the rest of the DES
+    /// guarantees survives the host link. The rate is fixed to whole
+    /// bytes/second (exact for every real link generation), the division
+    /// rounds to nearest (matching the historical f64 path everywhere the
+    /// f64 path was exact), and byte counts whose transfer would not fit
+    /// the `Ps` range saturate to [`Ps::MAX`] explicitly instead of
+    /// through a float cast.
     pub fn transfer_time(&self, bytes: u64) -> Ps {
-        Ps((bytes as f64 / (self.bandwidth_mbps * 1e6) * 1e12).round() as i64)
+        // Config validation rejects non-positive bandwidth; `max(1)` keeps
+        // a hand-built degenerate struct from dividing by zero.
+        let bps = ((self.bandwidth_mbps * 1e6) as u128).max(1);
+        let num = bytes as u128 * 1_000_000_000_000u128;
+        let ps = (num + bps / 2) / bps;
+        Ps(i64::try_from(ps).unwrap_or(i64::MAX))
     }
 }
 
@@ -105,6 +117,22 @@ impl SataLink {
     }
 }
 
+impl crate::host::link::HostLink for SataLink {
+    /// SATA has a single command stream: the submission-queue id is
+    /// ignored and every transfer serializes on the one link.
+    fn reserve(&mut self, now: Ps, _queue: u16, bytes: u64, with_cmd: bool) -> (Ps, Ps) {
+        SataLink::reserve(self, now, bytes, with_cmd)
+    }
+
+    fn utilization(&self, elapsed: Ps) -> f64 {
+        SataLink::utilization(self, elapsed)
+    }
+
+    fn bytes_moved(&self) -> u64 {
+        self.bytes_moved
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -135,6 +163,28 @@ mod tests {
         l.reserve(Ps::ZERO, 2048, false);
         let (s, _) = l.reserve(Ps::ms(1), 2048, false);
         assert_eq!(s, Ps::ms(1));
+    }
+
+    /// Regression: the payload time is exact integer picoseconds at the
+    /// 300 MB/s cap (the old f64 path rounded through a double and
+    /// saturated through a float cast for huge byte counts).
+    #[test]
+    fn transfer_time_exact_integer_ps_at_cap() {
+        let g = SataGen::sata2();
+        // 2048 B * 1e12 / 3e8 B/s = 6 826 666.67 ps, round-to-nearest.
+        assert_eq!(g.transfer_time(2048), Ps::ps(6_826_667));
+        // 64 KiB: 218 453 333.33 ps.
+        assert_eq!(g.transfer_time(65536), Ps::ps(218_453_333));
+        // 1 TiB: 3 665.04 s, still exact to the picosecond.
+        assert_eq!(g.transfer_time(1 << 40), Ps::ps(3_665_038_759_253_333));
+        assert_eq!(g.transfer_time(0), Ps::ZERO);
+        // Beyond the Ps range the time saturates explicitly.
+        assert_eq!(g.transfer_time(u64::MAX), Ps::MAX);
+        // Exactness is additive: n pages cost exactly n * (page cost) to
+        // within the per-call rounding half-ulp.
+        let one = g.transfer_time(2048).as_ps();
+        let eight = g.transfer_time(8 * 2048).as_ps();
+        assert!((eight - 8 * one).abs() <= 8, "one={one} eight={eight}");
     }
 
     #[test]

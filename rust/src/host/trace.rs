@@ -25,9 +25,47 @@
 //!
 //! Arrivals are integer picoseconds from the start of the run and must be
 //! non-decreasing; mixing v1 and v2 rows in one file is rejected.
+//!
+//! ## Multi-stream traces (v3)
+//!
+//! A trace may carry one **stream tag per request** (`Trace::streams`):
+//! a submission-queue / tenant id plus a priority class. Tagged traces
+//! drive the multi-tenant host path (`[host]`/`[qos]` in the config,
+//! `ddrnand sweep-qos`, DESIGN.md §7). The text format appends the two
+//! columns after v1 or v2 rows (v1/v2 files still parse):
+//!
+//! ```text
+//! # v3 (closed loop):  <R|W> <offset-bytes> <length-bytes> <stream> <class>
+//! # v3 (open loop):    <R|W> <offset-bytes> <length-bytes> <arrival-ps> <stream> <class>
+//! ```
+//!
+//! Host classes are 0 (latency-critical) ≤ class ≤ 2 (bulk); class 3 is
+//! reserved for the device's internal background traffic (GC, wear
+//! leveling, migration) and rejected in trace files. All rows of one file
+//! must carry the same column shape.
 
 use crate::util::prng::Prng;
 use crate::util::time::Ps;
+
+/// Highest-priority host class: latency-critical traffic.
+pub const CLASS_URGENT: u8 = 0;
+/// Default host class.
+pub const CLASS_NORMAL: u8 = 1;
+/// Lowest host class: bulk / best-effort traffic.
+pub const CLASS_BULK: u8 = 2;
+/// Internal background traffic (GC / wear-leveling / migration copy-back);
+/// never valid in a host trace.
+pub const CLASS_BACKGROUND: u8 = 3;
+/// Number of scheduling classes (host classes plus background).
+pub const NUM_CLASSES: usize = 4;
+
+/// Stream tag of one request: which submission queue / tenant it belongs
+/// to and its priority class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct StreamTag {
+    pub stream: u16,
+    pub class: u8,
+}
 
 /// Read or write.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -62,6 +100,9 @@ pub struct Trace {
     /// Open-loop arrival timestamps, one per request, non-decreasing.
     /// Empty = closed loop (see the module docs).
     pub arrivals: Vec<Ps>,
+    /// Stream tags, one per request. Empty = single-stream (everything is
+    /// stream 0 at the default class; see the module docs).
+    pub streams: Vec<StreamTag>,
 }
 
 impl Trace {
@@ -70,7 +111,90 @@ impl Trace {
         Trace {
             requests,
             arrivals: Vec::new(),
+            streams: Vec::new(),
         }
+    }
+
+    /// Does this trace carry per-request stream tags?
+    pub fn is_multi_stream(&self) -> bool {
+        !self.streams.is_empty()
+    }
+
+    /// Number of streams: max tagged stream id + 1 (1 for untagged traces,
+    /// 0 for empty ones).
+    pub fn stream_count(&self) -> usize {
+        if self.streams.is_empty() {
+            usize::from(!self.requests.is_empty())
+        } else {
+            self.streams.iter().map(|t| t.stream as usize).max().unwrap_or(0) + 1
+        }
+    }
+
+    /// Merge per-stream traces into one multi-stream trace; part `i`
+    /// becomes stream `i` with priority class `parts[i].1`. Either every
+    /// part is open loop — the merge is ordered by arrival, ties broken by
+    /// stream id, so the result's arrival track is non-decreasing — or
+    /// every part is closed loop, in which case the streams are
+    /// interleaved round robin one request at a time. Mixing the two is an
+    /// error, as are classes outside the host range.
+    pub fn merge_streams(parts: &[(Trace, u8)]) -> Result<Trace, String> {
+        if parts.is_empty() {
+            return Ok(Trace::default());
+        }
+        if parts.len() > u16::MAX as usize {
+            return Err("too many streams".into());
+        }
+        for (i, (t, class)) in parts.iter().enumerate() {
+            if *class > CLASS_BULK {
+                return Err(format!(
+                    "stream {i}: class {class} outside the host range 0..={CLASS_BULK}"
+                ));
+            }
+            if t.is_open_loop() != parts[0].0.is_open_loop() {
+                return Err(format!(
+                    "stream {i}: open-loop and closed-loop parts cannot merge"
+                ));
+            }
+            if t.is_open_loop() && t.arrivals.len() != t.requests.len() {
+                return Err(format!("stream {i}: arrival track length mismatch"));
+            }
+        }
+        let open = parts[0].0.is_open_loop();
+        let total: usize = parts.iter().map(|(t, _)| t.requests.len()).sum();
+        let mut out = Trace {
+            requests: Vec::with_capacity(total),
+            arrivals: Vec::with_capacity(if open { total } else { 0 }),
+            streams: Vec::with_capacity(total),
+        };
+        let mut cursor = vec![0usize; parts.len()];
+        while out.requests.len() < total {
+            let next = if open {
+                // Earliest next arrival; ties go to the lowest stream id.
+                (0..parts.len())
+                    .filter(|&i| cursor[i] < parts[i].0.requests.len())
+                    .min_by_key(|&i| parts[i].0.arrivals[cursor[i]])
+                    .expect("unmerged requests remain")
+            } else {
+                // Round robin: one request per non-exhausted stream in turn.
+                let round = out.requests.len() % parts.len();
+                (0..parts.len())
+                    .map(|o| (round + o) % parts.len())
+                    .find(|&i| cursor[i] < parts[i].0.requests.len())
+                    .expect("unmerged requests remain")
+            };
+            let (t, class) = &parts[next];
+            out.requests.push(t.requests[cursor[next]]);
+            if open {
+                out.arrivals.push(t.arrivals[cursor[next]]);
+            }
+            out.streams.push(StreamTag {
+                stream: next as u16,
+                class: *class,
+            });
+            cursor[next] += 1;
+        }
+        debug_assert!(out.arrivals.windows(2).all(|w| w[0] <= w[1]));
+        Ok(out)
     }
 
     pub fn total_bytes(&self) -> u64 {
@@ -103,45 +227,65 @@ impl Trace {
     }
 
     /// Serialize to the text trace format: `R|W <offset> <bytes>` per line
-    /// (v1), with a fourth `<arrival-ps>` column when the trace carries an
-    /// arrival track (v2). '#' comments allowed.
+    /// (v1), with an `<arrival-ps>` column when the trace carries an
+    /// arrival track (v2) and trailing `<stream> <class>` columns when it
+    /// carries stream tags (v3). '#' comments allowed.
     pub fn to_text(&self) -> String {
         let open = self.is_open_loop();
+        let tagged = self.is_multi_stream();
         assert!(
             !open || self.arrivals.len() == self.requests.len(),
             "arrival track length mismatch: {} arrivals for {} requests",
             self.arrivals.len(),
             self.requests.len()
         );
+        assert!(
+            !tagged || self.streams.len() == self.requests.len(),
+            "stream track length mismatch: {} tags for {} requests",
+            self.streams.len(),
+            self.requests.len()
+        );
         let mut s = String::with_capacity(self.requests.len() * 24);
-        if open {
-            s.push_str("# ddrnand trace v2: <R|W> <offset-bytes> <length-bytes> <arrival-ps>\n");
-        } else {
-            s.push_str("# ddrnand trace v1: <R|W> <offset-bytes> <length-bytes>\n");
-        }
+        let header = match (open, tagged) {
+            (false, false) => "# ddrnand trace v1: <R|W> <offset-bytes> <length-bytes>\n",
+            (true, false) => {
+                "# ddrnand trace v2: <R|W> <offset-bytes> <length-bytes> <arrival-ps>\n"
+            }
+            (false, true) => {
+                "# ddrnand trace v3: <R|W> <offset-bytes> <length-bytes> <stream> <class>\n"
+            }
+            (true, true) => {
+                "# ddrnand trace v3: <R|W> <offset-bytes> <length-bytes> <arrival-ps> \
+                 <stream> <class>\n"
+            }
+        };
+        s.push_str(header);
         for (i, r) in self.requests.iter().enumerate() {
             let k = match r.kind {
                 RequestKind::Read => 'R',
                 RequestKind::Write => 'W',
             };
+            s.push_str(&format!("{k} {} {}", r.offset, r.bytes));
             if open {
-                s.push_str(&format!(
-                    "{k} {} {} {}\n",
-                    r.offset,
-                    r.bytes,
-                    self.arrivals[i].as_ps()
-                ));
-            } else {
-                s.push_str(&format!("{k} {} {}\n", r.offset, r.bytes));
+                s.push_str(&format!(" {}", self.arrivals[i].as_ps()));
             }
+            if tagged {
+                s.push_str(&format!(" {} {}", self.streams[i].stream, self.streams[i].class));
+            }
+            s.push('\n');
         }
         s
     }
 
-    /// Parse the text trace format (v1 or v2; see the module docs).
+    /// Parse the text trace format (v1, v2 or v3; see the module docs).
+    /// The number of columns after `<length-bytes>` selects the shape —
+    /// 0: v1, 1: v2 arrival, 2: v3 stream+class, 3: v3 arrival+stream+
+    /// class — and every row of a file must share one shape.
     pub fn from_text(text: &str) -> Result<Trace, String> {
         let mut requests = Vec::new();
         let mut arrivals: Vec<Ps> = Vec::new();
+        let mut streams: Vec<StreamTag> = Vec::new();
+        let mut shape: Option<usize> = None;
         for (i, line) in text.lines().enumerate() {
             let line = line.trim();
             if line.is_empty() || line.starts_with('#') {
@@ -166,44 +310,58 @@ impl Trace {
             if bytes == 0 {
                 return Err(format!("line {}: zero-length request", i + 1));
             }
-            match it.next() {
-                Some(a) => {
-                    // v2 row: arrival in picoseconds.
-                    if requests.len() != arrivals.len() {
-                        return Err(format!(
-                            "line {}: v2 arrival column after v1 rows (all rows must agree)",
-                            i + 1
-                        ));
-                    }
-                    let ps: i64 = a
-                        .parse()
-                        .map_err(|e| format!("line {}: bad arrival: {e}", i + 1))?;
-                    if ps < 0 {
-                        return Err(format!("line {}: negative arrival {ps}", i + 1));
-                    }
-                    let at = Ps::ps(ps);
-                    if let Some(&prev) = arrivals.last() {
-                        if at < prev {
-                            return Err(format!(
-                                "line {}: arrival moves backwards ({at} < {prev})",
-                                i + 1
-                            ));
-                        }
-                    }
-                    arrivals.push(at);
-                }
-                None => {
-                    // v1 row: reject if earlier rows carried arrivals.
-                    if !arrivals.is_empty() {
-                        return Err(format!(
-                            "line {}: v1 row after v2 rows (all rows must agree)",
-                            i + 1
-                        ));
-                    }
-                }
-            }
-            if it.next().is_some() {
+            let extras: Vec<&str> = it.collect();
+            if extras.len() > 3 {
                 return Err(format!("line {}: too many fields", i + 1));
+            }
+            match shape {
+                None => shape = Some(extras.len()),
+                Some(s) if s != extras.len() => {
+                    return Err(format!(
+                        "line {}: {} extra column(s) after {} on earlier rows \
+                         (all rows must share one shape)",
+                        i + 1,
+                        extras.len(),
+                        s
+                    ));
+                }
+                Some(_) => {}
+            }
+            // Shapes 1 and 3 lead with an arrival; 2 and 3 end with
+            // <stream> <class>.
+            if extras.len() % 2 == 1 {
+                let ps: i64 = extras[0]
+                    .parse()
+                    .map_err(|e| format!("line {}: bad arrival: {e}", i + 1))?;
+                if ps < 0 {
+                    return Err(format!("line {}: negative arrival {ps}", i + 1));
+                }
+                let at = Ps::ps(ps);
+                if let Some(&prev) = arrivals.last() {
+                    if at < prev {
+                        return Err(format!(
+                            "line {}: arrival moves backwards ({at} < {prev})",
+                            i + 1
+                        ));
+                    }
+                }
+                arrivals.push(at);
+            }
+            if extras.len() >= 2 {
+                let stream: u16 = extras[extras.len() - 2]
+                    .parse()
+                    .map_err(|e| format!("line {}: bad stream: {e}", i + 1))?;
+                let class: u8 = extras[extras.len() - 1]
+                    .parse()
+                    .map_err(|e| format!("line {}: bad class: {e}", i + 1))?;
+                if class > CLASS_BULK {
+                    return Err(format!(
+                        "line {}: class {class} outside the host range 0..={CLASS_BULK} \
+                         ({CLASS_BACKGROUND} is reserved for background traffic)",
+                        i + 1
+                    ));
+                }
+                streams.push(StreamTag { stream, class });
             }
             requests.push(Request {
                 kind,
@@ -211,7 +369,11 @@ impl Trace {
                 bytes,
             });
         }
-        Ok(Trace { requests, arrivals })
+        Ok(Trace {
+            requests,
+            arrivals,
+            streams,
+        })
     }
 }
 
@@ -388,6 +550,100 @@ mod tests {
         assert!(Trace::from_text("R 0 2048\nW 2048 2048 10").is_err());
         // Trailing junk beyond the arrival column.
         assert!(Trace::from_text("R 0 2048 5 9").is_err());
+    }
+
+    #[test]
+    fn v3_closed_text_roundtrip() {
+        let mut t = TraceGen::default().mixed_sequential(8, 0.5, 3);
+        t.streams = (0..8)
+            .map(|i| StreamTag {
+                stream: i % 2,
+                class: if i % 2 == 0 { CLASS_URGENT } else { CLASS_BULK },
+            })
+            .collect();
+        let text = t.to_text();
+        assert!(text.starts_with("# ddrnand trace v3"));
+        let back = Trace::from_text(&text).unwrap();
+        assert_eq!(t.requests, back.requests);
+        assert_eq!(t.streams, back.streams);
+        assert!(back.arrivals.is_empty());
+        assert!(back.is_multi_stream());
+        assert_eq!(back.stream_count(), 2);
+    }
+
+    #[test]
+    fn v3_open_text_roundtrip() {
+        let gen = TraceGen::default();
+        let mut t = gen.poisson_arrivals(gen.sequential(RequestKind::Read, 6), 40.0, 7);
+        t.streams = vec![
+            StreamTag {
+                stream: 1,
+                class: CLASS_NORMAL
+            };
+            6
+        ];
+        let text = t.to_text();
+        assert!(text.starts_with("# ddrnand trace v3"));
+        let back = Trace::from_text(&text).unwrap();
+        assert_eq!(t.requests, back.requests);
+        assert_eq!(t.arrivals, back.arrivals);
+        assert_eq!(t.streams, back.streams);
+        assert_eq!(back.stream_count(), 2, "stream ids need not be dense");
+    }
+
+    #[test]
+    fn v3_parse_rejects_bad_rows() {
+        // Background class is reserved, stream must be numeric.
+        assert!(Trace::from_text("R 0 2048 0 3").is_err());
+        assert!(Trace::from_text("R 0 2048 tenant 1").is_err());
+        // Shapes must agree across rows (v1 then v3, v3 then v2).
+        assert!(Trace::from_text("R 0 2048\nW 2048 2048 0 1").is_err());
+        assert!(Trace::from_text("R 0 2048 0 1\nW 2048 2048 50").is_err());
+        // Open v3 still validates the arrival column.
+        assert!(Trace::from_text("R 0 2048 1000 0 1\nW 2048 2048 999 0 1").is_err());
+        // More than three extra columns.
+        assert!(Trace::from_text("R 0 2048 5 0 1 9").is_err());
+    }
+
+    #[test]
+    fn merge_streams_open_orders_by_arrival() {
+        let gen = TraceGen::default();
+        let a = gen.poisson_arrivals(gen.sequential(RequestKind::Read, 20), 30.0, 1);
+        let b = gen.poisson_arrivals(gen.sequential(RequestKind::Write, 20), 60.0, 2);
+        let m = Trace::merge_streams(&[(a.clone(), CLASS_URGENT), (b.clone(), CLASS_BULK)])
+            .unwrap();
+        assert_eq!(m.len(), 40);
+        assert_eq!(m.streams.len(), 40);
+        assert!(m.arrivals.windows(2).all(|w| w[0] <= w[1]));
+        // Each stream's own sub-sequence is preserved in order.
+        let of = |s: u16| -> Vec<Request> {
+            m.requests
+                .iter()
+                .zip(&m.streams)
+                .filter(|(_, t)| t.stream == s)
+                .map(|(r, _)| *r)
+                .collect()
+        };
+        assert_eq!(of(0), a.requests);
+        assert_eq!(of(1), b.requests);
+        assert_eq!(m.streams.iter().filter(|t| t.class == CLASS_URGENT).count(), 20);
+    }
+
+    #[test]
+    fn merge_streams_closed_round_robins_and_rejects_mixed() {
+        let gen = TraceGen::default();
+        let a = gen.sequential(RequestKind::Read, 2);
+        let b = gen.sequential(RequestKind::Write, 4);
+        let m =
+            Trace::merge_streams(&[(a.clone(), CLASS_NORMAL), (b.clone(), CLASS_NORMAL)]).unwrap();
+        assert_eq!(m.len(), 6);
+        assert!(m.arrivals.is_empty());
+        let order: Vec<u16> = m.streams.iter().map(|t| t.stream).collect();
+        assert_eq!(order, vec![0, 1, 0, 1, 1, 1], "round robin, then drain");
+        // Mixed open/closed parts and background classes are rejected.
+        let open = gen.poisson_arrivals(gen.sequential(RequestKind::Read, 2), 10.0, 1);
+        assert!(Trace::merge_streams(&[(a.clone(), 0), (open, 0)]).is_err());
+        assert!(Trace::merge_streams(&[(a, CLASS_BACKGROUND)]).is_err());
     }
 
     #[test]

@@ -41,7 +41,10 @@ impl Table {
                 }
                 // Right-align numeric-looking cells, left-align text.
                 let c = &cells[i];
-                let numeric = c.chars().next().map_or(false, |ch| ch.is_ascii_digit() || ch == '-');
+                let numeric = c
+                    .chars()
+                    .next()
+                    .is_some_and(|ch| ch.is_ascii_digit() || ch == '-');
                 if numeric {
                     line.push_str(&format!("{:>w$}", c, w = widths[i]));
                 } else {
@@ -126,6 +129,24 @@ pub fn summarize(r: &SimReport) -> String {
             r.wear_spread,
             r.gc_energy_share * 100.0
         ));
+    }
+    if !r.streams.is_empty() {
+        s.push_str(&format!(
+            "\n  streams (Jain fairness {:.3}):",
+            r.fairness
+        ));
+        for t in &r.streams {
+            s.push_str(&format!(
+                "\n    s{} class {}: {} reqs, {:.2} MB/s, p50/p95/p99 = {:.1}/{:.1}/{:.1} us",
+                t.stream,
+                t.class,
+                t.requests,
+                t.bandwidth_mbps,
+                t.latency_p50_us,
+                t.latency_p95_us,
+                t.latency_p99_us
+            ));
+        }
     }
     if r.mig_pages_programmed > 0 || r.slc_reads + r.mlc_reads > 0 {
         let share = if (r.slc_reads + r.mlc_reads) > 0 {

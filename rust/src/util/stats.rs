@@ -15,6 +15,12 @@ pub struct Summary {
 
 impl Summary {
     /// Compute a summary; returns `None` on an empty sample.
+    ///
+    /// NaN policy: NaN samples are ordered by IEEE `total_cmp` (positive
+    /// NaN sorts above +∞, negative NaN below −∞) instead of panicking,
+    /// so they surface in the extrema / tail percentiles and poison the
+    /// mean — visible in the output rather than a crash mid-sweep.
+    /// Callers who need NaN-free statistics filter their samples first.
     pub fn from_samples(samples: &[f64]) -> Option<Summary> {
         if samples.is_empty() {
             return None;
@@ -27,7 +33,7 @@ impl Summary {
             0.0
         };
         let mut sorted = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(|a, b| a.total_cmp(b));
         Some(Summary {
             n,
             mean,
@@ -70,6 +76,22 @@ pub fn mean(xs: &[f64]) -> f64 {
         return f64::NAN;
     }
     xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Jain's fairness index over per-tenant allocations (throughputs):
+/// `(Σx)² / (n·Σx²)`, in (0, 1] — 1 when every tenant gets an equal
+/// share, → 1/n when one tenant takes everything. NaN for fewer than two
+/// tenants (fairness of one stream is meaningless) or an all-zero vector.
+pub fn jain_fairness(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return f64::NAN;
+    }
+    let sum: f64 = xs.iter().sum();
+    let sq: f64 = xs.iter().map(|x| x * x).sum();
+    if sq <= 0.0 {
+        return f64::NAN;
+    }
+    sum * sum / (xs.len() as f64 * sq)
 }
 
 /// Online (Welford) accumulator for streaming metrics.
@@ -198,6 +220,33 @@ mod tests {
         assert!((w.stddev() - s.stddev).abs() < 1e-9);
         assert_eq!(w.min(), s.min);
         assert_eq!(w.max(), s.max);
+    }
+
+    /// Regression: a NaN-bearing sample set must not panic (the old
+    /// `partial_cmp().unwrap()` comparator did); NaNs sort to the top end
+    /// and surface in max while the clean low quantiles stay exact.
+    #[test]
+    fn summary_tolerates_nan_samples() {
+        let s = Summary::from_samples(&[2.0, f64::NAN, 1.0]).unwrap();
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, 1.0);
+        assert!(s.max.is_nan(), "NaN surfaces in the max");
+        assert_eq!(s.median, 2.0);
+        assert!(s.mean.is_nan(), "NaN poisons the mean visibly");
+        // All-NaN input still summarizes without panicking.
+        let s = Summary::from_samples(&[f64::NAN, f64::NAN]).unwrap();
+        assert!(s.min.is_nan() && s.max.is_nan());
+    }
+
+    #[test]
+    fn jain_fairness_bounds() {
+        assert!((jain_fairness(&[10.0, 10.0]) - 1.0).abs() < 1e-12);
+        // One tenant takes everything: 1/n.
+        assert!((jain_fairness(&[30.0, 0.0, 0.0]) - 1.0 / 3.0).abs() < 1e-12);
+        // 2:1 split: 9/10.
+        assert!((jain_fairness(&[2.0, 1.0]) - 0.9).abs() < 1e-12);
+        assert!(jain_fairness(&[5.0]).is_nan());
+        assert!(jain_fairness(&[0.0, 0.0]).is_nan());
     }
 
     /// Regression: an empty accumulator must report NaN across the board,

@@ -28,7 +28,7 @@ fn every_shipped_config_parses_validates_and_runs() {
         assert!(rep.bandwidth_mbps > 0.0, "{}", path.display());
         count += 1;
     }
-    assert!(count >= 4, "expected the shipped preset configs, found {count}");
+    assert!(count >= 9, "expected the shipped preset configs, found {count}");
 }
 
 #[test]
@@ -69,6 +69,43 @@ fn cli_sweep_tiered_succeeds() {
         )),
         0
     );
+}
+
+#[test]
+fn cli_sweep_qos_succeeds() {
+    assert_eq!(
+        cli::run(&argv(
+            "sweep-qos --requests 30 --ways 2 --ifaces proposed \
+             --schedulers round_robin,read_priority --write-mbps 40 --blocks 128 --csv"
+        )),
+        0
+    );
+}
+
+#[test]
+fn cli_sweep_qos_rejects_bad_flags() {
+    assert_eq!(cli::run(&argv("sweep-qos --schedulers fifo")), 1);
+    assert_eq!(cli::run(&argv("sweep-qos --ways 0")), 1);
+    assert_eq!(cli::run(&argv("sweep-qos --ifaces quantum")), 1);
+    assert_eq!(cli::run(&argv("sweep-qos --link pcie9")), 1);
+    assert_eq!(cli::run(&argv("sweep-qos --read-mbps 0")), 1);
+    assert_eq!(cli::run(&argv("sweep-qos --write-mbps -5")), 1);
+    assert_eq!(cli::run(&argv("sweep-qos --blocks 8")), 1);
+    assert_eq!(cli::run(&argv("sweep-qos --cell qlc")), 1);
+}
+
+#[test]
+fn cli_replay_rejects_v3_stream_overflow() {
+    let dir = std::env::temp_dir().join("ddrnand_cli_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    // Stream id 5 exceeds the preset's host.queues = 2: must be a clean
+    // error, not a simulator assert.
+    let trace = dir.join("overflow.v3");
+    std::fs::write(&trace, "W 0 65536 0 1\nW 65536 65536 5 1\n").unwrap();
+    let cfg = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("configs/qos_two_tenant_4way.toml");
+    let cmd = format!("replay --trace {} --config {}", trace.display(), cfg.display());
+    assert_eq!(cli::run(&argv(&cmd)), 1);
 }
 
 #[test]

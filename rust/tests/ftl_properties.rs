@@ -301,3 +301,144 @@ fn prop_sweep_determinism() {
     let b = ThreadPool::new(1).run_all(jobs());
     assert_eq!(a, b, "sweep results must not depend on thread interleaving");
 }
+
+/// Starvation-freedom of the `WeightedQos` way scheduler: for any random
+/// mix of queued job classes across ways and any all-positive weight
+/// vector, draining the scheduler serves every class with pending work at
+/// least once per 2·Σweights consecutive grants — no class can starve.
+#[test]
+fn prop_weighted_qos_is_starvation_free() {
+    use ddrnand::controller::sched::{SchedKind, WayScheduler};
+    use ddrnand::controller::way::{JobPhase, PageJob, PageJobKind, WayState};
+    use ddrnand::nand::chip::Chip;
+    use ddrnand::nand::datasheet::NandTiming;
+    use ddrnand::util::time::Ps;
+
+    type Case = (Vec<Vec<u8>>, [u32; 4]); // per-way job classes, weights
+    check(
+        "weighted-qos starvation freedom",
+        60,
+        0xE9_51,
+        |rng: &mut Prng| -> Case {
+            let nways = 1 + rng.next_bounded(4) as usize;
+            let queues = (0..nways)
+                .map(|_| {
+                    let n = 1 + rng.next_bounded(25) as usize;
+                    (0..n).map(|_| rng.next_bounded(4) as u8).collect()
+                })
+                .collect();
+            let weights = [
+                1 + rng.next_bounded(8) as u32,
+                1 + rng.next_bounded(8) as u32,
+                1 + rng.next_bounded(8) as u32,
+                1 + rng.next_bounded(8) as u32,
+            ];
+            (queues, weights)
+        },
+        |case: &Case| {
+            let (queues, weights) = case;
+            let mut ways: Vec<WayState> = queues
+                .iter()
+                .map(|classes| {
+                    let mut w = WayState::new(Chip::new(NandTiming::slc(), 8));
+                    for &class in classes {
+                        w.push(PageJob {
+                            req: 0,
+                            stream: 0,
+                            class,
+                            kind: PageJobKind::Program,
+                            block: 0,
+                            page: 0,
+                            bytes: 2048,
+                            phase: JobPhase::Queued,
+                        });
+                    }
+                    w
+                })
+                .collect();
+            // A class is *eligible* when some way holds a dispatchable
+            // candidate of it: before that way's background barrier for
+            // host classes, the barrier job itself for class 3 (the
+            // plan-order rule, `WayState::reorder_window`). The service
+            // bound applies to eligible classes; a class blocked behind a
+            // barrier is withheld by the ordering invariant, not starved
+            // by the scheduler. Eligibility is monotone until served
+            // (grants only shrink queues), so the counter is sound.
+            let eligible = |ways: &[WayState], class: u8| -> bool {
+                ways.iter().any(|w| {
+                    if w.queued_of_class(class) == 0 {
+                        return false;
+                    }
+                    let window = w.reorder_window();
+                    let limit = if class == 3 {
+                        (window + 1).min(w.queue.len())
+                    } else {
+                        window
+                    };
+                    w.queue.iter().take(limit).any(|j| j.class == class)
+                })
+            };
+            let total: usize = queues.iter().map(Vec::len).sum();
+            let bound = 2 * weights.iter().sum::<u32>() as usize;
+            let mut sched =
+                ddrnand::controller::sched::build(SchedKind::WeightedQos, *weights);
+            // Grants since an eligible class was last served.
+            let mut waiting = [0usize; 4];
+            let mut served = 0usize;
+            while let Some(g) = sched.pick(&ways, Ps::ZERO) {
+                let was_eligible: Vec<bool> =
+                    (0..4u8).map(|c| eligible(&ways, c)).collect();
+                let job = ways[g.way]
+                    .take_job(g.job)
+                    .ok_or_else(|| format!("grant named a missing job: {g:?}"))?;
+                served += 1;
+                if served > total {
+                    return Err("scheduler granted more jobs than exist".into());
+                }
+                let c = job.class as usize;
+                waiting[c] = 0;
+                for other in 0..4 {
+                    if other == c {
+                        continue;
+                    }
+                    if was_eligible[other] {
+                        waiting[other] += 1;
+                        if waiting[other] > bound {
+                            return Err(format!(
+                                "class {other} starved for {} grants (bound {bound}, \
+                                 weights {weights:?})",
+                                waiting[other]
+                            ));
+                        }
+                    } else {
+                        waiting[other] = 0;
+                    }
+                }
+            }
+            if served != total {
+                return Err(format!("drained {served} of {total} jobs"));
+            }
+            Ok(())
+        },
+        |case| {
+            // Shrink by dropping whole ways, then halving each way's queue.
+            let (queues, weights) = case;
+            let mut out: Vec<Case> = shrink_vec(queues)
+                .into_iter()
+                .map(|q| (q, *weights))
+                .collect();
+            out.extend(
+                queues
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, q)| !q.is_empty())
+                    .map(|(i, q)| {
+                        let mut smaller = queues.clone();
+                        smaller[i] = q[..q.len() / 2].to_vec();
+                        (smaller, *weights)
+                    }),
+            );
+            out
+        },
+    );
+}

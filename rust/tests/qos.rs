@@ -1,0 +1,366 @@
+//! Multi-tenant host path + QoS scheduling integration tests (PR 5).
+//!
+//! Covers the three contracts of the refactor:
+//! 1. **Equivalence** — the `RoundRobin` way scheduler is bit-identical to
+//!    the pre-refactor hard-coded arbiter (kept verbatim below as the
+//!    oracle), and the multi-queue admission path with one queue is
+//!    bit-identical to the classic SATA queue-depth path.
+//! 2. **Dormancy** — configs without active `[host]`/`[qos]` sections
+//!    reproduce the pre-refactor simulator exactly, through `SimWorkspace`
+//!    reuse and across thread-pool sizes.
+//! 3. **The E9 headline** — under a saturating two-tenant mix,
+//!    `ReadPriority` and `WeightedQos` cut the latency-critical tenant's
+//!    p99 versus `RoundRobin` while total throughput stays within 5%.
+
+use ddrnand::config::SsdConfig;
+use ddrnand::controller::sched::{Grant, SchedKind, WayScheduler};
+use ddrnand::controller::way::WayState;
+use ddrnand::coordinator::campaign::{Campaign, SimWorkspace};
+use ddrnand::coordinator::experiments::{QosCell, QosSweepSpec, run_qos_sweep};
+use ddrnand::coordinator::pool::ThreadPool;
+use ddrnand::coordinator::ssd::SsdSim;
+use ddrnand::host::link::HostLinkKind;
+use ddrnand::host::trace::{RequestKind, TraceGen};
+use ddrnand::iface::timing::InterfaceKind;
+use ddrnand::util::prng::Prng;
+use ddrnand::util::time::Ps;
+
+/// The pre-refactor channel arbiter, verbatim (the body of the old
+/// `ChannelState::next_way_wanting_bus`, including its `(class, rr-dist,
+/// idx)` bookkeeping), wrapped in the new trait. Dispatch grants always
+/// name the queue head — the old arbiter was FIFO within a way.
+struct OldArbiter {
+    rr_next: usize,
+}
+
+impl WayScheduler for OldArbiter {
+    fn pick(&mut self, ways: &[WayState], now: Ps) -> Option<Grant> {
+        let n = ways.len();
+        let mut best: Option<(u8, usize, usize)> = None; // (class, rr-dist, idx)
+        for off in 0..n {
+            let i = (self.rr_next + off) % n;
+            if let Some(class) = ways[i].bus_class(now) {
+                if class == 0 {
+                    self.rr_next = (i + 1) % n;
+                    return Some(Grant { way: i, job: 0 });
+                }
+                match best {
+                    Some((c, _, _)) if c <= class => {}
+                    _ => best = Some((class, off, i)),
+                }
+            }
+        }
+        best.map(|(_, _, i)| {
+            self.rr_next = (i + 1) % n;
+            Grant { way: i, job: 0 }
+        })
+    }
+
+    fn reset(&mut self) {
+        self.rr_next = 0;
+    }
+}
+
+fn fingerprint(sim: &SsdSim, events: u64) -> (u64, Ps, u64, u64, u64, f64, f64) {
+    (
+        events,
+        sim.finished_at(),
+        sim.counters.pages_programmed,
+        sim.counters.pages_read,
+        sim.counters.requests_done,
+        sim.latency.mean(),
+        sim.bandwidth_mbps(),
+    )
+}
+
+/// Randomized oracle: across random geometries, interfaces, queue depths
+/// and workload mixes, the default `RoundRobin` scheduler produces
+/// bit-identical runs to the pre-refactor arbiter.
+#[test]
+fn round_robin_scheduler_matches_pre_refactor_arbiter() {
+    let mut rng = Prng::new(0xE9_0A);
+    for case in 0..12 {
+        let channels = 1 + rng.next_bounded(2) as u16;
+        let ways = 1 + rng.next_bounded(4) as u16;
+        let iface = match rng.next_bounded(3) {
+            0 => InterfaceKind::Conv,
+            1 => InterfaceKind::SyncOnly,
+            _ => InterfaceKind::Proposed,
+        };
+        let queue_depth = 1 + rng.next_bounded(8) as u32;
+        let n = 10 + rng.next_bounded(25) as usize;
+        let write_fraction = 0.25 + 0.5 * (rng.next_bounded(100) as f64 / 100.0);
+        let trace_seed = rng.next_bounded(u64::MAX / 2);
+        let cfg = SsdConfig {
+            iface,
+            channels,
+            ways,
+            queue_depth,
+            blocks_per_chip: 128,
+            ..SsdConfig::default()
+        };
+        let trace = TraceGen::default()
+            .mixed_sequential(n, write_fraction, trace_seed)
+            .requests;
+        let run = |inject_oracle: bool| {
+            let mut sim = SsdSim::new(cfg.clone(), trace.clone());
+            if inject_oracle {
+                sim.set_way_schedulers(|| Box::new(OldArbiter { rr_next: 0 }));
+            }
+            sim.prefill_for_reads();
+            let r = sim.run();
+            fingerprint(&sim, r.events)
+        };
+        assert_eq!(
+            run(false),
+            run(true),
+            "case {case}: RoundRobin diverged from the pre-refactor arbiter \
+             (ch={channels} ways={ways} {iface:?} qd={queue_depth} n={n})"
+        );
+    }
+}
+
+/// A single-queue multi-queue link at the same depth is bit-identical to
+/// the classic SATA queue-depth admission path — the new front end changes
+/// mechanism, not behaviour, until queues/arbitration are actually used.
+#[test]
+fn single_queue_multi_queue_matches_sata_admission() {
+    let mk = |link: HostLinkKind| {
+        let mut cfg = SsdConfig {
+            ways: 4,
+            blocks_per_chip: 128,
+            queue_depth: 4,
+            ..SsdConfig::default()
+        };
+        cfg.host.link = link;
+        cfg.host.queues = 1;
+        cfg.host.queue_depth = 4;
+        cfg
+    };
+    let run = |link: HostLinkKind, mode: RequestKind| {
+        let trace = TraceGen::default().sequential(mode, 20).requests;
+        let mut sim = SsdSim::new(mk(link), trace);
+        sim.prefill_for_reads();
+        let r = sim.run();
+        fingerprint(&sim, r.events)
+    };
+    for mode in [RequestKind::Write, RequestKind::Read] {
+        assert_eq!(
+            run(HostLinkKind::Sata, mode),
+            run(HostLinkKind::MultiQueue, mode),
+            "{mode:?}"
+        );
+    }
+}
+
+/// Golden dormancy: a config whose `[host]`/`[qos]` sections carry
+/// non-default but *dormant* values (SATA link, round-robin scheduler)
+/// shares the reuse key with the plain config and reproduces its runs
+/// bit-identically through `SimWorkspace` reuse.
+#[test]
+fn dormant_host_qos_bit_identical_through_reuse() {
+    let base = SsdConfig {
+        ways: 2,
+        blocks_per_chip: 256,
+        ..SsdConfig::default()
+    };
+    let mut dormant = base.clone();
+    dormant.host.queues = 64;
+    dormant.host.queue_depth = 3;
+    dormant.qos.weights = [1, 1, 1, 1];
+    assert_eq!(SsdSim::reuse_key(&base), SsdSim::reuse_key(&dormant));
+    let fresh = Campaign::new(base.clone(), RequestKind::Write, 15).run();
+    // Dirty a workspace with the dormant config, then reuse it for the
+    // base config: the cached simulator is retargeted, not rebuilt.
+    let mut ws = SimWorkspace::new();
+    Campaign::new(dormant, RequestKind::Write, 12).run_in(&mut ws);
+    let reused = Campaign::new(base, RequestKind::Write, 15).run_in(&mut ws);
+    assert_eq!(ws.reuses, 1, "the dormant config must not fragment reuse");
+    assert_eq!(reused.events, fresh.events);
+    assert_eq!(reused.sim_time, fresh.sim_time);
+    assert_eq!(reused.bandwidth_mbps, fresh.bandwidth_mbps);
+    assert_eq!(reused.energy_nj_per_byte, fresh.energy_nj_per_byte);
+    assert_eq!(reused.pages_programmed, fresh.pages_programmed);
+    assert!(reused.streams.is_empty(), "single-stream runs stay stream-free");
+}
+
+/// Sparse stream ids (v3 traces need not be dense) produce no phantom
+/// report rows: only streams that actually carried requests appear, and
+/// a single-tenant run keeps its NaN fairness index instead of being
+/// dragged to 1/n by empty phantoms.
+#[test]
+fn sparse_stream_ids_produce_no_phantom_streams() {
+    use ddrnand::host::trace::{StreamTag, Trace, CLASS_NORMAL};
+    let mut trace = TraceGen::default().sequential(RequestKind::Write, 6);
+    trace.streams = vec![
+        StreamTag {
+            stream: 3,
+            class: CLASS_NORMAL
+        };
+        6
+    ];
+    let cfg = SsdConfig {
+        ways: 2,
+        blocks_per_chip: 128,
+        ..SsdConfig::default()
+    };
+    let rep = ddrnand::coordinator::campaign::run_trace(&cfg, &trace);
+    assert_eq!(rep.requests, 6);
+    assert_eq!(rep.streams.len(), 1, "only the tagged stream is reported");
+    assert_eq!(rep.streams[0].stream, 3);
+    assert_eq!(rep.streams[0].requests, 6);
+    assert!(
+        rep.fairness.is_nan(),
+        "one real tenant has no fairness story, got {}",
+        rep.fairness
+    );
+}
+
+fn headline_spec() -> QosSweepSpec {
+    QosSweepSpec {
+        ways: vec![4],
+        ifaces: vec![InterfaceKind::Proposed],
+        schedulers: SchedKind::ALL.to_vec(),
+        requests: 120,
+        write_mbps: 55.0,
+        read_mbps: 4.0,
+        blocks_per_chip: 256,
+        ..QosSweepSpec::default()
+    }
+}
+
+fn qos_fingerprints(cells: &[QosCell]) -> Vec<(u64, Ps, f64, String)> {
+    cells
+        .iter()
+        .map(|c| {
+            (
+                c.report.events,
+                c.report.sim_time,
+                c.report.streams[0].latency_p99_us,
+                format!("{:?}/{}/{}", c.iface, c.ways, c.sched.name()),
+            )
+        })
+        .collect()
+}
+
+/// The E9 headline, plus driver determinism: under a saturating
+/// two-tenant mix, `ReadPriority` and `WeightedQos` cut the
+/// latency-critical tenant's p99 versus `RoundRobin` while total
+/// throughput stays within 5% — and the sweep is identical across
+/// thread-pool sizes.
+#[test]
+fn qos_policies_cut_read_tenant_p99_at_stable_throughput() {
+    let spec = headline_spec();
+    let cells = run_qos_sweep(&spec, &ThreadPool::new(2));
+    assert_eq!(cells.len(), 3);
+    for pool_size in [1, 8] {
+        let again = run_qos_sweep(&spec, &ThreadPool::new(pool_size));
+        assert_eq!(
+            qos_fingerprints(&cells),
+            qos_fingerprints(&again),
+            "sweep must be deterministic across pool size {pool_size}"
+        );
+    }
+    let cell = |k: SchedKind| cells.iter().find(|c| c.sched == k).expect("grid point");
+    let read_p99 = |k: SchedKind| {
+        let s = &cell(k).report.streams[0];
+        assert_eq!(s.stream, 0, "stream 0 is the latency-critical reader");
+        assert!(s.requests > 0);
+        s.latency_p99_us
+    };
+    let rr = read_p99(SchedKind::RoundRobin);
+    let rp = read_p99(SchedKind::ReadPriority);
+    let wq = read_p99(SchedKind::WeightedQos);
+    assert!(
+        rp < 0.5 * rr,
+        "ReadPriority must cut the read tenant's p99 well below RoundRobin: {rp} vs {rr} us"
+    );
+    assert!(
+        wq < 0.8 * rr,
+        "WeightedQos must cut the read tenant's p99 below RoundRobin: {wq} vs {rr} us"
+    );
+    let rr_bw = cell(SchedKind::RoundRobin).report.bandwidth_mbps;
+    for k in [SchedKind::ReadPriority, SchedKind::WeightedQos] {
+        let bw = cell(k).report.bandwidth_mbps;
+        assert!(
+            (bw - rr_bw).abs() / rr_bw < 0.05,
+            "{}: total throughput must stay within 5% of RoundRobin ({bw} vs {rr_bw} MB/s)",
+            k.name()
+        );
+    }
+    // The write tenant genuinely saturates the device in every policy:
+    // it cannot achieve its (over-ceiling) offered load, yet still moves
+    // a solid fraction of it through the measurement window.
+    for c in &cells {
+        let writer = &c.report.streams[1];
+        assert!(
+            writer.bandwidth_mbps > 0.4 * spec.write_mbps,
+            "{}: writer achieved only {} MB/s",
+            c.sched.name(),
+            writer.bandwidth_mbps
+        );
+        assert!(writer.bandwidth_mbps < spec.write_mbps, "{}", c.sched.name());
+    }
+}
+
+/// Weighted host-queue arbitration is live end to end: a closed-loop
+/// two-tenant run over the multi-queue link completes with per-stream
+/// accounting under both arbitration policies, and per-queue depths hold.
+#[test]
+fn multi_queue_weighted_arbitration_end_to_end() {
+    use ddrnand::coordinator::campaign::{AccessPattern, TenantSpec};
+    use ddrnand::host::link::QueueArb;
+    use ddrnand::host::trace::{CLASS_BULK, CLASS_URGENT};
+    let run = |arb: QueueArb| {
+        let mut cfg = SsdConfig {
+            ways: 2,
+            blocks_per_chip: 128,
+            ..SsdConfig::default()
+        };
+        cfg.host.link = HostLinkKind::MultiQueue;
+        cfg.host.queues = 2;
+        cfg.host.queue_depth = 2;
+        cfg.host.arbitration = arb;
+        let tenants = vec![
+            TenantSpec {
+                mode: RequestKind::Write,
+                pattern: AccessPattern::Sequential,
+                class: CLASS_URGENT,
+                requests: 10,
+                offered_mbps: None,
+            },
+            TenantSpec {
+                mode: RequestKind::Write,
+                pattern: AccessPattern::Sequential,
+                class: CLASS_BULK,
+                requests: 10,
+                offered_mbps: None,
+            },
+        ];
+        Campaign::multi_tenant(cfg, tenants).run()
+    };
+    for arb in [QueueArb::RoundRobin, QueueArb::Weighted] {
+        let r = run(arb);
+        assert_eq!(r.requests, 20, "{arb:?}");
+        assert_eq!(r.streams.len(), 2);
+        assert_eq!(r.streams[0].requests, 10);
+        assert_eq!(r.streams[1].requests, 10);
+        assert!(r.fairness > 0.0);
+    }
+    // The two arbitration policies genuinely schedule differently: the
+    // urgent queue's 8:2 fetch share front-loads its requests, which
+    // shows up somewhere in the run's timing fingerprint.
+    let fp = |arb: QueueArb| {
+        let r = run(arb);
+        (
+            r.sim_time,
+            r.latency_mean_us.to_bits(),
+            r.streams[0].latency_mean_us.to_bits(),
+        )
+    };
+    assert_ne!(
+        fp(QueueArb::RoundRobin),
+        fp(QueueArb::Weighted),
+        "weighted arbitration must change the admission interleaving"
+    );
+}
