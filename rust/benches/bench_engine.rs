@@ -14,8 +14,9 @@ use ddrnand::config::SsdConfig;
 use ddrnand::coordinator::campaign::{Campaign, SimWorkspace};
 use ddrnand::coordinator::pool::ThreadPool;
 use ddrnand::host::trace::RequestKind;
-use ddrnand::iface::timing::InterfaceKind;
-use ddrnand::sim::{Engine, EventQueue, HeapEventQueue, Model, Scheduler};
+use ddrnand::iface::bus::BusTiming;
+use ddrnand::iface::timing::{IfaceParams, InterfaceKind};
+use ddrnand::sim::{Emit, Engine, EventQueue, HeapEventQueue, Model, Scheduler, ShardModel, ShardedSim};
 use ddrnand::util::time::Ps;
 
 /// Ping-pong model: minimal per-event work to measure engine overhead.
@@ -55,6 +56,67 @@ impl Model for FanOut {
 /// `n` pushes with hashed times in [0, 1 ms), then a full drain.
 fn hashed_time(i: u32) -> Ps {
     Ps::ns(((i.wrapping_mul(2_654_435_761)) % 1_000_000) as i64)
+}
+
+/// Per-channel churn for the sharded-engine bench: each shard runs a dense
+/// local event chain (gap = lookahead/64, so a conservative window holds
+/// ~64 events per shard) with a cross-channel message every
+/// `cross_every`-th event at exactly the lookahead delay — the same shape
+/// as way traffic with occasional cross-channel completions, parameterized
+/// from the steady-state preset's PROPOSED bus timing.
+struct ChannelChurn {
+    shards: u32,
+    lookahead: Ps,
+    local_gap: Ps,
+    cross_every: u64,
+    /// Remaining events this shard may spawn (bounds the run).
+    left: u64,
+    handled: u64,
+    acc: u64,
+}
+
+impl ShardModel for ChannelChurn {
+    type Ev = u64;
+    fn handle(&mut self, _now: Ps, ev: u64, out: &mut Emit<u64>) {
+        self.handled += 1;
+        // A few arithmetic mixes standing in for way-state bookkeeping.
+        self.acc = self.acc.rotate_left(7) ^ ev.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        if self.left == 0 {
+            return;
+        }
+        self.left -= 1;
+        if self.handled % self.cross_every == 0 {
+            let dest = (out.shard() + 1) % self.shards;
+            out.send_after(dest, self.lookahead, self.acc);
+        } else {
+            out.local_after(self.local_gap, self.acc);
+        }
+    }
+}
+
+/// One sharded-churn run: `shards` channels, `per_shard` events each.
+/// Returns (total events, elapsed seconds).
+fn sharded_churn_run(shards: u32, per_shard: u64, lookahead: Ps, threads: usize) -> (u64, f64) {
+    let models: Vec<ChannelChurn> = (0..shards)
+        .map(|_| ChannelChurn {
+            shards,
+            lookahead,
+            local_gap: Ps::ps((lookahead.as_ps() / 64).max(1)),
+            cross_every: 256,
+            left: per_shard,
+            handled: 0,
+            acc: 0,
+        })
+        .collect();
+    let mut sim = ShardedSim::new(models, lookahead);
+    for s in 0..shards {
+        sim.seed(s, Ps::ZERO, s as u64);
+    }
+    let t0 = std::time::Instant::now();
+    let res = sim.run(Ps::MAX, threads);
+    let secs = t0.elapsed().as_secs_f64();
+    assert!(res.drained, "churn bench must drain");
+    (res.events, secs)
 }
 
 fn main() {
@@ -169,6 +231,79 @@ fn main() {
                 (rep.events, secs)
             })
         );
+    }
+
+    // 3b. Windowed-engine overhead on the full SSD sim: the same campaign
+    //     as `full_sim/conv_4way`, dispatched through WindowedEngine
+    //     (bit-identical results; this measures pure window bookkeeping).
+    println!(
+        "{}",
+        throughput("full SSD sim: CONV 4-way via windowed engine (2 threads)", || {
+            let mut cfg = SsdConfig {
+                iface: InterfaceKind::Conv,
+                ways: 4,
+                blocks_per_chip: 512,
+                ..SsdConfig::default()
+            };
+            cfg.engine.threads = 2;
+            let t0 = std::time::Instant::now();
+            let rep = Campaign::new(cfg, RequestKind::Write, 2000).run();
+            let secs = t0.elapsed().as_secs_f64();
+            log.push_tagged(
+                "full_sim/conv_4way_windowed",
+                "events_per_sec",
+                rep.events as f64 / secs,
+                1,
+                2,
+                0,
+            );
+            (rep.events, secs)
+        })
+    );
+
+    // 3c. Sharded engine: channel-parallel churn parameterized from the
+    //     steady-state preset's PROPOSED bus timing (8 channels, lookahead
+    //     = the bus's shortest phase). Every thread count dispatches the
+    //     identical global event order; wall clock is the only difference.
+    let lookahead =
+        BusTiming::from_params(&IfaceParams::default(), InterfaceKind::Proposed).min_phase();
+    const SHARDS: u32 = 8;
+    const PER_SHARD: u64 = 250_000;
+    let mut base_events = 0u64;
+    let mut base_secs = 0.0f64;
+    for threads in [1usize, 2, 4] {
+        let (events, secs) = sharded_churn_run(SHARDS, PER_SHARD, lookahead, threads);
+        println!(
+            "sharded churn: {threads} threads  {SHARDS} channels  {events:>9} events  {secs:.2}s  ({}/s)",
+            ddrnand::util::fmt::fmt_si(events as f64 / secs)
+        );
+        log.push_tagged(
+            &format!("sharded_steady_churn/{threads}_threads"),
+            "events_per_sec",
+            events as f64 / secs,
+            1,
+            threads as u16,
+            0,
+        );
+        if threads == 1 {
+            base_events = events;
+            base_secs = secs;
+        } else {
+            assert_eq!(
+                events, base_events,
+                "sharded run must dispatch the identical event count at any thread count"
+            );
+            let speedup = base_secs / secs;
+            println!("  -> speedup vs 1 thread: {speedup:.2}x");
+            log.push_tagged(
+                &format!("sharded_steady_churn/{threads}_threads/speedup_vs_1thread"),
+                "ratio",
+                speedup,
+                1,
+                threads as u16,
+                0,
+            );
+        }
     }
 
     // 4. Sweep scaling across worker threads, with per-worker simulator

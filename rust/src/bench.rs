@@ -76,10 +76,16 @@ pub struct PerfRecord {
     pub value: f64,
     /// Samples behind the value (1 for throughput-style one-shots).
     pub n: usize,
+    /// Engine threads the measurement ran with (1 = the serial engine).
+    /// Mandatory in `ddrnand-bench-v2`: a perf number without its thread
+    /// count cannot be compared across the parallel-engine trajectory.
+    pub threads: u16,
+    /// Window override in picoseconds (0 = derived from bus timing).
+    pub window_ps: u64,
 }
 
 /// Collects [`PerfRecord`]s and serializes them as the
-/// `ddrnand-bench-v1` JSON schema.
+/// `ddrnand-bench-v2` JSON schema.
 #[derive(Debug, Default)]
 pub struct PerfLog {
     /// Which bench produced the log (e.g. `bench_engine`).
@@ -95,13 +101,29 @@ impl PerfLog {
         }
     }
 
-    /// Record one number.
+    /// Record one number measured on the serial engine (threads 1, no
+    /// window override).
     pub fn push(&mut self, name: &str, metric: &str, value: f64, n: usize) {
+        self.push_tagged(name, metric, value, n, 1, 0);
+    }
+
+    /// Record one number with its engine configuration tag.
+    pub fn push_tagged(
+        &mut self,
+        name: &str,
+        metric: &str,
+        value: f64,
+        n: usize,
+        threads: u16,
+        window_ps: u64,
+    ) {
         self.records.push(PerfRecord {
             name: name.to_string(),
             metric: metric.to_string(),
             value,
             n,
+            threads,
+            window_ps,
         });
     }
 
@@ -112,11 +134,11 @@ impl PerfLog {
         self.push(key, "ms_per_iter_stddev", r.summary.stddev, r.summary.n);
     }
 
-    /// Serialize to the `ddrnand-bench-v1` JSON schema.
+    /// Serialize to the `ddrnand-bench-v2` JSON schema.
     pub fn to_json(&self) -> String {
         let mut out = String::with_capacity(256 + self.records.len() * 96);
         out.push_str("{\n");
-        out.push_str("  \"schema\": \"ddrnand-bench-v1\",\n");
+        out.push_str("  \"schema\": \"ddrnand-bench-v2\",\n");
         out.push_str(&format!("  \"bench\": \"{}\",\n", escape_json(&self.bench)));
         let unix = std::time::SystemTime::now()
             .duration_since(std::time::UNIX_EPOCH)
@@ -127,11 +149,14 @@ impl PerfLog {
         for (i, r) in self.records.iter().enumerate() {
             let comma = if i + 1 == self.records.len() { "" } else { "," };
             out.push_str(&format!(
-                "    {{\"name\": \"{}\", \"metric\": \"{}\", \"value\": {}, \"n\": {}}}{comma}\n",
+                "    {{\"name\": \"{}\", \"metric\": \"{}\", \"value\": {}, \"n\": {}, \
+                 \"threads\": {}, \"window_ps\": {}}}{comma}\n",
                 escape_json(&r.name),
                 escape_json(&r.metric),
                 json_num(r.value),
                 r.n,
+                r.threads,
+                r.window_ps,
             ));
         }
         out.push_str("  ]\n}\n");
@@ -155,13 +180,17 @@ pub struct BenchLogSummary {
     pub results: usize,
 }
 
-/// Validate `text` against the `ddrnand-bench-v1` schema: a JSON object
-/// with `"schema": "ddrnand-bench-v1"`, a string `"bench"`, and a
+/// Validate `text` against the `ddrnand-bench-v2` schema: a JSON object
+/// with `"schema": "ddrnand-bench-v2"`, a string `"bench"`, and a
 /// `"results"` array whose records each carry a string `name`, a string
-/// `metric`, a numeric-or-null `value` and an integer `n >= 1`. Unknown
-/// top-level keys (e.g. `created_unix`, `note`) are allowed. Used by the
-/// CI pipeline (`rust/tests/bench_schema.rs`) so schema drift in the
-/// committed artifact or the writer fails loudly instead of rotting.
+/// `metric`, a numeric-or-null `value`, an integer `n >= 1`, an integer
+/// `threads >= 1` and an integer `window_ps >= 0`. The engine tags are
+/// mandatory (v2): a perf number whose thread count is unknown cannot be
+/// placed on the parallel-engine trajectory, so a record omitting them is
+/// schema drift, not a permissible old-style entry. Unknown top-level keys
+/// (e.g. `created_unix`, `note`) are allowed. Used by the CI pipeline
+/// (`rust/tests/bench_schema.rs`) so schema drift in the committed
+/// artifact or the writer fails loudly instead of rotting.
 pub fn validate_bench_json(text: &str) -> Result<BenchLogSummary, String> {
     let value = json::parse(text)?;
     let top = value
@@ -172,7 +201,7 @@ pub fn validate_bench_json(text: &str) -> Result<BenchLogSummary, String> {
         .find(|(k, _)| k == "schema")
         .ok_or_else(|| "missing \"schema\" key".to_string())?;
     match &schema.1 {
-        json::Value::Str(s) if s == "ddrnand-bench-v1" => {}
+        json::Value::Str(s) if s == "ddrnand-bench-v2" => {}
         other => return Err(format!("bad schema value: {other:?}")),
     }
     let bench = match top.iter().find(|(k, _)| k == "bench") {
@@ -216,6 +245,22 @@ pub fn validate_bench_json(text: &str) -> Result<BenchLogSummary, String> {
             json::Value::Num(n) if *n >= 1.0 && n.fract() == 0.0 => {}
             other => return Err(format!("results[{i}].n must be an integer >= 1, got {other:?}")),
         }
+        match field("threads")? {
+            json::Value::Num(t) if *t >= 1.0 && t.fract() == 0.0 => {}
+            other => {
+                return Err(format!(
+                    "results[{i}].threads must be an integer >= 1, got {other:?}"
+                ))
+            }
+        }
+        match field("window_ps")? {
+            json::Value::Num(w) if *w >= 0.0 && w.fract() == 0.0 => {}
+            other => {
+                return Err(format!(
+                    "results[{i}].window_ps must be an integer >= 0, got {other:?}"
+                ))
+            }
+        }
     }
     Ok(BenchLogSummary {
         bench,
@@ -223,8 +268,114 @@ pub fn validate_bench_json(text: &str) -> Result<BenchLogSummary, String> {
     })
 }
 
+/// One metric extracted from a validated perf log.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchMetric {
+    pub name: String,
+    pub metric: String,
+    /// `None` when the writer recorded a non-finite value as JSON null.
+    pub value: Option<f64>,
+    pub threads: u16,
+    pub window_ps: u64,
+}
+
+/// Parse a perf log into its metric records. Validates the full
+/// `ddrnand-bench-v2` schema first, so extraction can assume well-formed
+/// records.
+pub fn parse_bench_metrics(text: &str) -> Result<Vec<BenchMetric>, String> {
+    validate_bench_json(text)?;
+    let value = json::parse(text)?;
+    let top = value.as_object().expect("validated: top is an object");
+    let results = match top.iter().find(|(k, _)| k == "results") {
+        Some((_, json::Value::Array(rs))) => rs,
+        _ => unreachable!("validated: results is an array"),
+    };
+    let mut out = Vec::with_capacity(results.len());
+    for r in results {
+        let rec = r.as_object().expect("validated: record is an object");
+        let get = |name: &str| rec.iter().find(|(k, _)| k == name).map(|(_, v)| v);
+        let text_of = |name: &str| match get(name) {
+            Some(json::Value::Str(s)) => s.clone(),
+            _ => unreachable!("validated: string field"),
+        };
+        let num_of = |name: &str| match get(name) {
+            Some(json::Value::Num(v)) => *v,
+            _ => unreachable!("validated: numeric field"),
+        };
+        let value = match get("value") {
+            Some(json::Value::Num(v)) => Some(*v),
+            _ => None,
+        };
+        out.push(BenchMetric {
+            name: text_of("name"),
+            metric: text_of("metric"),
+            value,
+            threads: num_of("threads") as u16,
+            window_ps: num_of("window_ps") as u64,
+        });
+    }
+    Ok(out)
+}
+
+/// Metrics the CI regression gate guards. Higher is strictly better for
+/// these; wall-clock `ms_per_iter_*` records are too machine-sensitive to
+/// block on and stay advisory.
+fn gated_metric(metric: &str) -> bool {
+    metric == "events_per_sec" || metric == "ratio"
+}
+
+/// Compare a freshly measured perf log against a committed baseline.
+/// Returns the blocking regressions: any higher-is-better metric
+/// (`events_per_sec`, speedup `ratio`s) present in the baseline — matched
+/// on (name, metric, threads, window_ps) — that is missing from the new
+/// log, went null, or dropped by more than `tolerance` (0.15 = 15%). An
+/// empty baseline (the bootstrap artifact before CI's first measured run)
+/// gates nothing. A log failing schema validation is an error, not a pass.
+pub fn regression_gate(
+    baseline: &str,
+    current: &str,
+    tolerance: f64,
+) -> Result<Vec<String>, String> {
+    let base = parse_bench_metrics(baseline).map_err(|e| format!("baseline: {e}"))?;
+    let cur = parse_bench_metrics(current).map_err(|e| format!("current: {e}"))?;
+    let mut failures = Vec::new();
+    for b in base.iter().filter(|b| gated_metric(&b.metric)) {
+        let Some(bv) = b.value else { continue };
+        if bv <= 0.0 {
+            continue;
+        }
+        let Some(c) = cur.iter().find(|c| {
+            c.name == b.name
+                && c.metric == b.metric
+                && c.threads == b.threads
+                && c.window_ps == b.window_ps
+        }) else {
+            failures.push(format!(
+                "{} [{}] threads={} window_ps={}: in baseline but missing from the new log",
+                b.name, b.metric, b.threads, b.window_ps
+            ));
+            continue;
+        };
+        let cv = c.value.unwrap_or(f64::NAN);
+        // `!(>=)` so a NaN (null) measurement fails rather than passes.
+        if !(cv >= bv * (1.0 - tolerance)) {
+            failures.push(format!(
+                "{} [{}] threads={} window_ps={}: {bv:.4} -> {cv:.4} ({:+.1}%) \
+                 exceeds the {:.0}% drop tolerance",
+                b.name,
+                b.metric,
+                b.threads,
+                b.window_ps,
+                (cv / bv - 1.0) * 100.0,
+                tolerance * 100.0
+            ));
+        }
+    }
+    Ok(failures)
+}
+
 /// Minimal JSON parser (serde is unavailable offline) — just enough to
-/// validate the `ddrnand-bench-v1` schema. Numbers parse as f64; strings
+/// validate the `ddrnand-bench-v2` schema. Numbers parse as f64; strings
 /// support the escapes `escape_json` emits plus `\uXXXX`.
 mod json {
     #[derive(Debug, Clone, PartialEq)]
@@ -469,18 +620,23 @@ mod tests {
     fn perf_log_json_schema() {
         let mut log = PerfLog::new("bench_test");
         log.push("queue/calendar", "ms_per_iter_mean", 1.25, 20);
-        log.push("speedup \"q\"", "ratio", 1.7, 1);
+        log.push_tagged("speedup \"q\"", "ratio", 1.7, 1, 4, 500_000);
         log.push("bad", "nan", f64::NAN, 1);
         let json = log.to_json();
-        assert!(json.contains("\"schema\": \"ddrnand-bench-v1\""));
+        assert!(json.contains("\"schema\": \"ddrnand-bench-v2\""));
         assert!(json.contains("\"bench\": \"bench_test\""));
         assert!(json.contains("\"name\": \"queue/calendar\""));
         assert!(json.contains("\"value\": 1.25"));
         assert!(json.contains("speedup \\\"q\\\""));
         assert!(json.contains("\"value\": null"));
+        // push defaults to the serial engine; push_tagged records the run's
+        // engine configuration verbatim.
+        assert!(json.contains("\"threads\": 1, \"window_ps\": 0"));
+        assert!(json.contains("\"threads\": 4, \"window_ps\": 500000"));
         // Exactly one trailing record without a comma, valid bracket close.
         assert!(json.trim_end().ends_with('}'));
         assert_eq!(json.matches("\"name\":").count(), 3);
+        assert_eq!(json.matches("\"threads\":").count(), 3);
     }
 
     /// Regression for the Welford ±∞ leak: a record whose value overflows
@@ -488,8 +644,9 @@ mod tests {
     /// the writer's own output for a NaN record (null) still validates.
     #[test]
     fn validator_rejects_non_finite_values() {
-        let inf = r#"{"schema": "ddrnand-bench-v1", "bench": "b",
-            "results": [{"name": "x", "metric": "m", "value": 1e999, "n": 1}]}"#;
+        let inf = r#"{"schema": "ddrnand-bench-v2", "bench": "b",
+            "results": [{"name": "x", "metric": "m", "value": 1e999, "n": 1,
+                         "threads": 1, "window_ps": 0}]}"#;
         let err = validate_bench_json(inf).unwrap_err();
         assert!(err.contains("finite"), "{err}");
         let neg = inf.replace("1e999", "-1e999");

@@ -2,7 +2,7 @@
 
 use crate::analytic;
 use crate::cli::args::Args;
-use crate::config::{ArrivalKind, SsdConfig, SteadyConfig};
+use crate::config::{ArrivalKind, EngineConfig, SsdConfig, SteadyConfig};
 use crate::controller::sched::SchedKind;
 use crate::coordinator::campaign::run_trace;
 use crate::coordinator::experiments as exp;
@@ -18,12 +18,26 @@ use crate::util::prng::Prng;
 use anyhow::{anyhow, Context, Result};
 
 fn pool(args: &mut Args) -> Result<ThreadPool> {
-    Ok(ThreadPool::new(args.get_usize("threads", 0).map_err(anyhow::Error::msg)?))
+    Ok(ThreadPool::new(args.get_usize("jobs", 0).map_err(anyhow::Error::msg)?))
 }
 
 fn requests(args: &mut Args) -> Result<usize> {
     args.get_usize("requests", exp::DEFAULT_REQUESTS)
         .map_err(anyhow::Error::msg)
+}
+
+/// `--threads N`: per-simulation engine threads (the windowed engine;
+/// default 1 = the classic serial engine). Distinct from `--jobs`, which
+/// sizes the sweep-level worker pool.
+fn engine(args: &mut Args) -> Result<EngineConfig> {
+    let threads = args.get_usize("threads", 1).map_err(anyhow::Error::msg)?;
+    if threads == 0 || threads > 256 {
+        return Err(anyhow!("--threads must be in 1..=256, got {threads}"));
+    }
+    Ok(EngineConfig {
+        threads: threads as u16,
+        ..EngineConfig::default()
+    })
 }
 
 pub fn cmd_table2(_args: &mut Args) -> Result<()> {
@@ -34,7 +48,8 @@ pub fn cmd_table2(_args: &mut Args) -> Result<()> {
 pub fn cmd_sweep_ways(args: &mut Args) -> Result<()> {
     let n = requests(args)?;
     let p = pool(args)?;
-    let cells = exp::run_table3(n, &p);
+    let eng = engine(args)?;
+    let cells = exp::run_table3_with(n, &p, eng);
     println!(
         "{}",
         exp::render_cells("E2 / Fig. 8 + Table 3 — way-interleaving sweep (MB/s)", &cells, false)
@@ -46,7 +61,8 @@ pub fn cmd_sweep_ways(args: &mut Args) -> Result<()> {
 pub fn cmd_sweep_channels(args: &mut Args) -> Result<()> {
     let n = requests(args)?;
     let p = pool(args)?;
-    let cells = exp::run_table4(n, &p);
+    let eng = engine(args)?;
+    let cells = exp::run_table4_with(n, &p, eng);
     println!(
         "{}",
         exp::render_cells(
@@ -61,7 +77,8 @@ pub fn cmd_sweep_channels(args: &mut Args) -> Result<()> {
 pub fn cmd_energy(args: &mut Args) -> Result<()> {
     let n = requests(args)?;
     let p = pool(args)?;
-    let cells = exp::run_table5(n, &p);
+    let eng = engine(args)?;
+    let cells = exp::run_table5_with(n, &p, eng);
     println!(
         "{}",
         exp::render_cells("E4 / Fig. 10 + Table 5 — controller energy per byte (nJ/B, SLC)", &cells, true)
@@ -72,18 +89,19 @@ pub fn cmd_energy(args: &mut Args) -> Result<()> {
 pub fn cmd_paper(args: &mut Args) -> Result<()> {
     let n = requests(args)?;
     let p = pool(args)?;
+    let eng = engine(args)?;
     println!("{}", exp::table2_text());
-    let t3 = exp::run_table3(n, &p);
+    let t3 = exp::run_table3_with(n, &p, eng);
     println!(
         "{}",
         exp::render_cells("E2 / Fig. 8 + Table 3 — way-interleaving sweep (MB/s)", &t3, false)
     );
-    let t4 = exp::run_table4(n, &p);
+    let t4 = exp::run_table4_with(n, &p, eng);
     println!(
         "{}",
         exp::render_cells("E3 / Fig. 9 + Table 4 — channel sweep (MB/s)", &t4, false)
     );
-    let t5 = exp::run_table5(n, &p);
+    let t5 = exp::run_table5_with(n, &p, eng);
     println!(
         "{}",
         exp::render_cells("E4 / Fig. 10 + Table 5 — energy (nJ/B, SLC)", &t5, true)
@@ -101,6 +119,7 @@ pub fn cmd_sweep_load(args: &mut Args) -> Result<()> {
         ..exp::LoadSweepSpec::default()
     };
     let p = pool(args)?;
+    spec.engine = engine(args)?;
     spec.mode = match args.get("mode").as_deref() {
         None | Some("read") => RequestKind::Read,
         Some("write") => RequestKind::Write,
@@ -174,6 +193,7 @@ pub fn cmd_sweep_steady(args: &mut Args) -> Result<()> {
         ..exp::SteadySweepSpec::default()
     };
     let p = pool(args)?;
+    spec.engine = engine(args)?;
     spec.cell = match args.get("cell").as_deref() {
         None | Some("slc") => CellType::Slc,
         Some("mlc") => CellType::Mlc,
@@ -289,6 +309,7 @@ pub fn cmd_sweep_tiered(args: &mut Args) -> Result<()> {
         ..exp::TieredSweepSpec::default()
     };
     let p = pool(args)?;
+    spec.engine = engine(args)?;
     if let Some(w) = args.get("ways") {
         spec.ways = w
             .split(',')
@@ -459,6 +480,7 @@ pub fn cmd_sweep_qos(args: &mut Args) -> Result<()> {
         ..exp::QosSweepSpec::default()
     };
     let p = pool(args)?;
+    spec.engine = engine(args)?;
     spec.cell = match args.get("cell").as_deref() {
         None | Some("slc") => CellType::Slc,
         Some("mlc") => CellType::Mlc,
@@ -662,7 +684,11 @@ pub fn cmd_pvt(args: &mut Args) -> Result<()> {
 pub fn cmd_simulate(args: &mut Args) -> Result<()> {
     let path = args.require("config").map_err(anyhow::Error::msg)?;
     let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
-    let cfg = SsdConfig::from_toml(&text).map_err(anyhow::Error::msg)?;
+    let mut cfg = SsdConfig::from_toml(&text).map_err(anyhow::Error::msg)?;
+    // `--threads` overrides the config's `[engine] threads` when given.
+    if args.get("threads").is_some() {
+        cfg.engine.threads = engine(args)?.threads;
+    }
     let n = requests(args)?;
     let mode = match args.get("mode").as_deref() {
         Some("read") => RequestKind::Read,
@@ -695,13 +721,17 @@ pub fn cmd_replay(args: &mut Args) -> Result<()> {
     let path = args.require("trace").map_err(anyhow::Error::msg)?;
     let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
     let trace = Trace::from_text(&text).map_err(anyhow::Error::msg)?;
-    let cfg = match args.get("config") {
+    let mut cfg = match args.get("config") {
         Some(cpath) => {
             let ctext = std::fs::read_to_string(&cpath).with_context(|| format!("reading {cpath}"))?;
             SsdConfig::from_toml(&ctext).map_err(anyhow::Error::msg)?
         }
         None => SsdConfig::default(),
     };
+    // `--threads` overrides the config's `[engine] threads` when given.
+    if args.get("threads").is_some() {
+        cfg.engine.threads = engine(args)?.threads;
+    }
     // A v3 trace's stream ids must fit the config's submission queues:
     // catch the mismatch here as a clean error instead of the simulator's
     // assert.

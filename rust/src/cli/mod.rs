@@ -94,7 +94,8 @@ SUBCOMMANDS
 
 COMMON FLAGS
   --requests N     requests per data point (default 400)
-  --threads N      worker threads for sweeps (default: all cores)
+  --threads N      engine threads per simulation (windowed engine; default 1)
+  --jobs N         sweep workers running whole sims in parallel (default: all cores)
   --csv            emit CSV instead of a rendered table
   --config FILE    TOML config (simulate/replay)
   --trace FILE     trace path (replay/trace-gen)

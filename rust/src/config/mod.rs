@@ -281,6 +281,41 @@ impl QosConfig {
     }
 }
 
+/// Execution-engine knobs (`[engine]` in TOML). The default — one thread,
+/// derived window — runs the classic single-threaded engine and is
+/// bit-identical to every prior release; any windowed setting dispatches
+/// through [`crate::sim::sharded::WindowedEngine`], whose event order is
+/// bit-identical by construction (golden-tested at threads 1/2/4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EngineConfig {
+    /// Worker threads for one simulation run. 1 = the classic engine.
+    pub threads: u16,
+    /// Conservative window width in picoseconds. 0 derives the lookahead
+    /// from the interface timing (the minimum bus phase,
+    /// [`crate::iface::bus::BusTiming::min_phase`]).
+    pub window_ps: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { threads: 1, window_ps: 0 }
+    }
+}
+
+impl EngineConfig {
+    /// Whether the windowed engine is selected at all.
+    pub fn windowed(&self) -> bool {
+        self.threads > 1 || self.window_ps > 0
+    }
+
+    /// The reuse-fingerprint view of this section. `threads = 0` is
+    /// normalized to 1 so an explicit `[engine]` block spelling out the
+    /// default can never fragment sweep reuse.
+    pub fn reuse_sig(&self) -> (u16, u64) {
+        (self.threads.max(1), self.window_ps)
+    }
+}
+
 /// Full configuration of one simulated SSD.
 #[derive(Debug, Clone)]
 pub struct SsdConfig {
@@ -329,6 +364,10 @@ pub struct SsdConfig {
     /// Way-scheduling / QoS knobs; the round-robin default is
     /// bit-identical to the historical arbiter.
     pub qos: QosConfig,
+    /// Execution-engine knobs; the single-threaded default is bit-identical
+    /// to every prior release (and so is the windowed engine — by
+    /// construction).
+    pub engine: EngineConfig,
 }
 
 impl Default for SsdConfig {
@@ -353,6 +392,7 @@ impl Default for SsdConfig {
             tiering: TieringConfig::default(),
             host: HostConfig::default(),
             qos: QosConfig::default(),
+            engine: EngineConfig::default(),
         }
     }
 }
@@ -459,6 +499,12 @@ impl SsdConfig {
         }
         if self.qos.scheduler == SchedKind::WeightedQos && self.qos.weights.contains(&0) {
             errs.push("qos.weights must all be >= 1 (a zero weight starves its class)".into());
+        }
+        if self.engine.threads == 0 {
+            errs.push("engine.threads must be >= 1".into());
+        }
+        if self.engine.threads > 256 {
+            errs.push("engine.threads must be <= 256".into());
         }
         if let Some(mbps) = self.load.offered_mbps {
             if !(mbps > 0.0 && mbps.is_finite()) {
@@ -664,6 +710,8 @@ impl SsdConfig {
                     )?
                 }
                 "qos.weights" => cfg.qos.weights = req_weights(key, val)?,
+                "engine.threads" => cfg.engine.threads = req_u16(key, val)?,
+                "engine.window_ps" => cfg.engine.window_ps = req_u64(key, val)?,
                 other => return Err(format!("unknown config key: {other}")),
             }
         }
@@ -975,6 +1023,33 @@ weights = [6, 3, 2, 1]
         let mut h = SsdConfig::default();
         h.host.queues = 99;
         assert_eq!(h.host.reuse_sig(), SsdConfig::default().host.reuse_sig());
+    }
+
+    #[test]
+    fn engine_section_parses_and_validates() {
+        let cfg = SsdConfig::from_toml(
+            r#"
+[engine]
+threads = 4
+window_ps = 500000
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.engine.threads, 4);
+        assert_eq!(cfg.engine.window_ps, 500_000);
+        assert!(cfg.engine.windowed());
+        // Default: classic single-threaded engine, derived window.
+        let d = SsdConfig::default();
+        assert_eq!(d.engine, EngineConfig { threads: 1, window_ps: 0 });
+        assert!(!d.engine.windowed());
+        // Bad values rejected.
+        assert!(SsdConfig::from_toml("[engine]\nthreads = 0").is_err());
+        assert!(SsdConfig::from_toml("[engine]\nthreads = 1000").is_err());
+        assert!(SsdConfig::from_toml("[engine]\nwindow_ps = -5").is_err());
+        // An explicit default block normalizes out of the fingerprint.
+        let explicit =
+            SsdConfig::from_toml("[engine]\nthreads = 1\nwindow_ps = 0").unwrap();
+        assert_eq!(explicit.engine.reuse_sig(), d.engine.reuse_sig());
     }
 
     #[test]

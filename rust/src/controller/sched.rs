@@ -34,7 +34,7 @@
 //! index is the upgrade path if a sweep ever couples deep overload
 //! backlogs with background traffic.
 
-use crate::controller::way::{PageJobKind, WayState};
+use crate::controller::way::WayState;
 use crate::host::trace::NUM_CLASSES;
 use crate::util::time::Ps;
 
@@ -177,11 +177,8 @@ impl WayScheduler for ReadPriority {
                     let read = if ways[i].queued_reads() == 0 {
                         None
                     } else {
-                        ways[i]
-                            .queue
-                            .iter()
-                            .take(window)
-                            .position(|j| j.kind == PageJobKind::Read)
+                        // Single-lane SoA scan over the kind column.
+                        ways[i].first_read_in(window)
                     };
                     match read {
                         Some(j) => (1, j),
@@ -248,16 +245,12 @@ impl WeightedQos {
             let window = ways[i].reorder_window();
             let limit = if background {
                 // The barrier job is the first of its class and eligible.
-                (window + 1).min(ways[i].queue.len())
+                (window + 1).min(ways[i].queue_len())
             } else {
                 window
             };
-            if let Some(j) = ways[i]
-                .queue
-                .iter()
-                .take(limit)
-                .position(|job| job.class == class)
-            {
+            // Single-lane SoA scan over the class column.
+            if let Some(j) = ways[i].first_of_class_in(class, limit) {
                 return Some((i, j));
             }
         }

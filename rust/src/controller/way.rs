@@ -8,7 +8,6 @@
 use crate::host::trace::{CLASS_BACKGROUND, NUM_CLASSES};
 use crate::nand::chip::Chip;
 use crate::util::time::Ps;
-use std::collections::VecDeque;
 
 /// What a page job does.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -34,7 +33,7 @@ pub enum JobPhase {
 }
 
 /// One page-granular operation bound for a specific chip.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PageJob {
     /// Host request this job belongs to. Values at the top of the range
     /// mark internal traffic (see `coordinator::ssd`: `INTERNAL_REQ` cache
@@ -58,13 +57,159 @@ pub struct PageJob {
     pub phase: JobPhase,
 }
 
+/// Structure-of-arrays job queue: every [`PageJob`] field lives in its own
+/// parallel lane, indexed from a logical head cursor.
+///
+/// The schedulers' hot scans (first read in the reorder window, first job
+/// of a class) filter on a single one-byte lane — one cache line now holds
+/// 64 class tags where the array-of-structs layout held one and a half
+/// 40-byte jobs — and the common FIFO pop (grant at index 0) is a cursor
+/// bump instead of a shift. The lanes are an arena: `clear` keeps their
+/// allocations, so sweep-worker reuse refills the same storage
+/// allocation-free, and the consumed prefix compacts once it passes the
+/// live tail so storage stays bounded by the queue's high-water mark.
+#[derive(Debug, Default)]
+pub struct JobQueue {
+    req: Vec<u64>,
+    stream: Vec<u16>,
+    class: Vec<u8>,
+    kind: Vec<PageJobKind>,
+    block: Vec<u32>,
+    page: Vec<u32>,
+    bytes: Vec<u32>,
+    phase: Vec<JobPhase>,
+    /// Consumed entries at the front of every lane.
+    head: usize,
+}
+
+/// Compact once the dead prefix exceeds this many entries *and* the live
+/// tail (amortized O(1) per pop, bounded memory).
+const COMPACT_THRESHOLD: usize = 64;
+
+impl JobQueue {
+    pub fn len(&self) -> usize {
+        self.req.len() - self.head
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.head == self.req.len()
+    }
+
+    /// Assemble the job at logical index `i` from the lanes.
+    pub fn get(&self, i: usize) -> PageJob {
+        let i = self.head + i;
+        PageJob {
+            req: self.req[i],
+            stream: self.stream[i],
+            class: self.class[i],
+            kind: self.kind[i],
+            block: self.block[i],
+            page: self.page[i],
+            bytes: self.bytes[i],
+            phase: self.phase[i],
+        }
+    }
+
+    /// Index (within the first `limit` entries) of the first job of
+    /// `class`. Touches only the class lane.
+    pub fn first_of_class_in(&self, class: u8, limit: usize) -> Option<usize> {
+        let n = limit.min(self.len());
+        self.class[self.head..self.head + n]
+            .iter()
+            .position(|&c| c == class)
+    }
+
+    /// Index (within the first `limit` entries) of the first read job.
+    /// Touches only the kind lane.
+    pub fn first_read_in(&self, limit: usize) -> Option<usize> {
+        let n = limit.min(self.len());
+        self.kind[self.head..self.head + n]
+            .iter()
+            .position(|&k| k == PageJobKind::Read)
+    }
+
+    /// Index of the first background-class job — the plan-order barrier
+    /// ([`WayState::reorder_window`]).
+    fn first_background(&self) -> Option<usize> {
+        self.class[self.head..]
+            .iter()
+            .position(|&c| c >= CLASS_BACKGROUND)
+    }
+
+    fn push_back(&mut self, job: PageJob) {
+        self.req.push(job.req);
+        self.stream.push(job.stream);
+        self.class.push(job.class);
+        self.kind.push(job.kind);
+        self.block.push(job.block);
+        self.page.push(job.page);
+        self.bytes.push(job.bytes);
+        self.phase.push(job.phase);
+    }
+
+    /// Remove and return the job at logical index `idx` (`VecDeque::remove`
+    /// semantics). Index 0 — the overwhelmingly common FIFO grant — is a
+    /// cursor bump; mid-queue removal shifts the lane tails.
+    fn remove(&mut self, idx: usize) -> Option<PageJob> {
+        if idx >= self.len() {
+            return None;
+        }
+        let job = self.get(idx);
+        if idx == 0 {
+            self.head += 1;
+            if self.head == self.req.len() {
+                self.clear();
+            } else if self.head >= COMPACT_THRESHOLD && self.head >= self.len() {
+                self.compact();
+            }
+        } else {
+            let i = self.head + idx;
+            self.req.remove(i);
+            self.stream.remove(i);
+            self.class.remove(i);
+            self.kind.remove(i);
+            self.block.remove(i);
+            self.page.remove(i);
+            self.bytes.remove(i);
+            self.phase.remove(i);
+        }
+        Some(job)
+    }
+
+    /// Drop the consumed prefix, keeping lane allocations.
+    fn compact(&mut self) {
+        self.req.drain(..self.head);
+        self.stream.drain(..self.head);
+        self.class.drain(..self.head);
+        self.kind.drain(..self.head);
+        self.block.drain(..self.head);
+        self.page.drain(..self.head);
+        self.bytes.drain(..self.head);
+        self.phase.drain(..self.head);
+        self.head = 0;
+    }
+
+    /// Empty the queue, keeping lane allocations (arena reuse).
+    fn clear(&mut self) {
+        self.req.clear();
+        self.stream.clear();
+        self.class.clear();
+        self.kind.clear();
+        self.block.clear();
+        self.page.clear();
+        self.bytes.clear();
+        self.phase.clear();
+        self.head = 0;
+    }
+}
+
 /// A way: one chip + its pending job queue + the in-flight job.
 pub struct WayState {
     pub chip: Chip,
     /// The pending jobs. Mutate through [`push`](Self::push) /
     /// [`take_job`](Self::take_job) so the per-class counts below stay in
     /// sync — the QoS schedulers treat them as authoritative.
-    pub queue: VecDeque<PageJob>,
+    queue: JobQueue,
     /// Queued jobs per priority class (scheduler fast path: skip ways
     /// without a candidate class in O(1)).
     class_counts: [u32; NUM_CLASSES],
@@ -80,7 +225,7 @@ impl WayState {
     pub fn new(chip: Chip) -> WayState {
         WayState {
             chip,
-            queue: VecDeque::new(),
+            queue: JobQueue::default(),
             class_counts: [0; NUM_CLASSES],
             queued_reads: 0,
             inflight: None,
@@ -112,6 +257,27 @@ impl WayState {
         Some(job)
     }
 
+    /// Queued-job count (excluding the in-flight job).
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// The queued job at logical index `i` (assembled from the SoA lanes).
+    pub fn job_at(&self, i: usize) -> PageJob {
+        self.queue.get(i)
+    }
+
+    /// Index of the first queued job of `class` within the first `limit`
+    /// entries (single-lane scan; see [`JobQueue::first_of_class_in`]).
+    pub fn first_of_class_in(&self, class: u8, limit: usize) -> Option<usize> {
+        self.queue.first_of_class_in(class, limit)
+    }
+
+    /// Index of the first queued read within the first `limit` entries.
+    pub fn first_read_in(&self, limit: usize) -> Option<usize> {
+        self.queue.first_read_in(limit)
+    }
+
     /// Queued jobs of a priority class.
     pub fn queued_of_class(&self, class: u8) -> u32 {
         self.class_counts[(class as usize).min(NUM_CLASSES - 1)]
@@ -137,10 +303,7 @@ impl WayState {
         if self.class_counts[CLASS_BACKGROUND as usize] == 0 {
             self.queue.len()
         } else {
-            self.queue
-                .iter()
-                .position(|j| j.class >= CLASS_BACKGROUND)
-                .unwrap_or(self.queue.len())
+            self.queue.first_background().unwrap_or(self.queue.len())
         }
     }
 
@@ -200,6 +363,8 @@ impl WayState {
 mod tests {
     use super::*;
     use crate::nand::datasheet::NandTiming;
+    use crate::util::prng::Prng;
+    use std::collections::VecDeque;
 
     fn way() -> WayState {
         WayState::new(Chip::new(NandTiming::slc(), 8))
@@ -253,5 +418,116 @@ mod tests {
         w.array_done_at = Ps::us(25);
         assert!(!w.wants_bus(Ps::us(20)));
         assert!(w.wants_bus(Ps::us(25)));
+    }
+
+    /// The SoA lanes behave exactly like the `VecDeque<PageJob>` they
+    /// replaced: randomized push/remove sequences (heavy on the index-0
+    /// fast path, like real grants) stay element-identical, and the scan
+    /// helpers agree with naive whole-struct scans.
+    #[test]
+    fn soa_queue_matches_vecdeque_reference() {
+        let mut rng = Prng::new(0x50A5_0A50);
+        for _case in 0..50 {
+            let mut q = JobQueue::default();
+            let mut r: VecDeque<PageJob> = VecDeque::new();
+            for step in 0..400u64 {
+                let op = rng.next_bounded(10);
+                if op < 6 || r.is_empty() {
+                    let j = PageJob {
+                        req: step,
+                        stream: rng.next_bounded(4) as u16,
+                        class: rng.next_bounded(5) as u8, // incl. out-of-range
+                        kind: match rng.next_bounded(3) {
+                            0 => PageJobKind::Read,
+                            1 => PageJobKind::Program,
+                            _ => PageJobKind::Erase,
+                        },
+                        block: step as u32,
+                        page: (step * 7) as u32,
+                        bytes: 2048,
+                        phase: JobPhase::Queued,
+                    };
+                    q.push_back(j);
+                    r.push_back(j);
+                } else {
+                    // Mostly FIFO pops, occasionally mid-queue removal.
+                    let idx = if rng.next_bounded(4) == 0 {
+                        rng.next_bounded(r.len() as u64 + 1) as usize
+                    } else {
+                        0
+                    };
+                    assert_eq!(q.remove(idx), r.remove(idx), "step {step} idx {idx}");
+                }
+                assert_eq!(q.len(), r.len());
+                for i in 0..r.len() {
+                    assert_eq!(q.get(i), r[i], "element {i} diverged");
+                }
+                for limit in [0, 1, r.len() / 2, r.len(), r.len() + 3] {
+                    let n = limit.min(r.len());
+                    assert_eq!(
+                        q.first_read_in(limit),
+                        r.iter().take(n).position(|j| j.kind == PageJobKind::Read)
+                    );
+                    for class in 0..NUM_CLASSES as u8 {
+                        assert_eq!(
+                            q.first_of_class_in(class, limit),
+                            r.iter().take(n).position(|j| j.class == class)
+                        );
+                    }
+                }
+                assert_eq!(
+                    q.first_background(),
+                    r.iter().position(|j| j.class >= CLASS_BACKGROUND)
+                );
+            }
+        }
+    }
+
+    /// The dead prefix left by FIFO pops compacts away: storage stays
+    /// bounded by the high-water mark, not the total jobs ever queued.
+    #[test]
+    fn soa_queue_compacts_consumed_prefix() {
+        let mut q = JobQueue::default();
+        for round in 0..100 {
+            for _ in 0..8 {
+                q.push_back(job(PageJobKind::Program));
+            }
+            for _ in 0..8 {
+                assert!(q.remove(0).is_some());
+            }
+            assert!(q.is_empty(), "round {round}");
+            assert!(
+                q.req.len() <= 2 * COMPACT_THRESHOLD + 16,
+                "lane storage grew unbounded: {}",
+                q.req.len()
+            );
+        }
+        // Interleaved churn with a persistent backlog also stays bounded.
+        for _ in 0..16 {
+            q.push_back(job(PageJobKind::Read));
+        }
+        for _ in 0..1000 {
+            q.push_back(job(PageJobKind::Program));
+            assert!(q.remove(0).is_some());
+        }
+        assert_eq!(q.len(), 16);
+        assert!(q.req.len() <= 2 * COMPACT_THRESHOLD + 32);
+    }
+
+    /// Class clamping still happens at the push boundary (counts, stored
+    /// job and scan lanes agree).
+    #[test]
+    fn out_of_range_class_clamped_at_push() {
+        let mut w = way();
+        let mut j = job(PageJobKind::Program);
+        j.class = 17;
+        w.push(j);
+        assert_eq!(w.queued_of_class(CLASS_BACKGROUND), 1);
+        assert_eq!(w.job_at(0).class, CLASS_BACKGROUND);
+        assert_eq!(w.first_of_class_in(CLASS_BACKGROUND, 1), Some(0));
+        assert_eq!(w.reorder_window(), 0);
+        let taken = w.take_job(0).unwrap();
+        assert_eq!(taken.class, CLASS_BACKGROUND);
+        assert_eq!(w.queued_of_class(CLASS_BACKGROUND), 0);
     }
 }

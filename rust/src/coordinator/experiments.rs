@@ -8,7 +8,7 @@
 //! print paper-vs-measured deltas (EXPERIMENTS.md is generated from these).
 
 use crate::analytic::paper;
-use crate::config::{ArrivalKind, SsdConfig};
+use crate::config::{ArrivalKind, EngineConfig, SsdConfig};
 use crate::controller::sched::SchedKind;
 use crate::coordinator::campaign::{AccessPattern, Campaign, SimReport, SimWorkspace, TenantSpec};
 use crate::coordinator::pool::ThreadPool;
@@ -84,12 +84,19 @@ pub fn table2_text() -> String {
 
 /// E2 — Fig. 8 / Table 3: single-channel way-interleaving sweep.
 pub fn run_table3(requests: usize, pool: &ThreadPool) -> Vec<Cell> {
+    run_table3_with(requests, pool, EngineConfig::default())
+}
+
+/// [`run_table3`] with an explicit per-sim engine configuration
+/// (`--threads` on the CLI; the sweep-level parallelism knob is the pool).
+pub fn run_table3_with(requests: usize, pool: &ThreadPool, engine: EngineConfig) -> Vec<Cell> {
     let mut jobs = Vec::new();
     let mut meta = Vec::new();
     for (cell, mode, rows) in paper::TABLE3 {
         for (wi, &ways) in paper::WAYS.iter().enumerate() {
             for (ii, iface) in InterfaceKind::ALL.iter().enumerate() {
-                let c = cfg(*iface, cell, 1, ways);
+                let mut c = cfg(*iface, cell, 1, ways);
+                c.engine = engine;
                 meta.push((cell, mode, 1u16, ways, *iface, Some(rows[wi][ii])));
                 jobs.push(move |ws: &mut SimWorkspace| Campaign::new(c, mode, requests).run_in(ws));
             }
@@ -112,12 +119,18 @@ pub fn run_table3(requests: usize, pool: &ThreadPool) -> Vec<Cell> {
 
 /// E3 — Fig. 9 / Table 4: constant-capacity channel/way sweep.
 pub fn run_table4(requests: usize, pool: &ThreadPool) -> Vec<Cell> {
+    run_table4_with(requests, pool, EngineConfig::default())
+}
+
+/// [`run_table4`] with an explicit per-sim engine configuration.
+pub fn run_table4_with(requests: usize, pool: &ThreadPool, engine: EngineConfig) -> Vec<Cell> {
     let mut jobs = Vec::new();
     let mut meta = Vec::new();
     for (cell, mode, rows) in paper::TABLE4 {
         for (ci, &(channels, ways)) in paper::CHANNEL_CONFIGS.iter().enumerate() {
             for (ii, iface) in InterfaceKind::ALL.iter().enumerate() {
-                let c = cfg(*iface, cell, channels, ways);
+                let mut c = cfg(*iface, cell, channels, ways);
+                c.engine = engine;
                 meta.push((cell, mode, channels, ways, *iface, rows[ci][ii]));
                 jobs.push(move |ws: &mut SimWorkspace| Campaign::new(c, mode, requests).run_in(ws));
             }
@@ -141,7 +154,12 @@ pub fn run_table4(requests: usize, pool: &ThreadPool) -> Vec<Cell> {
 /// E4 — Fig. 10 / Table 5: SLC energy per byte. Reuses the Table 3 SLC
 /// runs; the measured quantity is nJ/B.
 pub fn run_table5(requests: usize, pool: &ThreadPool) -> Vec<Cell> {
-    let mut cells = run_table3(requests, pool);
+    run_table5_with(requests, pool, EngineConfig::default())
+}
+
+/// [`run_table5`] with an explicit per-sim engine configuration.
+pub fn run_table5_with(requests: usize, pool: &ThreadPool, engine: EngineConfig) -> Vec<Cell> {
+    let mut cells = run_table3_with(requests, pool, engine);
     cells.retain(|c| c.cell == CellType::Slc);
     // Swap the paper reference for the energy table.
     for c in &mut cells {
@@ -205,6 +223,8 @@ pub struct LoadSweepSpec {
     pub max_mbps: f64,
     pub arrival: ArrivalKind,
     pub burst: u32,
+    /// Per-sim engine configuration (threads / window override).
+    pub engine: EngineConfig,
     pub seed: u64,
 }
 
@@ -222,6 +242,7 @@ impl Default for LoadSweepSpec {
             max_mbps: 320.0,
             arrival: ArrivalKind::Poisson,
             burst: 4,
+            engine: EngineConfig::default(),
             seed: 0xDD12_7A5D,
         }
     }
@@ -251,6 +272,7 @@ pub fn run_load_sweep(spec: &LoadSweepSpec, pool: &ThreadPool) -> Vec<LoadCell> 
                 c.load.offered_mbps = Some(offered);
                 c.load.arrival = spec.arrival;
                 c.load.burst = spec.burst;
+                c.engine = spec.engine;
                 c.seed = spec.seed;
                 let mode = spec.mode;
                 let requests = spec.requests;
@@ -376,6 +398,8 @@ pub struct SteadySweepSpec {
     pub blocks_per_chip: u32,
     /// Coordinator wear-leveling P/E-spread threshold (0 = off).
     pub wear_level_spread: u32,
+    /// Per-sim engine configuration (threads / window override).
+    pub engine: EngineConfig,
     pub seed: u64,
 }
 
@@ -395,6 +419,7 @@ impl Default for SteadySweepSpec {
             burst: 4,
             blocks_per_chip: 64,
             wear_level_spread: 16,
+            engine: EngineConfig::default(),
             seed: 0xDD12_7A5D,
         }
     }
@@ -440,6 +465,7 @@ pub fn run_steady_state(spec: &SteadySweepSpec, pool: &ThreadPool) -> Vec<Steady
                     spec.blocks_per_chip
                 );
                 c.steady.wear_level_spread = spec.wear_level_spread;
+                c.engine = spec.engine;
                 c.seed = spec.seed;
                 if let Some(offered) = spec.offered_mbps {
                     c.load.offered_mbps = Some(offered);
@@ -551,6 +577,8 @@ pub struct TieredSweepSpec {
     pub steady: bool,
     /// Over-provisioning fraction for the steady composition.
     pub over_provision: f64,
+    /// Per-sim engine configuration (threads / window override).
+    pub engine: EngineConfig,
     pub seed: u64,
 }
 
@@ -572,6 +600,7 @@ impl Default for TieredSweepSpec {
             migrate_free_blocks: 4,
             steady: false,
             over_provision: 0.07,
+            engine: EngineConfig::default(),
             seed: 0xDD12_7A5D,
         }
     }
@@ -603,6 +632,7 @@ pub fn tiered_point_config(
     );
     let mut c = cfg(iface, CellType::Mlc, spec.channels, ways);
     c.blocks_per_chip = spec.blocks_per_chip;
+    c.engine = spec.engine;
     c.seed = spec.seed;
     if fraction > 0.0 {
         c.tiering.enabled = true;
@@ -749,6 +779,8 @@ pub struct QosSweepSpec {
     /// so the two tenants' arrival spans roughly match.
     pub requests: usize,
     pub blocks_per_chip: u32,
+    /// Per-sim engine configuration (threads / window override).
+    pub engine: EngineConfig,
     pub seed: u64,
 }
 
@@ -767,6 +799,7 @@ impl Default for QosSweepSpec {
             write_mbps: 55.0,
             requests: DEFAULT_REQUESTS,
             blocks_per_chip: 512,
+            engine: EngineConfig::default(),
             seed: 0xDD12_7A5D,
         }
     }
@@ -820,6 +853,7 @@ pub fn qos_point_config(
 ) -> Result<SsdConfig, Vec<String>> {
     let mut c = cfg(iface, spec.cell, spec.channels, ways);
     c.blocks_per_chip = spec.blocks_per_chip;
+    c.engine = spec.engine;
     c.seed = spec.seed;
     c.host.link = spec.link;
     c.host.queues = 2;

@@ -62,7 +62,7 @@ use crate::iface::bus::BusTiming;
 use crate::iface::timing::InterfaceKind;
 use crate::nand::chip::{Chip, ChipOp};
 use crate::nand::geometry::Geometry;
-use crate::sim::{Engine, Model, RunResult, Scheduler};
+use crate::sim::{Engine, Model, RunResult, Scheduler, WindowedEngine};
 use crate::util::stats::Welford;
 use crate::util::time::{mbps, Ps};
 
@@ -1071,9 +1071,11 @@ impl SsdSim {
     /// queue-depth settings may all differ — they are overwritten in place.
     /// The tier partition and migration threshold are FTL construction
     /// parameters, so they are part of the key (0/0 when tiering is
-    /// disabled); likewise the `[host]` link shape and the `[qos]`
-    /// scheduling policy (both normalized when dormant, so dormant
-    /// sections never fragment reuse).
+    /// disabled); likewise the `[host]` link shape, the `[qos]`
+    /// scheduling policy and the `[engine]` execution knobs (all
+    /// normalized when dormant, so dormant sections never fragment reuse —
+    /// the engine knobs are in the key so a reused simulator picks up a
+    /// changed `threads`/`window_ps` instead of keeping the old config).
     #[allow(clippy::type_complexity)]
     pub fn reuse_key(
         cfg: &SsdConfig,
@@ -1089,6 +1091,7 @@ impl SsdSim {
         u32,
         (HostLinkKind, u16),
         (SchedKind, [u32; NUM_CLASSES]),
+        (u16, u64),
     ) {
         let nand = cfg.nand_timing();
         let geom = Geometry {
@@ -1117,6 +1120,7 @@ impl SsdSim {
             migrate,
             cfg.host.reuse_sig(),
             cfg.qos.reuse_sig(),
+            cfg.engine.reuse_sig(),
         )
     }
 
@@ -1202,8 +1206,33 @@ impl SsdSim {
         self.run_with(&mut sched)
     }
 
+    /// Conservative lookahead for the windowed engine: the configured
+    /// `window_ps` when set, else the minimum bus phase across every
+    /// channel interface in play (both tier buses when tiering splits
+    /// them) — nothing crosses a channel boundary in less bus time than
+    /// that, which is the window-safety bound (DESIGN.md §Engine).
+    fn window_lookahead(&self) -> Ps {
+        if self.cfg.engine.window_ps > 0 {
+            return Ps::ps(self.cfg.engine.window_ps.min(i64::MAX as u64) as i64);
+        }
+        let mut la = self
+            .channels
+            .iter()
+            .map(|c| c.bus.timing.min_phase())
+            .fold(Ps::MAX, Ps::min);
+        if self.slc_chips > 0 {
+            la = la.min(self.slc_bus.min_phase()).min(self.mlc_bus.min_phase());
+        }
+        la.max(Ps::ps(1))
+    }
+
     /// Like [`run`](SsdSim::run), but on a caller-provided scheduler whose
     /// calendar allocations are reused across runs (sweep workers).
+    ///
+    /// `[engine]` selects the execution engine: the default runs the
+    /// classic single-threaded loop; any windowed setting dispatches
+    /// through [`WindowedEngine`], which is bit-identical by construction
+    /// (golden-tested below at threads 1/2/4).
     pub fn run_with(&mut self, sched: &mut Scheduler<Ev>) -> RunResult {
         sched.reset();
         if self.arrivals.is_empty() {
@@ -1216,7 +1245,12 @@ impl SsdSim {
         } else {
             sched.at(self.arrivals[0], Ev::Arrive);
         }
-        let result = Engine::run(self, sched, Ps::MAX);
+        let result = if self.cfg.engine.windowed() {
+            let mut engine = WindowedEngine::new(self.window_lookahead());
+            engine.run(self, sched, Ps::MAX)
+        } else {
+            Engine::run(self, sched, Ps::MAX)
+        };
         assert!(self.is_done(), "simulation drained without completing trace");
         // Close the books: controller energy over the active window.
         let window = self.finished_at;
@@ -1537,6 +1571,58 @@ mod tests {
         assert_eq!(sim.finished_at(), fresh.finished_at());
         assert_eq!(sim.counters.pages_read, fresh.counters.pages_read);
         assert_eq!(sim.latency.mean(), fresh.latency.mean());
+    }
+
+    /// Golden bit-identity of the windowed engine: `[engine] threads` at
+    /// 1/2/4 (plus an explicit `window_ps` override) must reproduce the
+    /// classic engine's report exactly — same event count, end time,
+    /// counters, latency, bandwidth and energy.
+    #[test]
+    fn windowed_engine_bit_identical_at_threads_1_2_4() {
+        let fingerprint = |sim: &SsdSim, r: RunResult| {
+            (
+                r.events,
+                sim.finished_at(),
+                sim.counters.pages_programmed,
+                sim.counters.pages_read,
+                sim.counters.requests_done,
+                sim.latency.mean(),
+                sim.bandwidth_mbps(),
+                sim.energy.controller_nj_per_byte(),
+            )
+        };
+        for iface in [InterfaceKind::Conv, InterfaceKind::Proposed] {
+            let mut base = SsdSim::new(small_cfg(iface, 4), write_trace(15));
+            let rb = base.run();
+            let golden = fingerprint(&base, rb);
+            for threads in [1u16, 2, 4] {
+                let mut cfg = small_cfg(iface, 4);
+                cfg.engine.threads = threads;
+                // threads = 1 exercises the explicit window override path.
+                cfg.engine.window_ps = if threads == 1 { 1_000_000 } else { 0 };
+                assert!(cfg.engine.windowed());
+                let mut sim = SsdSim::new(cfg, write_trace(15));
+                let r = sim.run();
+                assert_eq!(
+                    fingerprint(&sim, r),
+                    golden,
+                    "iface {iface:?} threads {threads}"
+                );
+            }
+        }
+        // Read path too (prefill + windowed run).
+        let mut base = SsdSim::new(small_cfg(InterfaceKind::Proposed, 2), read_trace(10));
+        base.prefill_for_reads();
+        let rb = base.run();
+        let golden = fingerprint(&base, rb);
+        for threads in [2u16, 4] {
+            let mut cfg = small_cfg(InterfaceKind::Proposed, 2);
+            cfg.engine.threads = threads;
+            let mut sim = SsdSim::new(cfg, read_trace(10));
+            sim.prefill_for_reads();
+            let r = sim.run();
+            assert_eq!(fingerprint(&sim, r), golden, "read path threads {threads}");
+        }
     }
 
     /// Fresh-drive sequential fills never amplify: WAF is exactly 1 and no

@@ -97,6 +97,18 @@ impl BusTiming {
     pub fn freq_mhz(&self) -> f64 {
         1e3 / self.t_cycle.as_ns_f64()
     }
+
+    /// Shortest bus occupancy any cross-channel interaction can take: the
+    /// minimum over all command/status phases (data bursts are never
+    /// shorter than a status poll for real page sizes, and zero-byte bursts
+    /// do not occur). This is the conservative lookahead bound used by the
+    /// windowed engine (`[engine] window_ps = 0` derives it from here).
+    pub fn min_phase(&self) -> Ps {
+        self.status_poll()
+            .min(self.read_cmd())
+            .min(self.program_cmd())
+            .min(self.erase_cmd())
+    }
 }
 
 #[cfg(test)]
@@ -143,6 +155,18 @@ mod tests {
         // Same clock -> same command-phase duration despite DDR data.
         assert_eq!(s.read_cmd(), d.read_cmd());
         assert!(d.read_cmd() > d.status_poll());
+    }
+
+    #[test]
+    fn min_phase_is_the_status_poll() {
+        // With the default command cycles the status poll (2 cycles) is the
+        // shortest phase on every interface — and it must be positive, or
+        // the windowed engine could not advance.
+        let (c, s, d) = timings();
+        for t in [c, s, d] {
+            assert!(t.min_phase() > Ps::ZERO);
+            assert_eq!(t.min_phase(), t.status_poll());
+        }
     }
 
     #[test]

@@ -69,6 +69,35 @@ impl<Ev> Scheduler<Ev> {
         self.queue.clear();
         self.stopped = false;
     }
+
+    // Calendar-driving hooks for the alternative engines in
+    // [`crate::sim::sharded`]. Crate-private: models must not self-drive.
+
+    /// Earliest pending timestamp without popping.
+    #[inline]
+    pub(crate) fn peek_next_time(&mut self) -> Option<Ps> {
+        self.queue.next_time()
+    }
+
+    /// Advance the clock (monotonically) without dispatching.
+    #[inline]
+    pub(crate) fn set_now(&mut self, t: Ps) {
+        debug_assert!(t >= self.now, "time went backwards");
+        self.now = t;
+    }
+
+    /// Pop the next event if it fires exactly at `t` (same contract as
+    /// [`crate::sim::queue::EventQueue::pop_if_at`]).
+    #[inline]
+    pub(crate) fn pop_at(&mut self, t: Ps) -> Option<Ev> {
+        self.queue.pop_if_at(t)
+    }
+
+    /// Whether the model requested a stop.
+    #[inline]
+    pub(crate) fn is_stopped(&self) -> bool {
+        self.stopped
+    }
 }
 
 impl<Ev> Default for Scheduler<Ev> {

@@ -22,6 +22,10 @@
 
 pub mod engine;
 pub mod queue;
+pub mod sharded;
 
 pub use engine::{Engine, Model, RunResult, Scheduler};
 pub use queue::{EventQueue, HeapEventQueue};
+pub use sharded::{
+    Emit, EventKey, ReferenceSim, ShardModel, ShardedSim, WindowedEngine,
+};

@@ -161,27 +161,29 @@ impl<Ev> EventQueue<Ev> {
     fn scan_occ(&self, start_slot: usize) -> Option<usize> {
         let w0 = start_slot / 64;
         let b0 = start_slot % 64;
-        let first = self.occ[w0] >> b0;
-        if first != 0 {
-            return Some(first.trailing_zeros() as usize);
+        let head = self.occ[w0] >> b0;
+        if head != 0 {
+            return Some(head.trailing_zeros() as usize);
         }
-        for i in 1..=OCC_WORDS {
-            let wi = (w0 + i) % OCC_WORDS;
-            let word = if i == OCC_WORDS {
-                // Full circle: only the low bits of the start word remain.
-                if b0 == 0 {
-                    0
-                } else {
-                    self.occ[wi] & ((1u64 << b0) - 1)
-                }
-            } else {
-                self.occ[wi]
-            };
-            if word != 0 {
-                return Some((64 - b0) + (i - 1) * 64 + word.trailing_zeros() as usize);
-            }
+        // Branchless sweep: visit every remaining word exactly once (fixed
+        // trip count — no data-dependent early-out for the predictor to
+        // miss) and fold the occupancy into a summary bitmap; a single
+        // trailing_zeros then locates the first non-empty word. Bit
+        // `OCC_WORDS` stands for the full-circle wrap word (the low bits of
+        // the start word).
+        let mut summary: u32 = 0;
+        for i in 1..OCC_WORDS {
+            let w = self.occ[(w0 + i) % OCC_WORDS];
+            summary |= ((w != 0) as u32) << i;
         }
-        None
+        let tail = if b0 == 0 { 0 } else { self.occ[w0] & ((1u64 << b0) - 1) };
+        summary |= ((tail != 0) as u32) << OCC_WORDS;
+        if summary == 0 {
+            return None;
+        }
+        let i = summary.trailing_zeros() as usize;
+        let word = if i == OCC_WORDS { tail } else { self.occ[(w0 + i) % OCC_WORDS] };
+        Some((64 - b0) + (i - 1) * 64 + word.trailing_zeros() as usize)
     }
 
     /// Wheel empty: restart the window at the overflow's earliest bucket and
@@ -616,6 +618,45 @@ mod tests {
         }
         for i in 0..100 {
             assert_eq!(q.pop(), Some((Ps::ns(5), i)));
+        }
+    }
+
+    /// The branchless occupancy sweep is value-identical to a naive linear
+    /// scan over the bucket bitmap, including wrap-around and empty wheels.
+    #[test]
+    fn scan_occ_matches_naive_reference() {
+        let naive = |occ: &[u64; OCC_WORDS], start: usize| -> Option<usize> {
+            (0..BUCKETS).find(|&d| {
+                let slot = (start + d) % BUCKETS;
+                occ[slot / 64] & (1u64 << (slot % 64)) != 0
+            })
+        };
+        let mut patterns: Vec<[u64; OCC_WORDS]> =
+            vec![[0; OCC_WORDS], [u64::MAX; OCC_WORDS]];
+        for slot in [0usize, 1, 63, 64, 65, BUCKETS - 1] {
+            let mut occ = [0u64; OCC_WORDS];
+            occ[slot / 64] |= 1 << (slot % 64);
+            patterns.push(occ);
+        }
+        let mut rng = Prng::new(0xC0FFEE);
+        for _ in 0..50 {
+            let mut occ = [0u64; OCC_WORDS];
+            for _ in 0..1 + rng.next_bounded(20) {
+                let slot = rng.next_bounded(BUCKETS as u64) as usize;
+                occ[slot / 64] |= 1 << (slot % 64);
+            }
+            patterns.push(occ);
+        }
+        let mut q: EventQueue<u32> = EventQueue::new();
+        for occ in patterns {
+            q.occ = occ;
+            for start in [0usize, 1, 17, 63, 64, 100, 511, 512, BUCKETS - 1] {
+                assert_eq!(
+                    q.scan_occ(start),
+                    naive(&occ, start),
+                    "start {start}, occ {occ:?}"
+                );
+            }
         }
     }
 }

@@ -1,0 +1,874 @@
+//! Conservative-time-window (lookahead) parallel DES.
+//!
+//! Two engines live here, both built on the same window discipline:
+//!
+//! * [`WindowedEngine`] drives an ordinary [`Model`] on the single global
+//!   calendar, partitioning virtual time into windows `[w, w + lookahead)`.
+//!   Dispatch order is *exactly* the `(time, seq)` order of [`Engine::run`],
+//!   so results are bit-identical to the single-threaded engine by
+//!   construction — this is the execution mode `SsdSim` selects when
+//!   `[engine] threads > 1` is configured, and its window count measures how
+//!   much batch parallelism a given lookahead exposes.
+//! * [`ShardedSim`] runs a set of *shard-local* models (one per channel) in
+//!   true parallel: each shard owns a private calendar, every window
+//!   `[w, w + lookahead)` is processed concurrently across shards, and
+//!   cross-shard events are exchanged only at window boundaries.
+//!
+//! # Safety argument for the lookahead bound
+//!
+//! A conservative window of width `L` is safe iff no event processed inside
+//! the window can cause another shard to need an event *earlier* than the
+//! window's end. Shards interact only through explicit cross-shard sends,
+//! and every send from a handler running at time `t ∈ [w, w+L)` must target
+//! a time `≥ w + L` — which holds whenever the model's minimum cross-shard
+//! latency is `≥ L` (for the SSD model: the minimum bus command/transfer
+//! phase, [`crate::iface::bus::BusTiming::min_phase`] — nothing crosses a
+//! channel boundary without occupying the bus for at least one command
+//! phase). [`Emit::send_at`] asserts this at emission time, so a violated
+//! bound is a loud model bug, never a silent reorder.
+//!
+//! # Determinism
+//!
+//! Every event carries an explicit total-order key
+//! `(time, source shard, per-source emission counter)` assigned when it is
+//! emitted. Each shard drains its calendar in key order, and a shard's
+//! handler sees only shard-local state, so the processing order — and
+//! therefore every emission counter, and therefore every key — is identical
+//! whether windows run serially, on 2 threads, on 8, or on the single
+//! global calendar of [`ReferenceSim`]. That is what the randomized oracle
+//! test in `tests/sharded_engine.rs` checks.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
+use std::sync::{Barrier, Mutex};
+
+use crate::sim::engine::{Model, RunResult, Scheduler};
+use crate::util::time::Ps;
+
+/// Source id used for events seeded from outside any shard handler.
+pub const SEED_SRC: u32 = u32::MAX;
+
+/// Total order over events: time, then source shard, then per-source
+/// emission sequence. Unique per event (no two emissions share
+/// `(src, seq)`), so dispatch order is independent of calendar internals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct EventKey {
+    pub at: Ps,
+    pub src: u32,
+    pub seq: u64,
+}
+
+/// Calendar entry ordered by key alone (payload need not be `Ord`).
+struct Entry<P> {
+    key: EventKey,
+    payload: P,
+}
+
+impl<P> PartialEq for Entry<P> {
+    fn eq(&self, other: &Self) -> bool {
+        self.key == other.key
+    }
+}
+impl<P> Eq for Entry<P> {}
+impl<P> PartialOrd for Entry<P> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<P> Ord for Entry<P> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.key.cmp(&other.key)
+    }
+}
+
+/// Emission collector handed to [`ShardModel::handle`]. Local events may
+/// land anywhere `≥ now` (including inside the current window); cross-shard
+/// events must land at or past the window boundary — see the module-level
+/// safety argument.
+pub struct Emit<Ev> {
+    shard: u32,
+    now: Ps,
+    /// End of the current window; `Ps::ZERO` disables the check (reference
+    /// executor, which has no windows).
+    w_end: Ps,
+    seq: u64,
+    local: Vec<(EventKey, Ev)>,
+    cross: Vec<(u32, EventKey, Ev)>,
+}
+
+impl<Ev> Emit<Ev> {
+    fn new(shard: u32, now: Ps, w_end: Ps, seq: u64) -> Self {
+        Emit { shard, now, w_end, seq, local: Vec::new(), cross: Vec::new() }
+    }
+
+    /// Current simulated time (the handled event's timestamp).
+    #[inline]
+    pub fn now(&self) -> Ps {
+        self.now
+    }
+
+    /// The shard this handler runs on.
+    #[inline]
+    pub fn shard(&self) -> u32 {
+        self.shard
+    }
+
+    fn next_key(&mut self, at: Ps) -> EventKey {
+        let key = EventKey { at, src: self.shard, seq: self.seq };
+        self.seq += 1;
+        key
+    }
+
+    /// Schedule a shard-local event `delay` after now.
+    pub fn local_after(&mut self, delay: Ps, ev: Ev) {
+        debug_assert!(delay >= Ps::ZERO, "negative delay {delay:?}");
+        self.local_at(self.now + delay, ev);
+    }
+
+    /// Schedule a shard-local event at absolute time `at` (not in the past).
+    pub fn local_at(&mut self, at: Ps, ev: Ev) {
+        assert!(at >= self.now, "scheduling into the past: {at:?} < {:?}", self.now);
+        let key = self.next_key(at);
+        self.local.push((key, ev));
+    }
+
+    /// Send an event to another shard, `delay` after now. Safe whenever
+    /// `delay` ≥ the engine's lookahead.
+    pub fn send_after(&mut self, shard: u32, delay: Ps, ev: Ev) {
+        self.send_at(shard, self.now + delay, ev);
+    }
+
+    /// Send an event to another shard at absolute time `at`. Panics if `at`
+    /// lands inside the current window — that would violate the conservative
+    /// lookahead bound and could reorder execution.
+    pub fn send_at(&mut self, shard: u32, at: Ps, ev: Ev) {
+        assert!(
+            at >= self.w_end,
+            "lookahead violation: cross-shard event at {at:?} lands inside the \
+             window ending at {:?} (shard {} -> {shard})",
+            self.w_end,
+            self.shard,
+        );
+        let key = self.next_key(at);
+        self.cross.push((shard, key, ev));
+    }
+}
+
+/// A shard-local simulation model. Unlike [`Model`], a handler sees only
+/// this shard's state and communicates with other shards exclusively via
+/// [`Emit::send_after`]/[`Emit::send_at`].
+pub trait ShardModel: Send {
+    type Ev: Send;
+    fn handle(&mut self, now: Ps, ev: Self::Ev, out: &mut Emit<Self::Ev>);
+}
+
+/// One shard's runtime state: the model plus its private calendar.
+struct ShardRt<M: ShardModel> {
+    model: M,
+    heap: BinaryHeap<Reverse<Entry<M::Ev>>>,
+    /// Emission counter for events *sourced* by this shard.
+    seq: u64,
+    /// Events dispatched on this shard (cumulative across runs).
+    events: u64,
+    /// Timestamp of the last dispatched event.
+    last: Ps,
+}
+
+impl<M: ShardModel> ShardRt<M> {
+    fn next_time(&self) -> Option<Ps> {
+        self.heap.peek().map(|e| e.0.key.at)
+    }
+}
+
+/// Drain one shard's calendar up to (exclusive) `w_end`, bounded by
+/// `horizon` (inclusive). Cross-shard emissions are appended to `cross`.
+fn run_window<M: ShardModel>(
+    id: u32,
+    s: &mut ShardRt<M>,
+    w_end: Ps,
+    horizon: Ps,
+    cross: &mut Vec<(u32, EventKey, M::Ev)>,
+) {
+    while let Some(at) = s.next_time() {
+        if at >= w_end || at > horizon {
+            break;
+        }
+        let Reverse(Entry { key, payload: ev }) = s.heap.pop().expect("peeked entry");
+        debug_assert_eq!(key.at, at);
+        let mut emit = Emit::new(id, at, w_end, s.seq);
+        s.model.handle(at, ev, &mut emit);
+        s.seq = emit.seq;
+        s.events += 1;
+        s.last = at;
+        for (key, ev) in emit.local {
+            s.heap.push(Reverse(Entry { key, payload: ev }));
+        }
+        for routed in emit.cross {
+            debug_assert!(routed.1.at >= w_end, "Emit::send_at missed a violation");
+            cross.push(routed);
+        }
+    }
+}
+
+/// Channel-sharded simulator: N shard-local models advanced in conservative
+/// time windows, optionally across OS threads.
+///
+/// `threads = 1` processes shards in-place with zero synchronization (and is
+/// the reference the parallel path must match bit-for-bit); `threads > 1`
+/// runs a bulk-synchronous loop with persistent workers — one barrier round
+/// per window, so wide windows amortize synchronization across many events.
+pub struct ShardedSim<M: ShardModel> {
+    shards: Vec<ShardRt<M>>,
+    lookahead: Ps,
+    seed_seq: u64,
+    windows: u64,
+}
+
+impl<M: ShardModel> ShardedSim<M> {
+    /// `lookahead` must be positive: a zero-width window cannot advance.
+    pub fn new(models: Vec<M>, lookahead: Ps) -> Self {
+        assert!(lookahead > Ps::ZERO, "lookahead must be positive");
+        let shards = models
+            .into_iter()
+            .map(|model| ShardRt {
+                model,
+                heap: BinaryHeap::new(),
+                seq: 0,
+                events: 0,
+                last: Ps::ZERO,
+            })
+            .collect();
+        ShardedSim { shards, lookahead, seed_seq: 0, windows: 0 }
+    }
+
+    /// The configured window width.
+    pub fn lookahead(&self) -> Ps {
+        self.lookahead
+    }
+
+    /// Windows advanced by the most recent [`ShardedSim::run`].
+    pub fn windows(&self) -> u64 {
+        self.windows
+    }
+
+    /// Pending events across all shards.
+    pub fn pending(&self) -> usize {
+        self.shards.iter().map(|s| s.heap.len()).sum()
+    }
+
+    /// Seed an initial event onto `shard` (keys use [`SEED_SRC`], so seeds
+    /// order after same-time handler emissions, consistently everywhere).
+    pub fn seed(&mut self, shard: u32, at: Ps, ev: M::Ev) {
+        let key = EventKey { at, src: SEED_SRC, seq: self.seed_seq };
+        self.seed_seq += 1;
+        self.shards[shard as usize].heap.push(Reverse(Entry { key, payload: ev }));
+    }
+
+    /// Borrow one shard's model (for result extraction).
+    pub fn model(&self, shard: u32) -> &M {
+        &self.shards[shard as usize].model
+    }
+
+    /// Iterate all shard models.
+    pub fn models(&self) -> impl Iterator<Item = &M> {
+        self.shards.iter().map(|s| &s.model)
+    }
+
+    fn total_events(&self) -> u64 {
+        self.shards.iter().map(|s| s.events).sum()
+    }
+
+    fn drained_result(&self, base_events: u64) -> RunResult {
+        RunResult {
+            end_time: self.shards.iter().map(|s| s.last).fold(Ps::ZERO, Ps::max),
+            events: self.total_events() - base_events,
+            drained: true,
+        }
+    }
+
+    /// Run until all calendars drain or `horizon` is passed. Events beyond
+    /// the horizon stay queued, so runs are resumable like [`Engine::run`].
+    ///
+    /// [`Engine::run`]: crate::sim::engine::Engine::run
+    pub fn run(&mut self, horizon: Ps, threads: usize) -> RunResult {
+        self.windows = 0;
+        let workers = threads.clamp(1, self.shards.len().max(1));
+        if workers <= 1 {
+            self.run_serial(horizon)
+        } else {
+            self.run_parallel(horizon, workers)
+        }
+    }
+
+    fn run_serial(&mut self, horizon: Ps) -> RunResult {
+        let base = self.total_events();
+        let mut cross: Vec<(u32, EventKey, M::Ev)> = Vec::new();
+        loop {
+            let Some(w_start) = self.shards.iter().filter_map(ShardRt::next_time).min()
+            else {
+                return self.drained_result(base);
+            };
+            if w_start > horizon {
+                return RunResult {
+                    end_time: horizon,
+                    events: self.total_events() - base,
+                    drained: false,
+                };
+            }
+            let w_end = w_start.saturating_add(self.lookahead);
+            self.windows += 1;
+            for (i, s) in self.shards.iter_mut().enumerate() {
+                run_window(i as u32, s, w_end, horizon, &mut cross);
+            }
+            for (dest, key, ev) in cross.drain(..) {
+                self.shards[dest as usize].heap.push(Reverse(Entry { key, payload: ev }));
+            }
+        }
+    }
+
+    /// Bulk-synchronous parallel loop. Per window: the coordinator (calling
+    /// thread) publishes the window bound, workers drain their shards and
+    /// post cross-shard events into per-owner inboxes, a barrier, owners
+    /// drain their inboxes and publish their next event time, a barrier,
+    /// and the coordinator picks the next window start.
+    fn run_parallel(&mut self, horizon: Ps, workers: usize) -> RunResult {
+        const IDLE: i64 = i64::MAX;
+        let base = self.total_events();
+        let n = self.shards.len();
+        let chunk = n.div_ceil(workers);
+        // `chunks_mut` may yield fewer chunks than requested workers (e.g.
+        // 8 shards / 5 workers -> chunk 2 -> 4 chunks); size everything on
+        // the actual chunk count or the barrier would deadlock.
+        let workers = n.div_ceil(chunk);
+        let lookahead = self.lookahead;
+
+        let barrier = Barrier::new(workers + 1);
+        let done = AtomicBool::new(false);
+        let w_end_ps = AtomicI64::new(0);
+        let next_times: Vec<AtomicI64> =
+            (0..workers).map(|_| AtomicI64::new(IDLE)).collect();
+        let inboxes: Vec<Mutex<Vec<(u32, EventKey, M::Ev)>>> =
+            (0..workers).map(|_| Mutex::new(Vec::new())).collect();
+        let panicked: Mutex<Option<String>> = Mutex::new(None);
+
+        let mut t = self.shards.iter().filter_map(ShardRt::next_time).min();
+        let mut windows = 0u64;
+        std::thread::scope(|scope| {
+            for (wi, shards) in self.shards.chunks_mut(chunk).enumerate() {
+                let base_shard = (wi * chunk) as u32;
+                let barrier = &barrier;
+                let done = &done;
+                let w_end_ps = &w_end_ps;
+                let next_times = &next_times;
+                let inboxes = &inboxes;
+                let panicked = &panicked;
+                scope.spawn(move || {
+                    let mut out: Vec<(u32, EventKey, M::Ev)> = Vec::new();
+                    loop {
+                        barrier.wait(); // window published
+                        if done.load(Ordering::Acquire) {
+                            return;
+                        }
+                        let w_end = Ps::ps(w_end_ps.load(Ordering::Acquire));
+                        let res = catch_unwind(AssertUnwindSafe(|| {
+                            for (j, s) in shards.iter_mut().enumerate() {
+                                run_window(base_shard + j as u32, s, w_end, horizon, &mut out);
+                            }
+                        }));
+                        if let Err(payload) = res {
+                            let msg = payload
+                                .downcast_ref::<String>()
+                                .cloned()
+                                .or_else(|| {
+                                    payload.downcast_ref::<&str>().map(|s| s.to_string())
+                                })
+                                .unwrap_or_else(|| "shard worker panicked".into());
+                            panicked.lock().unwrap().get_or_insert(msg);
+                            out.clear();
+                        }
+                        for (dest, key, ev) in out.drain(..) {
+                            let owner = dest as usize / chunk;
+                            inboxes[owner].lock().unwrap().push((dest, key, ev));
+                        }
+                        barrier.wait(); // all cross events posted
+                        for (dest, key, ev) in inboxes[wi].lock().unwrap().drain(..) {
+                            let local = (dest - base_shard) as usize;
+                            shards[local].heap.push(Reverse(Entry { key, payload: ev }));
+                        }
+                        let next = shards
+                            .iter()
+                            .filter_map(ShardRt::next_time)
+                            .fold(Ps::MAX, Ps::min);
+                        next_times[wi].store(
+                            if next == Ps::MAX { IDLE } else { next.as_ps() },
+                            Ordering::Release,
+                        );
+                        barrier.wait(); // next-times published
+                    }
+                });
+            }
+
+            // Coordinator.
+            loop {
+                let stop = match t {
+                    None => true,
+                    Some(at) => at > horizon,
+                };
+                if stop || panicked.lock().unwrap().is_some() {
+                    done.store(true, Ordering::Release);
+                    barrier.wait();
+                    break;
+                }
+                let w_end = t.expect("checked above").saturating_add(lookahead);
+                w_end_ps.store(w_end.as_ps(), Ordering::Release);
+                windows += 1;
+                barrier.wait(); // window published
+                barrier.wait(); // all cross events posted
+                barrier.wait(); // next-times published
+                let min = next_times
+                    .iter()
+                    .map(|a| a.load(Ordering::Acquire))
+                    .min()
+                    .unwrap_or(IDLE);
+                t = (min != IDLE).then(|| Ps::ps(min));
+            }
+        });
+        self.windows = windows;
+
+        if let Some(msg) = panicked.lock().unwrap().take() {
+            panic!("shard worker panicked: {msg}");
+        }
+        match t {
+            None => self.drained_result(base),
+            Some(_) => RunResult {
+                end_time: horizon,
+                events: self.total_events() - base,
+                drained: false,
+            },
+        }
+    }
+}
+
+/// Single-calendar oracle for [`ShardedSim`]: processes the *same* shard
+/// models in strict global key order on one heap, with no windows at all.
+/// Because keys are assigned identically, a correct `ShardedSim` run matches
+/// this executor bit-for-bit — the randomized oracle test relies on it.
+pub struct ReferenceSim<M: ShardModel> {
+    models: Vec<M>,
+    seqs: Vec<u64>,
+    heap: BinaryHeap<Reverse<Entry<(u32, M::Ev)>>>,
+    seed_seq: u64,
+    events: u64,
+    last: Ps,
+}
+
+impl<M: ShardModel> ReferenceSim<M> {
+    pub fn new(models: Vec<M>) -> Self {
+        let seqs = vec![0; models.len()];
+        ReferenceSim {
+            models,
+            seqs,
+            heap: BinaryHeap::new(),
+            seed_seq: 0,
+            events: 0,
+            last: Ps::ZERO,
+        }
+    }
+
+    /// Seed an initial event (key scheme identical to [`ShardedSim::seed`]).
+    pub fn seed(&mut self, shard: u32, at: Ps, ev: M::Ev) {
+        let key = EventKey { at, src: SEED_SRC, seq: self.seed_seq };
+        self.seed_seq += 1;
+        self.heap.push(Reverse(Entry { key, payload: (shard, ev) }));
+    }
+
+    pub fn model(&self, shard: u32) -> &M {
+        &self.models[shard as usize]
+    }
+
+    pub fn models(&self) -> impl Iterator<Item = &M> {
+        self.models.iter()
+    }
+
+    pub fn pending(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn run(&mut self, horizon: Ps) -> RunResult {
+        let base = self.events;
+        loop {
+            let Some(at) = self.heap.peek().map(|e| e.0.key.at) else {
+                return RunResult {
+                    end_time: self.last,
+                    events: self.events - base,
+                    drained: true,
+                };
+            };
+            if at > horizon {
+                return RunResult {
+                    end_time: horizon,
+                    events: self.events - base,
+                    drained: false,
+                };
+            }
+            let Reverse(Entry { key, payload: (dest, ev) }) =
+                self.heap.pop().expect("peeked entry");
+            let d = dest as usize;
+            // w_end = ZERO disables the window check: the oracle has no
+            // windows, so every cross-shard latency is admissible here.
+            let mut emit = Emit::new(dest, key.at, Ps::ZERO, self.seqs[d]);
+            self.models[d].handle(key.at, ev, &mut emit);
+            self.seqs[d] = emit.seq;
+            self.events += 1;
+            self.last = key.at;
+            for (k, e) in emit.local {
+                self.heap.push(Reverse(Entry { key: k, payload: (dest, e) }));
+            }
+            for (d2, k, e) in emit.cross {
+                self.heap.push(Reverse(Entry { key: k, payload: (d2, e) }));
+            }
+        }
+    }
+}
+
+/// Window-partitioned driver for an ordinary [`Model`] on the global
+/// calendar. Dispatch order is exactly [`Engine::run`]'s `(time, seq)`
+/// order — windows only group the timeline — so any model produces
+/// bit-identical results under this engine at any `threads` setting. The
+/// window count it records measures how many synchronization rounds a
+/// sharded execution of the same run would need at this lookahead.
+///
+/// [`Engine::run`]: crate::sim::engine::Engine::run
+pub struct WindowedEngine {
+    lookahead: Ps,
+    windows: u64,
+}
+
+impl WindowedEngine {
+    pub fn new(lookahead: Ps) -> Self {
+        assert!(lookahead > Ps::ZERO, "lookahead must be positive");
+        WindowedEngine { lookahead, windows: 0 }
+    }
+
+    /// Windows advanced by the most recent [`WindowedEngine::run`].
+    pub fn windows(&self) -> u64 {
+        self.windows
+    }
+
+    /// Drop-in replacement for [`Engine::run`] with identical semantics
+    /// (horizon resumability, stop-mid-batch, same-time FIFO batches).
+    ///
+    /// [`Engine::run`]: crate::sim::engine::Engine::run
+    pub fn run<M: Model>(
+        &mut self,
+        model: &mut M,
+        sched: &mut Scheduler<M::Ev>,
+        horizon: Ps,
+    ) -> RunResult {
+        self.windows = 0;
+        let mut events: u64 = 0;
+        let mut w_end: Option<Ps> = None;
+        loop {
+            if sched.is_stopped() {
+                return RunResult { end_time: sched.now(), events, drained: false };
+            }
+            let Some(at) = sched.peek_next_time() else {
+                return RunResult { end_time: sched.now(), events, drained: true };
+            };
+            if at > horizon {
+                sched.set_now(horizon);
+                return RunResult { end_time: horizon, events, drained: false };
+            }
+            if w_end.map_or(true, |we| at >= we) {
+                w_end = Some(at.saturating_add(self.lookahead));
+                self.windows += 1;
+            }
+            sched.set_now(at);
+            while let Some(ev) = sched.pop_at(at) {
+                events += 1;
+                model.handle(sched, ev);
+                if sched.is_stopped() {
+                    return RunResult { end_time: sched.now(), events, drained: false };
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::Engine;
+
+    /// Shard-local churn with a periodic cross-shard credit: each Tick(n)
+    /// schedules Tick(n-1) locally and, every 4th tick, credits the next
+    /// shard one lookahead later (the minimal legal cross latency).
+    #[derive(Debug, Clone, PartialEq, Eq)]
+    struct Churn {
+        shards: u32,
+        lookahead: Ps,
+        fired: Vec<(Ps, u32)>,
+        credits: u32,
+    }
+    #[derive(Debug, Clone, Copy)]
+    enum CEv {
+        Tick(u32),
+        Credit,
+    }
+    impl ShardModel for Churn {
+        type Ev = CEv;
+        fn handle(&mut self, now: Ps, ev: CEv, out: &mut Emit<CEv>) {
+            match ev {
+                CEv::Tick(n) => {
+                    self.fired.push((now, n));
+                    if n > 0 {
+                        out.local_after(Ps::ns(10), CEv::Tick(n - 1));
+                        if n % 4 == 0 {
+                            let dest = (out.shard() + 1) % self.shards;
+                            out.send_after(dest, self.lookahead, CEv::Credit);
+                        }
+                    }
+                }
+                CEv::Credit => self.credits += 1,
+            }
+        }
+    }
+
+    fn churn_models(shards: u32, lookahead: Ps) -> Vec<Churn> {
+        (0..shards)
+            .map(|_| Churn { shards, lookahead, fired: vec![], credits: 0 })
+            .collect()
+    }
+
+    fn seeded(shards: u32, lookahead: Ps) -> ShardedSim<Churn> {
+        let mut sim = ShardedSim::new(churn_models(shards, lookahead), lookahead);
+        for s in 0..shards {
+            sim.seed(s, Ps::ns(s as i64), CEv::Tick(20 + s));
+        }
+        sim
+    }
+
+    #[test]
+    fn serial_matches_reference() {
+        let la = Ps::ns(25);
+        let mut sharded = seeded(4, la);
+        let mut oracle = ReferenceSim::new(churn_models(4, la));
+        for s in 0..4 {
+            oracle.seed(s, Ps::ns(s as i64), CEv::Tick(20 + s));
+        }
+        let r1 = sharded.run(Ps::ms(1), 1);
+        let r2 = oracle.run(Ps::ms(1));
+        assert_eq!(r1, r2);
+        assert!(r1.drained);
+        for s in 0..4 {
+            assert_eq!(sharded.model(s), oracle.model(s), "shard {s} state diverged");
+        }
+        assert!(sharded.windows() > 1, "multi-window run expected");
+    }
+
+    #[test]
+    fn parallel_matches_serial_bit_for_bit() {
+        let la = Ps::ns(25);
+        let mut serial = seeded(8, la);
+        let r_serial = serial.run(Ps::ms(1), 1);
+        for threads in [2, 3, 4, 8] {
+            let mut par = seeded(8, la);
+            let r_par = par.run(Ps::ms(1), threads);
+            assert_eq!(r_serial, r_par, "threads={threads}");
+            for s in 0..8 {
+                assert_eq!(serial.model(s), par.model(s), "threads={threads} shard {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn horizon_cuts_and_resumes() {
+        let la = Ps::ns(25);
+        for threads in [1, 2] {
+            let mut sim = seeded(4, la);
+            let r1 = sim.run(Ps::ns(50), threads);
+            assert!(!r1.drained, "threads={threads}");
+            assert_eq!(r1.end_time, Ps::ns(50));
+            assert!(sim.pending() > 0, "beyond-horizon events must stay queued");
+            let r2 = sim.run(Ps::ms(1), threads);
+            assert!(r2.drained);
+            // The two-leg run dispatches exactly what one long run does.
+            let mut whole = seeded(4, la);
+            let rw = whole.run(Ps::ms(1), threads);
+            assert_eq!(r1.events + r2.events, rw.events);
+            assert_eq!(r2.end_time, rw.end_time);
+            for s in 0..4 {
+                assert_eq!(sim.model(s), whole.model(s));
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "lookahead violation")]
+    fn cross_send_inside_window_panics() {
+        struct Bad;
+        impl ShardModel for Bad {
+            type Ev = ();
+            fn handle(&mut self, _now: Ps, _ev: (), out: &mut Emit<()>) {
+                // Lookahead is 100ns but the send lands 1ns out: illegal.
+                out.send_after(1, Ps::ns(1), ());
+            }
+        }
+        let mut sim = ShardedSim::new(vec![Bad, Bad], Ps::ns(100));
+        sim.seed(0, Ps::ZERO, ());
+        sim.run(Ps::ms(1), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "shard worker panicked")]
+    fn parallel_worker_panic_propagates_without_hanging() {
+        struct Bad;
+        impl ShardModel for Bad {
+            type Ev = ();
+            fn handle(&mut self, _now: Ps, _ev: (), out: &mut Emit<()>) {
+                out.send_after(1, Ps::ns(1), ());
+            }
+        }
+        let mut sim = ShardedSim::new(vec![Bad, Bad], Ps::ns(100));
+        sim.seed(0, Ps::ZERO, ());
+        sim.run(Ps::ms(1), 2);
+    }
+
+    #[test]
+    fn fully_local_model_runs_in_one_window_per_burst() {
+        // No cross events and a huge lookahead: everything fits one window.
+        #[derive(Debug, PartialEq)]
+        struct Local {
+            sum: u64,
+        }
+        impl ShardModel for Local {
+            type Ev = u32;
+            fn handle(&mut self, _now: Ps, ev: u32, out: &mut Emit<u32>) {
+                self.sum += ev as u64;
+                if ev > 0 {
+                    out.local_after(Ps::ns(5), ev - 1);
+                }
+            }
+        }
+        let mut sim = ShardedSim::new(
+            vec![Local { sum: 0 }, Local { sum: 0 }],
+            Ps::ms(10),
+        );
+        sim.seed(0, Ps::ZERO, 100u32);
+        sim.seed(1, Ps::ZERO, 100u32);
+        let r = sim.run(Ps::ms(1), 2);
+        assert!(r.drained);
+        assert_eq!(r.events, 202);
+        assert_eq!(sim.windows(), 1);
+        assert_eq!(sim.model(0).sum, 5050);
+    }
+
+    // --- WindowedEngine: bit-identity with Engine on an ordinary Model ---
+
+    struct Recorder {
+        order: Vec<(Ps, u32)>,
+    }
+    impl Model for Recorder {
+        type Ev = u32;
+        fn handle(&mut self, s: &mut Scheduler<u32>, ev: u32) {
+            self.order.push((s.now(), ev));
+            if ev % 3 == 0 && ev > 0 {
+                s.now_ev(ev + 1000); // same-timestamp follow-up
+            }
+            if ev < 40 {
+                s.after(Ps::ns((ev as i64 % 7) * 3), ev + 1);
+            }
+        }
+    }
+
+    fn recorder_seeds(s: &mut Scheduler<u32>) {
+        for i in 0..6 {
+            s.at(Ps::ns(i as i64 % 2), i); // duplicate timestamps on purpose
+        }
+    }
+
+    #[test]
+    fn windowed_engine_is_bit_identical_to_engine() {
+        let mut m1 = Recorder { order: vec![] };
+        let mut s1 = Scheduler::new();
+        recorder_seeds(&mut s1);
+        let r1 = Engine::run(&mut m1, &mut s1, Ps::ms(1));
+
+        for la in [Ps::ps(1), Ps::ns(2), Ps::ns(50), Ps::ms(100)] {
+            let mut m2 = Recorder { order: vec![] };
+            let mut s2 = Scheduler::new();
+            recorder_seeds(&mut s2);
+            let mut we = WindowedEngine::new(la);
+            let r2 = we.run(&mut m2, &mut s2, Ps::ms(1));
+            assert_eq!(r1, r2, "lookahead {la}");
+            assert_eq!(m1.order, m2.order, "dispatch order diverged at {la}");
+            assert!(we.windows() >= 1);
+        }
+    }
+
+    #[test]
+    fn windowed_engine_honors_horizon_and_resume() {
+        let mut m1 = Recorder { order: vec![] };
+        let mut s1 = Scheduler::new();
+        recorder_seeds(&mut s1);
+        let a1 = Engine::run(&mut m1, &mut s1, Ps::ns(20));
+        let a2 = Engine::run(&mut m1, &mut s1, Ps::ms(1));
+
+        let mut m2 = Recorder { order: vec![] };
+        let mut s2 = Scheduler::new();
+        recorder_seeds(&mut s2);
+        let mut we = WindowedEngine::new(Ps::ns(7));
+        let b1 = we.run(&mut m2, &mut s2, Ps::ns(20));
+        let b2 = we.run(&mut m2, &mut s2, Ps::ms(1));
+        assert_eq!((a1, a2), (b1, b2));
+        assert_eq!(m1.order, m2.order);
+    }
+
+    #[test]
+    fn windowed_engine_stop_mid_batch() {
+        struct StopAt2 {
+            seen: Vec<u32>,
+        }
+        impl Model for StopAt2 {
+            type Ev = u32;
+            fn handle(&mut self, s: &mut Scheduler<u32>, ev: u32) {
+                self.seen.push(ev);
+                if ev == 2 {
+                    s.stop();
+                }
+            }
+        }
+        let mut m = StopAt2 { seen: vec![] };
+        let mut s = Scheduler::new();
+        for i in 0..10 {
+            s.at(Ps::ns(5), i);
+        }
+        let mut we = WindowedEngine::new(Ps::ns(1));
+        let r = we.run(&mut m, &mut s, Ps::ms(1));
+        assert_eq!(r.events, 3);
+        assert_eq!(m.seen, vec![0, 1, 2]);
+        assert_eq!(s.pending(), 7);
+    }
+
+    #[test]
+    fn window_count_scales_with_lookahead() {
+        // Ticks every 10ns for 400ns: lookahead 25ns ≈ 3 ticks/window,
+        // lookahead 1ms = 1 window.
+        let mk = || {
+            let mut m = Recorder { order: vec![] };
+            let mut s = Scheduler::new();
+            s.at(Ps::ZERO, 0u32);
+            (m, s)
+        };
+        let (mut m1, mut s1) = mk();
+        let mut narrow = WindowedEngine::new(Ps::ns(25));
+        narrow.run(&mut m1, &mut s1, Ps::ms(1));
+        let (mut m2, mut s2) = mk();
+        let mut wide = WindowedEngine::new(Ps::ms(100));
+        wide.run(&mut m2, &mut s2, Ps::ms(1));
+        assert!(narrow.windows() > wide.windows());
+        assert_eq!(wide.windows(), 1);
+    }
+}

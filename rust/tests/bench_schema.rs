@@ -1,15 +1,17 @@
 //! The BENCH_engine.json pipeline: the committed artifact at the repo root
 //! and every freshly generated perf log must conform to the
-//! `ddrnand-bench-v1` schema, so drift between the writer
+//! `ddrnand-bench-v2` schema, so drift between the writer
 //! (`src/bench.rs::PerfLog`), the CI bench job and downstream consumers
 //! fails loudly instead of rotting.
 //!
-//! CI runs this suite twice: once in the normal test step (validates the
-//! committed file), and once right after `cargo bench --bench bench_engine`
-//! with `BENCH_REQUIRE_RESULTS=1`, which additionally demands a non-empty
-//! results array — i.e. the bench actually recorded real numbers.
+//! CI runs this suite three ways: in the normal test step (validates the
+//! committed file); right after `cargo bench --bench bench_engine` with
+//! `BENCH_REQUIRE_RESULTS=1`, which additionally demands a non-empty
+//! results array; and with `BENCH_BASELINE=<path>` pointing at the
+//! previously committed artifact, which arms the blocking regression gate
+//! against the freshly measured log.
 
-use ddrnand::bench::{validate_bench_json, PerfLog};
+use ddrnand::bench::{parse_bench_metrics, regression_gate, validate_bench_json, PerfLog};
 
 fn repo_root_log() -> std::path::PathBuf {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_engine.json")
@@ -29,19 +31,36 @@ fn committed_bench_log_is_schema_valid() {
             "{}: bench ran but recorded no results — writer/pipeline drift",
             path.display()
         );
+        // The v2 trajectory must include the multi-threaded sharded runs,
+        // not just serial measurements re-tagged.
+        let metrics = parse_bench_metrics(&text).unwrap();
+        assert!(
+            metrics.iter().any(|m| m.threads >= 2),
+            "{}: no multi-threaded record in a measured log",
+            path.display()
+        );
     }
 }
 
 /// The writer and the validator agree: whatever `PerfLog` emits validates,
-/// including escapes and non-finite values.
+/// including escapes, non-finite values, and engine tags.
 #[test]
 fn generated_log_round_trips_through_validator() {
     let mut log = PerfLog::new("bench_engine");
     log.push("event_queue_100k/calendar", "ms_per_iter_mean", 1.25, 20);
     log.push("speedup \"quoted\"\n", "ratio", 1.7, 1);
     log.push("nan_case", "ms", f64::NAN, 3);
+    log.push_tagged("sharded_steady_churn/4_threads", "events_per_sec", 2.1e6, 1, 4, 0);
     let summary = validate_bench_json(&log.to_json()).expect("writer output must validate");
-    assert_eq!(summary.results, 3);
+    assert_eq!(summary.results, 4);
+    // And the metric extractor sees the same records, tags included.
+    let metrics = parse_bench_metrics(&log.to_json()).unwrap();
+    assert_eq!(metrics.len(), 4);
+    assert_eq!(metrics[0].value, Some(1.25));
+    assert_eq!(metrics[0].threads, 1);
+    assert_eq!(metrics[2].value, None); // NaN serialized as null
+    assert_eq!(metrics[3].threads, 4);
+    assert_eq!(metrics[3].window_ps, 0);
     // The empty log (a fresh checkout before any bench run) validates too.
     let empty = PerfLog::new("bench_engine");
     assert_eq!(validate_bench_json(&empty.to_json()).unwrap().results, 0);
@@ -51,47 +70,190 @@ fn generated_log_round_trips_through_validator() {
 fn validator_rejects_drifted_logs() {
     // Missing schema key.
     assert!(validate_bench_json(r#"{"bench": "x", "results": []}"#).is_err());
-    // Wrong schema version.
-    assert!(validate_bench_json(
-        r#"{"schema": "ddrnand-bench-v2", "bench": "x", "results": []}"#
-    )
-    .is_err());
     // results not an array.
     assert!(validate_bench_json(
-        r#"{"schema": "ddrnand-bench-v1", "bench": "x", "results": {}}"#
+        r#"{"schema": "ddrnand-bench-v2", "bench": "x", "results": {}}"#
     )
     .is_err());
     // Record missing a required field.
     assert!(validate_bench_json(
-        r#"{"schema": "ddrnand-bench-v1", "bench": "x",
-            "results": [{"name": "a", "metric": "ms", "value": 1}]}"#
+        r#"{"schema": "ddrnand-bench-v2", "bench": "x",
+            "results": [{"name": "a", "metric": "ms", "value": 1,
+                         "threads": 1, "window_ps": 0}]}"#
     )
     .is_err());
     // n must be a positive integer.
     assert!(validate_bench_json(
-        r#"{"schema": "ddrnand-bench-v1", "bench": "x",
-            "results": [{"name": "a", "metric": "ms", "value": 1, "n": 0}]}"#
+        r#"{"schema": "ddrnand-bench-v2", "bench": "x",
+            "results": [{"name": "a", "metric": "ms", "value": 1, "n": 0,
+                         "threads": 1, "window_ps": 0}]}"#
     )
     .is_err());
     assert!(validate_bench_json(
-        r#"{"schema": "ddrnand-bench-v1", "bench": "x",
-            "results": [{"name": "a", "metric": "ms", "value": 1, "n": 2.5}]}"#
+        r#"{"schema": "ddrnand-bench-v2", "bench": "x",
+            "results": [{"name": "a", "metric": "ms", "value": 1, "n": 2.5,
+                         "threads": 1, "window_ps": 0}]}"#
     )
     .is_err());
     // value must be numeric or null.
     assert!(validate_bench_json(
-        r#"{"schema": "ddrnand-bench-v1", "bench": "x",
-            "results": [{"name": "a", "metric": "ms", "value": "fast", "n": 1}]}"#
+        r#"{"schema": "ddrnand-bench-v2", "bench": "x",
+            "results": [{"name": "a", "metric": "ms", "value": "fast", "n": 1,
+                         "threads": 1, "window_ps": 0}]}"#
     )
     .is_err());
     // Not JSON at all / trailing garbage.
     assert!(validate_bench_json("schema: yaml").is_err());
-    assert!(validate_bench_json(r#"{"schema": "ddrnand-bench-v1"} extra"#).is_err());
+    assert!(validate_bench_json(r#"{"schema": "ddrnand-bench-v2"} extra"#).is_err());
     // Unknown top-level keys are tolerated (created_unix, note).
     assert!(validate_bench_json(
-        r#"{"schema": "ddrnand-bench-v1", "bench": "x", "created_unix": 0,
+        r#"{"schema": "ddrnand-bench-v2", "bench": "x", "created_unix": 0,
             "note": "free text", "results": [
-              {"name": "a", "metric": "ms", "value": null, "n": 1}]}"#
+              {"name": "a", "metric": "ms", "value": null, "n": 1,
+               "threads": 1, "window_ps": 0}]}"#
     )
     .is_ok());
+}
+
+/// The v2 schema pin: logs written before the parallel engine — the v1
+/// schema id, or records lacking the engine tags — are schema drift, not
+/// grandfathered entries. A perf number without its thread count cannot be
+/// placed on the parallel-engine trajectory.
+#[test]
+fn v2_schema_pins_engine_tags() {
+    // The old schema id is rejected outright.
+    let err = validate_bench_json(
+        r#"{"schema": "ddrnand-bench-v1", "bench": "x", "results": []}"#,
+    )
+    .unwrap_err();
+    assert!(err.contains("bad schema value"), "{err}");
+    // A v2 log whose record omits `threads` is rejected...
+    let err = validate_bench_json(
+        r#"{"schema": "ddrnand-bench-v2", "bench": "x",
+            "results": [{"name": "a", "metric": "ms", "value": 1, "n": 1,
+                         "window_ps": 0}]}"#,
+    )
+    .unwrap_err();
+    assert!(err.contains("threads"), "{err}");
+    // ...as is one omitting `window_ps`...
+    let err = validate_bench_json(
+        r#"{"schema": "ddrnand-bench-v2", "bench": "x",
+            "results": [{"name": "a", "metric": "ms", "value": 1, "n": 1,
+                         "threads": 2}]}"#,
+    )
+    .unwrap_err();
+    assert!(err.contains("window_ps"), "{err}");
+    // ...or carrying out-of-domain tags.
+    assert!(validate_bench_json(
+        r#"{"schema": "ddrnand-bench-v2", "bench": "x",
+            "results": [{"name": "a", "metric": "ms", "value": 1, "n": 1,
+                         "threads": 0, "window_ps": 0}]}"#
+    )
+    .is_err());
+    assert!(validate_bench_json(
+        r#"{"schema": "ddrnand-bench-v2", "bench": "x",
+            "results": [{"name": "a", "metric": "ms", "value": 1, "n": 1,
+                         "threads": 2, "window_ps": -1}]}"#
+    )
+    .is_err());
+    assert!(validate_bench_json(
+        r#"{"schema": "ddrnand-bench-v2", "bench": "x",
+            "results": [{"name": "a", "metric": "ms", "value": 1, "n": 1,
+                         "threads": 2.5, "window_ps": 0}]}"#
+    )
+    .is_err());
+}
+
+fn log_with(records: &[(&str, &str, f64, u16, u64)]) -> String {
+    let mut log = PerfLog::new("bench_engine");
+    for &(name, metric, value, threads, window_ps) in records {
+        log.push_tagged(name, metric, value, 1, threads, window_ps);
+    }
+    log.to_json()
+}
+
+/// The regression-gate semantics CI relies on: throughput and speedup
+/// records block on >tolerance drops; wall-clock records stay advisory;
+/// the bootstrap (empty) baseline gates nothing.
+#[test]
+fn regression_gate_blocks_throughput_drops() {
+    let baseline = log_with(&[
+        ("sharded_steady_churn/4_threads", "events_per_sec", 2.0e6, 4, 0),
+        ("sharded_steady_churn/4_threads/speedup_vs_1thread", "ratio", 2.0, 4, 0),
+        ("event_queue_100k/calendar", "ms_per_iter_mean", 1.0, 1, 0),
+    ]);
+    // Identical numbers: clean.
+    assert_eq!(regression_gate(&baseline, &baseline, 0.15).unwrap(), Vec::<String>::new());
+    // A 10% dip is inside the 15% tolerance.
+    let dip = log_with(&[
+        ("sharded_steady_churn/4_threads", "events_per_sec", 1.8e6, 4, 0),
+        ("sharded_steady_churn/4_threads/speedup_vs_1thread", "ratio", 1.9, 4, 0),
+        ("event_queue_100k/calendar", "ms_per_iter_mean", 1.0, 1, 0),
+    ]);
+    assert!(regression_gate(&baseline, &dip, 0.15).unwrap().is_empty());
+    // A 25% throughput drop blocks.
+    let drop = log_with(&[
+        ("sharded_steady_churn/4_threads", "events_per_sec", 1.5e6, 4, 0),
+        ("sharded_steady_churn/4_threads/speedup_vs_1thread", "ratio", 2.0, 4, 0),
+        ("event_queue_100k/calendar", "ms_per_iter_mean", 1.0, 1, 0),
+    ]);
+    let failures = regression_gate(&baseline, &drop, 0.15).unwrap();
+    assert_eq!(failures.len(), 1, "{failures:?}");
+    assert!(failures[0].contains("sharded_steady_churn/4_threads"), "{failures:?}");
+    // A speedup collapse blocks too.
+    let slow = log_with(&[
+        ("sharded_steady_churn/4_threads", "events_per_sec", 2.0e6, 4, 0),
+        ("sharded_steady_churn/4_threads/speedup_vs_1thread", "ratio", 1.0, 4, 0),
+        ("event_queue_100k/calendar", "ms_per_iter_mean", 1.0, 1, 0),
+    ]);
+    assert_eq!(regression_gate(&baseline, &slow, 0.15).unwrap().len(), 1);
+    // Wall-clock regressions are advisory: a slower ms_per_iter alone passes.
+    let lagging = log_with(&[
+        ("sharded_steady_churn/4_threads", "events_per_sec", 2.0e6, 4, 0),
+        ("sharded_steady_churn/4_threads/speedup_vs_1thread", "ratio", 2.0, 4, 0),
+        ("event_queue_100k/calendar", "ms_per_iter_mean", 40.0, 1, 0),
+    ]);
+    assert!(regression_gate(&baseline, &lagging, 0.15).unwrap().is_empty());
+    // A gated record vanishing from the new log blocks (renames must
+    // re-baseline explicitly, not silently drop coverage).
+    let missing = log_with(&[
+        ("sharded_steady_churn/4_threads/speedup_vs_1thread", "ratio", 2.0, 4, 0),
+    ]);
+    assert_eq!(regression_gate(&baseline, &missing, 0.15).unwrap().len(), 1);
+    // Records match on their engine tags: the same name at different
+    // thread counts is a different measurement, and its absence blocks.
+    let retagged = log_with(&[
+        ("sharded_steady_churn/4_threads", "events_per_sec", 2.0e6, 2, 0),
+        ("sharded_steady_churn/4_threads/speedup_vs_1thread", "ratio", 2.0, 4, 0),
+    ]);
+    assert_eq!(regression_gate(&baseline, &retagged, 0.15).unwrap().len(), 1);
+    // The bootstrap baseline (no results yet) gates nothing.
+    let empty = PerfLog::new("bench_engine").to_json();
+    assert!(regression_gate(&empty, &drop, 0.15).unwrap().is_empty());
+    // Garbage on either side is an error, not a pass.
+    assert!(regression_gate("nope", &baseline, 0.15).is_err());
+    assert!(regression_gate(&baseline, "nope", 0.15).is_err());
+}
+
+/// The CI hook: with `BENCH_BASELINE=<path>` set, compare the committed
+/// baseline against the freshly benched repo-root log and fail the suite
+/// on any blocking regression. Skips silently when the env var is unset
+/// (normal local runs) or when the baseline is the bootstrap artifact.
+#[test]
+fn bench_regression_gate_vs_baseline() {
+    let Some(baseline_path) = std::env::var_os("BENCH_BASELINE") else {
+        return;
+    };
+    let baseline = std::fs::read_to_string(&baseline_path)
+        .unwrap_or_else(|e| panic!("{}: {e}", std::path::Path::new(&baseline_path).display()));
+    let current_path = repo_root_log();
+    let current = std::fs::read_to_string(&current_path)
+        .unwrap_or_else(|e| panic!("{}: {e}", current_path.display()));
+    let failures = regression_gate(&baseline, &current, 0.15)
+        .unwrap_or_else(|e| panic!("regression gate could not run: {e}"));
+    assert!(
+        failures.is_empty(),
+        "perf regression vs committed baseline:\n  {}",
+        failures.join("\n  ")
+    );
 }

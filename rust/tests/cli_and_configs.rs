@@ -146,6 +146,62 @@ fn cli_sweep_load_rejects_bad_flags() {
     assert_eq!(cli::run(&argv("sweep-load --mode scan")), 1);
 }
 
+/// `--threads N` selects the per-sim windowed engine on the sweep
+/// subcommands; `--jobs` sizes the sweep-level pool. Both must be
+/// documented, accepted, and validated.
+#[test]
+fn cli_threads_flag_smoke() {
+    assert_eq!(cli::run(&argv("sweep-ways --requests 12 --threads 2 --csv")), 0);
+    assert_eq!(
+        cli::run(&argv("sweep-load --requests 12 --points 2 --ways 2 --threads 2 --csv")),
+        0
+    );
+    assert_eq!(
+        cli::run(&argv(
+            "sweep-steady --requests 20 --ways 2 --op 0.15 --offered-mbps 0 \
+             --threads 2 --jobs 2 --csv"
+        )),
+        0
+    );
+}
+
+#[test]
+fn cli_threads_flag_rejects_bad_values() {
+    assert_eq!(cli::run(&argv("sweep-ways --threads 0")), 1);
+    assert_eq!(cli::run(&argv("sweep-ways --threads 300")), 1);
+    assert_eq!(cli::run(&argv("sweep-qos --threads 0")), 1);
+    // Not a number at all: parse error from the flag reader.
+    assert_eq!(cli::run(&argv("sweep-ways --threads many")), 1);
+}
+
+#[test]
+fn cli_usage_documents_engine_flags() {
+    let usage = cli::usage();
+    assert!(usage.contains("--threads N"), "usage lost the --threads flag");
+    assert!(usage.contains("--jobs N"), "usage lost the --jobs flag");
+    assert!(
+        usage.contains("engine threads per simulation"),
+        "usage must distinguish engine threads from sweep jobs"
+    );
+}
+
+#[test]
+fn cli_simulate_threads_flag_overrides_config() {
+    let dir = std::env::temp_dir().join("ddrnand_cli_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("threads_override.toml");
+    std::fs::write(
+        &cfg,
+        "iface = \"proposed\"\nways = 2\nblocks_per_chip = 64\n\n[engine]\nthreads = 1\n",
+    )
+    .unwrap();
+    let cmd = format!("simulate --config {} --requests 5 --threads 4", cfg.display());
+    assert_eq!(cli::run(&argv(&cmd)), 0);
+    // Without the flag, the TOML [engine] section stands untouched.
+    let cmd = format!("simulate --config {} --requests 5", cfg.display());
+    assert_eq!(cli::run(&argv(&cmd)), 0);
+}
+
 #[test]
 fn cli_unknown_subcommand_fails() {
     assert_eq!(cli::run(&argv("frobnicate")), 2);

@@ -371,11 +371,11 @@ fn prop_weighted_qos_is_starvation_free() {
                     }
                     let window = w.reorder_window();
                     let limit = if class == 3 {
-                        (window + 1).min(w.queue.len())
+                        (window + 1).min(w.queue_len())
                     } else {
                         window
                     };
-                    w.queue.iter().take(limit).any(|j| j.class == class)
+                    w.first_of_class_in(class, limit).is_some()
                 })
             };
             let total: usize = queues.iter().map(Vec::len).sum();

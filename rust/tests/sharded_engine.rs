@@ -1,0 +1,364 @@
+//! The parallel-engine contracts, end to end:
+//!
+//! 1. **Bit-identity on the full SSD sim** — every shipped scenario class
+//!    (fresh write, steady-state GC, tiered SLC/MLC, multi-tenant QoS)
+//!    produces a bit-identical `SimReport` whether it runs on the classic
+//!    serial engine, the windowed engine with an explicit window, or the
+//!    windowed engine at 2/4 threads. Parallelism must never be a modeling
+//!    decision.
+//! 2. **Randomized oracle** — `ShardedSim` (serial and parallel) against
+//!    `ReferenceSim`, a single global heap in strict key order, over
+//!    randomized churn models.
+//! 3. **Window-FIFO property** — conservative window boundaries never
+//!    reorder events, in particular same-timestamp FIFO batches: the
+//!    windowed engine's dispatch sequence equals the serial engine's for
+//!    random workloads at random lookaheads.
+
+use ddrnand::config::SsdConfig;
+use ddrnand::coordinator::campaign::{Campaign, SimReport};
+use ddrnand::coordinator::experiments::{qos_point_config, QosSweepSpec};
+use ddrnand::host::trace::RequestKind;
+use ddrnand::iface::timing::InterfaceKind;
+use ddrnand::nand::datasheet::CellType;
+use ddrnand::proptest::{check, shrink_vec};
+use ddrnand::sim::{
+    Emit, Engine, Model, ReferenceSim, Scheduler, ShardModel, ShardedSim, WindowedEngine,
+};
+use ddrnand::util::prng::Prng;
+use ddrnand::util::time::Ps;
+
+/// Everything deterministic in a [`SimReport`] (wall clock excluded).
+/// Floats compare by bit pattern so NaN percentiles (no-request streams)
+/// still match.
+fn fingerprint(r: &SimReport) -> Vec<u64> {
+    let mut f = vec![
+        r.events,
+        r.requests,
+        r.bytes,
+        r.pages_programmed,
+        r.pages_read,
+        r.blocks_erased,
+        r.sim_time.as_ps() as u64,
+        r.bandwidth_mbps.to_bits(),
+        r.energy_nj_per_byte.to_bits(),
+        r.latency_mean_us.to_bits(),
+        r.latency_p50_us.to_bits(),
+        r.latency_p99_us.to_bits(),
+        r.waf.to_bits(),
+        r.fairness.to_bits(),
+    ];
+    for s in &r.streams {
+        f.push(s.requests);
+        f.push(s.bandwidth_mbps.to_bits());
+        f.push(s.latency_p99_us.to_bits());
+    }
+    f
+}
+
+/// Run `cfg` at the serial engine, then at an explicit 1-thread window and
+/// at 2/4 threads, asserting bit-identical reports throughout.
+fn assert_thread_invariant(label: &str, cfg: SsdConfig, mode: RequestKind, requests: usize) {
+    assert!(cfg.validate().is_empty(), "{label}: config invalid: {:?}", cfg.validate());
+    let baseline = fingerprint(&Campaign::new(cfg.clone(), mode, requests).run());
+    for threads in [1u16, 2, 4] {
+        let mut c = cfg.clone();
+        c.engine.threads = threads;
+        // threads = 1 exercises the explicit window-override path; the
+        // multi-thread runs derive the window from the bus timing.
+        c.engine.window_ps = if threads == 1 { 1_000_000 } else { 0 };
+        let got = fingerprint(&Campaign::new(c, mode, requests).run());
+        assert_eq!(
+            got, baseline,
+            "{label}: windowed engine at {threads} threads diverged from the serial engine"
+        );
+    }
+}
+
+#[test]
+fn fresh_write_is_thread_invariant() {
+    let cfg = SsdConfig {
+        iface: InterfaceKind::Proposed,
+        ways: 4,
+        blocks_per_chip: 512,
+        ..SsdConfig::default()
+    };
+    assert_thread_invariant("fresh write", cfg, RequestKind::Write, 120);
+}
+
+#[test]
+fn fresh_read_is_thread_invariant() {
+    let cfg = SsdConfig {
+        iface: InterfaceKind::Conv,
+        ways: 2,
+        blocks_per_chip: 512,
+        ..SsdConfig::default()
+    };
+    assert_thread_invariant("fresh read", cfg, RequestKind::Read, 100);
+}
+
+#[test]
+fn steady_state_gc_is_thread_invariant() {
+    let mut cfg = SsdConfig {
+        iface: InterfaceKind::Proposed,
+        ways: 4,
+        blocks_per_chip: 64,
+        ..SsdConfig::default()
+    };
+    cfg.steady.enabled = true;
+    cfg.steady.over_provision = 0.15;
+    cfg.steady.wear_level_spread = 16;
+    assert_thread_invariant("steady-state", cfg, RequestKind::Write, 150);
+}
+
+#[test]
+fn tiered_flash_is_thread_invariant() {
+    let mut cfg = SsdConfig {
+        iface: InterfaceKind::Proposed,
+        cell: CellType::Mlc,
+        ways: 4,
+        blocks_per_chip: 64,
+        ..SsdConfig::default()
+    };
+    cfg.tiering.enabled = true;
+    cfg.tiering.slc_fraction = 0.5;
+    assert_thread_invariant("tiered", cfg, RequestKind::Write, 120);
+}
+
+#[test]
+fn multi_tenant_qos_is_thread_invariant() {
+    // The E9 shape: latency-critical reader vs saturating bulk writer over
+    // the multi-queue host path, on the weighted-QoS way scheduler.
+    let spec = QosSweepSpec {
+        requests: 80,
+        ..QosSweepSpec::default()
+    };
+    let cfg = qos_point_config(
+        &spec,
+        InterfaceKind::Proposed,
+        4,
+        ddrnand::controller::sched::SchedKind::WeightedQos,
+    )
+    .expect("qos point config");
+    let baseline = fingerprint(&Campaign::multi_tenant(cfg.clone(), spec.tenants()).run());
+    for threads in [1u16, 2, 4] {
+        let mut c = cfg.clone();
+        c.engine.threads = threads;
+        c.engine.window_ps = if threads == 1 { 1_000_000 } else { 0 };
+        let got = fingerprint(&Campaign::multi_tenant(c, spec.tenants()).run());
+        assert_eq!(
+            got, baseline,
+            "qos multi-tenant: windowed engine at {threads} threads diverged"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Randomized ShardedSim-vs-ReferenceSim oracle.
+// ---------------------------------------------------------------------------
+
+const LOOKAHEAD: Ps = Ps::ns(50);
+
+/// Randomized churn: each event mutates per-shard PRNG state, then spawns a
+/// local follow-up at a random sub-lookahead gap or (sometimes) a
+/// cross-shard message at a random delay >= the lookahead. Because handler
+/// order per shard is deterministic, the PRNG state trajectory — and hence
+/// the whole event cascade — must be identical under every execution.
+struct RandomChurn {
+    shards: u32,
+    rng: Prng,
+    left: u32,
+    handled: u64,
+    acc: u64,
+}
+
+impl ShardModel for RandomChurn {
+    type Ev = u64;
+    fn handle(&mut self, now: Ps, ev: u64, out: &mut Emit<u64>) {
+        self.handled += 1;
+        self.acc = self
+            .acc
+            .rotate_left(9)
+            .wrapping_add(ev ^ now.as_ps() as u64);
+        if self.left == 0 {
+            return;
+        }
+        self.left -= 1;
+        let la = LOOKAHEAD.as_ps() as u64;
+        if self.rng.next_bounded(8) == 0 {
+            let dest = self.rng.next_bounded(self.shards as u64) as u32;
+            let delay = Ps::ps((la + self.rng.next_bounded(la)) as i64);
+            out.send_after(dest, delay, self.acc);
+        } else {
+            // Same-timestamp chains (delay 0) included on purpose.
+            let delay = Ps::ps(self.rng.next_bounded(la) as i64);
+            out.local_after(delay, self.acc);
+        }
+    }
+}
+
+fn churn_models(shards: u32, seed: u64, budget: u32) -> Vec<RandomChurn> {
+    (0..shards)
+        .map(|s| RandomChurn {
+            shards,
+            rng: Prng::new(seed ^ (0x9E37 + s as u64 * 0x1000_0000_0001)),
+            left: budget,
+            handled: 0,
+            acc: s as u64,
+        })
+        .collect()
+}
+
+#[test]
+fn sharded_matches_reference_oracle_across_threads() {
+    for seed in [1u64, 0xBEEF, 0xDD12_7A5D] {
+        let shards = 6u32;
+        let budget = 400u32;
+        // Reference: one global heap in strict (time, src, seq) order.
+        let mut reference = ReferenceSim::new(churn_models(shards, seed, budget));
+        for s in 0..shards {
+            reference.seed(s, Ps::ZERO, s as u64);
+        }
+        let want = reference.run(Ps::MAX);
+        assert!(want.drained);
+        let want_state: Vec<(u64, u64)> = reference.models().map(|m| (m.handled, m.acc)).collect();
+
+        for threads in [1usize, 2, 4] {
+            let mut sim = ShardedSim::new(churn_models(shards, seed, budget), LOOKAHEAD);
+            for s in 0..shards {
+                sim.seed(s, Ps::ZERO, s as u64);
+            }
+            let got = sim.run(Ps::MAX, threads);
+            assert_eq!(
+                (got.end_time, got.events, got.drained),
+                (want.end_time, want.events, want.drained),
+                "seed {seed:#x}, {threads} threads: RunResult diverged from reference"
+            );
+            let got_state: Vec<(u64, u64)> = sim.models().map(|m| (m.handled, m.acc)).collect();
+            assert_eq!(
+                got_state, want_state,
+                "seed {seed:#x}, {threads} threads: model state diverged from reference"
+            );
+        }
+    }
+}
+
+#[test]
+fn sharded_oracle_holds_under_horizon_legs() {
+    // Chopping the run into horizon legs (as the coordinator's request
+    // admission does) must not change where events land either.
+    let seed = 0xFEED_u64;
+    let shards = 4u32;
+    let mut reference = ReferenceSim::new(churn_models(shards, seed, 200));
+    for s in 0..shards {
+        reference.seed(s, Ps::ZERO, s as u64);
+    }
+    let want = reference.run(Ps::MAX);
+    let want_state: Vec<(u64, u64)> = reference.models().map(|m| (m.handled, m.acc)).collect();
+
+    let mut sim = ShardedSim::new(churn_models(shards, seed, 200), LOOKAHEAD);
+    for s in 0..shards {
+        sim.seed(s, Ps::ZERO, s as u64);
+    }
+    let mut events = 0;
+    let mut leg_end = Ps::us(1);
+    let final_res = loop {
+        let r = sim.run(leg_end, 2);
+        events += r.events;
+        if r.drained {
+            break r;
+        }
+        leg_end = leg_end.saturating_add(Ps::us(1));
+    };
+    assert_eq!(final_res.end_time, want.end_time);
+    assert_eq!(events, want.events);
+    let got_state: Vec<(u64, u64)> = sim.models().map(|m| (m.handled, m.acc)).collect();
+    assert_eq!(got_state, want_state);
+}
+
+// ---------------------------------------------------------------------------
+// Window-FIFO property: windows never reorder dispatch.
+// ---------------------------------------------------------------------------
+
+/// Records its dispatch sequence; occasionally chains same-timestamp
+/// follow-ups (`now_ev`) and short-delay events, the patterns a window
+/// boundary could plausibly reorder.
+#[derive(Default)]
+struct Recorder {
+    seen: Vec<(i64, u64)>,
+}
+
+impl Model for Recorder {
+    type Ev = u64;
+    fn handle(&mut self, sched: &mut Scheduler<u64>, ev: u64) {
+        self.seen.push((sched.now().as_ps(), ev));
+        // Deterministic in (ev): chain two same-timestamp children and one
+        // short-delay child for a slice of the id space.
+        if ev % 7 == 0 && ev > 0 {
+            sched.now_ev(ev / 7);
+            sched.now_ev(ev / 7 + 1);
+        }
+        if ev % 11 == 3 {
+            sched.after(Ps::ns((ev % 97 + 1) as i64), ev / 3);
+        }
+    }
+}
+
+#[test]
+fn window_boundaries_never_reorder_fifo_events() {
+    check(
+        "windowed dispatch == serial dispatch",
+        60,
+        0x57A6_11D0,
+        |rng| {
+            let n = 1 + rng.next_bounded(40) as usize;
+            let seeds: Vec<(u64, u64)> = (0..n)
+                // Coarse time buckets force same-timestamp collisions.
+                .map(|_| (rng.next_bounded(12) * 100, rng.next_bounded(500)))
+                .collect();
+            let lookahead_ps = 1 + rng.next_bounded(200_000);
+            (seeds, lookahead_ps)
+        },
+        |(seeds, lookahead_ps)| {
+            let run_serial = |seeds: &[(u64, u64)]| {
+                let mut m = Recorder::default();
+                let mut s = Scheduler::new();
+                for &(t, ev) in seeds {
+                    s.at(Ps::ns(t as i64), ev);
+                }
+                let r = Engine::run(&mut m, &mut s, Ps::MAX);
+                (m.seen, r.events, r.end_time)
+            };
+            let run_windowed = |seeds: &[(u64, u64)], la: u64| {
+                let mut m = Recorder::default();
+                let mut s = Scheduler::new();
+                for &(t, ev) in seeds {
+                    s.at(Ps::ns(t as i64), ev);
+                }
+                let mut engine = WindowedEngine::new(Ps::ps(la as i64));
+                let r = engine.run(&mut m, &mut s, Ps::MAX);
+                (m.seen, r.events, r.end_time)
+            };
+            let want = run_serial(seeds);
+            let got = run_windowed(seeds, *lookahead_ps);
+            if got != want {
+                return Err(format!(
+                    "dispatch diverged at lookahead {lookahead_ps} ps: \
+                     serial {} events, windowed {} events",
+                    want.1, got.1
+                ));
+            }
+            Ok(())
+        },
+        |(seeds, lookahead_ps)| {
+            let mut out: Vec<(Vec<(u64, u64)>, u64)> = shrink_vec(seeds)
+                .into_iter()
+                .map(|s| (s, *lookahead_ps))
+                .collect();
+            if *lookahead_ps > 1 {
+                out.push((seeds.clone(), lookahead_ps / 2));
+                out.push((seeds.clone(), 1));
+            }
+            out
+        },
+    );
+}
