@@ -375,9 +375,13 @@ pub fn regression_gate(
 }
 
 /// Minimal JSON parser (serde is unavailable offline) — just enough to
-/// validate the `ddrnand-bench-v2` schema. Numbers parse as f64; strings
-/// support the escapes `escape_json` emits plus `\uXXXX`.
-mod json {
+/// validate the `ddrnand-bench-v2` schema and, since the observer layer
+/// landed, the Chrome trace-event timelines
+/// ([`crate::observe::validate_trace_json`]). Numbers parse as f64 (exact
+/// for integers below 2^53 — every picosecond count the validators
+/// compare); strings support the escapes `escape_json` emits plus
+/// `\uXXXX`.
+pub mod json {
     #[derive(Debug, Clone, PartialEq)]
     pub enum Value {
         Null,

@@ -587,6 +587,121 @@ pub fn cmd_sweep_qos(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
+/// E10 — `ddrnand analyze`: run a grid with the `[observe]` occupancy
+/// accounting enabled and print the per-resource utilization table plus
+/// stall-cause attribution; `--trace FILE` additionally records the
+/// Chrome-trace timeline of a single grid point for Perfetto
+/// (EXPERIMENTS.md §Bottlenecks).
+pub fn cmd_analyze(args: &mut Args) -> Result<()> {
+    let mut spec = exp::ObserveSweepSpec {
+        requests: requests(args)?,
+        ..exp::ObserveSweepSpec::default()
+    };
+    let p = pool(args)?;
+    spec.engine = engine(args)?;
+    spec.mode = match args.get("mode").as_deref() {
+        None | Some("write") => RequestKind::Write,
+        Some("read") => RequestKind::Read,
+        Some(other) => return Err(anyhow!("unknown --mode {other} (read|write)")),
+    };
+    spec.cell = match args.get("cell").as_deref() {
+        None | Some("slc") => CellType::Slc,
+        Some("mlc") => CellType::Mlc,
+        Some(other) => return Err(anyhow!("unknown --cell {other} (slc|mlc)")),
+    };
+    if let Some(w) = args.get("ways") {
+        spec.ways = w
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<u16>()
+                    .map_err(|e| anyhow!("--ways {s:?}: {e}"))
+            })
+            .collect::<Result<Vec<u16>>>()?;
+        if spec.ways.is_empty() || spec.ways.contains(&0) {
+            return Err(anyhow!("--ways needs a comma-separated list of counts >= 1"));
+        }
+    }
+    if let Some(i) = args.get("ifaces") {
+        spec.ifaces = i
+            .split(',')
+            .map(|s| match s.trim() {
+                "conv" => Ok(InterfaceKind::Conv),
+                "sync_only" => Ok(InterfaceKind::SyncOnly),
+                "proposed" => Ok(InterfaceKind::Proposed),
+                other => Err(anyhow!("--ifaces {other:?} (conv|sync_only|proposed)")),
+            })
+            .collect::<Result<Vec<InterfaceKind>>>()?;
+        if spec.ifaces.is_empty() {
+            return Err(anyhow!("--ifaces needs at least one interface"));
+        }
+    }
+    spec.blocks_per_chip = args
+        .get_usize("blocks", spec.blocks_per_chip as usize)
+        .map_err(anyhow::Error::msg)? as u32;
+    if spec.blocks_per_chip < 16 {
+        return Err(anyhow!("--blocks must be >= 16"));
+    }
+    let trace_out = args.get("trace");
+    if trace_out.is_some() {
+        // A merged timeline across grid points would interleave unrelated
+        // runs on the same tracks; require the grid to be a single point.
+        if spec.ifaces.len() * spec.ways.len() != 1 {
+            return Err(anyhow!(
+                "--trace needs exactly one grid point (single --ifaces entry, single --ways entry)"
+            ));
+        }
+        spec.timeline = true;
+    }
+    // Pre-flight every grid point through the shared config validation so
+    // an impossible combination is a clean error, not a mid-sweep panic.
+    for &iface in &spec.ifaces {
+        for &ways in &spec.ways {
+            if let Err(errs) = exp::observe_point_config(&spec, iface, ways) {
+                return Err(anyhow!(
+                    "sweep point ({iface}, {ways} ways) is invalid: {}",
+                    errs.join("; ")
+                ));
+            }
+        }
+    }
+    let csv = args.has("csv");
+    let cells = exp::run_observe_sweep(&spec, &p);
+    if let Some(path) = trace_out {
+        let cell = cells.first().expect("validated single grid point");
+        let json = cell
+            .report
+            .observe
+            .as_ref()
+            .and_then(|o| o.trace_json.as_deref())
+            .ok_or_else(|| anyhow!("timeline missing from the observed run"))?;
+        // The writer's output is schema-validated before it touches disk,
+        // so a malformed file can never be shipped to Perfetto silently.
+        crate::observe::validate_trace_json(json)
+            .map_err(|e| anyhow!("internal: timeline failed its own schema: {e}"))?;
+        std::fs::write(&path, json).with_context(|| format!("writing {path}"))?;
+        eprintln!("wrote Chrome-trace timeline to {path} (open in https://ui.perfetto.dev)");
+    }
+    println!(
+        "{}",
+        exp::render_observe_sweep(
+            &format!(
+                "E10 — bottleneck sweep ({} {}, {}; per-resource occupancy and stall attribution)",
+                spec.cell.name(),
+                spec.mode.name(),
+                if spec.channels == 1 {
+                    "1-channel".to_string()
+                } else {
+                    format!("{}-channel", spec.channels)
+                },
+            ),
+            &cells,
+            csv
+        )
+    );
+    Ok(())
+}
+
 pub fn cmd_dse(args: &mut Args) -> Result<()> {
     let mut space = dse::Space::default();
     if args.has("sweep-tbyte") {

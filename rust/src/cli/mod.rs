@@ -12,6 +12,7 @@
 //! ddrnand sweep-steady [...]          E7: steady-state GC/WAF sweep
 //! ddrnand sweep-tiered [...]          E8: tiered SLC/MLC fraction sweep
 //! ddrnand sweep-qos [...]             E9: multi-tenant QoS scheduler sweep
+//! ddrnand analyze [...]               E10: bottleneck occupancy/stall analysis
 //! ddrnand dse [--sweep-tbyte] [--native]   DSE through the AOT artifact
 //! ddrnand pvt [--margin X]            A3: PVT Monte Carlo ablation
 //! ddrnand simulate --config FILE      one simulation from a TOML config
@@ -47,6 +48,7 @@ pub fn run(argv: &[String]) -> i32 {
         "sweep-steady" => commands::cmd_sweep_steady(&mut args),
         "sweep-tiered" => commands::cmd_sweep_tiered(&mut args),
         "sweep-qos" => commands::cmd_sweep_qos(&mut args),
+        "analyze" => commands::cmd_analyze(&mut args),
         "dse" => commands::cmd_dse(&mut args),
         "pvt" => commands::cmd_pvt(&mut args),
         "simulate" => commands::cmd_simulate(&mut args),
@@ -86,6 +88,7 @@ SUBCOMMANDS
   sweep-steady     E7: steady-state GC sweep (WAF, wear, GC tax on p99)
   sweep-tiered     E8: tiered SLC/MLC sweep (write latency vs SLC-tier fraction)
   sweep-qos        E9: multi-tenant QoS sweep (per-tenant p99 vs way scheduler)
+  analyze          E10: bottleneck analysis (occupancy, stall attribution, Perfetto timeline)
   dse              design-space exploration via the AOT analytic model
   pvt              A3: PVT Monte Carlo ablation
   simulate         run one simulation from a TOML config
@@ -143,6 +146,15 @@ SWEEP-QOS FLAGS
   --read-mbps X    latency-critical read tenant offered load (default 4)
   --write-mbps X   bulk write tenant offered load (default 55, saturating)
   --blocks N       blocks per chip (default 512)
+
+ANALYZE FLAGS
+  --mode M         workload kind: read|write (default write)
+  --cell C         flash cell: slc|mlc (default slc)
+  --ways LIST      comma-separated way counts (default 1,2,4,8)
+  --ifaces LIST    interfaces to sweep (default conv,sync_only,proposed)
+  --blocks N       blocks per chip (default 512)
+  --trace FILE     write the Chrome-trace timeline (Perfetto) of a single
+                   grid point; requires one --ifaces entry and one --ways entry
 "
     .to_string()
 }

@@ -316,6 +316,30 @@ impl EngineConfig {
     }
 }
 
+/// Bottleneck-observability knobs (`[observe]` in TOML; see
+/// [`crate::observe`]). Disabled by default — and *bit-identical when
+/// enabled*: the observer is strictly read-only over simulation state, so
+/// the only thing `enabled` changes in a report is the presence of the
+/// `observe` block (golden-tested in `rust/tests/observe.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ObserveConfig {
+    /// Collect per-resource occupancy + stall-cause accounting.
+    pub enabled: bool,
+    /// Additionally buffer a Chrome trace-event timeline (Perfetto-
+    /// loadable). Memory grows with event count — meant for small runs
+    /// (`ddrnand analyze --trace`), not million-request campaigns.
+    pub timeline: bool,
+}
+
+impl ObserveConfig {
+    /// The reuse-fingerprint view of this section. `timeline` without
+    /// `enabled` is normalized away so a dormant `[observe]` block can
+    /// never fragment sweep reuse.
+    pub fn reuse_sig(&self) -> (bool, bool) {
+        (self.enabled, self.enabled && self.timeline)
+    }
+}
+
 /// Full configuration of one simulated SSD.
 #[derive(Debug, Clone)]
 pub struct SsdConfig {
@@ -368,6 +392,10 @@ pub struct SsdConfig {
     /// to every prior release (and so is the windowed engine — by
     /// construction).
     pub engine: EngineConfig,
+    /// Bottleneck-observability knobs; disabled by default, and read-only
+    /// over simulation state when enabled (observe-on runs stay
+    /// bit-identical).
+    pub observe: ObserveConfig,
 }
 
 impl Default for SsdConfig {
@@ -393,6 +421,7 @@ impl Default for SsdConfig {
             host: HostConfig::default(),
             qos: QosConfig::default(),
             engine: EngineConfig::default(),
+            observe: ObserveConfig::default(),
         }
     }
 }
@@ -505,6 +534,13 @@ impl SsdConfig {
         }
         if self.engine.threads > 256 {
             errs.push("engine.threads must be <= 256".into());
+        }
+        if self.observe.timeline && !self.observe.enabled {
+            errs.push(
+                "observe.timeline requires observe.enabled = true (a timeline without \
+                 the occupancy accounting it annotates has nothing to validate against)"
+                    .into(),
+            );
         }
         if let Some(mbps) = self.load.offered_mbps {
             if !(mbps > 0.0 && mbps.is_finite()) {
@@ -712,6 +748,14 @@ impl SsdConfig {
                 "qos.weights" => cfg.qos.weights = req_weights(key, val)?,
                 "engine.threads" => cfg.engine.threads = req_u16(key, val)?,
                 "engine.window_ps" => cfg.engine.window_ps = req_u64(key, val)?,
+                "observe.enabled" => {
+                    cfg.observe.enabled =
+                        val.as_bool().ok_or_else(|| format!("{key}: want bool"))?
+                }
+                "observe.timeline" => {
+                    cfg.observe.timeline =
+                        val.as_bool().ok_or_else(|| format!("{key}: want bool"))?
+                }
                 other => return Err(format!("unknown config key: {other}")),
             }
         }
@@ -1050,6 +1094,36 @@ window_ps = 500000
         let explicit =
             SsdConfig::from_toml("[engine]\nthreads = 1\nwindow_ps = 0").unwrap();
         assert_eq!(explicit.engine.reuse_sig(), d.engine.reuse_sig());
+    }
+
+    #[test]
+    fn observe_section_parses_and_validates() {
+        let cfg = SsdConfig::from_toml(
+            r#"
+[observe]
+enabled = true
+timeline = true
+"#,
+        )
+        .unwrap();
+        assert!(cfg.observe.enabled);
+        assert!(cfg.observe.timeline);
+        // Default: observation off, and absent from reports.
+        let d = SsdConfig::default();
+        assert_eq!(d.observe, ObserveConfig::default());
+        assert!(!d.observe.enabled);
+        // Bad values rejected: non-bool, and a timeline without the
+        // accounting it annotates.
+        assert!(SsdConfig::from_toml("[observe]\nenabled = 3").is_err());
+        assert!(SsdConfig::from_toml("[observe]\ntimeline = true").is_err());
+        // A dormant block normalizes out of the fingerprint: `timeline`
+        // is meaningless while disabled and must not fragment reuse.
+        let dormant =
+            SsdConfig::from_toml("[observe]\nenabled = false\ntimeline = false").unwrap();
+        assert_eq!(dormant.observe.reuse_sig(), d.observe.reuse_sig());
+        let mut t = d.observe;
+        t.timeline = true;
+        assert_eq!(t.reuse_sig(), d.observe.reuse_sig());
     }
 
     #[test]

@@ -80,6 +80,15 @@ impl ChannelState {
             .min()
     }
 
+    /// Does any way have bus work pending at `now`? Read-only probe for
+    /// the observer layer ([`crate::observe`]): a free bus with a waiting
+    /// way is an *idle-with-work-queued* interval (a transient between a
+    /// release and the re-kick, or a scheduler hold), distinct from true
+    /// idleness.
+    pub fn any_wants_bus(&self, now: Ps) -> bool {
+        self.ways.iter().any(|w| w.wants_bus(now))
+    }
+
     /// All ways idle and queues empty?
     pub fn is_drained(&self) -> bool {
         self.ways.iter().all(|w| w.is_idle())

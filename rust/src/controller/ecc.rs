@@ -71,6 +71,57 @@ impl EccModel {
     }
 }
 
+/// Count-style telemetry for the per-channel ECC engine.
+///
+/// The latency model above is stateless by design — it prices a page and
+/// forgets it. The bottleneck observer ([`crate::observe`]) and the
+/// planned reliability pack both want cumulative engine telemetry
+/// (pages through the decoder, sectors processed, total occupancy), so
+/// the counters live here next to the pricing they mirror. `Default` is
+/// all-zero and recording is integer-only, so a channel that never
+/// records pays nothing.
+///
+/// ```
+/// use ddrnand::controller::ecc::{EccCounters, EccModel};
+///
+/// let e = EccModel::default();
+/// let mut c = EccCounters::default();
+/// c.record_decode(&e, 2048);
+/// c.record_encode(&e, 2048);
+/// assert_eq!(c.pages_decoded, 1);
+/// assert_eq!(c.pages_encoded, 1);
+/// assert_eq!(c.sectors_processed, 8);
+/// assert_eq!(c.busy_ps, 2 * e.page_latency(2048).as_ps() as u64);
+/// ```
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EccCounters {
+    /// Pages through the decode path (reads).
+    pub pages_decoded: u64,
+    /// Pages through the encode path (programs).
+    pub pages_encoded: u64,
+    /// 512-byte sectors processed across both paths.
+    pub sectors_processed: u64,
+    /// Cumulative engine occupancy in picoseconds (the busy-time figure
+    /// an observer merges into its per-resource accounting).
+    pub busy_ps: u64,
+}
+
+impl EccCounters {
+    /// Record one page decode priced by `model`.
+    pub fn record_decode(&mut self, model: &EccModel, page_bytes: u32) {
+        self.pages_decoded += 1;
+        self.sectors_processed += model.sectors(page_bytes) as u64;
+        self.busy_ps += model.page_latency(page_bytes).as_ps() as u64;
+    }
+
+    /// Record one page encode priced by `model`.
+    pub fn record_encode(&mut self, model: &EccModel, page_bytes: u32) {
+        self.pages_encoded += 1;
+        self.sectors_processed += model.sectors(page_bytes) as u64;
+        self.busy_ps += model.page_latency(page_bytes).as_ps() as u64;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -102,5 +153,19 @@ mod tests {
         let weak = EccModel::for_t(4);
         let strong = EccModel::for_t(8);
         assert_eq!(strong.sector_latency(), weak.sector_latency() * 2);
+    }
+
+    #[test]
+    fn counters_accumulate_against_the_pricing_model() {
+        let e = EccModel::for_cell(CellType::Mlc);
+        let mut c = EccCounters::default();
+        assert_eq!(c, EccCounters::default(), "all-zero default");
+        c.record_decode(&e, 4096);
+        c.record_decode(&e, 4096);
+        c.record_encode(&e, 4096);
+        assert_eq!(c.pages_decoded, 2);
+        assert_eq!(c.pages_encoded, 1);
+        assert_eq!(c.sectors_processed, 3 * 8);
+        assert_eq!(c.busy_ps, 3 * e.page_latency(4096).as_ps() as u64);
     }
 }

@@ -349,6 +349,18 @@ impl WayState {
         }
     }
 
+    /// Is the NAND array itself working at `now` (t_R / t_PROG / t_BERS in
+    /// flight)? Distinct from [`wants_bus`](Self::wants_bus): an array-busy
+    /// way is *productive*, not waiting. Caveat for observers: during a
+    /// command transfer the in-flight job is already `ArrayBusy` but
+    /// `array_done_at` still holds the *previous* job's completion (always
+    /// `<= now`, so this returns false) — classify bus ownership *before*
+    /// consulting this, and the transfer interval lands on the bus owner.
+    pub fn array_busy(&self, now: Ps) -> bool {
+        matches!(&self.inflight, Some(j) if j.phase == JobPhase::ArrayBusy)
+            && now < self.array_done_at
+    }
+
     /// The queue depth including the in-flight job.
     pub fn backlog(&self) -> usize {
         self.queue.len() + usize::from(self.inflight.is_some())
@@ -420,6 +432,34 @@ mod tests {
         assert!(w.wants_bus(Ps::us(25)));
     }
 
+    /// Full logical-view equivalence between the SoA lanes and a
+    /// `VecDeque<PageJob>` reference: elements, and every scan helper
+    /// against its naive whole-struct scan.
+    fn assert_queue_equiv(q: &JobQueue, r: &VecDeque<PageJob>) {
+        assert_eq!(q.len(), r.len());
+        assert_eq!(q.is_empty(), r.is_empty());
+        for i in 0..r.len() {
+            assert_eq!(q.get(i), r[i], "element {i} diverged (head={})", q.head);
+        }
+        for limit in [0, 1, r.len() / 2, r.len(), r.len() + 3] {
+            let n = limit.min(r.len());
+            assert_eq!(
+                q.first_read_in(limit),
+                r.iter().take(n).position(|j| j.kind == PageJobKind::Read)
+            );
+            for class in 0..NUM_CLASSES as u8 {
+                assert_eq!(
+                    q.first_of_class_in(class, limit),
+                    r.iter().take(n).position(|j| j.class == class)
+                );
+            }
+        }
+        assert_eq!(
+            q.first_background(),
+            r.iter().position(|j| j.class >= CLASS_BACKGROUND)
+        );
+    }
+
     /// The SoA lanes behave exactly like the `VecDeque<PageJob>` they
     /// replaced: randomized push/remove sequences (heavy on the index-0
     /// fast path, like real grants) stay element-identical, and the scan
@@ -458,29 +498,80 @@ mod tests {
                     };
                     assert_eq!(q.remove(idx), r.remove(idx), "step {step} idx {idx}");
                 }
-                assert_eq!(q.len(), r.len());
-                for i in 0..r.len() {
-                    assert_eq!(q.get(i), r[i], "element {i} diverged");
-                }
-                for limit in [0, 1, r.len() / 2, r.len(), r.len() + 3] {
-                    let n = limit.min(r.len());
-                    assert_eq!(
-                        q.first_read_in(limit),
-                        r.iter().take(n).position(|j| j.kind == PageJobKind::Read)
-                    );
-                    for class in 0..NUM_CLASSES as u8 {
-                        assert_eq!(
-                            q.first_of_class_in(class, limit),
-                            r.iter().take(n).position(|j| j.class == class)
-                        );
-                    }
-                }
-                assert_eq!(
-                    q.first_background(),
-                    r.iter().position(|j| j.class >= CLASS_BACKGROUND)
-                );
+                assert_queue_equiv(&q, &r);
             }
         }
+
+        // Deferred-compaction regime, deterministically: march the consumed
+        // prefix past COMPACT_THRESHOLD while a *longer* live tail defers
+        // the compaction, so every translated-index path (get, scans,
+        // further pops) runs with a large standing cursor.
+        let mk = |step: u64| PageJob {
+            req: step,
+            stream: (step % 3) as u16,
+            class: (step % 5) as u8,
+            kind: match step % 3 {
+                0 => PageJobKind::Read,
+                1 => PageJobKind::Program,
+                _ => PageJobKind::Erase,
+            },
+            block: step as u32,
+            page: (step * 7) as u32,
+            bytes: 2048,
+            phase: JobPhase::Queued,
+        };
+        let mut q = JobQueue::default();
+        let mut r: VecDeque<PageJob> = VecDeque::new();
+        for step in 0..3 * COMPACT_THRESHOLD as u64 {
+            q.push_back(mk(step));
+            r.push_back(mk(step));
+        }
+        while q.head <= COMPACT_THRESHOLD {
+            assert_eq!(q.remove(0), r.pop_front());
+            assert_queue_equiv(&q, &r);
+        }
+        assert!(
+            q.len() > q.head,
+            "scenario bug: live tail must outlast the dead prefix here"
+        );
+        assert_eq!(
+            q.req.len(),
+            3 * COMPACT_THRESHOLD,
+            "compaction must be deferred while the live tail exceeds the prefix"
+        );
+        // Interleave pushes and scans mid-stream: appends land beyond the
+        // cursor and must not disturb the standing dead prefix.
+        for step in 0..8u64 {
+            q.push_back(mk(1000 + step));
+            r.push_back(mk(1000 + step));
+            assert_eq!(q.remove(0), r.pop_front());
+            assert_queue_equiv(&q, &r);
+        }
+        // Drain until the live tail dips below the dead prefix: that pop
+        // compacts, wrapping the cursor back to 0 without changing the
+        // logical view.
+        while q.head != 0 {
+            assert_eq!(q.remove(0), r.pop_front());
+            assert_queue_equiv(&q, &r);
+        }
+        assert!(
+            !r.is_empty(),
+            "compaction should fire with a live tail, not via the empty-reset path"
+        );
+        assert_eq!(
+            q.req.len(),
+            r.len(),
+            "post-compaction lanes should hold exactly the live tail"
+        );
+        assert_queue_equiv(&q, &r);
+        // And the queue keeps working after the wraparound.
+        q.push_back(mk(2000));
+        r.push_back(mk(2000));
+        assert_queue_equiv(&q, &r);
+        while let Some(want) = r.pop_front() {
+            assert_eq!(q.remove(0), Some(want));
+        }
+        assert!(q.is_empty());
     }
 
     /// The dead prefix left by FIFO pops compacts away: storage stays

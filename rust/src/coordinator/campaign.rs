@@ -94,6 +94,12 @@ pub struct SimReport {
     /// Jain's fairness index over per-stream achieved throughput; NaN for
     /// fewer than two streams.
     pub fairness: f64,
+    /// Bottleneck-observer results (`[observe]`, [`crate::observe`]):
+    /// per-resource occupancy, stall-cause attribution and the optional
+    /// trace timeline. `None` unless observation was enabled — and every
+    /// other field above is bit-identical either way (the zero-perturbation
+    /// contract, golden-tested in `rust/tests/observe.rs`).
+    pub observe: Option<crate::observe::ObserveReport>,
 }
 
 /// Per-stream (tenant) slice of a [`SimReport`].
@@ -122,7 +128,7 @@ pub fn run_trace(cfg: &SsdConfig, trace: &Trace) -> SimReport {
 }
 
 fn report_from(
-    sim: &SsdSim,
+    sim: &mut SsdSim,
     result: RunResult,
     mode: &'static str,
     wall0: std::time::Instant,
@@ -218,6 +224,7 @@ fn report_from(
         mig_energy_share: sim.energy.mig_share(),
         streams,
         fairness,
+        observe: sim.take_observe_report(),
     }
 }
 

@@ -1,7 +1,8 @@
 //! The experiments as reusable drivers (E1–E5 from the paper, E6 open-loop
-//! load, E7 steady-state) — shared by the CLI (`ddrnand paper`,
-//! `sweep-ways`, `sweep-load`, `sweep-steady`, …) and the bench targets
-//! (`cargo bench --bench bench_fig8_table3`, …).
+//! load, E7 steady-state, E8 tiered SLC/MLC, E9 multi-tenant QoS, E10
+//! bottleneck observation) — shared by the CLI (`ddrnand paper`,
+//! `sweep-ways`, `sweep-load`, `sweep-steady`, `analyze`, …) and the bench
+//! targets (`cargo bench --bench bench_fig8_table3`, …).
 //!
 //! Each driver runs the DES over the same grid as the paper's table and
 //! returns rows paired with the paper's published values so callers can
@@ -961,6 +962,162 @@ pub fn render_qos_sweep(title: &str, cells: &[QosCell], csv: bool) -> String {
     out
 }
 
+/// E10 — bottleneck sweep spec: single-workload grid across interface ×
+/// way count with the `[observe]` occupancy accounting enabled, so the
+/// utilization/stall table explains *why* each point's bandwidth lands
+/// where it does (EXPERIMENTS.md §Bottlenecks).
+#[derive(Debug, Clone)]
+pub struct ObserveSweepSpec {
+    pub cell: CellType,
+    pub channels: u16,
+    /// Way counts to sweep.
+    pub ways: Vec<u16>,
+    /// Interfaces to sweep.
+    pub ifaces: Vec<InterfaceKind>,
+    /// Workload shape (the paper's fresh-drive sequential pattern).
+    pub mode: RequestKind,
+    pub requests: usize,
+    pub blocks_per_chip: u32,
+    /// Also record the Chrome-trace timeline per point (`--trace` on the
+    /// CLI requires a single grid point, where the timeline is meaningful).
+    pub timeline: bool,
+    /// Per-sim engine configuration (threads / window override).
+    pub engine: EngineConfig,
+    pub seed: u64,
+}
+
+impl Default for ObserveSweepSpec {
+    fn default() -> Self {
+        ObserveSweepSpec {
+            cell: CellType::Slc,
+            channels: 1,
+            ways: vec![1, 2, 4, 8],
+            ifaces: InterfaceKind::ALL.to_vec(),
+            mode: RequestKind::Write,
+            requests: DEFAULT_REQUESTS,
+            blocks_per_chip: 512,
+            timeline: false,
+            engine: EngineConfig::default(),
+            seed: 0xDD12_7A5D,
+        }
+    }
+}
+
+/// One measured point of the E10 bottleneck sweep.
+#[derive(Debug, Clone)]
+pub struct ObserveCell {
+    pub iface: InterfaceKind,
+    pub ways: u16,
+    pub report: SimReport,
+}
+
+/// The configuration of one E10 grid point — shared by the driver and the
+/// CLI's pre-flight validation so the two can never disagree.
+pub fn observe_point_config(
+    spec: &ObserveSweepSpec,
+    iface: InterfaceKind,
+    ways: u16,
+) -> Result<SsdConfig, Vec<String>> {
+    let mut c = cfg(iface, spec.cell, spec.channels, ways);
+    c.blocks_per_chip = spec.blocks_per_chip;
+    c.engine = spec.engine;
+    c.seed = spec.seed;
+    c.observe.enabled = true;
+    c.observe.timeline = spec.timeline;
+    let errs = c.validate();
+    if errs.is_empty() {
+        Ok(c)
+    } else {
+        Err(errs)
+    }
+}
+
+/// E10 — bottleneck sweep: run the grid with occupancy accounting on and
+/// return every point's report (each carrying its `observe` section).
+pub fn run_observe_sweep(spec: &ObserveSweepSpec, pool: &ThreadPool) -> Vec<ObserveCell> {
+    assert!(!spec.ways.is_empty(), "need at least one way count");
+    assert!(!spec.ifaces.is_empty(), "need at least one interface");
+    let mut jobs = Vec::new();
+    let mut meta = Vec::new();
+    for iface in &spec.ifaces {
+        for &ways in &spec.ways {
+            let c = observe_point_config(spec, *iface, ways)
+                .unwrap_or_else(|e| panic!("observe sweep point invalid: {e:?}"));
+            let mode = spec.mode;
+            let requests = spec.requests;
+            meta.push((*iface, ways));
+            jobs.push(move |ws: &mut SimWorkspace| Campaign::new(c, mode, requests).run_in(ws));
+        }
+    }
+    let reports = pool.run_all_with(jobs, SimWorkspace::new);
+    meta.into_iter()
+        .zip(reports)
+        .map(|((iface, ways), report)| ObserveCell {
+            iface,
+            ways,
+            report,
+        })
+        .collect()
+}
+
+/// Render the bottleneck sweep: one row per grid point per resource kind
+/// (the CSV utilization table), plus — in text mode — a per-point
+/// stall-attribution summary linking the occupancy split to the measured
+/// bandwidth.
+pub fn render_observe_sweep(title: &str, cells: &[ObserveCell], csv: bool) -> String {
+    use crate::observe::ResourceKind;
+    let mut t = Table::new(vec![
+        "iface",
+        "ways",
+        "resource",
+        "busy_ps",
+        "blocked_ps",
+        "queued_ps",
+        "idle_ps",
+        "busy_pct",
+        "blocked_pct",
+    ]);
+    for c in cells {
+        let Some(o) = &c.report.observe else { continue };
+        for kind in [ResourceKind::Bus, ResourceKind::Way, ResourceKind::Chip] {
+            let [busy, blocked, queued, idle] = o.totals(kind);
+            let total = (busy + blocked + queued + idle).max(1);
+            t.row(vec![
+                c.iface.name().to_string(),
+                c.ways.to_string(),
+                kind.name().to_string(),
+                busy.to_string(),
+                blocked.to_string(),
+                queued.to_string(),
+                idle.to_string(),
+                format!("{:.2}", busy as f64 / total as f64 * 100.0),
+                format!("{:.2}", blocked as f64 / total as f64 * 100.0),
+            ]);
+        }
+    }
+    if csv {
+        return t.to_csv();
+    }
+    let mut out = format!("{title}\n\n{}\n", t.render());
+    out.push_str("stall attribution (ps) and throughput by grid point:\n");
+    for c in cells {
+        let Some(o) = &c.report.observe else { continue };
+        out.push_str(&format!(
+            "  {:<9} x{:<2} way: contention {}, gc barrier {}, starvation {}, \
+             backpressure {}; {} gc triggers; {:.2} MB/s\n",
+            c.iface.name(),
+            c.ways,
+            o.stalls.bus_contention_ps,
+            o.stalls.gc_barrier_ps,
+            o.stalls.queue_starvation_ps,
+            o.stalls.link_backpressure_ps,
+            o.gc_triggers,
+            c.report.bandwidth_mbps,
+        ));
+    }
+    out
+}
+
 /// E5 — §6 headline: min/max PROPOSED/CONV ratios from Table 3 cells.
 pub fn headline(cells: &[Cell]) -> String {
     let mut out = String::from("E5 / §6 headline — PROPOSED/CONV ratio ranges (paper: SLC read 1.65–2.76x, write 1.09–2.45x; MLC read 1.64–2.66x, write 1.05–1.76x)\n\n");
@@ -1159,6 +1316,35 @@ mod tests {
         assert!(rendered.contains("read_priority"));
         let csv = render_qos_sweep("t", &cells, true);
         assert!(csv.contains("iface,ways,sched,stream"));
+    }
+
+    #[test]
+    fn observe_sweep_grid_shape_and_rendering() {
+        let pool = ThreadPool::new(0);
+        let spec = ObserveSweepSpec {
+            ways: vec![2],
+            ifaces: vec![InterfaceKind::Conv, InterfaceKind::Proposed],
+            requests: 20,
+            blocks_per_chip: 128,
+            ..ObserveSweepSpec::default()
+        };
+        let cells = run_observe_sweep(&spec, &pool);
+        assert_eq!(cells.len(), 2); // 2 ifaces x 1 way count
+        for c in &cells {
+            assert!(c.report.bandwidth_mbps > 0.0);
+            let o = c.report.observe.as_ref().expect("observation was enabled");
+            assert!(o.wall_ps > 0);
+            // No timeline was requested; the accounting is still complete.
+            assert!(o.trace_json.is_none());
+            for r in &o.resources {
+                assert_eq!(r.total_ps(), o.wall_ps, "{:?}", r);
+            }
+        }
+        let rendered = render_observe_sweep("t", &cells, false);
+        assert!(rendered.contains("stall attribution"));
+        assert!(rendered.contains("PROPOSED"));
+        let csv = render_observe_sweep("t", &cells, true);
+        assert!(csv.contains("iface,ways,resource,busy_ps"));
     }
 
     #[test]

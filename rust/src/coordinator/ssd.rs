@@ -58,10 +58,11 @@ use crate::host::sata::SataLink;
 use crate::host::trace::{
     CLASS_BACKGROUND, CLASS_NORMAL, NUM_CLASSES, Request, RequestKind, StreamTag,
 };
-use crate::iface::bus::BusTiming;
+use crate::iface::bus::{BusPhaseKind, BusTiming};
 use crate::iface::timing::InterfaceKind;
 use crate::nand::chip::{Chip, ChipOp};
 use crate::nand::geometry::Geometry;
+use crate::observe::{HostView, ObsState, ObserveReport};
 use crate::sim::{Engine, Model, RunResult, Scheduler, WindowedEngine};
 use crate::util::stats::Welford;
 use crate::util::time::{mbps, Ps};
@@ -238,6 +239,12 @@ pub struct SsdSim {
     pub power: PowerModel,
     pub energy: EnergyMeter,
     finished_at: Ps,
+    /// Bottleneck observer (`[observe]`, [`crate::observe`]): per-resource
+    /// occupancy accounting plus the optional trace timeline. `None` when
+    /// disabled, which makes every hook a single `Option` branch — the
+    /// zero-cost-when-off contract the bit-identity goldens in
+    /// `rust/tests/observe.rs` pin down.
+    obs: Option<Box<ObsState>>,
 }
 
 impl SsdSim {
@@ -323,11 +330,50 @@ impl SsdSim {
             power,
             energy: EnergyMeter::default(),
             finished_at: Ps::ZERO,
+            obs: None,
             geom,
             cfg,
         };
         sim.rebuild_admission();
+        sim.rebuild_observer();
         sim
+    }
+
+    /// (Re)build the bottleneck observer from the current config: fresh
+    /// accounting sized to the geometry when `[observe]` is enabled, `None`
+    /// otherwise. The window-mark pitch on the timeline is the same
+    /// conservative lookahead the windowed engine would use, so a Perfetto
+    /// view shows where the parallel-commit horizons fall.
+    fn rebuild_observer(&mut self) {
+        self.obs = self.cfg.observe.enabled.then(|| {
+            Box::new(ObsState::new(
+                self.cfg.channels as usize,
+                self.cfg.ways as usize,
+                self.cfg.observe.timeline,
+                self.window_lookahead(),
+            ))
+        });
+    }
+
+    /// Close the elapsed occupancy interval and reclassify every resource.
+    /// Resource state is piecewise-constant between events, so one scan
+    /// after each handled event makes the integer-ps accounting exact; the
+    /// box is taken out and back so the scan can borrow the channel array.
+    fn observe_scan(&mut self, now: Ps) {
+        if let Some(mut obs) = self.obs.take() {
+            let host = HostView {
+                link_busy: self.link.busy_at(now),
+            };
+            obs.scan(now, &self.channels, host);
+            self.obs = Some(obs);
+        }
+    }
+
+    /// Consume the observer's report for this run (`None` when `[observe]`
+    /// is disabled). Taking the state out keeps report assembly one-shot;
+    /// [`reset`](Self::reset) rebuilds a fresh observer for the next run.
+    pub fn take_observe_report(&mut self) -> Option<ObserveReport> {
+        self.obs.take().map(|obs| obs.report())
     }
 
     /// Build the host link a config selects.
@@ -523,8 +569,10 @@ impl SsdSim {
 
     /// Plan one logical-page write via the FTL and enqueue its background
     /// ops plus the host program; touched channels are appended to the
-    /// pooled kick list. Allocation-free in steady state.
-    fn enqueue_write_plan(&mut self, lpn: u64, req: u64) {
+    /// pooled kick list. Allocation-free in steady state. `now` is only
+    /// consumed by the observer's GC-trigger mark; the plan itself is
+    /// time-independent.
+    fn enqueue_write_plan(&mut self, lpn: u64, req: u64, now: Ps) {
         self.ftl_ops.clear();
         let target = self.ftl.plan_write_into(lpn, &mut self.ftl_ops);
         // GC-stall attribution: a host request whose plan carries
@@ -546,6 +594,13 @@ impl SsdSim {
                 _ => GC_REQ,
             };
             let (ch, _) = self.enqueue_ftl_op(op, marker);
+            // One GC/migration mark per triggering plan, on the channel of
+            // its first background op (where the barrier forms).
+            if i == 0 {
+                if let Some(obs) = self.obs.as_mut() {
+                    obs.gc_trigger(ch as usize, now);
+                }
+            }
             self.kick_list.push(ch);
             i += 1;
         }
@@ -581,14 +636,14 @@ impl SsdSim {
                     // considered done when cached, but any dirty eviction
                     // must be flushed to NAND as internal traffic.
                     if let Some(victim) = evict_flush {
-                        self.enqueue_write_plan(victim, INTERNAL_REQ);
+                        self.enqueue_write_plan(victim, INTERNAL_REQ, sched.now());
                     }
                     self.page_programmed(req, sched);
                     continue;
                 }
                 CacheOutcome::Bypass => {}
             }
-            self.enqueue_write_plan(lpn, req);
+            self.enqueue_write_plan(lpn, req, sched.now());
         }
         self.kick_touched(sched);
     }
@@ -611,7 +666,7 @@ impl SsdSim {
                     // issued, or the deferred host data would be silently
                     // dropped (this path used to discard the flush).
                     if let Some(victim) = evict_flush {
-                        self.enqueue_write_plan(victim, INTERNAL_REQ);
+                        self.enqueue_write_plan(victim, INTERNAL_REQ, sched.now());
                     }
                 }
                 CacheOutcome::Bypass => {}
@@ -720,12 +775,32 @@ impl SsdSim {
                     chan.bus.data_bytes += bytes as u64;
                     let done = chan.bus.occupy(now, xfer);
                     self.bus_ctx[chi] = Some(BusCtx::DataOut { way: wi as u16 });
+                    if let Some(obs) = self.obs.as_mut() {
+                        obs.bus_granted(
+                            chi,
+                            wi as u16,
+                            job.req >= MIG_REQ,
+                            BusPhaseKind::DataOut,
+                            now,
+                            done,
+                        );
+                    }
                     sched.at(done, Ev::BusDone { ch });
                 }
                 JobPhase::AwaitStatus => {
                     let dur = bt.status_poll() + self.cfg.program_status_overhead;
                     let done = chan.bus.occupy_cmd(now, dur);
                     self.bus_ctx[chi] = Some(BusCtx::StatusDone { way: wi as u16 });
+                    if let Some(obs) = self.obs.as_mut() {
+                        obs.bus_granted(
+                            chi,
+                            wi as u16,
+                            job.req >= MIG_REQ,
+                            BusPhaseKind::Status,
+                            now,
+                            done,
+                        );
+                    }
                     sched.at(done, Ev::BusDone { ch });
                 }
                 other => unreachable!("inflight job in bus-wanting phase {other:?}"),
@@ -752,12 +827,26 @@ impl SsdSim {
         job.phase = JobPhase::ArrayBusy; // array op starts at phase end
         way.inflight = Some(job);
         self.bus_ctx[chi] = Some(BusCtx::CmdIssued { way: wi as u16 });
+        if let Some(obs) = self.obs.as_mut() {
+            obs.job_started(chi, wi as u16, job.kind, now);
+            obs.bus_granted(
+                chi,
+                wi as u16,
+                job.req >= MIG_REQ,
+                BusPhaseKind::Cmd,
+                now,
+                done,
+            );
+        }
         sched.at(done, Ev::BusDone { ch });
     }
 
     fn on_bus_done(&mut self, ch: u16, sched: &mut Scheduler<Ev>) {
         let chi = ch as usize;
         let ctx = self.bus_ctx[chi].take().expect("BusDone without context");
+        if let Some(obs) = self.obs.as_mut() {
+            obs.bus_released(chi, sched.now());
+        }
         match ctx {
             BusCtx::CmdIssued { way } => {
                 let wi = way as usize;
@@ -778,7 +867,11 @@ impl SsdSim {
                 let w = &mut self.channels[chi].ways[wi];
                 let dur = w.chip.start(sched.now(), op);
                 w.array_done_at = sched.now() + dur;
-                sched.at(w.array_done_at, Ev::ChipDone { ch, way });
+                let done = w.array_done_at;
+                sched.at(done, Ev::ChipDone { ch, way });
+                if let Some(obs) = self.obs.as_mut() {
+                    obs.array_started(chi, way, job.kind, sched.now(), done);
+                }
             }
             BusCtx::DataOut { way } => {
                 // Read page fully transferred to the controller.
@@ -787,6 +880,9 @@ impl SsdSim {
                     .inflight
                     .take()
                     .expect("data-out from idle way");
+                if let Some(obs) = self.obs.as_mut() {
+                    obs.job_completed(chi, way, job.kind, sched.now());
+                }
                 self.counters.pages_read += 1;
                 if job.req >= MIG_REQ {
                     self.counters.internal_pages += 1;
@@ -805,6 +901,9 @@ impl SsdSim {
                     .inflight
                     .take()
                     .expect("status from idle way");
+                if let Some(obs) = self.obs.as_mut() {
+                    obs.job_completed(chi, way, job.kind, sched.now());
+                }
                 match job.kind {
                     PageJobKind::Program => {
                         self.counters.pages_programmed += 1;
@@ -1076,6 +1175,8 @@ impl SsdSim {
     /// normalized when dormant, so dormant sections never fragment reuse —
     /// the engine knobs are in the key so a reused simulator picks up a
     /// changed `threads`/`window_ps` instead of keeping the old config).
+    /// The `[observe]` section is keyed too — switching observation on or
+    /// off mid-sweep must rebuild the observer state, not inherit it.
     #[allow(clippy::type_complexity)]
     pub fn reuse_key(
         cfg: &SsdConfig,
@@ -1092,6 +1193,7 @@ impl SsdSim {
         (HostLinkKind, u16),
         (SchedKind, [u32; NUM_CLASSES]),
         (u16, u64),
+        (bool, bool),
     ) {
         let nand = cfg.nand_timing();
         let geom = Geometry {
@@ -1121,6 +1223,7 @@ impl SsdSim {
             cfg.host.reuse_sig(),
             cfg.qos.reuse_sig(),
             cfg.engine.reuse_sig(),
+            cfg.observe.reuse_sig(),
         )
     }
 
@@ -1198,6 +1301,7 @@ impl SsdSim {
         // link and the admission front end from the new config.
         self.link = Self::build_link(&self.cfg);
         self.rebuild_admission();
+        self.rebuild_observer();
     }
 
     /// Run the model to completion; returns the engine statistics.
@@ -1257,6 +1361,12 @@ impl SsdSim {
         let power = self.power.clone();
         self.energy.add_window(&power, window);
         self.energy.add_bytes(self.counters.host_bytes);
+        // Close the observer's books at the same instant as the energy
+        // window; `finalize` clamps up to the last observed event, so a GC
+        // drain tail past the final host completion stays counted.
+        if let Some(obs) = self.obs.as_mut() {
+            obs.finalize(window);
+        }
         result
     }
 
@@ -1331,6 +1441,14 @@ impl Model for SsdSim {
             },
             Ev::BusDone { ch } => self.on_bus_done(ch, sched),
             Ev::ChipDone { ch, way } => self.on_chip_done(ch, way, sched),
+        }
+        // Occupancy scan: state is piecewise-constant between events, so
+        // closing the interval after each event keeps the accounting exact
+        // under both engines (they all dispatch through this method). A
+        // same-timestamp batch degenerates to dt = 0 scans whose final
+        // reclassification wins. One branch when observation is off.
+        if self.obs.is_some() {
+            self.observe_scan(sched.now());
         }
     }
 }

@@ -87,6 +87,12 @@ pub trait HostLink {
 
     /// Total payload bytes moved.
     fn bytes_moved(&self) -> u64;
+
+    /// Is the serialized transport occupied at `now`? A read-only probe
+    /// for the observer layer ([`crate::observe`]): a way idling while
+    /// the host link is saturated is *link backpressure*, not
+    /// queue-depth starvation, and the distinction needs this bit.
+    fn busy_at(&self, now: Ps) -> bool;
 }
 
 /// NVMe-style multi-queue link: N submission queues sharing one serialized
@@ -141,6 +147,10 @@ impl HostLink for MultiQueueLink {
 
     fn bytes_moved(&self) -> u64 {
         self.bytes_moved
+    }
+
+    fn busy_at(&self, now: Ps) -> bool {
+        now < self.busy_until
     }
 }
 

@@ -131,6 +131,10 @@ impl crate::host::link::HostLink for SataLink {
     fn bytes_moved(&self) -> u64 {
         self.bytes_moved
     }
+
+    fn busy_at(&self, now: Ps) -> bool {
+        !self.is_free(now)
+    }
 }
 
 #[cfg(test)]

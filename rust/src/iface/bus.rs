@@ -38,6 +38,32 @@ impl Default for CommandCycles {
     }
 }
 
+/// Which kind of bus phase a grant occupies the channel with. The DES
+/// tracks this in its per-channel grant context; the observer layer
+/// ([`crate::observe`]) re-exports it onto timeline spans so a Perfetto
+/// track shows *what* the bus was doing, not just that it was busy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BusPhaseKind {
+    /// Command + address cycles (READ/PROGRAM/ERASE issue; programs
+    /// include the data-in burst in the same occupancy).
+    Cmd,
+    /// Read data-out burst (page register -> controller, + ECC).
+    DataOut,
+    /// Status poll (70h + status byte).
+    Status,
+}
+
+impl BusPhaseKind {
+    /// Stable lowercase name used as the timeline span label.
+    pub fn name(self) -> &'static str {
+        match self {
+            BusPhaseKind::Cmd => "cmd",
+            BusPhaseKind::DataOut => "data_out",
+            BusPhaseKind::Status => "status",
+        }
+    }
+}
+
 /// Concrete bus-event durations for one (interface, NAND device) pairing.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct BusTiming {

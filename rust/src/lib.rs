@@ -24,6 +24,7 @@ pub mod energy;
 pub mod host;
 pub mod iface;
 pub mod nand;
+pub mod observe;
 pub mod proptest;
 pub mod report;
 pub mod runtime;

@@ -148,6 +148,38 @@ pub fn summarize(r: &SimReport) -> String {
             ));
         }
     }
+    if let Some(o) = &r.observe {
+        use crate::observe::ResourceKind;
+        let pct = |num: u64, den: u64| {
+            if den == 0 {
+                0.0
+            } else {
+                num as f64 / den as f64 * 100.0
+            }
+        };
+        s.push_str("\n  bottlenecks (busy / blocked / queued / idle):");
+        for kind in [ResourceKind::Bus, ResourceKind::Way, ResourceKind::Chip] {
+            let [busy, blocked, queued, idle] = o.totals(kind);
+            let total = busy + blocked + queued + idle;
+            s.push_str(&format!(
+                "\n    {:<4} {:>5.1}% / {:>5.1}% / {:>5.1}% / {:>5.1}%",
+                kind.name(),
+                pct(busy, total),
+                pct(blocked, total),
+                pct(queued, total),
+                pct(idle, total),
+            ));
+        }
+        s.push_str(&format!(
+            "\n    stalls: bus contention {}, GC barrier {}, starvation {}, \
+             link backpressure {} (ps); {} GC triggers",
+            o.stalls.bus_contention_ps,
+            o.stalls.gc_barrier_ps,
+            o.stalls.queue_starvation_ps,
+            o.stalls.link_backpressure_ps,
+            o.gc_triggers,
+        ));
+    }
     if r.mig_pages_programmed > 0 || r.slc_reads + r.mlc_reads > 0 {
         let share = if (r.slc_reads + r.mlc_reads) > 0 {
             format!("{:.1}%", r.slc_read_share * 100.0)

@@ -42,6 +42,41 @@ fn committed_bench_log_is_schema_valid() {
     }
 }
 
+/// The trajectory gate. For the repo's whole history the committed
+/// BENCH_engine.json stayed the bootstrap placeholder — CI measured a log
+/// on every push and then threw it away, so the "trajectory" had zero
+/// points. CI now commits the measured log back to main and sets
+/// `BENCH_EXPECT_COMMITTED=1` on this suite first: the artifact about to
+/// become the committed trajectory must carry at least one real measured
+/// record (with the real creation stamp the bootstrap file lacks), so an
+/// empty trajectory can never regenerate silently.
+#[test]
+fn bench_trajectory_is_not_the_bootstrap_placeholder() {
+    if std::env::var_os("BENCH_EXPECT_COMMITTED").is_none() {
+        return;
+    }
+    let path = repo_root_log();
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+    let metrics = parse_bench_metrics(&text)
+        .unwrap_or_else(|e| panic!("{}: schema drift: {e}", path.display()));
+    assert!(
+        !metrics.is_empty(),
+        "{}: still the bootstrap placeholder — the bench measured nothing",
+        path.display()
+    );
+    assert!(
+        metrics.iter().any(|m| m.value.is_some()),
+        "{}: records exist but every value is null",
+        path.display()
+    );
+    assert!(
+        !text.contains("\"created_unix\": 0,"),
+        "{}: missing the measurement timestamp a real bench run stamps",
+        path.display()
+    );
+}
+
 /// The writer and the validator agree: whatever `PerfLog` emits validates,
 /// including escapes, non-finite values, and engine tags.
 #[test]
