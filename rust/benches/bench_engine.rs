@@ -381,8 +381,12 @@ fn main() {
         .unwrap_or_else(|| {
             std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_engine.json")
         });
+    // A log that cannot be written is a broken pipeline, not a warning:
+    // CI's trajectory commit-back and regression gate both read this file,
+    // and a silent skip here is how the committed baseline stayed the
+    // bootstrap placeholder forever.
     if let Err(e) = log.write(&path) {
-        eprintln!("warning: could not write perf log to {}: {e}", path.display());
+        panic!("could not write perf log to {}: {e}", path.display());
     }
 }
 

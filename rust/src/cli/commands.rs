@@ -2,7 +2,7 @@
 
 use crate::analytic;
 use crate::cli::args::Args;
-use crate::config::{ArrivalKind, EngineConfig, SsdConfig, SteadyConfig};
+use crate::config::{ArrivalKind, EngineConfig, MapMode, SsdConfig, SteadyConfig};
 use crate::controller::sched::SchedKind;
 use crate::coordinator::campaign::run_trace;
 use crate::coordinator::experiments as exp;
@@ -699,6 +699,135 @@ pub fn cmd_analyze(args: &mut Args) -> Result<()> {
             csv
         )
     );
+    Ok(())
+}
+
+/// Peak resident-set size of this process in MiB (Linux `VmHWM`), `None`
+/// where /proc is unavailable. Used by `--rss-budget-mb` so CI can pin the
+/// memory footprint of multi-TB mapping runs.
+fn peak_rss_mb() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let kb: u64 = status
+        .lines()
+        .find(|l| l.starts_with("VmHWM:"))?
+        .split_whitespace()
+        .nth(1)?
+        .parse()
+        .ok()?;
+    Some(kb / 1024)
+}
+
+/// E11 — `ddrnand sweep-map`: run the demand-paged mapping-tier grid
+/// (cache capacity × workload locality) and print hit rate, translation
+/// traffic, and the bandwidth cost per point (EXPERIMENTS.md §Mapping).
+pub fn cmd_sweep_map(args: &mut Args) -> Result<()> {
+    let mut spec = exp::MapSweepSpec {
+        requests: args
+            .get_usize("requests", exp::MapSweepSpec::default().requests)
+            .map_err(anyhow::Error::msg)?,
+        ..exp::MapSweepSpec::default()
+    };
+    let p = pool(args)?;
+    spec.engine = engine(args)?;
+    spec.mode = match args.get("mode").as_deref() {
+        None | Some("write") => RequestKind::Write,
+        Some("read") => RequestKind::Read,
+        Some(other) => return Err(anyhow!("unknown --mode {other} (read|write)")),
+    };
+    spec.map_mode = match args.get("map-mode").as_deref() {
+        None | Some("demand") => MapMode::Demand,
+        Some("fmmu") => MapMode::Fmmu,
+        Some(other) => return Err(anyhow!("unknown --map-mode {other} (demand|fmmu)")),
+    };
+    spec.cell = match args.get("cell").as_deref() {
+        None | Some("slc") => CellType::Slc,
+        Some("mlc") => CellType::Mlc,
+        Some(other) => return Err(anyhow!("unknown --cell {other} (slc|mlc)")),
+    };
+    spec.channels = args
+        .get_usize("channels", spec.channels as usize)
+        .map_err(anyhow::Error::msg)? as u16;
+    spec.ways = args
+        .get_usize("ways", spec.ways as usize)
+        .map_err(anyhow::Error::msg)? as u16;
+    spec.blocks_per_chip = args
+        .get_usize("blocks", spec.blocks_per_chip as usize)
+        .map_err(anyhow::Error::msg)? as u32;
+    spec.entries_per_page = args
+        .get_usize("entries", spec.entries_per_page as usize)
+        .map_err(anyhow::Error::msg)? as u32;
+    if let Some(list) = args.get("cache-pages") {
+        spec.cache_pages = list
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<u64>()
+                    .map_err(|e| anyhow!("--cache-pages {s:?}: {e}"))
+            })
+            .collect::<Result<Vec<u64>>>()?;
+        if spec.cache_pages.is_empty() || spec.cache_pages.contains(&0) {
+            return Err(anyhow!("--cache-pages needs a comma-separated list of sizes >= 1"));
+        }
+    }
+    if let Some(list) = args.get("hot") {
+        spec.locality = list
+            .split(',')
+            .map(|s| {
+                let (f, p) = s
+                    .trim()
+                    .split_once(':')
+                    .ok_or_else(|| anyhow!("--hot {s:?}: expected FRAC:PROB"))?;
+                let f: f64 = f.parse().map_err(|e| anyhow!("--hot fraction {f:?}: {e}"))?;
+                let p: f64 = p.parse().map_err(|e| anyhow!("--hot probability {p:?}: {e}"))?;
+                if !(0.0..=1.0).contains(&f) || !(0.0..=1.0).contains(&p) {
+                    return Err(anyhow!("--hot {s:?}: both values must be within [0, 1]"));
+                }
+                Ok((f, p))
+            })
+            .collect::<Result<Vec<(f64, f64)>>>()?;
+        if spec.locality.is_empty() {
+            return Err(anyhow!("--hot needs at least one FRAC:PROB point"));
+        }
+    }
+    // Pre-flight every grid point through the shared config validation so
+    // an impossible combination is a clean error, not a mid-sweep panic.
+    for &cache_pages in &spec.cache_pages {
+        if let Err(errs) = exp::map_point_config(&spec, cache_pages) {
+            return Err(anyhow!(
+                "sweep point ({cache_pages} cache pages) is invalid: {}",
+                errs.join("; ")
+            ));
+        }
+    }
+    let csv = args.has("csv");
+    let rss_budget = args.get_usize("rss-budget-mb", 0).map_err(anyhow::Error::msg)?;
+    let cells = exp::run_map_sweep(&spec, &p);
+    println!(
+        "{}",
+        exp::render_map_sweep(
+            &format!(
+                "E11 — mapping sweep ({} {} via {} tier, {}x{} array; cache hit rate \
+                 and translation traffic vs capacity and locality)",
+                spec.cell.name(),
+                spec.mode.name(),
+                spec.map_mode.name(),
+                spec.channels,
+                spec.ways,
+            ),
+            &cells,
+            csv
+        )
+    );
+    if rss_budget > 0 {
+        let peak = peak_rss_mb()
+            .ok_or_else(|| anyhow!("--rss-budget-mb needs /proc/self/status (Linux only)"))?;
+        if peak > rss_budget as u64 {
+            return Err(anyhow!(
+                "peak RSS {peak} MiB exceeds the --rss-budget-mb {rss_budget} MiB budget"
+            ));
+        }
+        eprintln!("peak RSS {peak} MiB within the {rss_budget} MiB budget");
+    }
     Ok(())
 }
 

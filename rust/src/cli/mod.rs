@@ -13,6 +13,7 @@
 //! ddrnand sweep-tiered [...]          E8: tiered SLC/MLC fraction sweep
 //! ddrnand sweep-qos [...]             E9: multi-tenant QoS scheduler sweep
 //! ddrnand analyze [...]               E10: bottleneck occupancy/stall analysis
+//! ddrnand sweep-map [...]             E11: demand-paged mapping-tier sweep
 //! ddrnand dse [--sweep-tbyte] [--native]   DSE through the AOT artifact
 //! ddrnand pvt [--margin X]            A3: PVT Monte Carlo ablation
 //! ddrnand simulate --config FILE      one simulation from a TOML config
@@ -49,6 +50,7 @@ pub fn run(argv: &[String]) -> i32 {
         "sweep-tiered" => commands::cmd_sweep_tiered(&mut args),
         "sweep-qos" => commands::cmd_sweep_qos(&mut args),
         "analyze" => commands::cmd_analyze(&mut args),
+        "sweep-map" => commands::cmd_sweep_map(&mut args),
         "dse" => commands::cmd_dse(&mut args),
         "pvt" => commands::cmd_pvt(&mut args),
         "simulate" => commands::cmd_simulate(&mut args),
@@ -89,6 +91,7 @@ SUBCOMMANDS
   sweep-tiered     E8: tiered SLC/MLC sweep (write latency vs SLC-tier fraction)
   sweep-qos        E9: multi-tenant QoS sweep (per-tenant p99 vs way scheduler)
   analyze          E10: bottleneck analysis (occupancy, stall attribution, Perfetto timeline)
+  sweep-map        E11: demand-paged mapping sweep (cache hit rate vs capacity and locality)
   dse              design-space exploration via the AOT analytic model
   pvt              A3: PVT Monte Carlo ablation
   simulate         run one simulation from a TOML config
@@ -155,6 +158,19 @@ ANALYZE FLAGS
   --blocks N       blocks per chip (default 512)
   --trace FILE     write the Chrome-trace timeline (Perfetto) of a single
                    grid point; requires one --ifaces entry and one --ways entry
+
+SWEEP-MAP FLAGS
+  --mode M         workload kind: read|write (default write)
+  --map-mode M     mapping tier: demand (stall on miss) | fmmu (overlap fill; default demand)
+  --cell C         flash cell: slc|mlc (default slc)
+  --channels N     channel count (default 4)
+  --ways N         ways per channel (default 4)
+  --blocks N       blocks per chip (default 512)
+  --entries N      L2P entries per translation page (default 1024)
+  --cache-pages L  comma-separated cache capacities in translation pages (default 32,128,512)
+  --hot LIST       comma-separated FRAC:PROB locality points; PROB of requests
+                   target the first FRAC of the volume (default 0.05:0.95,0.2:0.8,1:1)
+  --rss-budget-mb N  fail if peak RSS (VmHWM) exceeds N MiB after the sweep (Linux)
 "
     .to_string()
 }

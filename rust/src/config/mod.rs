@@ -340,6 +340,78 @@ impl ObserveConfig {
     }
 }
 
+/// Which mapping-tier variant translates host addresses (`[mapping]`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MapMode {
+    /// The whole mapping table is DRAM-resident; translation is free
+    /// (the historical behaviour, and the default).
+    Resident,
+    /// DFTL-style demand paging: a map-cache miss defers the host op
+    /// behind a real flash read of the translation page.
+    Demand,
+    /// FMMU-style hardware automation: the miss still issues the flash
+    /// read (bus/way contention is real) but overlaps it with the host
+    /// array access instead of deferring.
+    Fmmu,
+}
+
+impl MapMode {
+    pub fn parse(s: &str) -> Option<MapMode> {
+        match s {
+            "resident" => Some(MapMode::Resident),
+            "demand" => Some(MapMode::Demand),
+            "fmmu" => Some(MapMode::Fmmu),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MapMode::Resident => "resident",
+            MapMode::Demand => "demand",
+            MapMode::Fmmu => "fmmu",
+        }
+    }
+}
+
+/// Demand-paged mapping-tier knobs (`[mapping]` in TOML; see
+/// [`crate::controller::ftl::demand`]). Resident by default: runs are
+/// bit-identical to the fully-resident simulator (golden-tested) — and so
+/// is any cache sized to hold every translation page, which initializes
+/// warm and can never miss.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MappingConfig {
+    /// Mapping-tier variant.
+    pub mode: MapMode,
+    /// Translation pages the map cache can hold.
+    pub cache_pages: u64,
+    /// lpn→ppn entries per translation page (the paging granularity).
+    pub entries_per_page: u32,
+}
+
+impl Default for MappingConfig {
+    fn default() -> Self {
+        MappingConfig {
+            mode: MapMode::Resident,
+            cache_pages: 4096,
+            entries_per_page: 1024,
+        }
+    }
+}
+
+impl MappingConfig {
+    /// The reuse-fingerprint view of this section: a resident (dormant)
+    /// block normalizes its sizing knobs away, so spelling out the default
+    /// can never fragment sweep reuse (the `[steady]`/`[tiering]`/`[host]`
+    /// dormancy rule).
+    pub fn reuse_sig(&self) -> (MapMode, u64, u32) {
+        match self.mode {
+            MapMode::Resident => (MapMode::Resident, 0, 0),
+            _ => (self.mode, self.cache_pages, self.entries_per_page),
+        }
+    }
+}
+
 /// Full configuration of one simulated SSD.
 #[derive(Debug, Clone)]
 pub struct SsdConfig {
@@ -396,6 +468,9 @@ pub struct SsdConfig {
     /// over simulation state when enabled (observe-on runs stay
     /// bit-identical).
     pub observe: ObserveConfig,
+    /// Demand-paged mapping-tier knobs; resident by default, in which
+    /// case runs are bit-identical to the fully-resident simulator.
+    pub mapping: MappingConfig,
 }
 
 impl Default for SsdConfig {
@@ -422,6 +497,7 @@ impl Default for SsdConfig {
             qos: QosConfig::default(),
             engine: EngineConfig::default(),
             observe: ObserveConfig::default(),
+            mapping: MappingConfig::default(),
         }
     }
 }
@@ -495,6 +571,61 @@ impl SsdConfig {
         }
         if self.queue_depth == 0 {
             errs.push("queue_depth must be >= 1".into());
+        }
+        // Geometry arithmetic and capacity sizing must be checked here,
+        // not asserted at FTL construction: a config that passes
+        // validation may never panic when built (regression-tested in
+        // this module). The checked chain catches products that would
+        // wrap u64; the capacity check catches f64 sizing that rounds the
+        // logical page count past the physical array.
+        let total_pages = (self.chips() as u64)
+            .checked_mul(self.blocks_per_chip as u64)
+            .and_then(|b| b.checked_mul(self.nand_timing().pages_per_block as u64));
+        match total_pages {
+            None => errs.push(
+                "geometry overflows: channels x ways x blocks_per_chip x pages_per_block \
+                 exceeds u64"
+                    .into(),
+            ),
+            Some(total) => {
+                if self.logical_pages(total) > total {
+                    errs.push(format!(
+                        "logical capacity ({} pages) exceeds physical ({} pages): lower \
+                         utilization or raise over-provisioning",
+                        self.logical_pages(total),
+                        total
+                    ));
+                }
+            }
+        }
+        if self.mapping.mode != MapMode::Resident {
+            if self.ftl != FtlKind::PageMap {
+                errs.push("mapping.mode requires ftl = \"page_map\"".into());
+            }
+            if self.tiering.enabled {
+                errs.push(
+                    "mapping.mode cannot combine with tiering.enabled (the tiered FTL \
+                     keeps its own resident tables)"
+                        .into(),
+                );
+            }
+            if self.mapping.cache_pages == 0 {
+                errs.push("mapping.cache_pages must be >= 1".into());
+            }
+            if self.mapping.entries_per_page == 0 {
+                errs.push("mapping.entries_per_page must be >= 1".into());
+            }
+            if let Some(total) = total_pages {
+                let tpages = self
+                    .logical_pages(total)
+                    .div_ceil(self.mapping.entries_per_page.max(1) as u64);
+                if tpages >= u32::MAX as u64 {
+                    errs.push(format!(
+                        "mapping: {tpages} translation pages overflow the cache directory \
+                         (raise entries_per_page)"
+                    ));
+                }
+            }
         }
         if !(0.0..=0.5).contains(&self.params.alpha) {
             errs.push("alpha must be in [0, 1/2] (Eq. 1)".into());
@@ -755,6 +886,18 @@ impl SsdConfig {
                 "observe.timeline" => {
                     cfg.observe.timeline =
                         val.as_bool().ok_or_else(|| format!("{key}: want bool"))?
+                }
+                "mapping.mode" => {
+                    cfg.mapping.mode = val
+                        .as_str()
+                        .and_then(MapMode::parse)
+                        .ok_or_else(|| {
+                            format!("bad mapping.mode {val:?} (resident|demand|fmmu)")
+                        })?
+                }
+                "mapping.cache_pages" => cfg.mapping.cache_pages = req_u64(key, val)?,
+                "mapping.entries_per_page" => {
+                    cfg.mapping.entries_per_page = req_u32(key, val)?
                 }
                 other => return Err(format!("unknown config key: {other}")),
             }
@@ -1124,6 +1267,95 @@ timeline = true
         let mut t = d.observe;
         t.timeline = true;
         assert_eq!(t.reuse_sig(), d.observe.reuse_sig());
+    }
+
+    #[test]
+    fn mapping_section_parses_and_validates() {
+        let cfg = SsdConfig::from_toml(
+            r#"
+ways = 4
+[mapping]
+mode = "demand"
+cache_pages = 64
+entries_per_page = 512
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.mapping.mode, MapMode::Demand);
+        assert_eq!(cfg.mapping.cache_pages, 64);
+        assert_eq!(cfg.mapping.entries_per_page, 512);
+        assert_eq!(
+            SsdConfig::from_toml("[mapping]\nmode = \"fmmu\"").unwrap().mapping.mode,
+            MapMode::Fmmu
+        );
+        // Resident by default; a dormant block normalizes its sizing
+        // knobs out of the reuse fingerprint.
+        let d = SsdConfig::default();
+        assert_eq!(d.mapping.mode, MapMode::Resident);
+        let dormant = SsdConfig::from_toml(
+            "[mapping]\nmode = \"resident\"\ncache_pages = 7\nentries_per_page = 3",
+        )
+        .unwrap();
+        assert_eq!(dormant.mapping.reuse_sig(), d.mapping.reuse_sig());
+        // Dormant sizing knobs are not over-validated...
+        assert!(SsdConfig::from_toml("[mapping]\ncache_pages = 0").is_ok());
+        // ...but active ones are.
+        assert!(
+            SsdConfig::from_toml("[mapping]\nmode = \"demand\"\ncache_pages = 0").is_err()
+        );
+        assert!(SsdConfig::from_toml(
+            "[mapping]\nmode = \"demand\"\nentries_per_page = 0"
+        )
+        .is_err());
+        assert!(SsdConfig::from_toml("[mapping]\nmode = \"virtual\"").is_err());
+        // The tier pages the page-map FTL's table and cannot combine with
+        // the tiered FTL's resident scheme.
+        assert!(
+            SsdConfig::from_toml("ftl = \"hybrid\"\n[mapping]\nmode = \"demand\"").is_err()
+        );
+        assert!(SsdConfig::from_toml(
+            "cell = \"mlc\"\nways = 4\n[tiering]\nenabled = true\n\
+             [mapping]\nmode = \"fmmu\""
+        )
+        .is_err());
+    }
+
+    /// Regression (was a construction-time panic): geometry products that
+    /// wrap u64 must be config-load errors, not debug-overflow panics or
+    /// silently-wrapped capacities deep in `PageMapFtl::new`.
+    #[test]
+    fn overflowing_geometry_rejected_at_load() {
+        let err = SsdConfig::from_toml(
+            "channels = 65535\nways = 65535\nblocks_per_chip = 4000000000",
+        )
+        .unwrap_err();
+        assert!(err.contains("geometry overflows"), "{err}");
+        // The same shape through validate() directly (no TOML involved).
+        let mut c = SsdConfig::default();
+        c.channels = u16::MAX;
+        c.ways = u16::MAX;
+        c.blocks_per_chip = u32::MAX;
+        assert!(c.validate().iter().any(|e| e.contains("geometry overflows")));
+    }
+
+    /// Regression (was `assert!(logical_pages <= total_pages)` inside
+    /// `PageMapFtl::new`): capacity sizing that exceeds the physical array
+    /// must surface as a validation error.
+    #[test]
+    fn oversized_logical_capacity_rejected_at_load() {
+        let mut c = SsdConfig::default();
+        c.utilization = 1.5; // already invalid on its own...
+        assert!(!c.validate().is_empty());
+        // ...and the capacity check reports independently of the range
+        // check, so any sizing path that rounds past physical is caught.
+        let total = c.chips() as u64
+            * c.blocks_per_chip as u64
+            * c.nand_timing().pages_per_block as u64;
+        assert!(c.logical_pages(total) > total);
+        assert!(c
+            .validate()
+            .iter()
+            .any(|e| e.contains("exceeds physical")));
     }
 
     #[test]

@@ -1,0 +1,530 @@
+//! Demand-paged mapping tier (DFTL / FMMU direction).
+//!
+//! The fully-resident [`super::page_map::PageMapFtl`] assumes translation
+//! is free: every lookup hits an in-DRAM table. At multi-TB capacities
+//! that table itself lives in flash, split into *translation pages* of
+//! `entries_per_page` lpn→ppn entries, and the controller keeps only a
+//! cache of them in DRAM — so a host access whose covering translation
+//! page is not cached costs a **real flash read** before (demand mode) or
+//! alongside (FMMU mode) the data access, and evicting a dirtied
+//! translation page costs a flash program. Both become first-class DES
+//! jobs here: [`crate::controller::ftl::FtlOp::MapReadPage`] /
+//! [`MapProgramPage`](crate::controller::ftl::FtlOp::MapProgramPage),
+//! issued by the coordinator at the background class and contending for
+//! channel/way/bus with everything else.
+//!
+//! Two implementation points (the `[mapping]` TOML section picks one):
+//!
+//! * **`demand`** — DFTL-style firmware paging: a missed host op is
+//!   *deferred* until its fill read completes (the coordinator parks it in
+//!   a waiter list keyed on the map page). Misses serialize translation
+//!   before array access, the classic DFTL penalty.
+//! * **`fmmu`** — a hardware-automated map unit ("FMMU: A Hardware-
+//!   Automated Flash Map Management Unit for Scalable SSDs", PAPERS.md)
+//!   that overlaps translation with the array access: the fill read still
+//!   occupies bus/way (contention is real) but the host op proceeds
+//!   immediately.
+//!
+//! ## Scope of the timing model
+//!
+//! The tier is a *timing* model layered over the exact mapping state,
+//! which stays in the inner [`PageMapFtl`]'s packed-lazy tables (host RAM
+//! already scales with the touched footprint; see
+//! [`packed`](super::packed)). Translation page `t` lives at physical
+//! page `ppn == t` — translation pages number at most
+//! `logical_pages / entries_per_page`, far below the physical page count,
+//! and the identity keeps fills/write-backs trivially invertible while
+//! striping map traffic across channels exactly like data (the geometry
+//! stripes ppns channel-first). Map write-backs re-program the same ppn
+//! without an erase: the block-lifecycle cost of the map area is not
+//! modeled, only its bus/way/chip occupancy and the induced host-visible
+//! latency. GC-internal relocations update mapping entries without
+//! touching the cache — modeled map traffic is host-access-driven, the
+//! dominant term the FMMU paper measures.
+
+use crate::controller::ftl::page_map::PageMapFtl;
+use crate::controller::ftl::steady::GcTuning;
+use crate::controller::ftl::{Ftl, FtlOp, MapAccess};
+use crate::nand::geometry::Geometry;
+
+const NIL: u32 = u32::MAX;
+
+const ABSENT: u8 = 0;
+/// Fill read in flight; entry pinned (never evicted) until it lands.
+const FILL_CLEAN: u8 = 1;
+/// Fill in flight and a write already dirtied the entry.
+const FILL_DIRTY: u8 = 2;
+const RES_CLEAN: u8 = 3;
+const RES_DIRTY: u8 = 4;
+
+/// Outcome of one [`MapCache::access`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheAccess {
+    /// Translation page resident — no flash traffic.
+    Hit,
+    /// Miss on a page whose fill read is already in flight: no new fill,
+    /// but the access still pays the miss (demand mode parks it behind
+    /// the same fill).
+    MissInFlight,
+    /// Miss that starts a fill read; `writeback` names the dirty
+    /// translation page displaced to make room, if any.
+    MissFill { writeback: Option<u64> },
+}
+
+/// LRU cache directory over translation pages.
+///
+/// Intrusive doubly-linked LRU over `u32` indices (the config validator
+/// bounds the translation-page count below `u32::MAX`); the directory
+/// costs 9 bytes per translation page — ~5 MB for a 2-TB drive — while
+/// the *cached capacity* is `capacity` pages. A capacity covering every
+/// translation page initializes fully resident ("warm"): zero misses,
+/// zero evictions, bit-identical event streams to the resident FTL
+/// (golden-tested in `rust/tests/mapping.rs`).
+#[derive(Debug)]
+pub struct MapCache {
+    capacity: u64,
+    warm: bool,
+    state: Vec<u8>,
+    prev: Vec<u32>,
+    next: Vec<u32>,
+    /// MRU end / LRU end of the resident list (filling pages are pinned
+    /// outside the list).
+    head: u32,
+    tail: u32,
+    /// Resident + filling entries (may transiently exceed `capacity` when
+    /// every resident page is pinned by an in-flight fill).
+    occupied: u64,
+}
+
+impl MapCache {
+    pub fn new(capacity: u64, tpages: u64) -> MapCache {
+        assert!(
+            tpages < u32::MAX as u64,
+            "translation-page count {tpages} overflows the cache directory"
+        );
+        let warm = capacity >= tpages;
+        let mut c = MapCache {
+            capacity,
+            warm,
+            state: Vec::new(),
+            prev: Vec::new(),
+            next: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            occupied: 0,
+        };
+        c.init(tpages);
+        c
+    }
+
+    fn init(&mut self, tpages: u64) {
+        let n = tpages as usize;
+        self.state.clear();
+        self.state
+            .resize(n, if self.warm { RES_CLEAN } else { ABSENT });
+        self.prev.clear();
+        self.next.clear();
+        if !self.warm {
+            self.prev.resize(n, NIL);
+            self.next.resize(n, NIL);
+        }
+        self.head = NIL;
+        self.tail = NIL;
+        self.occupied = if self.warm { tpages } else { 0 };
+    }
+
+    /// Return to the just-initialized state (workspace reuse).
+    pub fn reset(&mut self) {
+        let tpages = self.state.len() as u64;
+        self.init(tpages);
+    }
+
+    /// Is the cache sized to hold every translation page (and therefore
+    /// guaranteed miss-free)?
+    pub fn is_warm(&self) -> bool {
+        self.warm
+    }
+
+    /// Resident or in-flight translation pages.
+    pub fn occupied(&self) -> u64 {
+        self.occupied
+    }
+
+    fn unlink(&mut self, t: u32) {
+        let (p, n) = (self.prev[t as usize], self.next[t as usize]);
+        if p == NIL {
+            self.head = n;
+        } else {
+            self.next[p as usize] = n;
+        }
+        if n == NIL {
+            self.tail = p;
+        } else {
+            self.prev[n as usize] = p;
+        }
+        self.prev[t as usize] = NIL;
+        self.next[t as usize] = NIL;
+    }
+
+    fn push_front(&mut self, t: u32) {
+        self.prev[t as usize] = NIL;
+        self.next[t as usize] = self.head;
+        if self.head != NIL {
+            self.prev[self.head as usize] = t;
+        }
+        self.head = t;
+        if self.tail == NIL {
+            self.tail = t;
+        }
+    }
+
+    /// Evict the LRU resident page; returns it if it was dirty (needs a
+    /// write-back program). `None` with no eviction can only happen when
+    /// every resident page is pinned by an in-flight fill.
+    fn evict_lru(&mut self) -> Option<u64> {
+        if self.tail == NIL {
+            return None;
+        }
+        let t = self.tail;
+        self.unlink(t);
+        let dirty = self.state[t as usize] == RES_DIRTY;
+        self.state[t as usize] = ABSENT;
+        self.occupied -= 1;
+        dirty.then_some(t as u64)
+    }
+
+    /// Look up translation page `t` for a host access; `write` dirties it.
+    pub fn access(&mut self, t: u64, write: bool) -> CacheAccess {
+        let i = t as usize;
+        if self.warm {
+            if write {
+                self.state[i] = RES_DIRTY;
+            }
+            return CacheAccess::Hit;
+        }
+        match self.state[i] {
+            RES_CLEAN | RES_DIRTY => {
+                self.unlink(t as u32);
+                self.push_front(t as u32);
+                if write {
+                    self.state[i] = RES_DIRTY;
+                }
+                CacheAccess::Hit
+            }
+            FILL_CLEAN | FILL_DIRTY => {
+                if write {
+                    self.state[i] = FILL_DIRTY;
+                }
+                CacheAccess::MissInFlight
+            }
+            _ => {
+                let writeback = if self.occupied >= self.capacity {
+                    self.evict_lru()
+                } else {
+                    None
+                };
+                self.state[i] = if write { FILL_DIRTY } else { FILL_CLEAN };
+                self.occupied += 1;
+                CacheAccess::MissFill { writeback }
+            }
+        }
+    }
+
+    /// The fill read for translation page `t` completed.
+    pub fn fill_done(&mut self, t: u64) {
+        let i = t as usize;
+        debug_assert!(
+            self.state[i] == FILL_CLEAN || self.state[i] == FILL_DIRTY,
+            "fill_done on translation page {t} not in flight"
+        );
+        self.state[i] = if self.state[i] == FILL_DIRTY {
+            RES_DIRTY
+        } else {
+            RES_CLEAN
+        };
+        self.push_front(t as u32);
+    }
+}
+
+/// [`PageMapFtl`] wrapped with a demand-paged mapping tier: identical
+/// mapping decisions, plus [`Ftl::map_access`]/[`Ftl::map_fill_done`]
+/// hooks that surface map-cache misses as flash traffic.
+pub struct DemandPagedFtl {
+    inner: PageMapFtl,
+    cache: MapCache,
+    entries_per_page: u64,
+    /// FMMU mode: overlap translation with array access (never defer).
+    fmmu: bool,
+}
+
+impl DemandPagedFtl {
+    pub fn new(
+        geom: Geometry,
+        logical_pages: u64,
+        cache_pages: u64,
+        entries_per_page: u64,
+        fmmu: bool,
+    ) -> DemandPagedFtl {
+        assert!(entries_per_page >= 1, "need at least one entry per page");
+        let tpages = logical_pages.div_ceil(entries_per_page).max(1);
+        assert!(
+            tpages <= geom.total_pages(),
+            "translation pages exceed physical pages"
+        );
+        DemandPagedFtl {
+            inner: PageMapFtl::new(geom, logical_pages),
+            cache: MapCache::new(cache_pages, tpages),
+            entries_per_page,
+            fmmu,
+        }
+    }
+
+    pub fn cache(&self) -> &MapCache {
+        &self.cache
+    }
+}
+
+impl Ftl for DemandPagedFtl {
+    fn translate(&self, lpn: u64) -> Option<u64> {
+        self.inner.translate(lpn)
+    }
+
+    fn plan_write_into(&mut self, lpn: u64, out: &mut Vec<FtlOp>) -> u64 {
+        self.inner.plan_write_into(lpn, out)
+    }
+
+    fn set_gc_tuning(&mut self, tuning: GcTuning) {
+        self.inner.set_gc_tuning(tuning);
+    }
+
+    fn plan_wear_level_into(&mut self, chip: usize, out: &mut Vec<FtlOp>) -> bool {
+        self.inner.plan_wear_level_into(chip, out)
+    }
+
+    fn map_access(&mut self, lpn: u64, write: bool, out: &mut Vec<FtlOp>) -> MapAccess {
+        let t = lpn / self.entries_per_page;
+        let defer = !self.fmmu;
+        match self.cache.access(t, write) {
+            CacheAccess::Hit => MapAccess::Hit,
+            CacheAccess::MissInFlight => MapAccess::Miss { map_ppn: t, defer },
+            CacheAccess::MissFill { writeback } => {
+                // Write-back first: the program leaves before the fill so
+                // the displaced dirty page is never overtaken by its
+                // replacement on the same chip queue.
+                if let Some(wb) = writeback {
+                    out.push(FtlOp::MapProgramPage { ppn: wb });
+                }
+                out.push(FtlOp::MapReadPage { ppn: t });
+                MapAccess::Miss { map_ppn: t, defer }
+            }
+        }
+    }
+
+    fn map_fill_done(&mut self, map_ppn: u64) {
+        self.cache.fill_done(map_ppn);
+    }
+
+    fn reset(&mut self) {
+        self.inner.reset();
+        self.cache.reset();
+    }
+
+    fn geometry(&self) -> &Geometry {
+        self.inner.geometry()
+    }
+    fn logical_capacity(&self) -> u64 {
+        self.inner.logical_capacity()
+    }
+    fn free_pages(&self) -> u64 {
+        self.inner.free_pages()
+    }
+    fn relocations(&self) -> u64 {
+        self.inner.relocations()
+    }
+    fn erases(&self) -> u64 {
+        self.inner.erases()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    fn geom() -> Geometry {
+        Geometry {
+            channels: 2,
+            ways: 2,
+            blocks_per_chip: 8,
+            pages_per_block: 16,
+            page_bytes: 2048,
+        }
+    }
+
+    #[test]
+    fn cache_hits_after_fill_and_evicts_lru() {
+        let mut c = MapCache::new(2, 8);
+        assert!(!c.is_warm());
+        assert_eq!(c.access(0, false), CacheAccess::MissFill { writeback: None });
+        c.fill_done(0);
+        assert_eq!(c.access(0, false), CacheAccess::Hit);
+        assert_eq!(c.access(1, false), CacheAccess::MissFill { writeback: None });
+        c.fill_done(1);
+        // Cache full {0, 1}; 0 is LRU (1 filled last). A third page
+        // evicts 0 — clean, so no write-back.
+        assert_eq!(c.access(2, false), CacheAccess::MissFill { writeback: None });
+        c.fill_done(2);
+        assert_eq!(c.access(0, false), CacheAccess::MissFill { writeback: None });
+        c.fill_done(0);
+        assert_eq!(c.occupied(), 2);
+    }
+
+    #[test]
+    fn dirty_eviction_reports_writeback() {
+        let mut c = MapCache::new(1, 4);
+        assert_eq!(c.access(3, true), CacheAccess::MissFill { writeback: None });
+        c.fill_done(3);
+        // Page 3 is dirty; filling another must write it back.
+        assert_eq!(
+            c.access(1, false),
+            CacheAccess::MissFill {
+                writeback: Some(3)
+            }
+        );
+        c.fill_done(1);
+        // Page 1 stayed clean: next eviction is silent.
+        assert_eq!(c.access(2, false), CacheAccess::MissFill { writeback: None });
+    }
+
+    #[test]
+    fn in_flight_fills_dedup_and_pin() {
+        let mut c = MapCache::new(1, 4);
+        assert_eq!(c.access(0, false), CacheAccess::MissFill { writeback: None });
+        // Same page again before the fill lands: no second fill.
+        assert_eq!(c.access(0, true), CacheAccess::MissInFlight);
+        // A different page while the only slot is pinned: fill starts,
+        // nothing evictable, occupancy transiently exceeds capacity.
+        assert_eq!(c.access(1, false), CacheAccess::MissFill { writeback: None });
+        assert_eq!(c.occupied(), 2);
+        c.fill_done(0);
+        // The in-flight write dirtied page 0, so its eviction writes back.
+        c.fill_done(1);
+        assert_eq!(
+            c.access(2, false),
+            CacheAccess::MissFill {
+                writeback: Some(0)
+            }
+        );
+    }
+
+    #[test]
+    fn warm_cache_never_misses() {
+        let mut c = MapCache::new(8, 8);
+        assert!(c.is_warm());
+        for t in 0..8 {
+            assert_eq!(c.access(t, t % 2 == 0), CacheAccess::Hit);
+        }
+        c.reset();
+        assert_eq!(c.access(7, false), CacheAccess::Hit);
+    }
+
+    /// Randomized oracle: the demand-paged FTL makes bit-identical mapping
+    /// decisions to the fully-resident one — the cache is a timing layer,
+    /// never a correctness layer.
+    #[test]
+    fn mapping_oracle_matches_resident_ftl() {
+        for seed in [1u64, 7, 42] {
+            let mut resident = PageMapFtl::new(geom(), 128);
+            let mut demand = DemandPagedFtl::new(geom(), 128, 2, 16, false);
+            let mut rng = Prng::new(seed);
+            let mut map_ops = Vec::new();
+            for _ in 0..1500 {
+                let lpn = rng.next_bounded(128);
+                // Drive the cache like the coordinator would; complete
+                // fills immediately (timing is irrelevant to mapping).
+                map_ops.clear();
+                if let MapAccess::Miss { map_ppn, .. } =
+                    demand.map_access(lpn, true, &mut map_ops)
+                {
+                    if map_ops
+                        .iter()
+                        .any(|op| matches!(op, FtlOp::MapReadPage { .. }))
+                    {
+                        demand.map_fill_done(map_ppn);
+                    }
+                }
+                let a = resident.plan_write(lpn);
+                let b = demand.plan_write(lpn);
+                assert_eq!(a.target_ppn, b.target_ppn, "seed {seed} lpn {lpn}");
+                assert_eq!(a.background, b.background, "seed {seed} lpn {lpn}");
+            }
+            for lpn in 0..128 {
+                assert_eq!(resident.translate(lpn), demand.translate(lpn));
+            }
+            assert_eq!(resident.erases(), demand.erases());
+        }
+    }
+
+    #[test]
+    fn miss_emits_fill_and_dirty_writeback_ops() {
+        let mut f = DemandPagedFtl::new(geom(), 128, 1, 16, true);
+        let mut out = Vec::new();
+        // lpn 5 → translation page 0: cold miss, fill only.
+        let a = f.map_access(5, true, &mut out);
+        assert!(matches!(
+            a,
+            MapAccess::Miss {
+                map_ppn: 0,
+                defer: false
+            }
+        ));
+        assert_eq!(out, vec![FtlOp::MapReadPage { ppn: 0 }]);
+        f.map_fill_done(0);
+        // lpn 20 → page 1: evicts dirty page 0, write-back then fill.
+        out.clear();
+        f.map_access(20, false, &mut out);
+        assert_eq!(
+            out,
+            vec![
+                FtlOp::MapProgramPage { ppn: 0 },
+                FtlOp::MapReadPage { ppn: 1 }
+            ]
+        );
+    }
+
+    #[test]
+    fn demand_mode_defers_fmmu_does_not() {
+        let mut out = Vec::new();
+        let mut d = DemandPagedFtl::new(geom(), 128, 1, 16, false);
+        assert!(matches!(
+            d.map_access(0, false, &mut out),
+            MapAccess::Miss { defer: true, .. }
+        ));
+        out.clear();
+        let mut h = DemandPagedFtl::new(geom(), 128, 1, 16, true);
+        assert!(matches!(
+            h.map_access(0, false, &mut out),
+            MapAccess::Miss { defer: false, .. }
+        ));
+    }
+
+    #[test]
+    fn reset_restores_cold_cache() {
+        let mut f = DemandPagedFtl::new(geom(), 128, 2, 16, false);
+        let mut out = Vec::new();
+        f.map_access(0, true, &mut out);
+        if let MapAccess::Miss { map_ppn, .. } = f.map_access(0, true, &mut out) {
+            let _ = map_ppn;
+        }
+        f.map_fill_done(0);
+        f.plan_write(0);
+        f.reset();
+        assert_eq!(f.translate(0), None);
+        assert_eq!(f.cache().occupied(), 0);
+        out.clear();
+        assert!(matches!(
+            f.map_access(0, false, &mut out),
+            MapAccess::Miss { .. }
+        ));
+    }
+}

@@ -13,7 +13,9 @@
 //! Both emit *plans* — ordered lists of physical page operations — which the
 //! coordinator turns into DES page jobs; the FTL itself is time-free.
 
+pub mod demand;
 pub mod hybrid;
+pub mod packed;
 pub mod page_map;
 pub mod steady;
 pub mod tiered;
@@ -36,6 +38,38 @@ pub enum FtlOp {
     MigReadPage { ppn: u64 },
     /// Tier-migration program (MLC-tier destination page).
     MigProgramPage { ppn: u64 },
+    /// Demand-paged mapping tier: read the translation page stored at
+    /// physical page `ppn` (a map-cache miss fill). Same bus/array cost as
+    /// [`ReadPage`](FtlOp::ReadPage); the distinct variant lets the
+    /// coordinator tag the job `MAP_REQ` so mapping traffic is counted —
+    /// and stall-attributed — apart from host and GC work (see [`demand`]).
+    MapReadPage { ppn: u64 },
+    /// Demand-paged mapping tier: program back the dirty translation page
+    /// stored at physical page `ppn` (a map-cache eviction write-back).
+    MapProgramPage { ppn: u64 },
+}
+
+/// Outcome of consulting the mapping tier for one host page access
+/// ([`Ftl::map_access`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MapAccess {
+    /// The FTL keeps its whole table resident — translation is free
+    /// (the default for every scheme without a mapping tier).
+    Resident,
+    /// The covering translation page is cached — translation is free.
+    Hit,
+    /// The covering translation page is not resident: a fill read (and
+    /// possibly a dirty-eviction write-back) was appended to `out`.
+    Miss {
+        /// Physical page holding the missed translation page; the
+        /// coordinator keys deferred host work on it and hands it back
+        /// via [`Ftl::map_fill_done`] when the fill read completes.
+        map_ppn: u64,
+        /// Demand mode: the host op must wait for the fill to complete.
+        /// The FMMU variant overlaps translation with array access and
+        /// never defers (the miss still costs bus/way contention).
+        defer: bool,
+    },
 }
 
 /// The plan for servicing one logical page write: any GC/merge traffic
@@ -93,6 +127,25 @@ pub trait Ftl {
     fn plan_wear_level_into(&mut self, chip: usize, out: &mut Vec<FtlOp>) -> bool {
         let _ = (chip, out);
         false
+    }
+
+    /// Consult the demand-paged mapping tier for a host access to `lpn`
+    /// (`write` distinguishes lookups that will dirty the translation
+    /// page). On a miss the tier appends its fill/write-back flash ops to
+    /// `out`; the coordinator issues them as `MAP_REQ` jobs. The default —
+    /// every fully-resident scheme — reports [`MapAccess::Resident`] and
+    /// touches nothing.
+    fn map_access(&mut self, lpn: u64, write: bool, out: &mut Vec<FtlOp>) -> MapAccess {
+        let _ = (lpn, write, out);
+        MapAccess::Resident
+    }
+
+    /// A [`FtlOp::MapReadPage`] fill issued by
+    /// [`map_access`](Ftl::map_access) completed for the translation page
+    /// stored at `map_ppn`; the tier marks it resident. Default: nothing
+    /// to do.
+    fn map_fill_done(&mut self, map_ppn: u64) {
+        let _ = map_ppn;
     }
 
     /// Return to the just-initialized state (empty mapping, all blocks

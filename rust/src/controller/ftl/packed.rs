@@ -1,0 +1,198 @@
+//! Compact lazily-allocated mapping storage.
+//!
+//! The fully-resident `Vec<u64>` pair the page-map FTL shipped with costs
+//! 16 bytes per physical page — a simulated 2-TB drive would need ~10 GB
+//! of host RAM before the first event fires. [`PackedLazyArray`] brings
+//! that down along two independent axes:
+//!
+//! * **Packed entries.** The entry width is derived from the value domain
+//!   (e.g. 30 bits for a drive with 6×10⁸ physical pages) instead of a
+//!   full `u64`, an ~2× saving at realistic geometries.
+//! * **Lazy segments.** Storage is split into fixed 2¹⁶-entry segments
+//!   allocated on first write; reads of untouched segments return the
+//!   invalid sentinel without allocating. Host RAM therefore scales with
+//!   the *touched* footprint of the workload, not the drive capacity —
+//!   the property the CI memory-footprint lane pins.
+//!
+//! The externally-visible sentinel is `u64::MAX` ([`INVALID`]), matching
+//! the FTL's historical convention; internally it is stored as the
+//! all-ones pattern of the packed width, which is why the width is sized
+//! so `domain` itself (not just `domain - 1`) fits.
+
+/// External sentinel for "no mapping" (all entries start as this).
+pub const INVALID: u64 = u64::MAX;
+
+/// Entries per lazily-allocated segment.
+const SEG_ENTRIES: u64 = 1 << 16;
+
+/// A fixed-length array of packed unsigned entries in `0..domain`, all
+/// initialized to [`INVALID`], with segment-granular lazy allocation.
+#[derive(Debug, Clone)]
+pub struct PackedLazyArray {
+    len: u64,
+    /// Bits per entry; sized so the all-ones sentinel is distinct from
+    /// every valid value.
+    width: u32,
+    /// `width` low bits set (`!0` when `width == 64`).
+    mask: u64,
+    segments: Vec<Option<Box<[u64]>>>,
+}
+
+impl PackedLazyArray {
+    /// An array of `len` entries holding values in `0..domain`, all
+    /// [`INVALID`].
+    pub fn new(len: u64, domain: u64) -> PackedLazyArray {
+        // The all-ones pattern is reserved for the sentinel, so the width
+        // must fit `domain` itself: values go up to domain-1, sentinel is
+        // `mask == domain.next_power_of_two()-ish`.
+        let width = (64 - domain.leading_zeros()).max(1);
+        let mask = if width == 64 { !0u64 } else { (1u64 << width) - 1 };
+        debug_assert!(domain <= mask);
+        let segs = len.div_ceil(SEG_ENTRIES) as usize;
+        PackedLazyArray {
+            len,
+            width,
+            mask,
+            segments: vec![None; segs],
+        }
+    }
+
+    pub fn len(&self) -> u64 {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Entry `i`, or [`INVALID`] if never set (or set to [`INVALID`]).
+    pub fn get(&self, i: u64) -> u64 {
+        debug_assert!(i < self.len, "index {i} out of bounds (len {})", self.len);
+        let seg = match &self.segments[(i / SEG_ENTRIES) as usize] {
+            Some(s) => s,
+            None => return INVALID,
+        };
+        let bit = (i % SEG_ENTRIES) * self.width as u64;
+        let (w, sh) = ((bit / 64) as usize, (bit % 64) as u32);
+        let v = if sh + self.width <= 64 {
+            (seg[w] >> sh) & self.mask
+        } else {
+            ((seg[w] >> sh) | (seg[w + 1] << (64 - sh))) & self.mask
+        };
+        if v == self.mask {
+            INVALID
+        } else {
+            v
+        }
+    }
+
+    /// Set entry `i` to `v` (which must be `< domain`) or to [`INVALID`].
+    pub fn set(&mut self, i: u64, v: u64) {
+        debug_assert!(i < self.len, "index {i} out of bounds (len {})", self.len);
+        let v = if v == INVALID {
+            self.mask
+        } else {
+            debug_assert!(v < self.mask, "value {v} does not fit width {}", self.width);
+            v
+        };
+        let words = (SEG_ENTRIES * self.width as u64).div_ceil(64) as usize;
+        let seg = self.segments[(i / SEG_ENTRIES) as usize]
+            // Fresh segments are all-ones: every entry reads INVALID.
+            .get_or_insert_with(|| vec![!0u64; words].into_boxed_slice());
+        let bit = (i % SEG_ENTRIES) * self.width as u64;
+        let (w, sh) = ((bit / 64) as usize, (bit % 64) as u32);
+        seg[w] = (seg[w] & !(self.mask << sh)) | (v << sh);
+        if sh + self.width > 64 {
+            let spill = sh + self.width - 64;
+            let himask = (1u64 << spill) - 1;
+            seg[w + 1] = (seg[w + 1] & !himask) | (v >> (64 - sh));
+        }
+    }
+
+    /// Return every entry to [`INVALID`] and release all segment storage.
+    pub fn reset(&mut self) {
+        for s in &mut self.segments {
+            *s = None;
+        }
+    }
+
+    /// Bytes of segment storage currently allocated (the lazy footprint;
+    /// used by the memory-budget tests).
+    pub fn resident_bytes(&self) -> u64 {
+        let words = (SEG_ENTRIES * self.width as u64).div_ceil(64);
+        self.segments.iter().flatten().count() as u64 * words * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn width_is_derived_from_domain() {
+        // domain 8 needs 4 bits (values 0..=7 plus a distinct sentinel).
+        assert_eq!(PackedLazyArray::new(10, 8).width, 4);
+        assert_eq!(PackedLazyArray::new(10, 7).width, 3);
+        assert_eq!(PackedLazyArray::new(10, 1).width, 1);
+        assert_eq!(PackedLazyArray::new(10, u64::MAX).width, 64);
+        // ~600M physical pages (the 2-TB preset) packs into 30 bits.
+        assert_eq!(PackedLazyArray::new(4, 603_979_776).width, 30);
+    }
+
+    #[test]
+    fn unset_entries_read_invalid_without_allocating() {
+        let a = PackedLazyArray::new(1 << 20, 1 << 30);
+        assert_eq!(a.get(0), INVALID);
+        assert_eq!(a.get((1 << 20) - 1), INVALID);
+        assert_eq!(a.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn set_get_roundtrips_across_word_boundaries() {
+        // width 31: entries straddle u64 words at most offsets.
+        let domain = (1u64 << 31) - 2;
+        let mut a = PackedLazyArray::new(1000, domain);
+        for i in 0..1000u64 {
+            a.set(i, (i * 2_654_435_761) % domain);
+        }
+        for i in 0..1000u64 {
+            assert_eq!(a.get(i), (i * 2_654_435_761) % domain, "entry {i}");
+        }
+        // Overwrites stick and INVALID round-trips.
+        a.set(500, 42);
+        assert_eq!(a.get(500), 42);
+        a.set(500, INVALID);
+        assert_eq!(a.get(500), INVALID);
+        assert_eq!(a.get(499), (499 * 2_654_435_761) % domain);
+        assert_eq!(a.get(501), (501 * 2_654_435_761) % domain);
+    }
+
+    #[test]
+    fn full_width_entries_work() {
+        let mut a = PackedLazyArray::new(10, u64::MAX);
+        a.set(3, u64::MAX - 1);
+        assert_eq!(a.get(3), u64::MAX - 1);
+        assert_eq!(a.get(4), INVALID);
+    }
+
+    #[test]
+    fn only_touched_segments_allocate() {
+        let mut a = PackedLazyArray::new(10 * SEG_ENTRIES, 1 << 20);
+        a.set(0, 1);
+        a.set(9 * SEG_ENTRIES + 5, 2);
+        let per_seg = (SEG_ENTRIES * 21).div_ceil(64) * 8;
+        assert_eq!(a.resident_bytes(), 2 * per_seg);
+        assert_eq!(a.get(0), 1);
+        assert_eq!(a.get(9 * SEG_ENTRIES + 5), 2);
+        assert_eq!(a.get(5 * SEG_ENTRIES), INVALID);
+    }
+
+    #[test]
+    fn reset_releases_storage() {
+        let mut a = PackedLazyArray::new(100, 1000);
+        a.set(7, 99);
+        a.reset();
+        assert_eq!(a.get(7), INVALID);
+        assert_eq!(a.resident_bytes(), 0);
+    }
+}

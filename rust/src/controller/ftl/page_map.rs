@@ -6,6 +6,7 @@
 //! owns the mapping tables (lpn ↔ ppn) and drives the copy-back loops
 //! that keep them consistent across collections.
 
+use crate::controller::ftl::packed::PackedLazyArray;
 use crate::controller::ftl::steady::{ChipAllocator, GcTuning};
 use crate::controller::ftl::{Ftl, FtlOp};
 use crate::nand::geometry::{Geometry, PageAddr};
@@ -20,10 +21,15 @@ const INVALID: u64 = u64::MAX;
 /// sequential traces.
 pub struct PageMapFtl {
     geom: Geometry,
-    /// lpn -> ppn.
-    map: Vec<u64>,
-    /// ppn -> lpn (reverse map, for GC).
-    rmap: Vec<u64>,
+    /// Exported logical capacity in pages.
+    logical: u64,
+    /// lpn -> ppn. Packed to the geometry's ppn width and allocated
+    /// lazily in segments, so multi-TB drives cost host RAM proportional
+    /// to the *touched* logical footprint, not capacity (see
+    /// [`crate::controller::ftl::packed`]).
+    map: PackedLazyArray,
+    /// ppn -> lpn (reverse map, for GC). Same packed-lazy storage.
+    rmap: PackedLazyArray,
     chips: Vec<ChipAllocator>,
     /// Next chip for striped allocation (round robin).
     next_chip: usize,
@@ -40,7 +46,10 @@ pub struct PageMapFtl {
 
 impl PageMapFtl {
     /// `logical_pages` is the exported capacity (must leave spare blocks for
-    /// GC; typical over-provisioning is ≥ 2 blocks/chip).
+    /// GC; typical over-provisioning is ≥ 2 blocks/chip). Out-of-range
+    /// capacities are rejected at config load by
+    /// [`crate::config::SsdConfig::validate`]; the assert below is defense
+    /// in depth for direct construction.
     pub fn new(geom: Geometry, logical_pages: u64) -> PageMapFtl {
         let chips = (0..geom.chips())
             .map(|_| ChipAllocator::new(geom.blocks_per_chip))
@@ -50,8 +59,9 @@ impl PageMapFtl {
             "logical capacity exceeds physical"
         );
         PageMapFtl {
-            map: vec![INVALID; logical_pages as usize],
-            rmap: vec![INVALID; geom.total_pages() as usize],
+            logical: logical_pages,
+            map: PackedLazyArray::new(logical_pages, geom.total_pages()),
+            rmap: PackedLazyArray::new(geom.total_pages(), logical_pages),
             chips,
             next_chip: 0,
             tuning: GcTuning::default(),
@@ -123,14 +133,14 @@ impl PageMapFtl {
     fn relocate_block(&mut self, chip: usize, vblock: u32, out: &mut Vec<FtlOp>) {
         for page in 0..self.geom.pages_per_block {
             let src = self.compose_ppn(chip, vblock, page);
-            let lpn = self.rmap[src as usize];
+            let lpn = self.rmap.get(src);
             if lpn != INVALID {
                 out.push(FtlOp::ReadPage { ppn: src });
                 let dst = self.alloc_on_chip(chip, out);
                 out.push(FtlOp::ProgramPage { ppn: dst });
-                self.map[lpn as usize] = dst;
-                self.rmap[dst as usize] = lpn;
-                self.rmap[src as usize] = INVALID;
+                self.map.set(lpn, dst);
+                self.rmap.set(dst, lpn);
+                self.rmap.set(src, INVALID);
                 let (_, dblock, _) = self.decompose(dst);
                 self.chips[chip].valid[dblock as usize] += 1;
                 self.chips[chip].valid[vblock as usize] -= 1;
@@ -192,16 +202,19 @@ impl PageMapFtl {
 
 impl Ftl for PageMapFtl {
     fn translate(&self, lpn: u64) -> Option<u64> {
-        let p = *self.map.get(lpn as usize)?;
+        if lpn >= self.logical {
+            return None;
+        }
+        let p = self.map.get(lpn);
         (p != INVALID).then_some(p)
     }
 
     fn plan_write_into(&mut self, lpn: u64, out: &mut Vec<FtlOp>) -> u64 {
-        assert!((lpn as usize) < self.map.len(), "lpn out of range");
+        assert!(lpn < self.logical, "lpn out of range");
         // Invalidate the old location.
-        let old = self.map[lpn as usize];
+        let old = self.map.get(lpn);
         if old != INVALID {
-            self.rmap[old as usize] = INVALID;
+            self.rmap.set(old, INVALID);
             let (chip, block, _) = self.decompose(old);
             self.chips[chip].valid[block as usize] -= 1;
         }
@@ -215,8 +228,8 @@ impl Ftl for PageMapFtl {
             self.maybe_static_wl(chip, out);
         }
         let ppn = self.alloc_on_chip(chip, out);
-        self.map[lpn as usize] = ppn;
-        self.rmap[ppn as usize] = lpn;
+        self.map.set(lpn, ppn);
+        self.rmap.set(ppn, lpn);
         let (c, block, _) = self.decompose(ppn);
         self.chips[c].valid[block as usize] += 1;
         ppn
@@ -244,8 +257,8 @@ impl Ftl for PageMapFtl {
     }
 
     fn reset(&mut self) {
-        self.map.fill(INVALID);
-        self.rmap.fill(INVALID);
+        self.map.reset();
+        self.rmap.reset();
         let blocks = self.geom.blocks_per_chip;
         for c in &mut self.chips {
             c.reset(blocks);
@@ -261,7 +274,7 @@ impl Ftl for PageMapFtl {
         &self.geom
     }
     fn logical_capacity(&self) -> u64 {
-        self.map.len() as u64
+        self.logical
     }
     fn free_pages(&self) -> u64 {
         self.free_pages

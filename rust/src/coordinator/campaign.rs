@@ -88,6 +88,23 @@ pub struct SimReport {
     pub slc_read_share: f64,
     /// Fraction of NAND array energy spent on migration programs.
     pub mig_energy_share: f64,
+    /// Demand-paged mapping tier accounting (`[mapping]`,
+    /// [`crate::controller::ftl::demand`]; all zero for fully-resident
+    /// mapping). Map-cache hits / misses over the run.
+    pub map_hits: u64,
+    pub map_misses: u64,
+    /// Hit fraction over all cache-consulting lookups (NaN when the
+    /// mapping tier was never consulted).
+    pub map_hit_rate: f64,
+    /// Translation-page fill reads (subset of `pages_read`).
+    pub map_pages_read: u64,
+    /// Translation-page write-back programs (subset of `pages_programmed`,
+    /// in the write-amplification numerator).
+    pub map_pages_programmed: u64,
+    /// Host page ops deferred behind a fill (demand mode only).
+    pub map_deferred: u64,
+    /// Mean translation stall per deferred op, µs (NaN when none deferred).
+    pub map_wait_mean_us: f64,
     /// Per-stream results, indexed by stream id (empty for single-stream
     /// traces — the paper's regime costs nothing).
     pub streams: Vec<StreamReport>,
@@ -222,6 +239,28 @@ fn report_from(
             }
         },
         mig_energy_share: sim.energy.mig_share(),
+        map_hits: sim.counters.map_hits,
+        map_misses: sim.counters.map_misses,
+        map_hit_rate: {
+            let total = sim.counters.map_hits + sim.counters.map_misses;
+            if total == 0 {
+                f64::NAN
+            } else {
+                sim.counters.map_hits as f64 / total as f64
+            }
+        },
+        map_pages_read: sim.counters.map_pages_read,
+        map_pages_programmed: sim.counters.map_pages_programmed,
+        map_deferred: sim.counters.map_deferred,
+        map_wait_mean_us: {
+            if sim.counters.map_deferred == 0 {
+                f64::NAN
+            } else {
+                sim.counters.map_wait_ps as f64
+                    / sim.counters.map_deferred as f64
+                    / 1_000_000.0
+            }
+        },
         streams,
         fairness,
         observe: sim.take_observe_report(),

@@ -1,20 +1,21 @@
 //! The experiments as reusable drivers (E1–E5 from the paper, E6 open-loop
 //! load, E7 steady-state, E8 tiered SLC/MLC, E9 multi-tenant QoS, E10
-//! bottleneck observation) — shared by the CLI (`ddrnand paper`,
-//! `sweep-ways`, `sweep-load`, `sweep-steady`, `analyze`, …) and the bench
-//! targets (`cargo bench --bench bench_fig8_table3`, …).
+//! bottleneck observation, E11 demand-paged mapping) — shared by the CLI
+//! (`ddrnand paper`, `sweep-ways`, `sweep-load`, `sweep-steady`,
+//! `analyze`, …) and the bench targets (`cargo bench --bench
+//! bench_fig8_table3`, …).
 //!
 //! Each driver runs the DES over the same grid as the paper's table and
 //! returns rows paired with the paper's published values so callers can
 //! print paper-vs-measured deltas (EXPERIMENTS.md is generated from these).
 
 use crate::analytic::paper;
-use crate::config::{ArrivalKind, EngineConfig, SsdConfig};
+use crate::config::{ArrivalKind, EngineConfig, MapMode, SsdConfig};
 use crate::controller::sched::SchedKind;
 use crate::coordinator::campaign::{AccessPattern, Campaign, SimReport, SimWorkspace, TenantSpec};
 use crate::coordinator::pool::ThreadPool;
 use crate::host::link::HostLinkKind;
-use crate::host::trace::{CLASS_BULK, CLASS_URGENT, RequestKind};
+use crate::host::trace::{CLASS_BULK, CLASS_URGENT, RequestKind, TraceGen};
 use crate::iface::timing::{IfaceParams, InterfaceKind};
 use crate::nand::datasheet::CellType;
 use crate::report::Table;
@@ -1103,12 +1104,13 @@ pub fn render_observe_sweep(title: &str, cells: &[ObserveCell], csv: bool) -> St
     for c in cells {
         let Some(o) = &c.report.observe else { continue };
         out.push_str(&format!(
-            "  {:<9} x{:<2} way: contention {}, gc barrier {}, starvation {}, \
-             backpressure {}; {} gc triggers; {:.2} MB/s\n",
+            "  {:<9} x{:<2} way: contention {}, gc barrier {}, map fill {}, \
+             starvation {}, backpressure {}; {} gc triggers; {:.2} MB/s\n",
             c.iface.name(),
             c.ways,
             o.stalls.bus_contention_ps,
             o.stalls.gc_barrier_ps,
+            o.stalls.map_fill_ps,
             o.stalls.queue_starvation_ps,
             o.stalls.link_backpressure_ps,
             o.gc_triggers,
@@ -1116,6 +1118,166 @@ pub fn render_observe_sweep(title: &str, cells: &[ObserveCell], csv: bool) -> St
         ));
     }
     out
+}
+
+/// E11 — demand-paged mapping sweep spec: cache capacity × workload
+/// locality grid with the `[mapping]` tier enabled, so the hit-rate /
+/// translation-overhead tradeoff of DFTL-style map caching is measured
+/// under real flash contention (EXPERIMENTS.md §Mapping).
+#[derive(Debug, Clone)]
+pub struct MapSweepSpec {
+    pub cell: CellType,
+    pub iface: InterfaceKind,
+    pub channels: u16,
+    pub ways: u16,
+    /// `Demand` stalls host ops on a map miss; `Fmmu` overlaps the fill
+    /// with array access (contention-only cost).
+    pub map_mode: MapMode,
+    /// Workload request kind.
+    pub mode: RequestKind,
+    pub requests: usize,
+    pub blocks_per_chip: u32,
+    /// Logical-to-physical entries packed per translation page.
+    pub entries_per_page: u32,
+    /// Cache capacities (translation pages) to sweep.
+    pub cache_pages: Vec<u64>,
+    /// Locality points to sweep: `(hot_fraction, hot_prob)` as consumed by
+    /// [`TraceGen::hotspot`]; `(1.0, 1.0)` is effectively uniform random.
+    pub locality: Vec<(f64, f64)>,
+    /// Per-sim engine configuration (threads / window override).
+    pub engine: EngineConfig,
+    pub seed: u64,
+}
+
+impl Default for MapSweepSpec {
+    fn default() -> Self {
+        MapSweepSpec {
+            cell: CellType::Slc,
+            iface: InterfaceKind::Proposed,
+            channels: 4,
+            ways: 4,
+            map_mode: MapMode::Demand,
+            mode: RequestKind::Write,
+            requests: 2 * DEFAULT_REQUESTS,
+            blocks_per_chip: 512,
+            entries_per_page: 1024,
+            // Default grid spans starved -> comfortable -> fully resident
+            // (the 4x4x512-block SLC geometry has ~461 translation pages).
+            cache_pages: vec![32, 128, 512],
+            locality: vec![(0.05, 0.95), (0.2, 0.8), (1.0, 1.0)],
+            engine: EngineConfig::default(),
+            seed: 0xDD11_3A9B,
+        }
+    }
+}
+
+/// One measured point of the E11 mapping sweep.
+#[derive(Debug, Clone)]
+pub struct MapCell {
+    pub cache_pages: u64,
+    pub hot_fraction: f64,
+    pub hot_prob: f64,
+    pub report: SimReport,
+}
+
+/// The configuration of one E11 grid point — shared by the driver and the
+/// CLI's pre-flight validation so the two can never disagree.
+pub fn map_point_config(spec: &MapSweepSpec, cache_pages: u64) -> Result<SsdConfig, Vec<String>> {
+    let mut c = cfg(spec.iface, spec.cell, spec.channels, spec.ways);
+    c.blocks_per_chip = spec.blocks_per_chip;
+    c.engine = spec.engine;
+    c.seed = spec.seed;
+    c.mapping.mode = spec.map_mode;
+    c.mapping.cache_pages = cache_pages;
+    c.mapping.entries_per_page = spec.entries_per_page;
+    let errs = c.validate();
+    if errs.is_empty() {
+        Ok(c)
+    } else {
+        Err(errs)
+    }
+}
+
+/// E11 — mapping sweep: for each locality point build one hotspot trace
+/// (shared across cache sizes so only the cache capacity varies along that
+/// axis) and run it at every cache capacity. Uses explicit traces through
+/// [`SimWorkspace::run_trace`] rather than [`Campaign`], which only knows
+/// sequential/uniform-random shapes.
+pub fn run_map_sweep(spec: &MapSweepSpec, pool: &ThreadPool) -> Vec<MapCell> {
+    assert!(!spec.cache_pages.is_empty(), "need at least one cache size");
+    assert!(!spec.locality.is_empty(), "need at least one locality point");
+    let gen = TraceGen::default();
+    let mut jobs = Vec::new();
+    let mut meta = Vec::new();
+    for &(hot_fraction, hot_prob) in &spec.locality {
+        for &cache_pages in &spec.cache_pages {
+            let c = map_point_config(spec, cache_pages)
+                .unwrap_or_else(|e| panic!("map sweep point invalid: {e:?}"));
+            let nand = c.nand_timing();
+            let physical =
+                c.chips() as u64 * c.blocks_per_chip as u64 * nand.pages_per_block as u64;
+            let volume = c.logical_pages(physical) * nand.page_bytes as u64;
+            let trace =
+                gen.hotspot(spec.mode, spec.requests, volume, hot_fraction, hot_prob, spec.seed);
+            meta.push((cache_pages, hot_fraction, hot_prob));
+            jobs.push(move |ws: &mut SimWorkspace| ws.run_trace(&c, &trace));
+        }
+    }
+    let reports = pool.run_all_with(jobs, SimWorkspace::new);
+    meta.into_iter()
+        .zip(reports)
+        .map(|((cache_pages, hot_fraction, hot_prob), report)| MapCell {
+            cache_pages,
+            hot_fraction,
+            hot_prob,
+            report,
+        })
+        .collect()
+}
+
+/// Render the mapping sweep: one row per (locality, cache size) point with
+/// the cache hit rate, the translation traffic it injected, and the
+/// bandwidth cost.
+pub fn render_map_sweep(title: &str, cells: &[MapCell], csv: bool) -> String {
+    let mut t = Table::new(vec![
+        "cache_tpages",
+        "hot_frac",
+        "hot_prob",
+        "hit_pct",
+        "map_reads",
+        "map_writebacks",
+        "deferred",
+        "map_wait_us",
+        "mbps",
+    ]);
+    for c in cells {
+        let r = &c.report;
+        let hit_pct = if r.map_hits + r.map_misses > 0 {
+            format!("{:.2}", r.map_hit_rate * 100.0)
+        } else {
+            "n/a".to_string()
+        };
+        let wait = if r.map_deferred > 0 {
+            format!("{:.2}", r.map_wait_mean_us)
+        } else {
+            "0.00".to_string()
+        };
+        t.row(vec![
+            c.cache_pages.to_string(),
+            format!("{:.2}", c.hot_fraction),
+            format!("{:.2}", c.hot_prob),
+            hit_pct,
+            r.map_pages_read.to_string(),
+            r.map_pages_programmed.to_string(),
+            r.map_deferred.to_string(),
+            wait,
+            format!("{:.2}", r.bandwidth_mbps),
+        ]);
+    }
+    if csv {
+        return t.to_csv();
+    }
+    format!("{title}\n\n{}", t.render())
 }
 
 /// E5 — §6 headline: min/max PROPOSED/CONV ratios from Table 3 cells.
@@ -1345,6 +1507,42 @@ mod tests {
         assert!(rendered.contains("PROPOSED"));
         let csv = render_observe_sweep("t", &cells, true);
         assert!(csv.contains("iface,ways,resource,busy_ps"));
+    }
+
+    #[test]
+    fn map_sweep_injects_translation_traffic() {
+        let pool = ThreadPool::new(0);
+        // 1x2x128-block SLC geometry: 16,384 physical pages, 14,745
+        // logical, 231 translation pages at 64 entries each.
+        let spec = MapSweepSpec {
+            channels: 1,
+            ways: 2,
+            blocks_per_chip: 128,
+            entries_per_page: 64,
+            requests: 120,
+            cache_pages: vec![8, 512],
+            locality: vec![(0.1, 0.9)],
+            ..MapSweepSpec::default()
+        };
+        let cells = run_map_sweep(&spec, &pool);
+        assert_eq!(cells.len(), 2);
+        let starved = &cells[0].report;
+        let resident = &cells[1].report;
+        assert!(starved.map_misses > 0, "8-tpage cache must thrash");
+        assert!(starved.map_pages_read > 0, "misses must become flash reads");
+        // cache >= tpages warm-starts fully resident: no fill traffic.
+        assert_eq!(resident.map_misses, 0);
+        assert!(resident.map_hits > 0);
+        assert!(
+            resident.bandwidth_mbps >= starved.bandwidth_mbps,
+            "translation traffic cannot speed the device up: {} < {}",
+            resident.bandwidth_mbps,
+            starved.bandwidth_mbps
+        );
+        let rendered = render_map_sweep("t", &cells, false);
+        assert!(rendered.contains("cache_tpages"));
+        let csv = render_map_sweep("t", &cells, true);
+        assert!(csv.contains("cache_tpages,hot_frac"));
     }
 
     #[test]

@@ -41,14 +41,15 @@
 //! latency-vs-offered-load curve the E6 sweep measures — is visible.
 //! Closed-loop runs are bit-identical to the pre-open-loop simulator.
 
-use crate::config::{FtlKind, SsdConfig};
+use crate::config::{FtlKind, MapMode, SsdConfig};
 use crate::controller::cache::{CacheOutcome, DramCache};
 use crate::controller::channel::ChannelState;
 use crate::controller::ecc::EccModel;
+use crate::controller::ftl::demand::DemandPagedFtl;
 use crate::controller::ftl::hybrid::HybridFtl;
 use crate::controller::ftl::page_map::PageMapFtl;
 use crate::controller::ftl::tiered::TieredFtl;
-use crate::controller::ftl::{Ftl, FtlOp};
+use crate::controller::ftl::{Ftl, FtlOp, MapAccess};
 use crate::controller::nand_if::NandIf;
 use crate::controller::sched::{self, SchedKind, WayScheduler};
 use crate::controller::way::{JobPhase, PageJob, PageJobKind, WayState};
@@ -61,8 +62,8 @@ use crate::host::trace::{
 use crate::iface::bus::{BusPhaseKind, BusTiming};
 use crate::iface::timing::InterfaceKind;
 use crate::nand::chip::{Chip, ChipOp};
-use crate::nand::geometry::Geometry;
-use crate::observe::{HostView, ObsState, ObserveReport};
+use crate::nand::geometry::{Geometry, PageAddr};
+use crate::observe::{BusUser, HostView, ObsState, ObserveReport};
 use crate::sim::{Engine, Model, RunResult, Scheduler, WindowedEngine};
 use crate::util::stats::Welford;
 use crate::util::time::{mbps, Ps};
@@ -81,9 +82,15 @@ pub const WL_REQ: u64 = u64::MAX - 1;
 pub const GC_REQ: u64 = u64::MAX - 2;
 
 /// Marker for SLC→MLC tier-migration copy-back jobs (counted as
-/// amplification, separately from GC). Any `req >= MIG_REQ` is internal
-/// traffic and never completes a host request.
+/// amplification, separately from GC).
 pub const MIG_REQ: u64 = u64::MAX - 3;
+
+/// Marker for demand-paged mapping-tier jobs: translation-page fill reads
+/// and dirty-eviction write-backs ([`crate::controller::ftl::demand`]).
+/// Counted apart from both host and GC traffic; like cache flushes the
+/// payload is metadata, not amplified host data. Any `req >= MAP_REQ` is
+/// internal traffic and never completes a host request.
+pub const MAP_REQ: u64 = u64::MAX - 4;
 
 /// Simulation events.
 #[derive(Debug, Clone, Copy)]
@@ -141,6 +148,23 @@ struct ReqState {
     gc_hit: bool,
 }
 
+/// A host page operation parked behind a demand-mode map-cache miss,
+/// resumed when the fill read for its translation page completes.
+#[derive(Debug, Clone, Copy)]
+struct MapWaiter {
+    /// Physical page of the missed translation page (the fill's target).
+    map_ppn: u64,
+    /// The logical page whose dispatch is deferred.
+    lpn: u64,
+    /// Originating request id (host id, or `INTERNAL_REQ` for a deferred
+    /// cache-eviction flush).
+    req: u64,
+    /// Write dispatch (`enqueue_write_plan`) vs read dispatch.
+    write: bool,
+    /// When the op parked, for map-stall accounting.
+    since: Ps,
+}
+
 /// Aggregate simulation counters.
 #[derive(Debug, Clone, Default)]
 pub struct SimCounters {
@@ -174,6 +198,24 @@ pub struct SimCounters {
     /// when tiering is disabled; cache hits never reach either counter).
     pub slc_reads: u64,
     pub mlc_reads: u64,
+    /// Mapping-tier lookups resolved from the map cache (all zero for
+    /// fully-resident schemes, where translation never reaches the tier).
+    pub map_hits: u64,
+    /// Mapping-tier lookups that missed and issued a translation-page
+    /// fill read (plus, for dirty evictions, a write-back program).
+    pub map_misses: u64,
+    /// Misses that stalled the host op until the fill completed (demand
+    /// mode; the FMMU variant overlaps and never defers).
+    pub map_deferred: u64,
+    /// Translation-page fill reads completed (subset of `pages_read`,
+    /// disjoint from `gc_pages_read`/`mig_pages_read`).
+    pub map_pages_read: u64,
+    /// Translation-page write-back programs completed (subset of
+    /// `pages_programmed`, counted as amplification like GC).
+    pub map_pages_programmed: u64,
+    /// Total picoseconds host page ops spent parked waiting on map fills
+    /// (demand mode only; divide by `map_deferred` for the mean stall).
+    pub map_wait_ps: u64,
 }
 
 /// The DES model for one SSD + workload.
@@ -218,6 +260,13 @@ pub struct SsdSim {
     /// Pooled scratch listing channels touched while fanning out one
     /// request's page jobs; kicked then cleared.
     kick_list: Vec<u16>,
+    /// Pooled scratch for mapping-tier fill/write-back ops (separate from
+    /// `ftl_ops` so a map consult never clobbers an in-progress plan).
+    map_ops: Vec<FtlOp>,
+    /// Host page ops parked behind demand-mode map-cache misses; drained
+    /// by matching `map_ppn` when fill reads complete. Small (bounded by
+    /// outstanding host pages), so linear scans are fine.
+    map_waiters: Vec<MapWaiter>,
     pub counters: SimCounters,
     /// Per-stream accounting, indexed by stream id; all empty when the
     /// trace carries no stream track (single-tenant runs pay nothing).
@@ -286,6 +335,16 @@ impl SsdSim {
                 slc_chips,
                 cfg.tiering.migrate_free_blocks,
             ))
+        } else if cfg.mapping.mode != MapMode::Resident {
+            // Validation guarantees page_map + no tiering for an active
+            // [mapping] section, so this branch never shadows the others.
+            Box::new(DemandPagedFtl::new(
+                geom,
+                logical_pages,
+                cfg.mapping.cache_pages,
+                cfg.mapping.entries_per_page as u64,
+                cfg.mapping.mode == MapMode::Fmmu,
+            ))
         } else {
             match cfg.ftl {
                 FtlKind::PageMap => Box::new(PageMapFtl::new(geom, logical_pages)),
@@ -318,6 +377,8 @@ impl SsdSim {
             reqs,
             ftl_ops: Vec::new(),
             kick_list: Vec::new(),
+            map_ops: Vec::new(),
+            map_waiters: Vec::new(),
             counters: SimCounters::default(),
             stream_class: Vec::new(),
             stream_requests: Vec::new(),
@@ -492,14 +553,16 @@ impl SsdSim {
 
     /// Write amplification factor: total NAND programs over host-attributed
     /// programs. Cache write-back flushes carry deferred host data, so they
-    /// count on the host side; only GC/wear-leveling copy-back amplifies.
+    /// count on the host side; GC/wear-leveling copy-back and mapping-tier
+    /// write-backs (metadata, not host data) amplify.
     /// 1.0 for runs with no copy-back traffic (and for read-only runs,
     /// which program nothing).
     pub fn waf(&self) -> f64 {
         let total = self.counters.pages_programmed;
         let internal = self.counters.gc_pages_programmed
             + self.counters.wl_pages_programmed
-            + self.counters.mig_pages_programmed;
+            + self.counters.mig_pages_programmed
+            + self.counters.map_pages_programmed;
         let host = total - internal;
         if host == 0 {
             1.0
@@ -527,12 +590,12 @@ impl SsdSim {
 
     fn enqueue_ftl_op(&mut self, op: FtlOp, req: u64) -> (u16, u16) {
         let (kind, ppn_for_addr, block_page) = match op {
-            FtlOp::ReadPage { ppn } | FtlOp::MigReadPage { ppn } => {
-                (PageJobKind::Read, ppn, None)
-            }
-            FtlOp::ProgramPage { ppn } | FtlOp::MigProgramPage { ppn } => {
-                (PageJobKind::Program, ppn, None)
-            }
+            FtlOp::ReadPage { ppn }
+            | FtlOp::MigReadPage { ppn }
+            | FtlOp::MapReadPage { ppn } => (PageJobKind::Read, ppn, None),
+            FtlOp::ProgramPage { ppn }
+            | FtlOp::MigProgramPage { ppn }
+            | FtlOp::MapProgramPage { ppn } => (PageJobKind::Program, ppn, None),
             FtlOp::EraseBlock { chip, block } => {
                 let (channel, way) = self.geom.chip_addr(chip);
                 (PageJobKind::Erase, 0, Some((channel, way, block)))
@@ -544,10 +607,11 @@ impl SsdSim {
             let a = self.geom.page_addr(ppn_for_addr);
             (a.channel, a.way, a.block, a.page)
         };
-        // Background traffic (GC, wear leveling, migration, cache flush)
-        // carries an explicit lowest class instead of relying on implicit
-        // queue ordering; host jobs inherit their request's stream/class.
-        let (stream, class) = if req >= MIG_REQ {
+        // Background traffic (GC, wear leveling, migration, cache flush,
+        // map fills) carries an explicit lowest class instead of relying
+        // on implicit queue ordering; host jobs inherit their request's
+        // stream/class.
+        let (stream, class) = if req >= MAP_REQ {
             (u16::MAX, CLASS_BACKGROUND)
         } else {
             let st = self.reqs[req as usize].as_ref().expect("unknown request");
@@ -577,7 +641,7 @@ impl SsdSim {
         let target = self.ftl.plan_write_into(lpn, &mut self.ftl_ops);
         // GC-stall attribution: a host request whose plan carries
         // background ops (GC, migration) waits behind them on the same way.
-        if req < MIG_REQ && !self.ftl_ops.is_empty() {
+        if req < MAP_REQ && !self.ftl_ops.is_empty() {
             if let Some(st) = self.reqs[req as usize].as_mut() {
                 if !st.gc_hit {
                     st.gc_hit = true;
@@ -619,6 +683,74 @@ impl SsdSim {
         self.kick_list.clear();
     }
 
+    /// Consult the demand-paged mapping tier before dispatching a host
+    /// page op on `lpn` ([`Ftl::map_access`]). A miss enqueues its fill
+    /// read — and any dirty-eviction write-back — as `MAP_REQ` page jobs
+    /// on the kick list, contending for channel/way like all other
+    /// traffic. Returns true when the op must be *deferred* (demand-mode
+    /// miss): the caller parks it and [`Self::map_fill_completed`] resumes
+    /// it when the fill lands. Always false for resident schemes and the
+    /// overlapping FMMU variant.
+    fn map_gate(&mut self, lpn: u64, write: bool, req: u64, now: Ps) -> bool {
+        self.map_ops.clear();
+        match self.ftl.map_access(lpn, write, &mut self.map_ops) {
+            MapAccess::Resident => false,
+            MapAccess::Hit => {
+                self.counters.map_hits += 1;
+                false
+            }
+            MapAccess::Miss { map_ppn, defer } => {
+                // An in-flight fill for the same translation page appends
+                // no new ops; the deferred op still parks behind it.
+                self.counters.map_misses += 1;
+                let mut i = 0;
+                while i < self.map_ops.len() {
+                    let op = self.map_ops[i];
+                    let (ch, _) = self.enqueue_ftl_op(op, MAP_REQ);
+                    self.kick_list.push(ch);
+                    i += 1;
+                }
+                if defer {
+                    self.counters.map_deferred += 1;
+                    self.map_waiters.push(MapWaiter {
+                        map_ppn,
+                        lpn,
+                        req,
+                        write,
+                        since: now,
+                    });
+                }
+                defer
+            }
+        }
+    }
+
+    /// A `MAP_REQ` fill read finished for the translation page stored at
+    /// `map_ppn`: mark it resident and resume every host op parked on it,
+    /// in arrival order. Resumption never re-consults the tier — the
+    /// access already hit (and, for writes, dirtied) the cache entry when
+    /// the op parked.
+    fn map_fill_completed(&mut self, map_ppn: u64, sched: &mut Scheduler<Ev>) {
+        self.ftl.map_fill_done(map_ppn);
+        debug_assert!(self.kick_list.is_empty());
+        let now = sched.now();
+        let mut i = 0;
+        while i < self.map_waiters.len() {
+            if self.map_waiters[i].map_ppn != map_ppn {
+                i += 1;
+                continue;
+            }
+            let w = self.map_waiters.remove(i);
+            self.counters.map_wait_ps += (now - w.since).as_ps() as u64;
+            if w.write {
+                self.enqueue_write_plan(w.lpn, w.req, now);
+            } else {
+                self.issue_read_lpn(w.lpn, w.req);
+            }
+        }
+        self.kick_touched(sched);
+    }
+
     /// Dispatch NAND work for a write request whose payload has arrived.
     fn start_write_pages(&mut self, req: u64, sched: &mut Scheduler<Ev>) {
         let r = self.trace[req as usize];
@@ -634,18 +766,44 @@ impl SsdSim {
                 CacheOutcome::Miss { evict_flush } => {
                     // This write still occupies a cache slot; the page is
                     // considered done when cached, but any dirty eviction
-                    // must be flushed to NAND as internal traffic.
+                    // must be flushed to NAND as internal traffic (gated
+                    // on the victim's own translation page like any
+                    // other mapping write).
                     if let Some(victim) = evict_flush {
-                        self.enqueue_write_plan(victim, INTERNAL_REQ, sched.now());
+                        if !self.map_gate(victim, true, INTERNAL_REQ, sched.now()) {
+                            self.enqueue_write_plan(victim, INTERNAL_REQ, sched.now());
+                        }
                     }
                     self.page_programmed(req, sched);
                     continue;
                 }
                 CacheOutcome::Bypass => {}
             }
-            self.enqueue_write_plan(lpn, req, sched.now());
+            if !self.map_gate(lpn, true, req, sched.now()) {
+                self.enqueue_write_plan(lpn, req, sched.now());
+            }
         }
         self.kick_touched(sched);
+    }
+
+    /// Translate and enqueue the NAND read for one host page — the tail
+    /// of the read path, after the DRAM cache and mapping tier have both
+    /// had their say (also the resume target for deferred reads).
+    fn issue_read_lpn(&mut self, lpn: u64, req: u64) {
+        let ppn = self
+            .ftl
+            .translate(lpn)
+            .expect("read of never-written lpn; call prefill_for_reads");
+        if self.slc_chips > 0 {
+            let a = self.geom.page_addr(ppn);
+            if self.is_slc_way(a.channel, a.way) {
+                self.counters.slc_reads += 1;
+            } else {
+                self.counters.mlc_reads += 1;
+            }
+        }
+        let (ch, _) = self.enqueue_ftl_op(FtlOp::ReadPage { ppn }, req);
+        self.kick_list.push(ch);
     }
 
     /// Dispatch NAND work for a read request after its command FIS.
@@ -666,25 +824,16 @@ impl SsdSim {
                     // issued, or the deferred host data would be silently
                     // dropped (this path used to discard the flush).
                     if let Some(victim) = evict_flush {
-                        self.enqueue_write_plan(victim, INTERNAL_REQ, sched.now());
+                        if !self.map_gate(victim, true, INTERNAL_REQ, sched.now()) {
+                            self.enqueue_write_plan(victim, INTERNAL_REQ, sched.now());
+                        }
                     }
                 }
                 CacheOutcome::Bypass => {}
             }
-            let ppn = self
-                .ftl
-                .translate(lpn)
-                .expect("read of never-written lpn; call prefill_for_reads");
-            if self.slc_chips > 0 {
-                let a = self.geom.page_addr(ppn);
-                if self.is_slc_way(a.channel, a.way) {
-                    self.counters.slc_reads += 1;
-                } else {
-                    self.counters.mlc_reads += 1;
-                }
+            if !self.map_gate(lpn, false, req, sched.now()) {
+                self.issue_read_lpn(lpn, req);
             }
-            let (ch, _) = self.enqueue_ftl_op(FtlOp::ReadPage { ppn }, req);
-            self.kick_list.push(ch);
         }
         self.kick_touched(sched);
     }
@@ -747,6 +896,19 @@ impl SsdSim {
         }
     }
 
+    /// Observer attribution of a bus grant, from the owning job's request
+    /// marker: map-fill traffic gets its own stall cause, everything else
+    /// splits host vs internal (GC/WL/migration/cache-flush).
+    fn bus_user(req: u64) -> BusUser {
+        if req == MAP_REQ {
+            BusUser::MapFill
+        } else if req >= MIG_REQ {
+            BusUser::Internal
+        } else {
+            BusUser::Host
+        }
+    }
+
     /// Grant the channel bus to the next way that wants it.
     fn kick_channel(&mut self, ch: u16, sched: &mut Scheduler<Ev>) {
         let chi = ch as usize;
@@ -779,7 +941,7 @@ impl SsdSim {
                         obs.bus_granted(
                             chi,
                             wi as u16,
-                            job.req >= MIG_REQ,
+                            Self::bus_user(job.req),
                             BusPhaseKind::DataOut,
                             now,
                             done,
@@ -795,7 +957,7 @@ impl SsdSim {
                         obs.bus_granted(
                             chi,
                             wi as u16,
-                            job.req >= MIG_REQ,
+                            Self::bus_user(job.req),
                             BusPhaseKind::Status,
                             now,
                             done,
@@ -832,7 +994,7 @@ impl SsdSim {
             obs.bus_granted(
                 chi,
                 wi as u16,
-                job.req >= MIG_REQ,
+                Self::bus_user(job.req),
                 BusPhaseKind::Cmd,
                 now,
                 done,
@@ -884,7 +1046,19 @@ impl SsdSim {
                     obs.job_completed(chi, way, job.kind, sched.now());
                 }
                 self.counters.pages_read += 1;
-                if job.req >= MIG_REQ {
+                if job.req == MAP_REQ {
+                    // A translation-page fill landed: the mapping tier
+                    // marks it resident and any parked host ops resume.
+                    self.counters.internal_pages += 1;
+                    self.counters.map_pages_read += 1;
+                    let ppn = self.geom.ppn(PageAddr {
+                        channel: ch,
+                        way,
+                        block: job.block,
+                        page: job.page,
+                    });
+                    self.map_fill_completed(ppn, sched);
+                } else if job.req >= MIG_REQ {
                     self.counters.internal_pages += 1;
                     if job.req == MIG_REQ {
                         self.counters.mig_pages_read += 1;
@@ -908,7 +1082,7 @@ impl SsdSim {
                     PageJobKind::Program => {
                         self.counters.pages_programmed += 1;
                         self.energy.add_nand_program(&self.power.clone(), 1);
-                        if job.req >= MIG_REQ {
+                        if job.req >= MAP_REQ {
                             self.counters.internal_pages += 1;
                             // Cache-flush programs (INTERNAL_REQ) carry
                             // deferred host data: internal dispatch, host
@@ -922,6 +1096,10 @@ impl SsdSim {
                             } else if job.req == MIG_REQ {
                                 self.counters.mig_pages_programmed += 1;
                                 self.energy.add_mig_program(&self.power.clone(), 1);
+                            } else if job.req == MAP_REQ {
+                                // Translation-page write-back: metadata
+                                // amplification, like GC for the WAF split.
+                                self.counters.map_pages_programmed += 1;
                             }
                         } else {
                             self.page_programmed(job.req, sched);
@@ -1194,6 +1372,7 @@ impl SsdSim {
         (SchedKind, [u32; NUM_CLASSES]),
         (u16, u64),
         (bool, bool),
+        (MapMode, u64, u32),
     ) {
         let nand = cfg.nand_timing();
         let geom = Geometry {
@@ -1224,6 +1403,10 @@ impl SsdSim {
             cfg.qos.reuse_sig(),
             cfg.engine.reuse_sig(),
             cfg.observe.reuse_sig(),
+            // The mapping tier sizes the cache directory at construction,
+            // so an active section is part of the structural fingerprint;
+            // a dormant one normalizes to the resident signature.
+            cfg.mapping.reuse_sig(),
         )
     }
 
@@ -1279,6 +1462,8 @@ impl SsdSim {
         self.reqs.resize_with(self.trace.len(), || None);
         self.ftl_ops.clear();
         self.kick_list.clear();
+        self.map_ops.clear();
+        self.map_waiters.clear();
         self.counters = SimCounters::default();
         self.stream_class.clear();
         self.stream_requests.clear();

@@ -427,6 +427,49 @@ impl TraceGen {
         Trace::from_requests(requests)
     }
 
+    /// Hotspot locality: with probability `hot_prob` a request targets the
+    /// first `hot_fraction` of the volume, otherwise the remainder; offsets
+    /// are uniform within the chosen region and aligned to the request
+    /// size. `hot_prob = hot_fraction` degenerates to [`TraceGen::random`]'s
+    /// distribution (uniform over the whole volume). This is the knob the
+    /// mapping-tier sweep (E11) turns: a small hot set keeps the same few
+    /// translation pages resident while the cold tail forces cache misses.
+    pub fn hotspot(
+        &self,
+        kind: RequestKind,
+        n: usize,
+        volume_bytes: u64,
+        hot_fraction: f64,
+        hot_prob: f64,
+        seed: u64,
+    ) -> Trace {
+        assert!(
+            (0.0..=1.0).contains(&hot_fraction) && (0.0..=1.0).contains(&hot_prob),
+            "hot fraction and probability must be within [0, 1]"
+        );
+        let mut rng = Prng::new(seed);
+        let slots = (volume_bytes / self.request_bytes as u64).max(1);
+        // At least one slot on each side so both branches stay non-empty
+        // (a single-slot volume has no cold region at all).
+        let hot_slots = ((slots as f64 * hot_fraction) as u64).clamp(1, slots.max(2) - 1);
+        let cold_slots = slots.saturating_sub(hot_slots);
+        let requests = (0..n)
+            .map(|_| {
+                let slot = if cold_slots == 0 || rng.next_bool(hot_prob) {
+                    rng.next_bounded(hot_slots)
+                } else {
+                    hot_slots + rng.next_bounded(cold_slots)
+                };
+                Request {
+                    kind,
+                    offset: slot * self.request_bytes as u64,
+                    bytes: self.request_bytes,
+                }
+            })
+            .collect();
+        Trace::from_requests(requests)
+    }
+
     /// Mixed read/write sequential stream with the given write fraction.
     pub fn mixed_sequential(&self, n: usize, write_fraction: f64, seed: u64) -> Trace {
         let mut rng = Prng::new(seed);
@@ -500,6 +543,30 @@ mod tests {
         }
         assert_eq!(t.total_bytes(), 4 * 65536);
         assert!(!t.is_open_loop());
+    }
+
+    #[test]
+    fn hotspot_skews_toward_hot_region() {
+        let gen = TraceGen::default();
+        let volume = 1024 * 65536u64; // 1024 slots
+        let t = gen.hotspot(RequestKind::Write, 2000, volume, 0.1, 0.9, 42);
+        assert_eq!(t.len(), 2000);
+        let hot_bytes = 102 * 65536u64; // floor(1024 * 0.1) slots
+        let hot = t.requests.iter().filter(|r| r.offset < hot_bytes).count();
+        // ~90% should land in the first 10% of the volume.
+        assert!(hot > 1700, "only {hot}/2000 requests hit the hot region");
+        assert!(t.requests.iter().all(|r| r.offset < volume));
+        // Deterministic for a fixed seed.
+        let u = gen.hotspot(RequestKind::Write, 2000, volume, 0.1, 0.9, 42);
+        assert_eq!(t.requests, u.requests);
+    }
+
+    #[test]
+    fn hotspot_handles_tiny_volumes() {
+        let gen = TraceGen::default();
+        // Single-slot volume: everything is "hot"; must not panic.
+        let t = gen.hotspot(RequestKind::Read, 16, 65536, 0.5, 0.5, 1);
+        assert!(t.requests.iter().all(|r| r.offset == 0));
     }
 
     #[test]

@@ -37,14 +37,16 @@
 //!   for its data-out phase),
 //! * **idle** — nothing to do.
 //!
-//! Way stalls are attributed to four causes: **bus contention** (blocked
+//! Way stalls are attributed to five causes: **bus contention** (blocked
 //! behind another way's *host* traffic), **GC barrier** (blocked behind
-//! GC / wear-leveling / migration / flush copy-back), **queue starvation**
-//! (idle with the host link also idle — the host simply isn't sending
-//! enough work) and **link backpressure** (idle while the host link is
-//! saturated — the bottleneck is in front of the device). The cause sums
-//! tie out: contention + barrier = Σ way blocked, starvation +
-//! backpressure = Σ way idle.
+//! GC / wear-leveling / migration / flush copy-back), **map fill**
+//! (blocked behind the demand-paged mapping tier's translation-page
+//! fills/write-backs, [`crate::controller::ftl::demand`]), **queue
+//! starvation** (idle with the host link also idle — the host simply
+//! isn't sending enough work) and **link backpressure** (idle while the
+//! host link is saturated — the bottleneck is in front of the device).
+//! The cause sums tie out: contention + barrier + map fill = Σ way
+//! blocked, starvation + backpressure = Σ way idle.
 //!
 //! ## Why observation cannot perturb the simulation
 //!
@@ -81,6 +83,17 @@ const CAUSE_CONTENTION: u8 = 0;
 const CAUSE_BARRIER: u8 = 1;
 const CAUSE_STARVED: u8 = 2;
 const CAUSE_BACKPRESSURE: u8 = 3;
+const CAUSE_MAPFILL: u8 = 4;
+
+/// Who holds a granted bus phase, for stall attribution: host data,
+/// internal copy-back (GC / wear leveling / migration / cache flush), or
+/// the demand-paged mapping tier's translation-page traffic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BusUser {
+    Host,
+    Internal,
+    MapFill,
+}
 
 /// Which resource a utilization row describes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -143,6 +156,9 @@ pub struct StallCauses {
     pub bus_contention_ps: u64,
     /// Blocked behind GC / wear-leveling / migration / flush copy-back.
     pub gc_barrier_ps: u64,
+    /// Blocked behind the mapping tier's translation-page fill reads and
+    /// write-back programs (zero for fully-resident mapping).
+    pub map_fill_ps: u64,
     /// Idle with the host link also idle: not enough offered work.
     pub queue_starvation_ps: u64,
     /// Idle while the host link is saturated: the bottleneck is upstream.
@@ -256,10 +272,10 @@ pub struct ObsState {
     way_acc: Vec<[u64; 4]>,
     chip_acc: Vec<[u64; 4]>,
     stalls: StallCauses,
-    /// Mirror of the DES bus grant: `(way, internal)` per channel.
-    /// `internal` marks GC/WL/migration/flush traffic — the GC-barrier
-    /// attribution bit.
-    bus_owner: Vec<Option<(u16, bool)>>,
+    /// Mirror of the DES bus grant: `(way, user)` per channel. The user
+    /// drives stall attribution: internal traffic raises the GC barrier,
+    /// map-fill traffic its own cause.
+    bus_owner: Vec<Option<(u16, BusUser)>>,
     gc_triggers: u64,
     timeline: Option<TimelineBuf>,
 }
@@ -364,6 +380,7 @@ impl ObsState {
             self.way_acc[i][st as usize] += dt;
             match (st, self.way_cause[i]) {
                 (BLOCKED, CAUSE_BARRIER) => self.stalls.gc_barrier_ps += dt,
+                (BLOCKED, CAUSE_MAPFILL) => self.stalls.map_fill_ps += dt,
                 (BLOCKED, _) => self.stalls.bus_contention_ps += dt,
                 (IDLE, CAUSE_BACKPRESSURE) => self.stalls.link_backpressure_ps += dt,
                 (IDLE, _) => self.stalls.queue_starvation_ps += dt,
@@ -403,8 +420,9 @@ impl ObsState {
                     (BUSY, CAUSE_CONTENTION)
                 } else if way.wants_bus(now) {
                     match owner {
-                        Some((_, true)) => (BLOCKED, CAUSE_BARRIER),
-                        Some((_, false)) => (BLOCKED, CAUSE_CONTENTION),
+                        Some((_, BusUser::Internal)) => (BLOCKED, CAUSE_BARRIER),
+                        Some((_, BusUser::MapFill)) => (BLOCKED, CAUSE_MAPFILL),
+                        Some((_, BusUser::Host)) => (BLOCKED, CAUSE_CONTENTION),
                         None => (IDLE_QUEUED, CAUSE_CONTENTION),
                     }
                 } else if way.inflight.is_some() || way.queue_len() > 0 {
@@ -424,19 +442,19 @@ impl ObsState {
     }
 
     /// The DES granted the bus of `ch` to `way` for `[now, done)`.
-    /// `internal` marks background (GC/WL/migration/flush) traffic. The
-    /// span's begin *and* end are pushed here — `done` is already known,
-    /// and per-track serialization keeps timestamps monotone.
+    /// `user` classifies the traffic for stall attribution. The span's
+    /// begin *and* end are pushed here — `done` is already known, and
+    /// per-track serialization keeps timestamps monotone.
     pub fn bus_granted(
         &mut self,
         ch: usize,
         way: u16,
-        internal: bool,
+        user: BusUser,
         phase: BusPhaseKind,
         now: Ps,
         done: Ps,
     ) {
-        self.bus_owner[ch] = Some((way, internal));
+        self.bus_owner[ch] = Some((way, user));
         let tid = self.tid_bus();
         self.push_event(TraceEvent {
             name: phase.name(),
@@ -835,7 +853,7 @@ mod tests {
         // host traffic; way 1 is blocked behind it.
         ch.ways[0].push(job(PageJobKind::Read));
         ch.ways[1].push(job(PageJobKind::Read));
-        obs.bus_granted(0, 0, false, BusPhaseKind::Cmd, Ps::ZERO, Ps::ns(10));
+        obs.bus_granted(0, 0, BusUser::Host, BusPhaseKind::Cmd, Ps::ZERO, Ps::ns(10));
         obs.scan(Ps::ZERO, std::slice::from_ref(&ch), IDLE_HOST);
 
         // t=10ns: grant done; way 0's array busy until 30ns; the bus goes
@@ -846,7 +864,7 @@ mod tests {
         j.phase = JobPhase::ArrayBusy;
         ch.ways[0].inflight = Some(j);
         ch.ways[0].array_done_at = Ps::ns(30);
-        obs.bus_granted(0, 1, true, BusPhaseKind::Cmd, Ps::ns(10), Ps::ns(20));
+        obs.bus_granted(0, 1, BusUser::Internal, BusPhaseKind::Cmd, Ps::ns(10), Ps::ns(20));
         obs.scan(Ps::ns(10), std::slice::from_ref(&ch), IDLE_HOST);
 
         // t=20ns: way 1's grant done, its array busy too; nothing queued.
@@ -895,7 +913,7 @@ mod tests {
         // Cause sums tie out against the way accumulators.
         let way = r.totals(ResourceKind::Way);
         assert_eq!(
-            r.stalls.bus_contention_ps + r.stalls.gc_barrier_ps,
+            r.stalls.bus_contention_ps + r.stalls.gc_barrier_ps + r.stalls.map_fill_ps,
             way[BLOCKED as usize]
         );
         assert_eq!(
@@ -917,12 +935,32 @@ mod tests {
         let mut ch = chan(2);
         ch.ways[0].push(job(PageJobKind::Program));
         ch.ways[1].push(job(PageJobKind::Read));
-        obs.bus_granted(0, 0, true, BusPhaseKind::Cmd, Ps::ZERO, Ps::ns(10));
+        obs.bus_granted(0, 0, BusUser::Internal, BusPhaseKind::Cmd, Ps::ZERO, Ps::ns(10));
         obs.scan(Ps::ZERO, std::slice::from_ref(&ch), IDLE_HOST);
         obs.finalize(Ps::ns(10));
         let r = obs.report();
         assert_eq!(r.stalls.gc_barrier_ps, 10_000);
         assert_eq!(r.stalls.bus_contention_ps, 0);
+    }
+
+    /// A mapping-tier grant raises its own stall cause — a way waiting
+    /// behind a translation-page fill is neither host contention nor a
+    /// GC barrier.
+    #[test]
+    fn map_fill_grant_attributes_to_map_cause() {
+        let mut obs = ObsState::new(1, 2, false, Ps::ZERO);
+        let mut ch = chan(2);
+        ch.ways[0].push(job(PageJobKind::Read));
+        ch.ways[1].push(job(PageJobKind::Read));
+        obs.bus_granted(0, 0, BusUser::MapFill, BusPhaseKind::Cmd, Ps::ZERO, Ps::ns(10));
+        obs.scan(Ps::ZERO, std::slice::from_ref(&ch), IDLE_HOST);
+        obs.finalize(Ps::ns(10));
+        let r = obs.report();
+        assert_eq!(r.stalls.map_fill_ps, 10_000);
+        assert_eq!(r.stalls.gc_barrier_ps, 0);
+        assert_eq!(r.stalls.bus_contention_ps, 0);
+        let way = r.totals(ResourceKind::Way);
+        assert_eq!(r.stalls.map_fill_ps, way[BLOCKED as usize]);
     }
 
     /// The timeline writer round-trips through the pinned-schema
@@ -932,7 +970,7 @@ mod tests {
         let mut obs = ObsState::new(2, 2, true, Ps::ns(25));
         let ch: Vec<ChannelState> = vec![chan(2), chan(2)];
         obs.job_started(0, 0, PageJobKind::Read, Ps::ZERO);
-        obs.bus_granted(0, 0, false, BusPhaseKind::Cmd, Ps::ZERO, Ps::ps(12_345_678_901));
+        obs.bus_granted(0, 0, BusUser::Host, BusPhaseKind::Cmd, Ps::ZERO, Ps::ps(12_345_678_901));
         obs.scan(Ps::ZERO, &ch, IDLE_HOST);
         obs.bus_released(0, Ps::ps(12_345_678_901));
         obs.array_started(
@@ -947,7 +985,7 @@ mod tests {
         obs.bus_granted(
             0,
             0,
-            false,
+            BusUser::Host,
             BusPhaseKind::DataOut,
             Ps::ps(20_000_000_000),
             Ps::ps(21_000_000_000),

@@ -171,13 +171,32 @@ pub fn summarize(r: &SimReport) -> String {
             ));
         }
         s.push_str(&format!(
-            "\n    stalls: bus contention {}, GC barrier {}, starvation {}, \
+            "\n    stalls: bus contention {}, GC barrier {}, map fill {}, starvation {}, \
              link backpressure {} (ps); {} GC triggers",
             o.stalls.bus_contention_ps,
             o.stalls.gc_barrier_ps,
+            o.stalls.map_fill_ps,
             o.stalls.queue_starvation_ps,
             o.stalls.link_backpressure_ps,
             o.gc_triggers,
+        ));
+    }
+    if r.map_hits + r.map_misses > 0 {
+        let wait = if r.map_deferred > 0 {
+            format!("{:.1} us", r.map_wait_mean_us)
+        } else {
+            "n/a".to_string()
+        };
+        s.push_str(&format!(
+            "\n  mapping: {:.1}% hit rate ({} hits / {} misses), {} fill reads / \
+             {} write-backs, {} deferred, mean map wait {}",
+            r.map_hit_rate * 100.0,
+            r.map_hits,
+            r.map_misses,
+            r.map_pages_read,
+            r.map_pages_programmed,
+            r.map_deferred,
+            wait,
         ));
     }
     if r.mig_pages_programmed > 0 || r.slc_reads + r.mlc_reads > 0 {

@@ -83,6 +83,27 @@ fn cli_sweep_qos_succeeds() {
 }
 
 #[test]
+fn cli_sweep_map_succeeds() {
+    assert_eq!(
+        cli::run(&argv(
+            "sweep-map --requests 40 --channels 1 --ways 2 --blocks 128 \
+             --entries 64 --cache-pages 8,512 --hot 0.1:0.9 --csv"
+        )),
+        0
+    );
+}
+
+#[test]
+fn cli_sweep_map_rejects_bad_flags() {
+    assert_eq!(cli::run(&argv("sweep-map --map-mode paged")), 1);
+    assert_eq!(cli::run(&argv("sweep-map --cache-pages 0")), 1);
+    assert_eq!(cli::run(&argv("sweep-map --hot 2:0.5")), 1);
+    assert_eq!(cli::run(&argv("sweep-map --hot 0.5")), 1);
+    assert_eq!(cli::run(&argv("sweep-map --cell qlc")), 1);
+    assert_eq!(cli::run(&argv("sweep-map --ways 0")), 1);
+}
+
+#[test]
 fn cli_sweep_qos_rejects_bad_flags() {
     assert_eq!(cli::run(&argv("sweep-qos --schedulers fifo")), 1);
     assert_eq!(cli::run(&argv("sweep-qos --ways 0")), 1);

@@ -109,11 +109,11 @@ fn occupancy_invariants(o: &ObserveReport, channels: usize, ways: usize) -> Resu
         }
     }
     let way = o.totals(ResourceKind::Way);
-    let blocked_sum = o.stalls.bus_contention_ps + o.stalls.gc_barrier_ps;
+    let blocked_sum = o.stalls.bus_contention_ps + o.stalls.gc_barrier_ps + o.stalls.map_fill_ps;
     if blocked_sum != way[1] {
         return Err(format!(
-            "stall attribution leak: contention {} + barrier {} != Σ way blocked {}",
-            o.stalls.bus_contention_ps, o.stalls.gc_barrier_ps, way[1]
+            "stall attribution leak: contention {} + barrier {} + map fill {} != Σ way blocked {}",
+            o.stalls.bus_contention_ps, o.stalls.gc_barrier_ps, o.stalls.map_fill_ps, way[1]
         ));
     }
     let idle_sum = o.stalls.queue_starvation_ps + o.stalls.link_backpressure_ps;
