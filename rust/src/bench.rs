@@ -41,6 +41,7 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) ->
     }
     let mut times = Vec::with_capacity(samples);
     for _ in 0..samples {
+        // simlint: allow(nondet, "wall clock is the measurand: the perf harness times real runs")
         let t0 = Instant::now();
         f();
         times.push(t0.elapsed().as_secs_f64() * 1e3);
@@ -140,6 +141,7 @@ impl PerfLog {
         out.push_str("{\n");
         out.push_str("  \"schema\": \"ddrnand-bench-v2\",\n");
         out.push_str(&format!("  \"bench\": \"{}\",\n", escape_json(&self.bench)));
+        // simlint: allow(nondet, "created_unix stamps the bench log metadata, never sim state")
         let unix = std::time::SystemTime::now()
             .duration_since(std::time::UNIX_EPOCH)
             .map(|d| d.as_secs())

@@ -6,7 +6,7 @@
 //! writes. Disabled (capacity 0) for the paper's Table 3–5 runs, which
 //! measure the raw NAND path; exercised by its own tests and ablations.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 
 /// Cache configuration.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -48,8 +48,11 @@ pub enum CacheOutcome {
 /// unique tick (regression-tested against the scan oracle below).
 pub struct DramCache {
     cfg: CacheConfig,
-    /// lpn -> (lru tick, dirty)
-    entries: HashMap<u64, (u64, bool)>,
+    /// lpn -> (lru tick, dirty). A `BTreeMap` (not `HashMap`) so every
+    /// traversal is in deterministic lpn order — simlint rule R1 forbids
+    /// hash-order iteration anywhere in the simulator (the pre-PR 9
+    /// `dirty_pages` relied on a post-hoc sort to mask it).
+    entries: BTreeMap<u64, (u64, bool)>,
     /// lru tick -> lpn (recency index; exactly one entry per cached lpn).
     by_tick: BTreeMap<u64, u64>,
     tick: u64,
@@ -62,7 +65,7 @@ impl DramCache {
     pub fn new(cfg: CacheConfig) -> DramCache {
         DramCache {
             cfg,
-            entries: HashMap::new(),
+            entries: BTreeMap::new(),
             by_tick: BTreeMap::new(),
             tick: 0,
             hits: 0,
@@ -149,16 +152,14 @@ impl DramCache {
         }
     }
 
-    /// Dirty pages remaining (to flush at shutdown).
+    /// Dirty pages remaining (to flush at shutdown), in ascending lpn
+    /// order (`entries` is a `BTreeMap`, so no sort is needed).
     pub fn dirty_pages(&self) -> Vec<u64> {
-        let mut v: Vec<u64> = self
-            .entries
+        self.entries
             .iter()
             .filter(|(_, (_, d))| *d)
             .map(|(&l, _)| l)
-            .collect();
-        v.sort();
-        v
+            .collect()
     }
 
     pub fn len(&self) -> usize {
@@ -180,6 +181,7 @@ impl DramCache {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::HashMap;
 
     fn cache(cap: u32) -> DramCache {
         DramCache::new(CacheConfig {

@@ -9,9 +9,11 @@
 
 use crate::controller::ftl::{Ftl, FtlOp};
 use crate::nand::geometry::Geometry;
-use std::collections::HashMap;
 
 const INVALID: u64 = u64::MAX;
+
+/// Sentinel in [`LogBlock::slots`]: this page offset is not logged here.
+const NO_SLOT: u32 = u32::MAX;
 
 /// Per-log-block state: which logical block it serves and what it holds.
 struct LogBlock {
@@ -21,8 +23,23 @@ struct LogBlock {
     lbn: u64,
     /// next free page slot.
     write_ptr: u32,
-    /// page-offset-in-lblock -> slot in this log block (latest wins).
-    map: HashMap<u32, u32>,
+    /// page-offset-in-lblock -> slot in this log block (latest wins),
+    /// `NO_SLOT` when unlogged. An indexed `Vec` rather than a
+    /// `HashMap<u32, u32>`: offsets are dense in `0..pages_per_block`, and
+    /// the PR 9 determinism audit converts hash containers on FTL paths to
+    /// order-free structures (simlint rule R1 — the old map was keyed-only,
+    /// so this is bit-identical by construction).
+    slots: Vec<u32>,
+}
+
+impl LogBlock {
+    /// Latest logged slot for page offset `off`, if any.
+    fn slot(&self, off: u32) -> Option<u32> {
+        match self.slots[off as usize] {
+            NO_SLOT => None,
+            s => Some(s),
+        }
+    }
 }
 
 /// Hybrid (block + log) mapping FTL.
@@ -113,7 +130,7 @@ impl HybridFtl {
         let new_block = self.alloc_block();
         // Copy each page offset: prefer the log's copy, else the data block's.
         for off in 0..self.geom.pages_per_block {
-            let src = if let Some(&slot) = log.map.get(&off) {
+            let src = if let Some(slot) = log.slot(off) {
                 Some(self.ppn(log.pblock, slot))
             } else if data != INVALID {
                 Some(self.ppn(data, off))
@@ -168,7 +185,7 @@ impl HybridFtl {
             pblock,
             lbn,
             write_ptr: 0,
-            map: HashMap::new(),
+            slots: vec![NO_SLOT; self.geom.pages_per_block as usize],
         });
         self.logs.len() - 1
     }
@@ -182,7 +199,7 @@ impl Ftl for HybridFtl {
         // Log blocks take precedence (latest copy).
         for l in self.logs.iter().rev() {
             if l.lbn == lbn {
-                if let Some(&slot) = l.map.get(&off) {
+                if let Some(slot) = l.slot(off) {
                     return Some(self.ppn(l.pblock, slot));
                 }
             }
@@ -201,7 +218,7 @@ impl Ftl for HybridFtl {
             let l = &mut self.logs[li];
             let slot = l.write_ptr;
             l.write_ptr += 1;
-            l.map.insert(off, slot);
+            l.slots[off as usize] = slot;
             (slot, l.pblock)
         };
         let target = self.ppn(pblock, slot);

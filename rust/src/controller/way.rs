@@ -467,7 +467,7 @@ mod tests {
     #[test]
     fn soa_queue_matches_vecdeque_reference() {
         let mut rng = Prng::new(0x50A5_0A50);
-        for _case in 0..50 {
+        for _case in 0..crate::proptest::effective_cases(50) {
             let mut q = JobQueue::default();
             let mut r: VecDeque<PageJob> = VecDeque::new();
             for step in 0..400u64 {

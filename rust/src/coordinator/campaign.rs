@@ -298,6 +298,7 @@ impl SimWorkspace {
     /// when the geometry fingerprint matches ([`SsdSim::reuse_key`]).
     /// Results are bit-identical to a fresh build either way.
     pub fn run_trace(&mut self, cfg: &SsdConfig, trace: &Trace) -> SimReport {
+        // simlint: allow(nondet, "wall-clock sweep duration for PerfLog reporting, not sim time")
         let wall0 = std::time::Instant::now();
         let mode = match trace.requests.first().map(|r| r.kind) {
             Some(RequestKind::Read) => "read",

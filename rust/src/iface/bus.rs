@@ -121,6 +121,7 @@ impl BusTiming {
 
     /// Operating frequency in MHz (for reports).
     pub fn freq_mhz(&self) -> f64 {
+        // simlint: allow(float-on-time, "display-only MHz accessor; leaves ps via as_ns_f64")
         1e3 / self.t_cycle.as_ns_f64()
     }
 

@@ -711,7 +711,10 @@ impl TimelineBuf {
 /// before publishing a timeline.
 pub fn validate_trace_json(text: &str) -> Result<(), String> {
     use crate::bench::json::{self, Value};
-    use std::collections::HashMap;
+    // BTreeMap, not HashMap: the unclosed-span sweep below iterates the
+    // per-track state, and hash order would make *which* error is reported
+    // depend on the hasher seed (simlint rule R1).
+    use std::collections::BTreeMap;
 
     fn get<'a>(obj: &'a [(String, Value)], key: &str) -> Option<&'a Value> {
         obj.iter().find(|(k, _)| k == key).map(|(_, v)| v)
@@ -741,8 +744,8 @@ pub fn validate_trace_json(text: &str) -> Result<(), String> {
         _ => return Err("missing traceEvents array".to_string()),
     };
 
-    let mut last_ps: HashMap<(i64, i64), i64> = HashMap::new();
-    let mut stacks: HashMap<(i64, i64), Vec<String>> = HashMap::new();
+    let mut last_ps: BTreeMap<(i64, i64), i64> = BTreeMap::new();
+    let mut stacks: BTreeMap<(i64, i64), Vec<String>> = BTreeMap::new();
     for (i, ev) in events.iter().enumerate() {
         let e = ev
             .as_object()

@@ -6,10 +6,40 @@
 
 use crate::util::prng::Prng;
 
+/// Hard cap on randomized cases under Miri: the interpreter is ~100x
+/// slower than native, so the CI Miri lane runs a handful of cases per
+/// property (native runs keep full counts).
+const MIRI_CASE_CAP: u32 = 4;
+
+/// Effective case count for a randomized suite that asks for `requested`
+/// cases.
+///
+/// The `DDRNAND_PROPTEST_CASES` environment variable, when set to a
+/// positive integer, caps the count (CI's Miri lane sets a small value;
+/// the cap never *raises* a suite's own request). Under Miri the
+/// `MIRI_CASE_CAP` applies as well, so the lane stays fast even when the
+/// env var is not forwarded into the interpreter's isolated environment.
+pub fn effective_cases(requested: u32) -> u32 {
+    let capped = match std::env::var("DDRNAND_PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse::<u32>().ok())
+    {
+        Some(n) if n >= 1 => requested.min(n),
+        _ => requested,
+    };
+    if cfg!(miri) {
+        capped.min(MIRI_CASE_CAP)
+    } else {
+        capped
+    }
+}
+
 /// Run `cases` random property checks. `gen` draws an input from the PRNG;
 /// `prop` returns `Err(reason)` on violation. On failure the harness tries
 /// to shrink via `shrink` (smaller inputs first) and panics with the
-/// minimal reproduction and its seed.
+/// minimal reproduction and its seed. The case count is subject to
+/// [`effective_cases`] (env/Miri reduction); the drawing order is
+/// unchanged, so any case that runs reproduces identically at full count.
 pub fn check<T, G, P, S>(name: &str, cases: u32, seed: u64, mut gen: G, mut prop: P, shrink: S)
 where
     T: Clone + std::fmt::Debug,
@@ -17,6 +47,7 @@ where
     P: FnMut(&T) -> Result<(), String>,
     S: Fn(&T) -> Vec<T>,
 {
+    let cases = effective_cases(cases);
     let mut rng = Prng::new(seed);
     for case in 0..cases {
         let input = gen(&mut rng);
@@ -106,7 +137,9 @@ mod tests {
             },
             |_| vec![],
         );
-        assert_eq!(count, 100);
+        // The env/Miri reduction caps the count, so compare against the
+        // effective number, not the literal request.
+        assert_eq!(count, effective_cases(100));
     }
 
     #[test]
@@ -116,7 +149,9 @@ mod tests {
             "all-below-500",
             1000,
             7,
-            |rng| rng.next_bounded(1000),
+            // Every draw fails, so the property trips on case 0 regardless
+            // of any DDRNAND_PROPTEST_CASES / Miri case reduction.
+            |rng| 500 + rng.next_bounded(500),
             |&v| {
                 if v < 500 {
                     Ok(())

@@ -106,6 +106,7 @@ mod pjrt_impl {
                     dir.display()
                 );
             }
+            // simlint: allow(nondet, "measures PJRT artifact compile latency for diagnostics")
             let t0 = std::time::Instant::now();
             let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
             let perf = Exe::load(&client, &dir.join("perf.hlo.txt"))?;

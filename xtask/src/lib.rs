@@ -1,0 +1,75 @@
+//! In-workspace dev tasks for the ddrnand workspace.
+//!
+//! The only task so far is **simlint** (`cargo run -p xtask -- lint`): a
+//! token-level static-analysis pass over `rust/src/**` that enforces the
+//! determinism and timing invariants written down in DESIGN.md §14. It is
+//! deliberately dependency-free — a hand-rolled scanner in the same
+//! spirit as `ddrnand::bench::json` — so it builds offline and runs as a
+//! blocking CI job.
+
+pub mod report;
+pub mod rules;
+pub mod scan;
+
+use std::io;
+use std::path::{Path, PathBuf};
+
+use report::{Report, ReportAllow, ReportViolation};
+
+/// Lint every `.rs` file under `root` (sorted walk, so diagnostics and
+/// the JSON report are deterministic).
+pub fn lint_tree(root: &Path) -> io::Result<Report> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    files.sort();
+
+    let mut rep = Report {
+        root: root.display().to_string(),
+        ..Report::default()
+    };
+    for path in &files {
+        let src = std::fs::read_to_string(path)?;
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let fl = rules::lint_source(&rel, &src);
+        rep.files_scanned += 1;
+        for v in fl.violations {
+            rep.violations.push(ReportViolation {
+                file: rel.clone(),
+                line: v.line,
+                rule: v.rule,
+                msg: v.msg,
+            });
+        }
+        for a in fl.allows {
+            rep.allows.push(ReportAllow {
+                file: rel.clone(),
+                line: a.comment_line,
+                rule: a.rule,
+                reason: a.reason,
+            });
+        }
+        for line in fl.malformed {
+            rep.malformed.push((rel.clone(), line));
+        }
+    }
+    Ok(rep)
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)?
+        .map(|e| e.map(|e| e.path()))
+        .collect::<io::Result<_>>()?;
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}

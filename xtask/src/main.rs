@@ -1,0 +1,95 @@
+//! CLI entry point: `cargo run -p xtask -- lint [--root <dir>] [--json <path>]`.
+//!
+//! Exit codes: 0 = clean, 1 = violations or malformed allow comments,
+//! 2 = usage or I/O error. See DESIGN.md §14 for the rules.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => run_lint(&args[1..]),
+        _ => {
+            eprintln!("usage: cargo run -p xtask -- lint [--root <dir>] [--json <path>]");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn run_lint(args: &[String]) -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut json_out: Option<PathBuf> = None;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--root" => root = it.next().map(PathBuf::from),
+            "--json" => json_out = it.next().map(PathBuf::from),
+            other => {
+                eprintln!("unknown argument `{other}`");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let root = root.unwrap_or_else(default_root);
+    if !root.is_dir() {
+        eprintln!("lint root `{}` is not a directory", root.display());
+        return ExitCode::from(2);
+    }
+
+    let rep = match xtask::lint_tree(&root) {
+        Ok(rep) => rep,
+        Err(e) => {
+            eprintln!("simlint: walk failed: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    for v in &rep.violations {
+        println!("{}:{}: [{}] {}", v.file, v.line, v.rule, v.msg);
+    }
+    for (file, line) in &rep.malformed {
+        println!("{file}:{line}: [malformed] unparseable `simlint:` comment");
+    }
+    for a in &rep.allows {
+        println!("{}:{}: allow({}) — {}", a.file, a.line, a.rule, a.reason);
+    }
+    println!(
+        "simlint: {} files, {} violations, {} allows, {} malformed",
+        rep.files_scanned,
+        rep.violations.len(),
+        rep.allows.len(),
+        rep.malformed.len()
+    );
+
+    if let Some(path) = json_out {
+        let text = rep.to_json();
+        if let Err(e) = xtask::report::validate_report_json(&text) {
+            eprintln!("simlint: report failed self-validation: {e}");
+            return ExitCode::from(2);
+        }
+        if let Err(e) = std::fs::write(&path, &text) {
+            eprintln!("simlint: cannot write `{}`: {e}", path.display());
+            return ExitCode::from(2);
+        }
+        println!("simlint: report written to {}", path.display());
+    }
+
+    if rep.is_clean() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}
+
+/// `rust/src` relative to the workspace: the current directory when run
+/// from the workspace root (the `cargo run -p xtask` case), else resolved
+/// from this crate's manifest.
+fn default_root() -> PathBuf {
+    let cwd = PathBuf::from("rust/src");
+    if cwd.is_dir() {
+        cwd
+    } else {
+        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/../rust/src"))
+    }
+}

@@ -1,0 +1,293 @@
+//! Machine-readable simlint report (`ddrnand-simlint-v1`).
+//!
+//! The writer is deliberately timestamp-free: a determinism linter should
+//! itself produce byte-identical output for an unchanged tree, so the
+//! report can be diffed across CI runs. The validator parses the emitted
+//! JSON with `ddrnand::bench::json` — the same hand-rolled parser that
+//! gates `BENCH_engine.json` and the observer timelines — so all the
+//! repo's machine-readable artifacts share one pinned JSON dialect.
+
+use ddrnand::bench::json::{self, Value};
+
+use crate::scan::RULES;
+
+/// The pinned schema tag checked by [`validate_report_json`] and CI.
+pub const SCHEMA: &str = "ddrnand-simlint-v1";
+
+/// One unsuppressed violation, with its file attached.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReportViolation {
+    pub file: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+/// One `// simlint: allow(...)` site, with its file attached.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReportAllow {
+    pub file: String,
+    pub line: u32,
+    pub rule: String,
+    pub reason: String,
+}
+
+/// Aggregated lint result for a whole tree.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub root: String,
+    pub files_scanned: usize,
+    pub violations: Vec<ReportViolation>,
+    pub allows: Vec<ReportAllow>,
+    /// (file, line) of malformed `simlint:` comments.
+    pub malformed: Vec<(String, u32)>,
+}
+
+impl Report {
+    /// Exit status the CLI should use: clean trees exit 0; violations or
+    /// malformed allow comments exit 1.
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty() && self.malformed.is_empty()
+    }
+
+    /// Serialize to the pinned `ddrnand-simlint-v1` JSON (deterministic:
+    /// key order fixed, entries in sorted file walk order, no timestamp).
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(1024);
+        s.push_str("{\n");
+        s.push_str(&format!("  \"schema\": \"{}\",\n", SCHEMA));
+        s.push_str(&format!("  \"root\": {},\n", quote(&self.root)));
+        s.push_str(&format!("  \"files_scanned\": {},\n", self.files_scanned));
+        s.push_str("  \"violations\": [");
+        for (i, v) in self.violations.iter().enumerate() {
+            push_sep(&mut s, i);
+            s.push_str(&format!(
+                "    {{\"file\": {}, \"line\": {}, \"rule\": {}, \"message\": {}}}",
+                quote(&v.file),
+                v.line,
+                quote(v.rule),
+                quote(&v.msg)
+            ));
+        }
+        close_list(&mut s, self.violations.len());
+        s.push_str("  \"allows\": [");
+        for (i, a) in self.allows.iter().enumerate() {
+            push_sep(&mut s, i);
+            s.push_str(&format!(
+                "    {{\"file\": {}, \"line\": {}, \"rule\": {}, \"reason\": {}}}",
+                quote(&a.file),
+                a.line,
+                quote(&a.rule),
+                quote(&a.reason)
+            ));
+        }
+        close_list(&mut s, self.allows.len());
+        s.push_str("  \"malformed\": [");
+        for (i, (file, line)) in self.malformed.iter().enumerate() {
+            push_sep(&mut s, i);
+            s.push_str(&format!("    {{\"file\": {}, \"line\": {}}}", quote(file), line));
+        }
+        close_list(&mut s, self.malformed.len());
+        s.push_str(&format!(
+            "  \"counts\": {{\"violations\": {}, \"allows\": {}, \"malformed\": {}}}\n",
+            self.violations.len(),
+            self.allows.len(),
+            self.malformed.len()
+        ));
+        s.push('}');
+        s.push('\n');
+        s
+    }
+}
+
+fn push_sep(s: &mut String, i: usize) {
+    if i == 0 {
+        s.push('\n');
+    } else {
+        s.push_str(",\n");
+    }
+}
+
+fn close_list(s: &mut String, len: usize) {
+    if len > 0 {
+        s.push_str("\n  ");
+    }
+    s.push_str("],\n");
+}
+
+/// JSON string escaping matching what `bench::json` can parse back.
+fn quote(raw: &str) -> String {
+    let mut out = String::with_capacity(raw.len() + 2);
+    out.push('"');
+    for c in raw.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Validate a serialized report: parseable by the repo's pinned JSON
+/// dialect, right schema tag, counts consistent with the arrays, and
+/// every violation/allow naming a known rule.
+pub fn validate_report_json(text: &str) -> Result<(), String> {
+    let v = json::parse(text)?;
+    let obj = v.as_object().ok_or("report root must be an object")?;
+
+    match get(obj, "schema")? {
+        Value::Str(s) if s == SCHEMA => {}
+        other => return Err(format!("bad schema tag: {other:?}")),
+    }
+    let files_scanned = as_count(get(obj, "files_scanned")?, "files_scanned")?;
+    if files_scanned == 0 {
+        return Err("files_scanned is 0 — lint root is wrong".to_string());
+    }
+
+    let violations = get_arr(obj, "violations")?;
+    for item in violations {
+        check_entry(item, &["file", "line", "rule", "message"])?;
+    }
+    let allows = get_arr(obj, "allows")?;
+    for item in allows {
+        check_entry(item, &["file", "line", "rule", "reason"])?;
+    }
+    let malformed = get_arr(obj, "malformed")?;
+    for item in malformed {
+        check_entry(item, &["file", "line"])?;
+    }
+
+    let counts_val = get(obj, "counts")?;
+    let counts = counts_val.as_object().ok_or("`counts` must be an object")?;
+    if get_count(counts, "violations")? != violations.len()
+        || get_count(counts, "allows")? != allows.len()
+        || get_count(counts, "malformed")? != malformed.len()
+    {
+        return Err("counts do not match array lengths".to_string());
+    }
+    Ok(())
+}
+
+fn get<'a>(obj: &'a [(String, Value)], key: &str) -> Result<&'a Value, String> {
+    obj.iter()
+        .find(|(k, _)| k == key)
+        .map(|(_, v)| v)
+        .ok_or_else(|| format!("missing key `{key}`"))
+}
+
+fn get_arr<'a>(obj: &'a [(String, Value)], key: &str) -> Result<&'a [Value], String> {
+    match get(obj, key)? {
+        Value::Array(items) => Ok(items),
+        _ => Err(format!("`{key}` must be an array")),
+    }
+}
+
+fn get_count(obj: &[(String, Value)], key: &str) -> Result<usize, String> {
+    as_count(get(obj, key)?, key)
+}
+
+fn as_count(v: &Value, key: &str) -> Result<usize, String> {
+    match v {
+        Value::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Ok(*n as usize),
+        _ => Err(format!("`{key}` must be a non-negative integer")),
+    }
+}
+
+/// Check one array entry: object shape, required keys, `line` a positive
+/// integer, any `rule` drawn from the known rule set.
+fn check_entry(item: &Value, keys: &[&str]) -> Result<(), String> {
+    let obj = item.as_object().ok_or("array entry must be an object")?;
+    for key in keys {
+        let val = obj
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v)
+            .ok_or_else(|| format!("entry missing key `{key}`"))?;
+        match (*key, val) {
+            ("line", Value::Num(n)) if *n >= 1.0 && n.fract() == 0.0 => {}
+            ("line", _) => return Err("`line` must be a positive integer".to_string()),
+            ("rule", Value::Str(r)) if RULES.contains(&r.as_str()) => {}
+            ("rule", other) => return Err(format!("unknown rule {other:?}")),
+            (_, Value::Str(_)) => {}
+            (k, _) => return Err(format!("`{k}` must be a string")),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Report {
+        Report {
+            root: "rust/src".to_string(),
+            files_scanned: 2,
+            violations: vec![ReportViolation {
+                file: "sim/engine.rs".to_string(),
+                line: 7,
+                rule: "float-on-time",
+                msg: "float cast on a time-typed expression".to_string(),
+            }],
+            allows: vec![ReportAllow {
+                file: "bench.rs".to_string(),
+                line: 44,
+                rule: "nondet".to_string(),
+                reason: "wall clock is the measurand".to_string(),
+            }],
+            malformed: vec![("iface/bus.rs".to_string(), 3)],
+        }
+    }
+
+    #[test]
+    fn report_round_trips_through_pinned_parser() {
+        let text = sample().to_json();
+        validate_report_json(&text).expect("sample report must validate");
+    }
+
+    #[test]
+    fn empty_report_validates() {
+        let r = Report {
+            root: "rust/src".to_string(),
+            files_scanned: 1,
+            ..Report::default()
+        };
+        validate_report_json(&r.to_json()).expect("empty report must validate");
+    }
+
+    #[test]
+    fn tampered_counts_are_rejected() {
+        let text = sample().to_json();
+        let bad = text.replace("\"violations\": 1", "\"violations\": 2");
+        assert!(validate_report_json(&bad).is_err());
+    }
+
+    #[test]
+    fn unknown_rule_is_rejected() {
+        let text = sample().to_json().replace("float-on-time", "bogus-rule");
+        assert!(validate_report_json(&text).is_err());
+    }
+
+    #[test]
+    fn zero_files_scanned_is_rejected() {
+        let r = Report {
+            root: "rust/src".to_string(),
+            files_scanned: 0,
+            ..Report::default()
+        };
+        assert!(validate_report_json(&r.to_json()).is_err());
+    }
+
+    #[test]
+    fn escaping_survives_quotes_and_newlines() {
+        let mut r = sample();
+        r.allows[0].reason = "say \"hi\"\nand a \\ backslash\ttab".to_string();
+        validate_report_json(&r.to_json()).expect("escaped report must validate");
+    }
+}

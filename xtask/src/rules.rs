@@ -1,0 +1,419 @@
+//! The four simlint rules (DESIGN.md §14), run over the token stream from
+//! [`crate::scan`].
+//!
+//! * `nondet` (R1) — no wall clocks, sleeps, or hash-order iteration
+//!   anywhere in `rust/src`.
+//! * `float-on-time` (R2) — integer-picosecond discipline in the hot
+//!   timing modules: no float casts/literals touching time-typed values.
+//! * `panic-in-config` (R3) — config-load paths return errors, never
+//!   panic.
+//! * `calendar-discipline` (R4) — event times are owned by `sim/`; no
+//!   direct calendar types or event-time mutation outside it.
+
+use crate::scan::{self, AllowSite, Tok, TokKind};
+
+/// Hash-collection methods whose visit order is nondeterministic.
+const ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "into_iter",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "retain",
+];
+
+/// R2 applies to every file under these prefixes...
+const R2_SCOPE_PREFIXES: &[&str] = &["sim/"];
+/// ...plus these specific hot-path files (report/energy/analytic exempt).
+const R2_SCOPE_FILES: &[&str] = &[
+    "iface/bus.rs",
+    "controller/way.rs",
+    "controller/channel.rs",
+    "controller/sched.rs",
+    "coordinator/ssd.rs",
+];
+
+/// R3 applies inside these functions everywhere (plus all of `config/`).
+const R3_FNS: &[&str] = &["validate", "from_toml"];
+
+/// One rule hit, after test-region stripping but before allows are applied.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub rule: &'static str,
+    pub line: u32,
+    pub msg: String,
+}
+
+/// Lint result for a single file.
+#[derive(Debug, Default)]
+pub struct FileLint {
+    /// Violations not suppressed by a matching allow, sorted by
+    /// (line, rule, message).
+    pub violations: Vec<Violation>,
+    /// Every well-formed allow comment in the file (used or not — the
+    /// report pins the total so silent allow growth is visible in review).
+    pub allows: Vec<AllowSite>,
+    /// Lines with a `simlint:` comment that does not parse as an allow.
+    pub malformed: Vec<u32>,
+}
+
+/// Lint one file. `rel` is the path relative to the lint root
+/// (e.g. `sim/queue.rs`) — rules R2-R4 are scoped by it.
+pub fn lint_source(rel: &str, src: &str) -> FileLint {
+    let lexed = scan::tokenize(src);
+    let toks = scan::strip_test_regions(lexed.toks);
+    let mut v: Vec<Violation> = Vec::new();
+
+    rule_nondet(&toks, &mut v);
+    rule_float_on_time(rel, &toks, &mut v);
+    rule_panic_in_config(rel, &toks, &mut v);
+    rule_calendar_discipline(rel, &toks, &mut v);
+
+    // Apply allows: an allow suppresses every hit of its rule on its
+    // target line (the annotated line, or the next line for a standalone
+    // comment).
+    v.retain(|viol| {
+        !lexed
+            .allows
+            .iter()
+            .any(|a| a.rule == viol.rule && a.target_line == viol.line)
+    });
+    v.sort_by(|a, b| (a.line, a.rule, &a.msg).cmp(&(b.line, b.rule, &b.msg)));
+
+    FileLint {
+        violations: v,
+        allows: lexed.allows,
+        malformed: lexed.malformed,
+    }
+}
+
+fn push(v: &mut Vec<Violation>, rule: &'static str, line: u32, msg: String) {
+    v.push(Violation { rule, line, msg });
+}
+
+/// R1: wall clocks, sleeps, and hash-order iteration.
+fn rule_nondet(toks: &[Tok], v: &mut Vec<Violation>) {
+    for k in 0..toks.len().saturating_sub(2) {
+        let (a, b, c) = (&toks[k], &toks[k + 1], &toks[k + 2]);
+        if (a.text == "Instant" || a.text == "SystemTime") && b.text == "::" && c.text == "now" {
+            let msg = format!("wall-clock `{}::now` in simulator source", a.text);
+            push(v, "nondet", a.line, msg);
+        }
+        if a.text == "thread" && b.text == "::" && c.text == "sleep" {
+            push(v, "nondet", a.line, "`thread::sleep` in simulator source".to_string());
+        }
+    }
+
+    let hnames = hash_names(toks);
+    for k in 0..toks.len() {
+        let t = &toks[k];
+        if t.kind != TokKind::Ident || !hnames.contains(&t.text) {
+            continue;
+        }
+        // `name.iter()` / `.keys()` / ... method-call iteration.
+        if k + 2 < toks.len()
+            && toks[k + 1].text == "."
+            && ITER_METHODS.contains(&toks[k + 2].text.as_str())
+        {
+            let msg = format!(
+                "iteration over hash collection `{}.{}()` (order is nondeterministic)",
+                t.text,
+                toks[k + 2].text
+            );
+            push(v, "nondet", t.line, msg);
+        }
+        // `for pat in [&][mut][self.]name {` — chain back to the `in`.
+        let next_is_body = match toks.get(k + 1) {
+            Some(nx) => nx.text == "{",
+            None => true,
+        };
+        if next_is_body {
+            let mut j = k;
+            let mut steps = 0;
+            let mut found_in = false;
+            while j > 0 && steps < 8 {
+                let prev = &toks[j - 1];
+                if prev.text == "in" {
+                    found_in = true;
+                    break;
+                }
+                let chains = prev.kind == TokKind::Ident
+                    || matches!(prev.text.as_str(), "&" | "mut" | ".");
+                if !chains {
+                    break;
+                }
+                j -= 1;
+                steps += 1;
+            }
+            if found_in {
+                let msg = format!(
+                    "for-loop over hash collection `{}` (order is nondeterministic)",
+                    t.text
+                );
+                push(v, "nondet", t.line, msg);
+            }
+        }
+    }
+}
+
+/// Names bound to `HashMap`/`HashSet` in this file: struct fields and
+/// typed bindings (`name: HashMap<...>`) and `let name = HashMap::...`.
+/// Keyed lookup on these stays legal; only *iteration* is flagged.
+fn hash_names(toks: &[Tok]) -> Vec<String> {
+    let mut names: Vec<String> = Vec::new();
+    for k in 0..toks.len() {
+        if toks[k].text != "HashMap" && toks[k].text != "HashSet" {
+            continue;
+        }
+        // `name : [std :: collections ::][&][mut] HashMap`
+        let mut j = k;
+        while j > 0
+            && matches!(toks[j - 1].text.as_str(), "std" | "collections" | "::" | "&" | "mut")
+        {
+            j -= 1;
+        }
+        if j >= 2 && toks[j - 1].text == ":" && toks[j - 2].kind == TokKind::Ident {
+            note(&mut names, &toks[j - 2].text);
+            continue;
+        }
+        // `let name = HashMap::new()` / `= HashMap::with_capacity(..)`
+        let mut j = k;
+        let mut back = 0;
+        while j > 0 && back < 8 {
+            let t = toks[j - 1].text.as_str();
+            if t == "=" {
+                if j >= 2 && toks[j - 2].kind == TokKind::Ident {
+                    note(&mut names, &toks[j - 2].text);
+                }
+                break;
+            }
+            if matches!(t, ";" | "{" | "}") {
+                break;
+            }
+            j -= 1;
+            back += 1;
+        }
+    }
+    names
+}
+
+fn note(names: &mut Vec<String>, name: &str) {
+    if !names.iter().any(|n| n == name) {
+        names.push(name.to_string());
+    }
+}
+
+/// True for identifiers that mark a time-typed value in the scoped
+/// modules: the `Ps` newtype, `*_ps` fields, `t_*` locals, and the
+/// scheduler vocabulary.
+fn is_time_marker(t: &str) -> bool {
+    matches!(t, "ps" | "now" | "at" | "horizon" | "lookahead" | "deadline" | "Ps")
+        || t.ends_with("_ps")
+        || t.starts_with("t_")
+}
+
+/// R2: float casts/literals on lines that touch a time-typed value, in the
+/// integer-picosecond hot paths. The sanctioned boundary helpers
+/// (`as_ns_f64` etc.) lex as single identifiers and pass untouched.
+fn rule_float_on_time(rel: &str, toks: &[Tok], v: &mut Vec<Violation>) {
+    let in_scope = R2_SCOPE_FILES.contains(&rel)
+        || R2_SCOPE_PREFIXES.iter().any(|p| rel.starts_with(p));
+    if !in_scope {
+        return;
+    }
+    let mut i = 0;
+    while i < toks.len() {
+        let line = toks[i].line;
+        let mut j = i;
+        while j < toks.len() && toks[j].line == line {
+            j += 1;
+        }
+        let lt = &toks[i..j];
+        i = j;
+
+        let has_marker = lt
+            .iter()
+            .any(|t| t.kind == TokKind::Ident && is_time_marker(&t.text));
+        if !has_marker {
+            continue;
+        }
+        let has_cast = lt.windows(2).any(|w| {
+            w[0].text == "as" && (w[1].text == "f64" || w[1].text == "f32")
+        });
+        let has_float = lt.iter().any(|t| t.kind == TokKind::Float);
+        if has_cast {
+            push(v, "float-on-time", line, "float cast on a time-typed expression".to_string());
+        } else if has_float {
+            push(
+                v,
+                "float-on-time",
+                line,
+                "float literal in arithmetic with a time-typed value".to_string(),
+            );
+        }
+    }
+}
+
+/// R3: `.unwrap()`/`.expect()`/`panic!` in config-load paths — all of
+/// `config/`, plus `validate`/`from_toml` bodies anywhere.
+fn rule_panic_in_config(rel: &str, toks: &[Tok], v: &mut Vec<Violation>) {
+    let r3_all = rel.starts_with("config/");
+    let ranges = scan::fn_body_ranges(toks, R3_FNS);
+    let in_r3 = |line: u32| r3_all || ranges.iter().any(|&(lo, hi)| (lo..=hi).contains(&line));
+    for k in 0..toks.len().saturating_sub(1) {
+        let (t, nx) = (&toks[k], &toks[k + 1]);
+        if !in_r3(t.line) {
+            continue;
+        }
+        if (t.text == "unwrap" || t.text == "expect") && nx.text == "(" {
+            let msg = format!("`.{}()` in a config-load path (return an error instead)", t.text);
+            push(v, "panic-in-config", t.line, msg);
+        }
+        if t.text == "panic" && nx.text == "!" {
+            push(
+                v,
+                "panic-in-config",
+                t.line,
+                "`panic!` in a config-load path (return an error instead)".to_string(),
+            );
+        }
+    }
+}
+
+/// R4: outside `sim/`, no direct calendar types and no assignment to an
+/// event's `.at`/`.now` time field — scheduling goes through
+/// `Scheduler`/`Emit::send_at`.
+fn rule_calendar_discipline(rel: &str, toks: &[Tok], v: &mut Vec<Violation>) {
+    if rel.starts_with("sim/") {
+        return;
+    }
+    for k in 0..toks.len() {
+        let t = &toks[k];
+        if t.text == "EventQueue" || t.text == "HeapEventQueue" {
+            let msg = format!(
+                "direct use of `{}` outside sim/ (schedule via Scheduler/Emit)",
+                t.text
+            );
+            push(v, "calendar-discipline", t.line, msg);
+        }
+        if t.text == "."
+            && k + 2 < toks.len()
+            && matches!(toks[k + 1].text.as_str(), "at" | "now")
+            && toks[k + 2].text == "="
+        {
+            let msg = format!("direct mutation of event time field `.{}`", toks[k + 1].text);
+            push(v, "calendar-discipline", toks[k + 1].line, msg);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_calls_are_flagged_and_allowed() {
+        let src = concat!(
+            "fn f() {\n",
+            "    let t0 = Instant::now();\n",
+            "    // simlint: allow(nondet, \"timed harness\")\n",
+            "    let t1 = std::time::Instant::now();\n",
+            "}\n",
+        );
+        let fl = lint_source("bench.rs", src);
+        assert_eq!(fl.violations.len(), 1);
+        assert_eq!(fl.violations[0].line, 2);
+        assert_eq!(fl.allows.len(), 1);
+    }
+
+    #[test]
+    fn hash_iteration_is_flagged_but_keyed_lookup_is_not() {
+        let src = concat!(
+            "struct S { m: HashMap<u32, u32> }\n",
+            "fn f(s: &S) -> Option<&u32> { s.m.get(&3) }\n",
+            "fn g(s: &S) -> usize { s.m.iter().count() }\n",
+            "fn h(s: &S) {\n",
+            "    for x in &s.m {\n",
+            "        let _ = x;\n",
+            "    }\n",
+            "}\n",
+        );
+        let fl = lint_source("controller/cache.rs", src);
+        let lines: Vec<u32> = fl.violations.iter().map(|v| v.line).collect();
+        assert_eq!(lines, vec![3, 5]);
+        assert!(fl.violations[0].msg.contains("m.iter()"));
+        assert!(fl.violations[1].msg.contains("for-loop"));
+    }
+
+    #[test]
+    fn self_field_for_loop_is_caught() {
+        let src = concat!(
+            "struct S { entries: HashMap<u64, u64> }\n",
+            "impl S {\n",
+            "    fn scan(&self) {\n",
+            "        for e in &self.entries {\n",
+            "            let _ = e;\n",
+            "        }\n",
+            "    }\n",
+            "}\n",
+        );
+        let fl = lint_source("controller/cache.rs", src);
+        assert_eq!(fl.violations.len(), 1);
+        assert_eq!(fl.violations[0].line, 4);
+    }
+
+    #[test]
+    fn float_on_time_scoping() {
+        let src = "fn f(t_busy: u64) -> f64 { t_busy as f64 }\n";
+        assert_eq!(lint_source("sim/engine.rs", src).violations.len(), 1);
+        assert!(lint_source("report/mod.rs", src).violations.is_empty());
+        // Sanctioned boundary helper lexes as one identifier: clean.
+        let ok = "fn g(p: Ps) -> u64 { p.checked_ps() }\n";
+        assert!(lint_source("sim/engine.rs", ok).violations.is_empty());
+    }
+
+    #[test]
+    fn panic_in_config_scoping() {
+        let src = concat!(
+            "fn load(s: &str) -> u32 { s.parse().unwrap() }\n",
+            "fn validate(x: u32) -> u32 {\n",
+            "    assert_ne!(x, 0);\n",
+            "    x.checked_mul(2).expect(\"overflow\")\n",
+            "}\n",
+        );
+        // In config/, both fns are in scope.
+        assert_eq!(lint_source("config/mod.rs", src).violations.len(), 2);
+        // Elsewhere, only the `validate` body is.
+        let fl = lint_source("report/mod.rs", src);
+        assert_eq!(fl.violations.len(), 1);
+        assert_eq!(fl.violations[0].line, 4);
+    }
+
+    #[test]
+    fn calendar_discipline_outside_sim_only() {
+        let src = concat!(
+            "fn f(q: &mut EventQueue, ev: &mut Ev) {\n",
+            "    ev.at = 5;\n",
+            "}\n",
+        );
+        let fl = lint_source("controller/sched.rs", src);
+        assert_eq!(fl.violations.len(), 2);
+        assert!(lint_source("sim/queue.rs", src).violations.is_empty());
+    }
+
+    #[test]
+    fn test_modules_are_exempt() {
+        let src = concat!(
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    fn t() {\n",
+            "        let t0 = Instant::now();\n",
+            "        let _ = t0;\n",
+            "    }\n",
+            "}\n",
+        );
+        assert!(lint_source("sim/engine.rs", src).violations.is_empty());
+    }
+}

@@ -1,0 +1,579 @@
+//! Token-level scanner for simlint.
+//!
+//! Hand-rolled in the same spirit as `ddrnand::bench::json`: no external
+//! dependencies, a small surface, and deterministic output. The scanner
+//! strips comments and string literals (so rule patterns never match inside
+//! them), distinguishes float from integer literals, captures
+//! `// simlint: allow(<rule>, "<reason>")` escape hatches, and drops
+//! `#[cfg(test)]` / `#[test]` items so the rules only see shipping code.
+
+/// Rules simlint knows about; an allow naming anything else is malformed.
+pub const RULES: &[&str] = &["nondet", "float-on-time", "panic-in-config", "calendar-discipline"];
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Int,
+    Float,
+    Punct,
+}
+
+/// One lexed token with the 1-based source line it starts on.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// A parsed `// simlint: allow(<rule>, "<reason>")` comment.
+#[derive(Debug, Clone)]
+pub struct AllowSite {
+    pub rule: String,
+    pub reason: String,
+    /// Line the allowance suppresses: the comment's own line when it
+    /// trails code, the following line when it stands alone.
+    pub target_line: u32,
+    /// Line the comment itself is on (reported in the JSON).
+    pub comment_line: u32,
+}
+
+/// Tokenized source plus the lint-control comments found along the way.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub allows: Vec<AllowSite>,
+    /// Lines whose comment says `simlint:` but does not parse as a
+    /// well-formed allow (unknown rule, missing quoted reason, typo).
+    pub malformed: Vec<u32>,
+}
+
+/// Lex `src`. Never fails: unrecognized bytes become inert punct tokens.
+pub fn tokenize(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    let mut line_has_code = false;
+
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            line_has_code = false;
+            i += 1;
+            continue;
+        }
+        if c == b' ' || c == b'\t' || c == b'\r' {
+            i += 1;
+            continue;
+        }
+        // Line comment (incl. doc comments): capture simlint directives.
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let j = find_byte(b, i, b'\n');
+            scan_comment(&src[i..j], line, line_has_code, &mut out);
+            i = j;
+            continue;
+        }
+        // Block comment; Rust block comments nest.
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let mut depth = 1u32;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if b[i] == b'\n' {
+                        line += 1;
+                        line_has_code = false;
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        line_has_code = true;
+        // Raw string r"..." / r#"..."# (any hash depth). `r#ident` raw
+        // identifiers fall through to the ident path below.
+        if c == b'r' && i + 1 < n && (b[i + 1] == b'#' || b[i + 1] == b'"') {
+            let mut j = i + 1;
+            let mut hashes = 0usize;
+            while j < n && b[j] == b'#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == b'"' {
+                j += 1;
+                'raw: while j < n {
+                    if b[j] == b'\n' {
+                        line += 1;
+                    }
+                    if b[j] == b'"' {
+                        let mut k = j + 1;
+                        let mut seen = 0usize;
+                        while k < n && b[k] == b'#' && seen < hashes {
+                            seen += 1;
+                            k += 1;
+                        }
+                        if seen == hashes {
+                            j = k;
+                            break 'raw;
+                        }
+                    }
+                    j += 1;
+                }
+                i = j;
+                continue;
+            }
+        }
+        // String literal (b"..." reaches here after the `b` ident).
+        if c == b'"' {
+            let mut j = i + 1;
+            while j < n {
+                if b[j] == b'\\' {
+                    j += 2;
+                    continue;
+                }
+                if b[j] == b'"' {
+                    break;
+                }
+                if b[j] == b'\n' {
+                    line += 1;
+                }
+                j += 1;
+            }
+            i = (j + 1).min(n);
+            continue;
+        }
+        // Lifetime vs char literal.
+        if c == b'\'' {
+            let next_ident = i + 1 < n && (b[i + 1].is_ascii_alphabetic() || b[i + 1] == b'_');
+            let closes = i + 2 < n && b[i + 2] == b'\'';
+            if next_ident && !closes {
+                let mut j = i + 1;
+                while j < n && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+                    j += 1;
+                }
+                i = j;
+                continue;
+            }
+            let mut j = i + 1;
+            if j < n && b[j] == b'\\' {
+                j += 2;
+                while j < n && b[j] != b'\'' {
+                    j += 1;
+                }
+            } else {
+                j += 1;
+            }
+            i = (j + 1).min(n);
+            continue;
+        }
+        // Identifier / keyword.
+        if c.is_ascii_alphabetic() || c == b'_' {
+            let mut j = i;
+            while j < n && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+                j += 1;
+            }
+            out.toks.push(tok(TokKind::Ident, &src[i..j], line));
+            i = j;
+            continue;
+        }
+        // Number literal.
+        if c.is_ascii_digit() {
+            let (j, is_float) = lex_number(b, i);
+            let kind = if is_float { TokKind::Float } else { TokKind::Int };
+            out.toks.push(tok(kind, &src[i..j], line));
+            i = j;
+            continue;
+        }
+        // Punctuation: join the two-char operators the rules care about.
+        if c.is_ascii() {
+            const TWO: &[&str] = &[
+                "::", "==", "=>", "->", "!=", "<=", ">=", "+=", "-=", "*=", "/=", "|=", "&=", "..",
+            ];
+            let mut matched = false;
+            for t in TWO {
+                if src[i..].starts_with(t) {
+                    out.toks.push(tok(TokKind::Punct, t, line));
+                    i += 2;
+                    matched = true;
+                    break;
+                }
+            }
+            if !matched {
+                out.toks.push(tok(TokKind::Punct, &src[i..i + 1], line));
+                i += 1;
+            }
+            continue;
+        }
+        // Non-ASCII outside comments/strings: skip the byte (no token).
+        i += 1;
+    }
+    out
+}
+
+fn tok(kind: TokKind, text: &str, line: u32) -> Tok {
+    Tok {
+        kind,
+        text: text.to_string(),
+        line,
+    }
+}
+
+fn find_byte(b: &[u8], from: usize, needle: u8) -> usize {
+    let mut j = from;
+    while j < b.len() && b[j] != needle {
+        j += 1;
+    }
+    j
+}
+
+/// Consume a number starting at `i` (ascii digit). Returns (end, is_float).
+fn lex_number(b: &[u8], i: usize) -> (usize, bool) {
+    let n = b.len();
+    let mut j = i;
+    let mut is_float = false;
+    if b[i] == b'0' && i + 1 < n && matches!(b[i + 1], b'x' | b'o' | b'b') {
+        j = i + 2;
+        while j < n && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+            j += 1;
+        }
+        return (j, false);
+    }
+    while j < n && (b[j].is_ascii_digit() || b[j] == b'_') {
+        j += 1;
+    }
+    // Fractional part: `1.5` yes; `0..x` and `v.0` and `1.method()` no.
+    if j < n && b[j] == b'.' && j + 1 < n && b[j + 1].is_ascii_digit() {
+        is_float = true;
+        j += 1;
+        while j < n && (b[j].is_ascii_digit() || b[j] == b'_') {
+            j += 1;
+        }
+    } else if j < n && b[j] == b'.' {
+        // Trailing-dot float `1.` — but not a range `0..4`, a method call
+        // `1.min(x)`, or a field access.
+        let joins = match b.get(j + 1) {
+            Some(&c) => c.is_ascii_alphanumeric() || c == b'_' || c == b'.',
+            None => false,
+        };
+        if !joins {
+            is_float = true;
+            j += 1;
+        }
+    }
+    // Exponent.
+    if j < n && (b[j] == b'e' || b[j] == b'E') {
+        let mut k = j + 1;
+        if k < n && (b[k] == b'+' || b[k] == b'-') {
+            k += 1;
+        }
+        if k < n && b[k].is_ascii_digit() {
+            is_float = true;
+            j = k;
+            while j < n && (b[j].is_ascii_digit() || b[j] == b'_') {
+                j += 1;
+            }
+        }
+    }
+    // Type suffix.
+    let rest = &b[j..];
+    if rest.starts_with(b"f64") || rest.starts_with(b"f32") {
+        return (j + 3, true);
+    }
+    const INT_SUFFIXES: &[&str] = &[
+        "usize", "isize", "u128", "i128", "u64", "i64", "u32", "i32", "u16", "i16", "u8", "i8",
+    ];
+    for s in INT_SUFFIXES {
+        if rest.starts_with(s.as_bytes()) {
+            return (j + s.len(), is_float);
+        }
+    }
+    (j, is_float)
+}
+
+/// Parse one `//` comment for simlint directives.
+fn scan_comment(comment: &str, line: u32, line_has_code: bool, out: &mut Lexed) {
+    let Some(idx) = comment.find("simlint:") else {
+        return;
+    };
+    let rest = comment[idx + "simlint:".len()..].trim_start();
+    match parse_allow(rest) {
+        Some((rule, reason)) if RULES.contains(&rule.as_str()) => {
+            out.allows.push(AllowSite {
+                rule,
+                reason,
+                target_line: if line_has_code { line } else { line + 1 },
+                comment_line: line,
+            });
+        }
+        _ => out.malformed.push(line),
+    }
+}
+
+/// Parse `allow(<rule>, "<reason>")`; `None` on any shape mismatch.
+fn parse_allow(s: &str) -> Option<(String, String)> {
+    let s = s.strip_prefix("allow(")?;
+    let comma = s.find(',')?;
+    let rule = s[..comma].trim().to_string();
+    let s = s[comma + 1..].trim_start();
+    let s = s.strip_prefix('"')?;
+    let endq = s.find('"')?;
+    let reason = s[..endq].to_string();
+    let s = s[endq + 1..].trim_start();
+    if !s.starts_with(')') || rule.is_empty() || reason.is_empty() {
+        return None;
+    }
+    Some((rule, reason))
+}
+
+/// Drop `#[cfg(test)]`-gated items and `#[test]` functions (with any
+/// stacked attributes) from the token stream: simlint rules only apply to
+/// shipping code, and the goldens/oracles may legitimately use wall
+/// clocks, floats and hash iteration.
+pub fn strip_test_regions(toks: Vec<Tok>) -> Vec<Tok> {
+    let n = toks.len();
+    let mut out = Vec::with_capacity(n);
+    let mut i = 0usize;
+    while i < n {
+        match match_attr(&toks, i) {
+            Some((end, true)) => {
+                let mut j = end;
+                while let Some((e2, _)) = match_attr(&toks, j) {
+                    j = e2;
+                }
+                // Skip the gated item: to a top-level `;` (declarations)
+                // or past the matching close of its first brace block.
+                let mut depth = 0i32;
+                while j < n {
+                    match toks[j].text.as_str() {
+                        ";" if depth == 0 => {
+                            j += 1;
+                            break;
+                        }
+                        "{" => depth += 1,
+                        "}" => {
+                            depth -= 1;
+                            if depth == 0 {
+                                j += 1;
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                i = j;
+            }
+            Some((end, false)) => {
+                out.extend_from_slice(&toks[i..end]);
+                i = end;
+            }
+            None => {
+                out.push(toks[i].clone());
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+/// If an outer attribute `#[...]` starts at `i`, return (end index, whether
+/// it is `#[test]` or `#[cfg(test)]`).
+fn match_attr(toks: &[Tok], i: usize) -> Option<(usize, bool)> {
+    if toks.get(i)?.text != "#" || toks.get(i + 1)?.text != "[" {
+        return None;
+    }
+    let mut depth = 0i32;
+    let mut j = i + 1;
+    let mut inner: Vec<&str> = Vec::new();
+    loop {
+        let t = toks.get(j)?;
+        match t.text.as_str() {
+            "[" => depth += 1,
+            "]" => {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            other => inner.push(other),
+        }
+        j += 1;
+    }
+    let is_cfg_test = inner.len() >= 4
+        && inner[0] == "cfg"
+        && inner[1] == "("
+        && inner[2] == "test"
+        && inner[3] == ")";
+    let is_test = inner.first() == Some(&"test") || is_cfg_test;
+    Some((j + 1, is_test))
+}
+
+/// Line ranges (inclusive) of the bodies of `fn <name>` for each name in
+/// `names`. Bodyless trait declarations (`fn validate(...);`) are skipped.
+pub fn fn_body_ranges(toks: &[Tok], names: &[&str]) -> Vec<(u32, u32)> {
+    let n = toks.len();
+    let mut ranges = Vec::new();
+    let mut i = 0usize;
+    while i < n {
+        if toks[i].text == "fn" && i + 1 < n && names.contains(&toks[i + 1].text.as_str()) {
+            let mut j = i + 2;
+            while j < n && toks[j].text != "{" && toks[j].text != ";" {
+                j += 1;
+            }
+            if j < n && toks[j].text == "{" {
+                let start = toks[j].line;
+                let mut depth = 0i32;
+                while j < n {
+                    match toks[j].text.as_str() {
+                        "{" => depth += 1,
+                        "}" => {
+                            depth -= 1;
+                            if depth == 0 {
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                let end = if j < n { toks[j].line } else { start };
+                ranges.push((start, end));
+            }
+            i = j;
+        }
+        i += 1;
+    }
+    ranges
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        tokenize(src).toks.into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn comments_and_strings_are_stripped() {
+        let toks = texts("let x = \"now()\"; // Instant::now()\n/* HashMap */ let y = 1;");
+        assert_eq!(toks, vec!["let", "x", "=", ";", "let", "y", "=", "1", ";"]);
+    }
+
+    #[test]
+    fn nested_block_comments_close_correctly() {
+        let toks = texts("/* a /* b */ c */ fn f() {}");
+        assert_eq!(toks, vec!["fn", "f", "(", ")", "{", "}"]);
+    }
+
+    #[test]
+    fn raw_strings_with_hashes_are_skipped() {
+        let toks = texts("let s = r#\"quote \" inside\"#; done");
+        assert_eq!(toks, vec!["let", "s", "=", ";", "done"]);
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let toks = texts("fn f<'a>(x: &'a str, c: char) { let y = 'z'; let nl = '\\n'; }");
+        assert!(toks.contains(&"str".to_string()));
+        assert!(toks.contains(&"nl".to_string()));
+        // Char literal contents never become tokens.
+        assert!(!toks.contains(&"z".to_string()));
+    }
+
+    #[test]
+    fn float_vs_int_classification() {
+        let lexed = tokenize("a(1.5, 1e3, 2, 0x1F, 0..4, v.0, 50_000.0, 3f64, 9u32)");
+        let floats: Vec<&str> = lexed
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Float)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(floats, vec!["1.5", "1e3", "50_000.0", "3f64"]);
+        let ints: Vec<&str> = lexed
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Int)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(ints, vec!["2", "0x1F", "0", "4", "0", "9u32"]);
+    }
+
+    #[test]
+    fn allow_comments_parse_with_target_lines() {
+        let src = concat!(
+            "// simlint: allow(nondet, \"standalone\")\n",
+            "let a = 1;\n",
+            "let b = 2; // simlint: allow(float-on-time, \"trailing\")\n",
+        );
+        let lexed = tokenize(src);
+        assert_eq!(lexed.allows.len(), 2);
+        assert_eq!(lexed.allows[0].rule, "nondet");
+        assert_eq!(lexed.allows[0].target_line, 2);
+        assert_eq!(lexed.allows[1].rule, "float-on-time");
+        assert_eq!(lexed.allows[1].target_line, 3);
+        assert!(lexed.malformed.is_empty());
+    }
+
+    #[test]
+    fn malformed_allows_are_reported() {
+        let src = concat!(
+            "// simlint: allow(bogus-rule, \"x\")\n",
+            "// simlint: allow(nondet)\n",
+            "// simlint: typo\n",
+        );
+        let lexed = tokenize(src);
+        assert!(lexed.allows.is_empty());
+        assert_eq!(lexed.malformed, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn cfg_test_items_are_stripped() {
+        let src = concat!(
+            "fn keep() {}\n",
+            "#[cfg(test)]\n",
+            "mod tests {\n    fn drop_me() {}\n}\n",
+            "#[cfg(test)]\n",
+            "#[allow(dead_code)]\n",
+            "mod more {\n    fn also() {}\n}\n",
+            "fn keep2() {}\n",
+        );
+        let kept = strip_test_regions(tokenize(src).toks);
+        let names: Vec<&str> = kept.iter().map(|t| t.text.as_str()).collect();
+        assert!(names.contains(&"keep"));
+        assert!(names.contains(&"keep2"));
+        assert!(!names.contains(&"drop_me"));
+        assert!(!names.contains(&"also"));
+    }
+
+    #[test]
+    fn test_attr_fns_are_stripped_and_other_attrs_kept() {
+        let src = "#[derive(Debug)]\nstruct S;\n#[test]\nfn t() { let x = 1; }\nfn k() {}\n";
+        let kept = strip_test_regions(tokenize(src).toks);
+        let names: Vec<&str> = kept.iter().map(|t| t.text.as_str()).collect();
+        assert!(names.contains(&"S"));
+        assert!(names.contains(&"k"));
+        assert!(!names.contains(&"t"));
+        assert!(names.contains(&"derive"));
+    }
+
+    #[test]
+    fn fn_bodies_are_ranged_and_declarations_skipped() {
+        let src = concat!(
+            "trait T {\n    fn validate(&self) -> bool;\n}\n",
+            "fn validate() {\n    let x = 1;\n}\n",
+        );
+        let lexed = tokenize(src);
+        let ranges = fn_body_ranges(&lexed.toks, &["validate"]);
+        assert_eq!(ranges, vec![(4, 6)]);
+    }
+}

@@ -1,0 +1,7 @@
+pub fn stamp() -> (u64, u64) {
+    // simlint: allow(wall-clock, "unknown rule name")
+    let t0 = std::time::Instant::now();
+    // simlint: allow(nondet)
+    let t1 = std::time::Instant::now();
+    (t0.elapsed().as_nanos() as u64, t1.elapsed().as_nanos() as u64)
+}

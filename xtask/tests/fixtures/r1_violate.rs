@@ -1,0 +1,23 @@
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub struct Tracker {
+    seen: HashMap<u64, u64>,
+}
+
+impl Tracker {
+    pub fn snapshot(&self) -> Vec<(u64, u64)> {
+        let t0 = Instant::now();
+        let _ = t0;
+        let mut out = Vec::new();
+        for (k, v) in &self.seen {
+            out.push((*k, *v));
+        }
+        out
+    }
+
+    pub fn checksum(&self) -> u64 {
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        self.seen.values().sum()
+    }
+}

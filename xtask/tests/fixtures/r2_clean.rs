@@ -1,0 +1,11 @@
+pub fn advance(now_ps: u64, step_ps: u64) -> u64 {
+    now_ps + step_ps
+}
+
+pub fn span_ns(t: crate::util::time::Ps) -> f64 {
+    t.as_ns_f64()
+}
+
+pub fn blend(a: f64, b: f64) -> f64 {
+    0.5 * a + 0.5 * b
+}

@@ -1,0 +1,12 @@
+pub fn degrade(t_busy_ps: u64) -> u64 {
+    let scaled = (t_busy_ps as f64) * 1.07;
+    scaled as u64
+}
+
+pub fn pad(now_ps: u64) -> u64 {
+    now_ps + 1_500
+}
+
+pub fn drift(deadline: u64) -> u64 {
+    deadline + (0.5_f64 * 3.0) as u64
+}

@@ -1,0 +1,7 @@
+pub fn load(text: &str) -> Result<u32, String> {
+    text.trim().parse().map_err(|e| format!("bad count: {e}"))
+}
+
+pub fn validate(x: u32) -> Result<u32, String> {
+    x.checked_mul(2).ok_or_else(|| "overflow".to_string())
+}

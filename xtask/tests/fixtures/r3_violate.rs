@@ -1,0 +1,10 @@
+pub fn load(text: &str) -> u32 {
+    text.trim().parse().unwrap()
+}
+
+pub fn validate(x: u32) -> u32 {
+    if x == 0 {
+        panic!("zero");
+    }
+    x.checked_mul(2).expect("overflow")
+}

@@ -1,0 +1,4 @@
+pub fn reschedule(sched: &mut Scheduler, cmd: Cmd, delay_ps: u64) {
+    let when = sched.after(delay_ps);
+    sched.send_at(when, cmd);
+}

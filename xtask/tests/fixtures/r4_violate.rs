@@ -1,0 +1,4 @@
+pub fn reschedule(q: &mut EventQueue, ev: &mut Event, when: u64) {
+    ev.at = when;
+    q.push(ev.clone());
+}

@@ -1,0 +1,138 @@
+//! Golden-diagnostic tests for simlint fixtures, plus the self-check that
+//! the real `rust/src` tree lints clean with the pinned allow count.
+//!
+//! The fixture files live in `tests/fixtures/` — they are lexed by the
+//! linter, never compiled, so each can hold exactly the violation shape a
+//! rule must catch (or the clean idiom it must not).
+
+use std::path::Path;
+
+use xtask::report::validate_report_json;
+use xtask::rules::lint_source;
+
+fn fixture(name: &str) -> String {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(name);
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {}: {e}", path.display()))
+}
+
+/// Violations rendered `rule|line|message`, in the linter's sorted order.
+fn diags(rel: &str, name: &str) -> Vec<String> {
+    lint_source(rel, &fixture(name))
+        .violations
+        .into_iter()
+        .map(|v| format!("{}|{}|{}", v.rule, v.line, v.msg))
+        .collect()
+}
+
+#[test]
+fn r1_violations_get_exact_diagnostics() {
+    let want = [
+        "nondet|10|wall-clock `Instant::now` in simulator source",
+        "nondet|13|for-loop over hash collection `seen` (order is nondeterministic)",
+        "nondet|20|`thread::sleep` in simulator source",
+        "nondet|21|iteration over hash collection `seen.values()` (order is nondeterministic)",
+    ];
+    assert_eq!(diags("controller/fixture.rs", "r1_violate.rs"), want);
+}
+
+#[test]
+fn r1_clean_passes_with_one_allow() {
+    let fl = lint_source("controller/fixture.rs", &fixture("r1_clean.rs"));
+    assert!(fl.violations.is_empty(), "unexpected: {:?}", fl.violations);
+    assert!(fl.malformed.is_empty());
+    assert_eq!(fl.allows.len(), 1);
+    assert_eq!(fl.allows[0].rule, "nondet");
+    assert_eq!(fl.allows[0].comment_line, 17);
+    assert_eq!(fl.allows[0].target_line, 18);
+}
+
+#[test]
+fn r2_violations_only_inside_timing_scope() {
+    let want = [
+        "float-on-time|2|float cast on a time-typed expression",
+        "float-on-time|11|float literal in arithmetic with a time-typed value",
+    ];
+    assert_eq!(diags("sim/fixture.rs", "r2_violate.rs"), want);
+    // Same content outside the scoped modules: report code may use floats.
+    assert_eq!(diags("report/fixture.rs", "r2_violate.rs"), Vec::<String>::new());
+}
+
+#[test]
+fn r2_clean_idioms_pass_in_scope() {
+    assert_eq!(diags("sim/fixture.rs", "r2_clean.rs"), Vec::<String>::new());
+}
+
+#[test]
+fn r3_scope_is_config_dir_plus_validate_bodies() {
+    let want = [
+        "panic-in-config|2|`.unwrap()` in a config-load path (return an error instead)",
+        "panic-in-config|7|`panic!` in a config-load path (return an error instead)",
+        "panic-in-config|9|`.expect()` in a config-load path (return an error instead)",
+    ];
+    assert_eq!(diags("config/fixture.rs", "r3_violate.rs"), want);
+    // Outside config/, only the `validate` body is in scope: the
+    // `.unwrap()` in `load` (line 2) is exempt.
+    assert_eq!(diags("report/fixture.rs", "r3_violate.rs"), &want[1..]);
+}
+
+#[test]
+fn r3_clean_error_paths_pass() {
+    assert_eq!(diags("config/fixture.rs", "r3_clean.rs"), Vec::<String>::new());
+}
+
+#[test]
+fn r4_calendar_discipline_outside_sim() {
+    let want = [
+        "calendar-discipline|1|direct use of `EventQueue` outside sim/ (schedule via Scheduler/Emit)",
+        "calendar-discipline|2|direct mutation of event time field `.at`",
+    ];
+    assert_eq!(diags("controller/fixture.rs", "r4_violate.rs"), want);
+    // sim/ owns the calendar: the identical content is legal there.
+    assert_eq!(diags("sim/fixture.rs", "r4_violate.rs"), Vec::<String>::new());
+}
+
+#[test]
+fn r4_clean_scheduler_idiom_passes() {
+    assert_eq!(diags("controller/fixture.rs", "r4_clean.rs"), Vec::<String>::new());
+}
+
+#[test]
+fn malformed_allows_are_counted_and_do_not_suppress() {
+    let fl = lint_source("controller/fixture.rs", &fixture("allow_malformed.rs"));
+    assert_eq!(fl.malformed, vec![2, 4]);
+    assert!(fl.allows.is_empty());
+    let lines: Vec<u32> = fl.violations.iter().map(|v| v.line).collect();
+    assert_eq!(lines, vec![3, 5]);
+}
+
+/// The linter's reason to exist: the shipped tree must be clean, and the
+/// allow count is pinned so a new escape hatch shows up in review as a
+/// deliberate edit to this number.
+#[test]
+fn real_tree_lints_clean_with_pinned_allows() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../rust/src");
+    let rep = xtask::lint_tree(&root).expect("walk rust/src");
+    assert!(
+        rep.files_scanned >= 50,
+        "expected a full tree walk, scanned only {}",
+        rep.files_scanned
+    );
+    let rendered: Vec<String> = rep
+        .violations
+        .iter()
+        .map(|v| format!("{}:{}: [{}] {}", v.file, v.line, v.rule, v.msg))
+        .collect();
+    assert!(rendered.is_empty(), "tree has violations:\n{}", rendered.join("\n"));
+    assert!(rep.malformed.is_empty(), "malformed simlint comments: {:?}", rep.malformed);
+    assert_eq!(
+        rep.allows.len(),
+        5,
+        "allow count drifted — if deliberate, update the pin; allows: {:?}",
+        rep.allows
+    );
+    // The machine-readable report round-trips through the repo's pinned
+    // JSON dialect.
+    validate_report_json(&rep.to_json()).expect("report validates");
+}
