@@ -663,6 +663,38 @@ mod tests {
         validate_bench_json(&log.to_json()).expect("writer output must validate");
     }
 
+    /// The channel-shard speedup record (`sharded_ssd_grid/.../
+    /// speedup_vs_1thread`, a `ratio`) is a gated metric: once the measured
+    /// baseline is promoted, losing more than the tolerance — or the record
+    /// itself — blocks CI.
+    #[test]
+    fn gate_covers_sharded_ssd_grid_speedup() {
+        let record = |value: f64| {
+            let mut log = PerfLog::new("bench_engine");
+            log.push_tagged(
+                "sharded_ssd_grid/4_threads/speedup_vs_1thread",
+                "ratio",
+                value,
+                1,
+                4,
+                50_000_000,
+            );
+            log.to_json()
+        };
+        let baseline = record(1.8);
+        // Within tolerance: passes.
+        assert!(regression_gate(&baseline, &record(1.75), 0.15).unwrap().is_empty());
+        // 1.8 -> 1.2 is a 33% drop: blocked.
+        let failures = regression_gate(&baseline, &record(1.2), 0.15).unwrap();
+        assert_eq!(failures.len(), 1);
+        assert!(failures[0].contains("sharded_ssd_grid"), "{}", failures[0]);
+        // Dropping the record entirely is also blocked.
+        let empty = PerfLog::new("bench_engine").to_json();
+        let failures = regression_gate(&baseline, &empty, 0.15).unwrap();
+        assert_eq!(failures.len(), 1);
+        assert!(failures[0].contains("missing"), "{}", failures[0]);
+    }
+
     #[test]
     fn perf_log_push_bench() {
         let r = bench("x", 0, 5, || {});

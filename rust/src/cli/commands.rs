@@ -26,9 +26,9 @@ fn requests(args: &mut Args) -> Result<usize> {
         .map_err(anyhow::Error::msg)
 }
 
-/// `--threads N`: per-simulation engine threads (the windowed engine;
-/// default 1 = the classic serial engine). Distinct from `--jobs`, which
-/// sizes the sweep-level worker pool.
+/// `--threads N`: per-simulation engine threads (the channel-sharded
+/// executor; default 1 = the classic serial engine). Distinct from
+/// `--jobs`, which sizes the sweep-level worker pool.
 fn engine(args: &mut Args) -> Result<EngineConfig> {
     let threads = args.get_usize("threads", 1).map_err(anyhow::Error::msg)?;
     if threads == 0 || threads > 256 {
@@ -38,6 +38,21 @@ fn engine(args: &mut Args) -> Result<EngineConfig> {
         threads: threads as u16,
         ..EngineConfig::default()
     })
+}
+
+/// One shard per channel: engine threads beyond the channel count buy
+/// nothing, so the simulator clamps them. Surface the clamp as a note —
+/// never an error, existing configs keep loading (threads > 1 with a
+/// single channel simply runs the sharded executor serially).
+fn note_thread_clamp(cfg: &SsdConfig) {
+    let threads = cfg.engine.threads;
+    if threads as u32 > cfg.channels as u32 {
+        eprintln!(
+            "note: [engine] threads = {threads} exceeds the {} channel shard(s); \
+             clamping to {}",
+            cfg.channels, cfg.channels
+        );
+    }
 }
 
 pub fn cmd_table2(_args: &mut Args) -> Result<()> {
@@ -933,6 +948,7 @@ pub fn cmd_simulate(args: &mut Args) -> Result<()> {
     if args.get("threads").is_some() {
         cfg.engine.threads = engine(args)?.threads;
     }
+    note_thread_clamp(&cfg);
     let n = requests(args)?;
     let mode = match args.get("mode").as_deref() {
         Some("read") => RequestKind::Read,
@@ -976,6 +992,7 @@ pub fn cmd_replay(args: &mut Args) -> Result<()> {
     if args.get("threads").is_some() {
         cfg.engine.threads = engine(args)?.threads;
     }
+    note_thread_clamp(&cfg);
     // A v3 trace's stream ids must fit the config's submission queues:
     // catch the mismatch here as a clean error instead of the simulator's
     // assert.

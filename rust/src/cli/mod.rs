@@ -100,7 +100,8 @@ SUBCOMMANDS
 
 COMMON FLAGS
   --requests N     requests per data point (default 400)
-  --threads N      engine threads per simulation (windowed engine; default 1)
+  --threads N      engine threads per simulation (channel-sharded executor;
+                   clamped to the channel count; default 1 = serial engine)
   --jobs N         sweep workers running whole sims in parallel (default: all cores)
   --csv            emit CSV instead of a rendered table
   --config FILE    TOML config (simulate/replay)

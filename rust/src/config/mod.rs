@@ -284,11 +284,17 @@ impl QosConfig {
 /// Execution-engine knobs (`[engine]` in TOML). The default — one thread,
 /// derived window — runs the classic single-threaded engine and is
 /// bit-identical to every prior release; any windowed setting dispatches
-/// through [`crate::sim::sharded::WindowedEngine`], whose event order is
-/// bit-identical by construction (golden-tested at threads 1/2/4).
+/// through the channel-sharded executor (one shard per channel, global
+/// state serialized into a per-window commit step). Sharded results
+/// depend on the window width — FTL job release is quantized to window
+/// boundaries — but never on the thread count: reports are byte-identical
+/// at threads 1/2/4 (golden-tested in `rust/tests/sharded_engine.rs`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct EngineConfig {
-    /// Worker threads for one simulation run. 1 = the classic engine.
+    /// Worker threads for one simulation run. 1 = the classic engine
+    /// (unless `window_ps` forces the sharded executor). Values beyond
+    /// the channel count are clamped — one shard per channel — with a
+    /// CLI note, never an error.
     pub threads: u16,
     /// Conservative window width in picoseconds. 0 derives the lookahead
     /// from the interface timing (the minimum bus phase,
@@ -303,7 +309,7 @@ impl Default for EngineConfig {
 }
 
 impl EngineConfig {
-    /// Whether the windowed engine is selected at all.
+    /// Whether the channel-sharded executor is selected at all.
     pub fn windowed(&self) -> bool {
         self.threads > 1 || self.window_ps > 0
     }
@@ -461,8 +467,8 @@ pub struct SsdConfig {
     /// bit-identical to the historical arbiter.
     pub qos: QosConfig,
     /// Execution-engine knobs; the single-threaded default is bit-identical
-    /// to every prior release (and so is the windowed engine — by
-    /// construction).
+    /// to every prior release. Windowed settings select the channel-sharded
+    /// executor: window width is a fidelity knob, thread count never is.
     pub engine: EngineConfig,
     /// Bottleneck-observability knobs; disabled by default, and read-only
     /// over simulation state when enabled (observe-on runs stay

@@ -90,7 +90,11 @@ impl Grant {
 
 /// A way-scheduling policy: given the channel's ways at time `now`, decide
 /// which way (and, for dispatches, which queued job) gets the bus next.
-pub trait WayScheduler {
+///
+/// `Send` because channel state (including its boxed policy) migrates into
+/// per-channel shard workers under `[engine] threads > 1`
+/// ([`crate::coordinator::shard`]).
+pub trait WayScheduler: Send {
     fn pick(&mut self, ways: &[WayState], now: Ps) -> Option<Grant>;
 
     /// Forget all arbitration state (sweep-worker reuse).

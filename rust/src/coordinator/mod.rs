@@ -5,6 +5,7 @@
 pub mod campaign;
 pub mod experiments;
 pub mod pool;
+pub mod shard;
 pub mod ssd;
 
 pub use campaign::{run_trace, AccessPattern, Campaign, SimReport, StreamReport, TenantSpec};

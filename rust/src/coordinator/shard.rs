@@ -1,0 +1,514 @@
+//! The per-channel shard model: one channel's bus + ways + chips as a
+//! [`ShardModel`] driven by [`crate::sim::ShardedSim`]'s conservative time
+//! windows.
+//!
+//! This is the parallel counterpart of the channel state machine embedded
+//! in [`crate::coordinator::ssd::SsdSim`] (`kick_channel` / `on_bus_done` /
+//! `on_chip_done`). The split follows the hardware: everything *behind* a
+//! channel's NAND_IF — the bus grant machine, the way queues, the chip
+//! array timings, the tier-dependent bus clocking — touches only that
+//! channel's state and runs shard-locally. Everything *in front of* it —
+//! FTL planning/allocation, GC/WL/migration plan emission, host-link
+//! admission, the DRAM cache, demand-paged map fills, request completion —
+//! is global and runs in the serialized [`crate::sim::Hub`] commit step
+//! (`SsdHub` in `coordinator::ssd`) at window boundaries.
+//!
+//! The contract between the two halves is a small message protocol:
+//!
+//! * **down** (hub → shard, via `HubEmit::send_at`, landing at or past the
+//!   window boundary): [`ShardEv::Enqueue`] queues a planned page job on a
+//!   way; [`ShardEv::LinkBusy`] mirrors the host link's occupancy for the
+//!   observer's stall attribution.
+//! * **up** (shard → hub, via `Emit::commit`, consumed in
+//!   `(time, channel, seq)` order): [`ShardMsg::ReadOut`] when a read's
+//!   data-out phase completes, [`ShardMsg::Programmed`] when a program's
+//!   status poll confirms, [`ShardMsg::Erased`] when an erase confirms.
+//!   The shard ships the raw fact; *all* interpretation — counters,
+//!   energy accounting, request completion, map-fill resume, wear-level
+//!   planning — happens hub-side, so the global bookkeeping stays
+//!   single-threaded and deterministic.
+//!
+//! Every event time a shard mints is a bus-phase or array completion at
+//! least [`crate::iface::bus::BusTiming::min_phase`] in the future, which
+//! is exactly the engine's lookahead bound — see the safety argument in
+//! [`crate::sim::sharded`] and DESIGN.md §8.
+
+use crate::controller::channel::ChannelState;
+use crate::controller::way::{JobPhase, PageJob, PageJobKind};
+use crate::iface::bus::{BusPhaseKind, BusTiming};
+use crate::nand::chip::ChipOp;
+use crate::nand::geometry::Geometry;
+use crate::observe::{HostView, ObsState};
+use crate::sim::{Emit, ShardModel};
+use crate::util::time::Ps;
+
+use super::ssd::SsdSim;
+
+/// Events on a channel shard's private calendar.
+#[derive(Debug, Clone, Copy)]
+pub enum ShardEv {
+    /// Hub-planned page job for `way` (an FTL write-plan op, a host read,
+    /// a map fill…). `gc_mark` flags the first op of a GC-triggering write
+    /// plan so the observer's GC-trigger instant lands on this channel's
+    /// timeline.
+    Enqueue { way: u16, job: PageJob, gc_mark: bool },
+    /// This channel's bus phase finished (shard-local `BusDone`).
+    Bus,
+    /// The array op on `way` finished (shard-local `ChipDone`).
+    Chip { way: u16 },
+    /// The host link's transport occupancy changed (observer attribution
+    /// only; broadcast by the hub on value change).
+    LinkBusy(bool),
+}
+
+/// Completion messages a channel shard reports to the hub commit step.
+/// The channel index travels in the message's [`crate::sim::EventKey`]
+/// (`key.src`), not here.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardMsg {
+    /// A read's data-out phase completed: the page is in the controller.
+    /// The hub routes on `req` (host read chunk, map-fill arrival, GC /
+    /// migration copy-back accounting) and reconstructs the physical page
+    /// from `(channel, way, block, page)`.
+    ReadOut { req: u64, way: u16, block: u32, page: u32 },
+    /// A program's status poll confirmed the page.
+    Programmed { req: u64 },
+    /// An erase's status poll confirmed; `spread` is the chip's P/E-cycle
+    /// spread measured at confirmation time (0 when wear leveling is off),
+    /// feeding the hub's wear-level trigger without a cross-thread chip
+    /// probe.
+    Erased { way: u16, spread: u32 },
+}
+
+/// What the shard's bus is currently doing (mirror of the coordinator's
+/// private `BusCtx`, owned shard-locally).
+#[derive(Debug, Clone, Copy)]
+enum ShardBusCtx {
+    CmdIssued { way: u16 },
+    DataOut { way: u16 },
+    StatusDone { way: u16 },
+}
+
+/// One channel promoted to a real shard: owns the channel's bus, ways and
+/// chips for the duration of a sharded run (moved out of `SsdSim` and
+/// restored afterwards).
+pub struct ChannelShard {
+    /// This shard's channel index in the drive (for tier lookups; the
+    /// shard id used on the wire equals this by construction).
+    ch: u16,
+    chan: ChannelState,
+    ctx: Option<ShardBusCtx>,
+    /// Tiered bus clocking (E8): chip-order tier split and the per-tier
+    /// timings. `slc_chips == 0` disables tiering and the channel's own
+    /// bus timing applies.
+    slc_chips: usize,
+    slc_bus: BusTiming,
+    mlc_bus: BusTiming,
+    geom: Geometry,
+    program_status_overhead: Ps,
+    /// Ship the measured P/E spread on [`ShardMsg::Erased`]? Mirrors the
+    /// coordinator's wear-level early-out so disabled runs skip the
+    /// per-erase chip scan.
+    wear_spread_enabled: bool,
+    /// Per-shard observer slice: a 1-channel [`ObsState`] (channel index 0
+    /// everywhere), merged across shards after the run
+    /// ([`ObsState::merge_shards`]).
+    obs: Option<Box<ObsState>>,
+    /// Last host-link occupancy broadcast by the hub ([`ShardEv::LinkBusy`]).
+    link_busy: bool,
+}
+
+impl ChannelShard {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        ch: u16,
+        chan: ChannelState,
+        geom: Geometry,
+        slc_chips: usize,
+        slc_bus: BusTiming,
+        mlc_bus: BusTiming,
+        program_status_overhead: Ps,
+        wear_spread_enabled: bool,
+        obs: Option<Box<ObsState>>,
+    ) -> ChannelShard {
+        ChannelShard {
+            ch,
+            chan,
+            ctx: None,
+            slc_chips,
+            slc_bus,
+            mlc_bus,
+            geom,
+            program_status_overhead,
+            wear_spread_enabled,
+            obs,
+            link_busy: false,
+        }
+    }
+
+    /// Disassemble after a run: the channel state goes back into `SsdSim`,
+    /// the observer slice into the deterministic merge.
+    pub fn into_parts(self) -> (ChannelState, Option<Box<ObsState>>) {
+        (self.chan, self.obs)
+    }
+
+    /// Bus timing for a transfer targeting `way` (mirror of the
+    /// coordinator's `bus_timing_for`): the channel's own timing when
+    /// tiering is disabled, the target chip's tier otherwise.
+    fn bus_timing(&self, way: usize) -> BusTiming {
+        if self.slc_chips == 0 {
+            self.chan.bus.timing
+        } else if self.geom.chip_of(self.ch, way as u16) < self.slc_chips {
+            self.slc_bus
+        } else {
+            self.mlc_bus
+        }
+    }
+
+    /// Grant the bus to the next way that wants it (mirror of
+    /// `SsdSim::kick_channel`, with follow-ups on the shard calendar).
+    fn kick(&mut self, now: Ps, out: &mut Emit<ShardEv, ShardMsg>) {
+        if !self.chan.bus.is_free(now) || self.ctx.is_some() {
+            return; // Bus will re-kick.
+        }
+        let Some(grant) = self.chan.next_grant(now) else {
+            return; // Chip events will re-kick when array ops finish.
+        };
+        let wi = grant.way;
+        let bt = self.bus_timing(wi);
+        let chan = &mut self.chan;
+        let way = &mut chan.ways[wi];
+        if let Some(job) = way.inflight {
+            match job.phase {
+                JobPhase::AwaitXferOut => {
+                    let nand = way.chip.timing;
+                    let bytes = nand.transfer_bytes();
+                    let ecc = chan.ecc.page_latency(nand.page_bytes);
+                    let xfer = bt.data_transfer(bytes) + ecc;
+                    chan.bus.data_bytes += bytes as u64;
+                    let done = chan.bus.occupy(now, xfer);
+                    self.ctx = Some(ShardBusCtx::DataOut { way: wi as u16 });
+                    if let Some(obs) = self.obs.as_mut() {
+                        obs.bus_granted(
+                            0,
+                            wi as u16,
+                            SsdSim::bus_user(job.req),
+                            BusPhaseKind::DataOut,
+                            now,
+                            done,
+                        );
+                    }
+                    out.local_at(done, ShardEv::Bus);
+                }
+                JobPhase::AwaitStatus => {
+                    let dur = bt.status_poll() + self.program_status_overhead;
+                    let done = chan.bus.occupy_cmd(now, dur);
+                    self.ctx = Some(ShardBusCtx::StatusDone { way: wi as u16 });
+                    if let Some(obs) = self.obs.as_mut() {
+                        obs.bus_granted(
+                            0,
+                            wi as u16,
+                            SsdSim::bus_user(job.req),
+                            BusPhaseKind::Status,
+                            now,
+                            done,
+                        );
+                    }
+                    out.local_at(done, ShardEv::Bus);
+                }
+                other => unreachable!("inflight job in bus-wanting phase {other:?}"),
+            }
+            return;
+        }
+        let mut job = way.take_job(grant.job).expect("grant names a queued job");
+        let nand = way.chip.timing;
+        let dur = match job.kind {
+            PageJobKind::Read => bt.read_cmd(),
+            PageJobKind::Program => {
+                let bytes = nand.transfer_bytes();
+                chan.bus.data_bytes += bytes as u64;
+                bt.program_cmd() + bt.data_transfer(bytes) + chan.ecc.page_latency(nand.page_bytes)
+            }
+            PageJobKind::Erase => bt.erase_cmd(),
+        };
+        let done = chan.bus.occupy_cmd(now, dur);
+        job.phase = JobPhase::ArrayBusy;
+        way.inflight = Some(job);
+        self.ctx = Some(ShardBusCtx::CmdIssued { way: wi as u16 });
+        if let Some(obs) = self.obs.as_mut() {
+            obs.job_started(0, wi as u16, job.kind, now);
+            obs.bus_granted(
+                0,
+                wi as u16,
+                SsdSim::bus_user(job.req),
+                BusPhaseKind::Cmd,
+                now,
+                done,
+            );
+        }
+        out.local_at(done, ShardEv::Bus);
+    }
+
+    /// Mirror of `SsdSim::on_bus_done`: completions that the coordinator
+    /// would act on globally become commit messages instead.
+    fn on_bus_done(&mut self, now: Ps, out: &mut Emit<ShardEv, ShardMsg>) {
+        let ctx = self.ctx.take().expect("Bus event without context");
+        if let Some(obs) = self.obs.as_mut() {
+            obs.bus_released(0, now);
+        }
+        match ctx {
+            ShardBusCtx::CmdIssued { way } => {
+                let wi = way as usize;
+                let job = self.chan.ways[wi].inflight.expect("cmd issued to idle way");
+                let op = match job.kind {
+                    PageJobKind::Read => ChipOp::ReadFetch {
+                        block: job.block,
+                        page: job.page,
+                    },
+                    PageJobKind::Program => ChipOp::Program {
+                        block: job.block,
+                        page: job.page,
+                    },
+                    PageJobKind::Erase => ChipOp::Erase { block: job.block },
+                };
+                let w = &mut self.chan.ways[wi];
+                let dur = w.chip.start(now, op);
+                w.array_done_at = now + dur;
+                let done = w.array_done_at;
+                out.local_at(done, ShardEv::Chip { way });
+                if let Some(obs) = self.obs.as_mut() {
+                    obs.array_started(0, way, job.kind, now, done);
+                }
+            }
+            ShardBusCtx::DataOut { way } => {
+                let wi = way as usize;
+                let job = self.chan.ways[wi]
+                    .inflight
+                    .take()
+                    .expect("data-out from idle way");
+                if let Some(obs) = self.obs.as_mut() {
+                    obs.job_completed(0, way, job.kind, now);
+                }
+                out.commit(ShardMsg::ReadOut {
+                    req: job.req,
+                    way,
+                    block: job.block,
+                    page: job.page,
+                });
+            }
+            ShardBusCtx::StatusDone { way } => {
+                let wi = way as usize;
+                let job = self.chan.ways[wi]
+                    .inflight
+                    .take()
+                    .expect("status from idle way");
+                if let Some(obs) = self.obs.as_mut() {
+                    obs.job_completed(0, way, job.kind, now);
+                }
+                match job.kind {
+                    PageJobKind::Program => out.commit(ShardMsg::Programmed { req: job.req }),
+                    PageJobKind::Erase => {
+                        let spread = if self.wear_spread_enabled {
+                            self.chan.ways[wi].chip.wear_spread()
+                        } else {
+                            0
+                        };
+                        out.commit(ShardMsg::Erased { way, spread });
+                    }
+                    PageJobKind::Read => unreachable!("reads have no status phase"),
+                }
+            }
+        }
+        self.kick(now, out);
+    }
+
+    /// Mirror of `SsdSim::on_chip_done`. (The coordinator's zero-page
+    /// `add_nand_read` at this point is a no-op and is accounted hub-side
+    /// at the data-out instead.)
+    fn on_chip_done(&mut self, way: u16, now: Ps, out: &mut Emit<ShardEv, ShardMsg>) {
+        let w = &mut self.chan.ways[way as usize];
+        if let Some(job) = &mut w.inflight {
+            debug_assert_eq!(job.phase, JobPhase::ArrayBusy);
+            job.phase = match job.kind {
+                PageJobKind::Read => JobPhase::AwaitXferOut,
+                PageJobKind::Program | PageJobKind::Erase => JobPhase::AwaitStatus,
+            };
+        }
+        self.kick(now, out);
+    }
+
+    fn scan(&mut self, now: Ps) {
+        if let Some(obs) = self.obs.as_mut() {
+            obs.scan(
+                now,
+                std::slice::from_ref(&self.chan),
+                HostView {
+                    link_busy: self.link_busy,
+                },
+            );
+        }
+    }
+}
+
+impl ShardModel for ChannelShard {
+    type Ev = ShardEv;
+    type Msg = ShardMsg;
+
+    fn handle(&mut self, now: Ps, ev: ShardEv, out: &mut Emit<ShardEv, ShardMsg>) {
+        match ev {
+            ShardEv::Enqueue { way, job, gc_mark } => {
+                if gc_mark {
+                    if let Some(obs) = self.obs.as_mut() {
+                        obs.gc_trigger(0, now);
+                    }
+                }
+                self.chan.ways[way as usize].push(job);
+                self.kick(now, out);
+            }
+            ShardEv::Bus => self.on_bus_done(now, out),
+            ShardEv::Chip { way } => self.on_chip_done(way, now, out),
+            ShardEv::LinkBusy(b) => self.link_busy = b,
+        }
+        // Observer scan after every event (same discipline as the serial
+        // coordinator: classify from post-event state).
+        self.scan(now);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::controller::ecc::EccModel;
+    use crate::controller::nand_if::NandIf;
+    use crate::controller::sched::{self, SchedKind};
+    use crate::controller::way::WayState;
+    use crate::iface::timing::{IfaceParams, InterfaceKind};
+    use crate::nand::chip::Chip;
+    use crate::nand::datasheet::NandTiming;
+    use crate::sim::{EventKey, Hub, HubEmit, ShardedSim};
+
+    struct CollectHub {
+        log: Vec<(Ps, u32, ShardMsg)>,
+    }
+
+    impl Hub<ChannelShard> for CollectHub {
+        fn next_time(&mut self) -> Option<Ps> {
+            None
+        }
+        fn commit(
+            &mut self,
+            msgs: &[(EventKey, ShardMsg)],
+            _w_end: Ps,
+            _out: &mut HubEmit<ShardEv>,
+        ) {
+            for (k, m) in msgs {
+                self.log.push((k.at, k.src, *m));
+            }
+        }
+    }
+
+    fn shard(ch: u16, nways: usize) -> ChannelShard {
+        let ways = (0..nways)
+            .map(|_| WayState::new(Chip::new(NandTiming::slc(), 8)))
+            .collect();
+        let bus = NandIf::new(&IfaceParams::default(), InterfaceKind::Proposed);
+        let timing = bus.timing;
+        let chan = ChannelState::new(
+            bus,
+            EccModel::default(),
+            ways,
+            sched::build(SchedKind::RoundRobin, [8, 4, 2, 1]),
+        );
+        let geom = Geometry {
+            channels: 2,
+            ways: nways as u16,
+            blocks_per_chip: 8,
+            pages_per_block: 64,
+            page_bytes: 2048,
+        };
+        ChannelShard::new(ch, chan, geom, 0, timing, timing, Ps::ZERO, false, None)
+    }
+
+    fn job(req: u64, kind: PageJobKind, block: u32, page: u32) -> PageJob {
+        PageJob {
+            req,
+            stream: 0,
+            class: 1,
+            kind,
+            block,
+            page,
+            bytes: 2048,
+            phase: JobPhase::Queued,
+        }
+    }
+
+    /// Two reads on sibling ways interleave on the shard bus and both
+    /// surface as `ReadOut` commits in time order, carrying the shard id.
+    #[test]
+    fn reads_interleave_and_commit() {
+        let min = shard(0, 2).bus_timing(0).min_phase();
+        let mut sim = ShardedSim::new(vec![shard(0, 2)], min);
+        sim.seed(
+            0,
+            Ps::ZERO,
+            ShardEv::Enqueue { way: 0, job: job(1, PageJobKind::Read, 0, 0), gc_mark: false },
+        );
+        sim.seed(
+            0,
+            Ps::ZERO,
+            ShardEv::Enqueue { way: 1, job: job(2, PageJobKind::Read, 1, 0), gc_mark: false },
+        );
+        let mut hub = CollectHub { log: Vec::new() };
+        let r = sim.run_hub(Ps::MAX, 1, &mut hub);
+        assert!(r.drained);
+        let outs: Vec<(u64, u16)> = hub
+            .log
+            .iter()
+            .map(|(_, src, m)| {
+                assert_eq!(*src, 0, "shard id rides in the key");
+                match m {
+                    ShardMsg::ReadOut { req, way, .. } => (*req, *way),
+                    other => panic!("unexpected message {other:?}"),
+                }
+            })
+            .collect();
+        assert_eq!(outs, vec![(1, 0), (2, 1)]);
+        // Way 1's command went out while way 0's t_R was in flight, so the
+        // two data-outs are closer together than a full serial read pair.
+        let t0 = hub.log[0].0;
+        let t1 = hub.log[1].0;
+        assert!(t1 > t0);
+        let shard0 = sim.into_models().pop().unwrap();
+        let (chan, _) = shard0.into_parts();
+        assert!(chan.is_drained());
+    }
+
+    /// Program and erase jobs confirm via status polls and commit
+    /// `Programmed` / `Erased` (spread suppressed while wear leveling is
+    /// disabled).
+    #[test]
+    fn program_and_erase_commit() {
+        let min = shard(0, 1).bus_timing(0).min_phase();
+        let mut sim = ShardedSim::new(vec![shard(0, 1)], min);
+        sim.seed(
+            0,
+            Ps::ZERO,
+            ShardEv::Enqueue { way: 0, job: job(7, PageJobKind::Program, 0, 0), gc_mark: false },
+        );
+        sim.seed(
+            0,
+            Ps::ZERO,
+            ShardEv::Enqueue { way: 0, job: job(8, PageJobKind::Erase, 1, 0), gc_mark: false },
+        );
+        let mut hub = CollectHub { log: Vec::new() };
+        assert!(sim.run_hub(Ps::MAX, 1, &mut hub).drained);
+        let kinds: Vec<ShardMsg> = hub.log.iter().map(|(_, _, m)| *m).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                ShardMsg::Programmed { req: 7 },
+                ShardMsg::Erased { way: 0, spread: 0 }
+            ]
+        );
+    }
+}

@@ -64,7 +64,8 @@ use crate::iface::timing::InterfaceKind;
 use crate::nand::chip::{Chip, ChipOp};
 use crate::nand::geometry::{Geometry, PageAddr};
 use crate::observe::{BusUser, HostView, ObsState, ObserveReport};
-use crate::sim::{Engine, Model, RunResult, Scheduler, WindowedEngine};
+use crate::coordinator::shard::{ChannelShard, ShardEv, ShardMsg};
+use crate::sim::{Engine, EventKey, Hub, HubEmit, Model, RunResult, Scheduler, ShardedSim};
 use crate::util::stats::Welford;
 use crate::util::time::{mbps, Ps};
 
@@ -267,6 +268,13 @@ pub struct SsdSim {
     /// by matching `map_ppn` when fill reads complete. Small (bounded by
     /// outstanding host pages), so linear scans are fine.
     map_waiters: Vec<MapWaiter>,
+    /// Hub-mode job staging: `Some` only while a channel-sharded run is in
+    /// flight (the channels themselves are moved into shards then). FTL
+    /// plan output `(ch, way, job, gc_mark)` lands here instead of on a
+    /// way queue and is released to the owning shard at the next window
+    /// boundary by the commit step ([`SsdHub`]). `None` selects the
+    /// classic in-place enqueue, byte-for-byte unchanged.
+    shard_outbox: Option<Vec<(u16, u16, PageJob, bool)>>,
     pub counters: SimCounters,
     /// Per-stream accounting, indexed by stream id; all empty when the
     /// trace carries no stream track (single-tenant runs pay nothing).
@@ -379,6 +387,7 @@ impl SsdSim {
             kick_list: Vec::new(),
             map_ops: Vec::new(),
             map_waiters: Vec::new(),
+            shard_outbox: None,
             counters: SimCounters::default(),
             stream_class: Vec::new(),
             stream_requests: Vec::new(),
@@ -403,7 +412,7 @@ impl SsdSim {
     /// (Re)build the bottleneck observer from the current config: fresh
     /// accounting sized to the geometry when `[observe]` is enabled, `None`
     /// otherwise. The window-mark pitch on the timeline is the same
-    /// conservative lookahead the windowed engine would use, so a Perfetto
+    /// conservative lookahead the sharded executor would use, so a Perfetto
     /// view shows where the parallel-commit horizons fall.
     fn rebuild_observer(&mut self) {
         self.obs = self.cfg.observe.enabled.then(|| {
@@ -627,7 +636,13 @@ impl SsdSim {
             bytes: self.geom.page_bytes,
             phase: JobPhase::Queued,
         };
-        self.channels[ch as usize].ways[way as usize].push(job);
+        if let Some(outbox) = self.shard_outbox.as_mut() {
+            // Hub mode: the way queues live inside the channel shards; the
+            // commit step ships the job over at the window boundary.
+            outbox.push((ch, way, job, false));
+        } else {
+            self.channels[ch as usize].ways[way as usize].push(job);
+        }
         (ch, way)
     }
 
@@ -659,10 +674,18 @@ impl SsdSim {
             };
             let (ch, _) = self.enqueue_ftl_op(op, marker);
             // One GC/migration mark per triggering plan, on the channel of
-            // its first background op (where the barrier forms).
+            // its first background op (where the barrier forms). In hub
+            // mode the observer lives inside the shard, so the mark rides
+            // the job and lands when the shard enqueues it at the window
+            // boundary — a bounded, thread-invariant timestamp shift
+            // (DESIGN.md §Engine).
             if i == 0 {
                 if let Some(obs) = self.obs.as_mut() {
                     obs.gc_trigger(ch as usize, now);
+                } else if let Some(outbox) = self.shard_outbox.as_mut() {
+                    if let Some(last) = outbox.last_mut() {
+                        last.3 = true;
+                    }
                 }
             }
             self.kick_list.push(ch);
@@ -673,7 +696,13 @@ impl SsdSim {
     }
 
     /// Kick every channel recorded in the pooled kick list, then clear it.
+    /// In hub mode there is nothing to kick — the shards wake themselves
+    /// on the `Enqueue` delivery — so the list is just cleared.
     fn kick_touched(&mut self, sched: &mut Scheduler<Ev>) {
+        if self.shard_outbox.is_some() {
+            self.kick_list.clear();
+            return;
+        }
         let mut i = 0;
         while i < self.kick_list.len() {
             let ch = self.kick_list[i];
@@ -899,7 +928,7 @@ impl SsdSim {
     /// Observer attribution of a bus grant, from the owning job's request
     /// marker: map-fill traffic gets its own stall cause, everything else
     /// splits host vs internal (GC/WL/migration/cache-flush).
-    fn bus_user(req: u64) -> BusUser {
+    pub(crate) fn bus_user(req: u64) -> BusUser {
         if req == MAP_REQ {
             BusUser::MapFill
         } else if req >= MIG_REQ {
@@ -1132,7 +1161,15 @@ impl SsdSim {
         let spread = self.channels[ch as usize].ways[way as usize]
             .chip
             .wear_spread();
-        if spread <= threshold {
+        self.wear_level_with_spread(ch, way, spread, sched);
+    }
+
+    /// Spread-supplied variant of [`Self::maybe_wear_level`]: in hub mode
+    /// the chip lives inside its shard, so the erase completion message
+    /// carries the measured spread instead of reading it here.
+    fn wear_level_with_spread(&mut self, ch: u16, way: u16, spread: u32, sched: &mut Scheduler<Ev>) {
+        let threshold = self.cfg.steady.wear_level_spread;
+        if !self.cfg.steady.enabled || threshold == 0 || spread <= threshold {
             return;
         }
         let chip = self.geom.chip_of(ch, way);
@@ -1164,6 +1201,78 @@ impl SsdSim {
             };
         }
         self.kick_channel(ch, sched);
+    }
+
+    // ---- hub-side halves of the shard message protocol -----------------
+    //
+    // Channel-sharded runs split every NAND completion in two: the shard
+    // keeps the bus/way/chip mechanics, and ships a message the commit
+    // step replays here against the global state (counters, energy, FTL,
+    // mapping tier, cache, host link). Each handler below is the exact
+    // global half of the corresponding `on_bus_done` arm.
+
+    /// A shard finished a read data-out ([`ShardMsg::ReadOut`]).
+    fn shard_read_out(
+        &mut self,
+        ch: u16,
+        req: u64,
+        way: u16,
+        block: u32,
+        page: u32,
+        sched: &mut Scheduler<Ev>,
+    ) {
+        self.counters.pages_read += 1;
+        if req == MAP_REQ {
+            self.counters.internal_pages += 1;
+            self.counters.map_pages_read += 1;
+            let ppn = self.geom.ppn(PageAddr {
+                channel: ch,
+                way,
+                block,
+                page,
+            });
+            self.map_fill_completed(ppn, sched);
+        } else if req >= MIG_REQ {
+            self.counters.internal_pages += 1;
+            if req == MIG_REQ {
+                self.counters.mig_pages_read += 1;
+            } else if req != INTERNAL_REQ {
+                self.counters.gc_pages_read += 1;
+            }
+        } else {
+            self.send_read_chunk(req, sched);
+        }
+    }
+
+    /// A shard finished a program status poll ([`ShardMsg::Programmed`]).
+    fn shard_programmed(&mut self, req: u64, sched: &mut Scheduler<Ev>) {
+        self.counters.pages_programmed += 1;
+        self.energy.add_nand_program(&self.power.clone(), 1);
+        if req >= MAP_REQ {
+            self.counters.internal_pages += 1;
+            if req == GC_REQ {
+                self.counters.gc_pages_programmed += 1;
+                self.energy.add_gc_program(&self.power.clone(), 1);
+            } else if req == WL_REQ {
+                self.counters.wl_pages_programmed += 1;
+                self.energy.add_gc_program(&self.power.clone(), 1);
+            } else if req == MIG_REQ {
+                self.counters.mig_pages_programmed += 1;
+                self.energy.add_mig_program(&self.power.clone(), 1);
+            } else if req == MAP_REQ {
+                self.counters.map_pages_programmed += 1;
+            }
+        } else {
+            self.page_programmed(req, sched);
+        }
+    }
+
+    /// A shard finished an erase status poll ([`ShardMsg::Erased`]);
+    /// `spread` is the chip's P/E spread measured shard-side (0 when the
+    /// wear-level hook is disabled, matching its classic early return).
+    fn shard_erased(&mut self, ch: u16, way: u16, spread: u32, sched: &mut Scheduler<Ev>) {
+        self.counters.blocks_erased += 1;
+        self.wear_level_with_spread(ch, way, spread, sched);
     }
 
     /// Closed-loop admission. Single-stream path: refill the device to
@@ -1464,6 +1573,7 @@ impl SsdSim {
         self.kick_list.clear();
         self.map_ops.clear();
         self.map_waiters.clear();
+        self.shard_outbox = None;
         self.counters = SimCounters::default();
         self.stream_class.clear();
         self.stream_requests.clear();
@@ -1495,7 +1605,7 @@ impl SsdSim {
         self.run_with(&mut sched)
     }
 
-    /// Conservative lookahead for the windowed engine: the configured
+    /// Conservative lookahead for the sharded executor: the configured
     /// `window_ps` when set, else the minimum bus phase across every
     /// channel interface in play (both tier buses when tiering splits
     /// them) — nothing crosses a channel boundary in less bus time than
@@ -1515,13 +1625,90 @@ impl SsdSim {
         la.max(Ps::ps(1))
     }
 
+    /// Channel-sharded execution: every channel becomes a [`ChannelShard`]
+    /// advancing its own calendar over conservative windows of width
+    /// [`Self::window_lookahead`], while the global state (FTL planning,
+    /// GC/WL/migration, admission, cache, map-cache, host link, counters,
+    /// energy) runs as the serialized commit step ([`SsdHub`]) at window
+    /// boundaries. Results depend on the window width — FTL job release is
+    /// quantized to window boundaries, a bounded approximation — but never
+    /// on the thread count: threads 1/2/4/... produce byte-identical
+    /// reports (golden-tested below and in `rust/tests/sharded_engine.rs`).
+    fn run_sharded(&mut self, sched: &mut Scheduler<Ev>) -> RunResult {
+        let lookahead = self.window_lookahead();
+        let observe = self.cfg.observe.enabled;
+        let timeline = self.cfg.observe.timeline;
+        let ways = self.cfg.ways as usize;
+        let wear = self.cfg.steady.enabled && self.cfg.steady.wear_level_spread > 0;
+        // The whole-drive observer is replaced for this run by one
+        // single-channel slice per shard; the slices are concatenated back
+        // into a whole-drive report after the run.
+        self.obs = None;
+        let channels = std::mem::take(&mut self.channels);
+        let nch = channels.len();
+        let shards: Vec<ChannelShard> = channels
+            .into_iter()
+            .enumerate()
+            .map(|(ch, chan)| {
+                let obs =
+                    observe.then(|| Box::new(ObsState::new(1, ways, timeline, lookahead)));
+                ChannelShard::new(
+                    ch as u16,
+                    chan,
+                    self.geom,
+                    self.slc_chips,
+                    self.slc_bus,
+                    self.mlc_bus,
+                    self.cfg.program_status_overhead,
+                    wear,
+                    obs,
+                )
+            })
+            .collect();
+        let mut sim = ShardedSim::new(shards, lookahead);
+        // Satellite of the sharding work: `[engine] threads` beyond the
+        // channel count buys nothing (one shard per channel), so clamp.
+        let threads = (self.cfg.engine.threads.max(1) as usize).min(nch.max(1));
+        self.shard_outbox = Some(Vec::new());
+        let (mut result, hub_events) = {
+            let mut hub = SsdHub {
+                sim: self,
+                sched,
+                events: 0,
+                link_busy: false,
+                observe,
+                nch: nch as u32,
+            };
+            let r = sim.run_hub(Ps::MAX, threads, &mut hub);
+            (r, hub.events)
+        };
+        self.shard_outbox = None;
+        // Move the channel state back and merge the observer slices.
+        let mut slices = Vec::with_capacity(if observe { nch } else { 0 });
+        let mut chans = Vec::with_capacity(nch);
+        for shard in sim.into_models() {
+            let (chan, obs) = shard.into_parts();
+            chans.push(chan);
+            if let Some(o) = obs {
+                slices.push(*o);
+            }
+        }
+        self.channels = chans;
+        if !slices.is_empty() {
+            self.obs = Some(Box::new(ObsState::merge_shards(slices, self.finished_at)));
+        }
+        result.events += hub_events;
+        result
+    }
+
     /// Like [`run`](SsdSim::run), but on a caller-provided scheduler whose
     /// calendar allocations are reused across runs (sweep workers).
     ///
     /// `[engine]` selects the execution engine: the default runs the
-    /// classic single-threaded loop; any windowed setting dispatches
-    /// through [`WindowedEngine`], which is bit-identical by construction
-    /// (golden-tested below at threads 1/2/4).
+    /// classic single-threaded loop, byte-for-byte unchanged; any windowed
+    /// setting (`threads > 1` or an explicit `window_ps`) dispatches
+    /// through the channel-sharded executor ([`Self::run_sharded`]), whose
+    /// results depend on the window width but not the thread count.
     pub fn run_with(&mut self, sched: &mut Scheduler<Ev>) -> RunResult {
         sched.reset();
         if self.arrivals.is_empty() {
@@ -1535,8 +1722,7 @@ impl SsdSim {
             sched.at(self.arrivals[0], Ev::Arrive);
         }
         let result = if self.cfg.engine.windowed() {
-            let mut engine = WindowedEngine::new(self.window_lookahead());
-            engine.run(self, sched, Ps::MAX)
+            self.run_sharded(sched)
         } else {
             Engine::run(self, sched, Ps::MAX)
         };
@@ -1634,6 +1820,98 @@ impl Model for SsdSim {
         // reclassification wins. One branch when observation is off.
         if self.obs.is_some() {
             self.observe_scan(sched.now());
+        }
+    }
+}
+
+/// The serialized commit step of a channel-sharded run: everything that is
+/// *in front of* the NAND interfaces — admission, host link, cache, FTL
+/// planning, mapping tier, counters, energy — replayed on the coordinating
+/// thread once per window. The hub's own calendar is the ordinary
+/// [`Scheduler`] (`Admit`/`Arrive`/`SataDone`; `BusDone`/`ChipDone` never
+/// occur here, the shards own those), and its events are interleaved with
+/// the shards' completion messages in time order, hub-first at ties — a
+/// fixed rule, so the schedule is a pure function of the window width and
+/// independent of thread count.
+struct SsdHub<'a> {
+    sim: &'a mut SsdSim,
+    sched: &'a mut Scheduler<Ev>,
+    /// Hub-side events dispatched (added to the run's event count).
+    events: u64,
+    /// Last link occupancy broadcast to the shard observers.
+    link_busy: bool,
+    observe: bool,
+    nch: u32,
+}
+
+impl Hub<ChannelShard> for SsdHub<'_> {
+    fn next_time(&mut self) -> Option<Ps> {
+        self.sched.peek_next_time()
+    }
+
+    fn commit(
+        &mut self,
+        msgs: &[(EventKey, ShardMsg)],
+        w_end: Ps,
+        out: &mut HubEmit<ShardEv>,
+    ) {
+        let mut i = 0;
+        loop {
+            let hub_t = self.sched.peek_next_time().filter(|&t| t < w_end);
+            let msg_t = msgs.get(i).map(|(k, _)| k.at);
+            match (hub_t, msg_t) {
+                (Some(ht), mt) if mt.map_or(true, |m| ht <= m) => {
+                    self.sched.set_now(ht);
+                    // Drain the whole same-timestamp batch, including
+                    // follow-ups scheduled at `ht` by the batch itself
+                    // (mirrors `Engine::run`).
+                    while let Some(ev) = self.sched.pop_at(ht) {
+                        self.events += 1;
+                        Model::handle(&mut *self.sim, self.sched, ev);
+                    }
+                }
+                (_, Some(mt)) => {
+                    let (key, msg) = &msgs[i];
+                    i += 1;
+                    self.sched.set_now(mt);
+                    // The emitting shard's id is the channel index.
+                    let ch = key.src as u16;
+                    match *msg {
+                        ShardMsg::ReadOut {
+                            req,
+                            way,
+                            block,
+                            page,
+                        } => self.sim.shard_read_out(ch, req, way, block, page, self.sched),
+                        ShardMsg::Programmed { req } => {
+                            self.sim.shard_programmed(req, self.sched)
+                        }
+                        ShardMsg::Erased { way, spread } => {
+                            self.sim.shard_erased(ch, way, spread, self.sched)
+                        }
+                    }
+                }
+                (None, None) => break,
+            }
+        }
+        // Release the window's planned jobs to their shards at the window
+        // boundary, in plan order (hub injection keys are sequential, so
+        // each shard enqueues its subset in exactly this order).
+        let mut outbox = self.sim.shard_outbox.take().expect("hub commit without outbox");
+        for (ch, way, job, gc_mark) in outbox.drain(..) {
+            out.send_at(ch as u32, w_end, ShardEv::Enqueue { way, job, gc_mark });
+        }
+        self.sim.shard_outbox = Some(outbox);
+        // Mirror host-link occupancy to the shard observers (stall
+        // attribution only), broadcast on change at the window boundary.
+        if self.observe {
+            let busy = self.sim.link.busy_at(w_end);
+            if busy != self.link_busy {
+                self.link_busy = busy;
+                for ch in 0..self.nch {
+                    out.send_at(ch, w_end, ShardEv::LinkBusy(busy));
+                }
+            }
         }
     }
 }
@@ -1876,10 +2154,13 @@ mod tests {
         assert_eq!(sim.latency.mean(), fresh.latency.mean());
     }
 
-    /// Golden bit-identity of the windowed engine: `[engine] threads` at
-    /// 1/2/4 (plus an explicit `window_ps` override) must reproduce the
-    /// classic engine's report exactly — same event count, end time,
-    /// counters, latency, bandwidth and energy.
+    /// Golden bit-identity of the channel-sharded executor: at a *fixed*
+    /// window width, `[engine] threads` at 1/2/4 must produce byte-identical
+    /// reports — same event count, end time, counters, latency, bandwidth
+    /// and energy. (The window width itself is a fidelity knob — job
+    /// release is quantized to window boundaries — so the sharded run is
+    /// compared against its own threads-1 execution, not the classic
+    /// engine; thread count must never show in the numbers.)
     #[test]
     fn windowed_engine_bit_identical_at_threads_1_2_4() {
         let fingerprint = |sim: &SsdSim, r: RunResult| {
@@ -1895,36 +2176,46 @@ mod tests {
             )
         };
         for iface in [InterfaceKind::Conv, InterfaceKind::Proposed] {
-            let mut base = SsdSim::new(small_cfg(iface, 4), write_trace(15));
-            let rb = base.run();
-            let golden = fingerprint(&base, rb);
-            for threads in [1u16, 2, 4] {
-                let mut cfg = small_cfg(iface, 4);
-                cfg.engine.threads = threads;
-                // threads = 1 exercises the explicit window override path.
-                cfg.engine.window_ps = if threads == 1 { 1_000_000 } else { 0 };
-                assert!(cfg.engine.windowed());
-                let mut sim = SsdSim::new(cfg, write_trace(15));
-                let r = sim.run();
-                assert_eq!(
-                    fingerprint(&sim, r),
-                    golden,
-                    "iface {iface:?} threads {threads}"
-                );
+            // Default (bus min-phase) lookahead and an explicit wide
+            // window both hold the invariant.
+            for window_ps in [0u64, 1_000_000] {
+                let run_at = |threads: u16| {
+                    let mut cfg = small_cfg(iface, 4);
+                    cfg.engine.threads = threads;
+                    cfg.engine.window_ps = window_ps;
+                    // threads == 1 needs the explicit window to route
+                    // through the sharded executor at all.
+                    if threads == 1 && window_ps == 0 {
+                        cfg.engine.window_ps = 1;
+                    }
+                    assert!(cfg.engine.windowed());
+                    let mut sim = SsdSim::new(cfg, write_trace(15));
+                    let r = sim.run();
+                    fingerprint(&sim, r)
+                };
+                let golden = run_at(if window_ps == 0 { 2 } else { 1 });
+                for threads in [2u16, 4] {
+                    assert_eq!(
+                        run_at(threads),
+                        golden,
+                        "iface {iface:?} window {window_ps} threads {threads}"
+                    );
+                }
             }
         }
-        // Read path too (prefill + windowed run).
-        let mut base = SsdSim::new(small_cfg(InterfaceKind::Proposed, 2), read_trace(10));
-        base.prefill_for_reads();
-        let rb = base.run();
-        let golden = fingerprint(&base, rb);
-        for threads in [2u16, 4] {
+        // Read path too (prefill + sharded run).
+        let read_at = |threads: u16| {
             let mut cfg = small_cfg(InterfaceKind::Proposed, 2);
             cfg.engine.threads = threads;
+            cfg.engine.window_ps = 500_000;
             let mut sim = SsdSim::new(cfg, read_trace(10));
             sim.prefill_for_reads();
             let r = sim.run();
-            assert_eq!(fingerprint(&sim, r), golden, "read path threads {threads}");
+            fingerprint(&sim, r)
+        };
+        let golden = read_at(1);
+        for threads in [2u16, 4] {
+            assert_eq!(read_at(threads), golden, "read path threads {threads}");
         }
     }
 

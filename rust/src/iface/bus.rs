@@ -129,7 +129,7 @@ impl BusTiming {
     /// minimum over all command/status phases (data bursts are never
     /// shorter than a status poll for real page sizes, and zero-byte bursts
     /// do not occur). This is the conservative lookahead bound used by the
-    /// windowed engine (`[engine] window_ps = 0` derives it from here).
+    /// sharded executor (`[engine] window_ps = 0` derives it from here).
     pub fn min_phase(&self) -> Ps {
         self.status_poll()
             .min(self.read_cmd())
@@ -188,7 +188,7 @@ mod tests {
     fn min_phase_is_the_status_poll() {
         // With the default command cycles the status poll (2 cycles) is the
         // shortest phase on every interface — and it must be positive, or
-        // the windowed engine could not advance.
+        // the sharded executor could not advance.
         let (c, s, d) = timings();
         for t in [c, s, d] {
             assert!(t.min_phase() > Ps::ZERO);

@@ -281,7 +281,7 @@ pub struct ObsState {
 }
 
 impl ObsState {
-    /// `window` is the windowed engine's lookahead (the timeline's
+    /// `window` is the sharded executor's lookahead (the timeline's
     /// time-grid pitch); only consulted when `timeline` is on.
     pub fn new(channels: usize, ways: usize, timeline: bool, window: Ps) -> ObsState {
         let nways = channels * ways;
@@ -546,6 +546,62 @@ impl ObsState {
             self.last_t = end;
         }
         self.wall = end;
+    }
+
+    /// Deterministically merge per-shard observer slices — one channel
+    /// each, in channel order — into a whole-drive observer, as if a
+    /// single observer had watched all channels (channel-sharded runs,
+    /// [`crate::coordinator::ssd::SsdSim`]'s hub mode). Each slice is
+    /// first finalized to the common `end` under its own last
+    /// classification (resource state is piecewise-constant between that
+    /// shard's events, so charging the tail interval to the last-scanned
+    /// state is exact). Timeline events are re-homed to their channel's
+    /// Perfetto process; the derived time-grid marks are identical on
+    /// every shard, so only shard 0's are kept.
+    pub fn merge_shards(shards: Vec<ObsState>, end: Ps) -> ObsState {
+        assert!(!shards.is_empty(), "merge of zero shards");
+        // Common close-of-books: the caller's end or the latest event on
+        // any shard (a background drain tail), whichever is later — every
+        // resource row must partition the same wall time.
+        let end = shards.iter().fold(end, |e, s| e.max(s.last_t));
+        let ways = shards[0].ways;
+        let timeline_on = shards[0].timeline.is_some();
+        let window = shards[0]
+            .timeline
+            .as_ref()
+            .map(|t| t.window)
+            .unwrap_or(Ps::ZERO);
+        let channels = shards.len();
+        let mut merged = ObsState::new(channels, ways, timeline_on, window);
+        for (ch, mut s) in shards.into_iter().enumerate() {
+            assert_eq!(s.channels, 1, "shard slices are single-channel");
+            assert_eq!(s.ways, ways, "shards disagree on way count");
+            s.finalize(end);
+            merged.bus_acc[ch] = s.bus_acc[0];
+            for w in 0..ways {
+                merged.way_acc[ch * ways + w] = s.way_acc[w];
+                merged.chip_acc[ch * ways + w] = s.chip_acc[w];
+            }
+            merged.stalls.bus_contention_ps += s.stalls.bus_contention_ps;
+            merged.stalls.gc_barrier_ps += s.stalls.gc_barrier_ps;
+            merged.stalls.map_fill_ps += s.stalls.map_fill_ps;
+            merged.stalls.queue_starvation_ps += s.stalls.queue_starvation_ps;
+            merged.stalls.link_backpressure_ps += s.stalls.link_backpressure_ps;
+            merged.gc_triggers += s.gc_triggers;
+            if let (Some(dst), Some(src)) = (merged.timeline.as_mut(), s.timeline.as_mut()) {
+                let win_tid = 2 + 2 * ways as u16;
+                for mut e in src.events.drain(..) {
+                    if e.tid == win_tid && ch != 0 {
+                        continue; // identical grid on every shard
+                    }
+                    e.pid = ch as u16;
+                    dst.events.push(e);
+                }
+            }
+        }
+        merged.last_t = end;
+        merged.wall = end;
+        merged
     }
 
     /// Snapshot the accumulated accounting into a report.
@@ -1049,6 +1105,53 @@ mod tests {
                  {\"name\":\"x\",\"ph\":\"E\",\"ts\":1.000000,\"pid\":0,\"tid\":1,\"args\":{\"ps\":1000000}}]}"
             )
             .is_err()
+        );
+    }
+
+    /// Two single-channel shard slices merge into the whole-drive layout:
+    /// per-channel rows concatenate in shard order, stall causes and GC
+    /// triggers sum, and every row still partitions the common wall clock.
+    #[test]
+    fn merge_shards_concatenates_slices() {
+        // Shard 0: way 0 holds a 10ns host grant, way 1 blocked behind it.
+        let mut a = ObsState::new(1, 2, false, Ps::ZERO);
+        let mut ch_a = chan(2);
+        ch_a.ways[0].push(job(PageJobKind::Read));
+        ch_a.ways[1].push(job(PageJobKind::Read));
+        a.bus_granted(0, 0, BusUser::Host, BusPhaseKind::Cmd, Ps::ZERO, Ps::ns(10));
+        a.scan(Ps::ZERO, std::slice::from_ref(&ch_a), IDLE_HOST);
+        a.bus_released(0, Ps::ns(10));
+        ch_a.ways[0].take_job(0);
+        ch_a.ways[1].take_job(0);
+        a.scan(Ps::ns(10), std::slice::from_ref(&ch_a), IDLE_HOST);
+        a.gc_trigger(0, Ps::ns(10));
+
+        // Shard 1: completely idle, never scanned past t=0.
+        let mut b = ObsState::new(1, 2, false, Ps::ZERO);
+        let ch_b = chan(2);
+        b.scan(Ps::ZERO, std::slice::from_ref(&ch_b), IDLE_HOST);
+
+        let merged = ObsState::merge_shards(vec![a, b], Ps::ns(20));
+        let r = merged.report();
+        assert_eq!(r.wall_ps, 20_000);
+        assert_eq!(r.resources.len(), 2 * (1 + 2 + 2));
+        for res in &r.resources {
+            assert_eq!(res.total_ps(), r.wall_ps, "{res:?}");
+        }
+        // Channel 0's bus: busy 0-10, idle 10-20. Channel 1's: idle 0-20.
+        let bus0 = &r.resources[0];
+        assert_eq!((bus0.channel, bus0.kind), (0, ResourceKind::Bus));
+        assert_eq!(bus0.busy_ps, 10_000);
+        let bus1 = &r.resources[5];
+        assert_eq!((bus1.channel, bus1.kind), (1, ResourceKind::Bus));
+        assert_eq!(bus1.idle_ps, 20_000);
+        // Shard 0's way-1 block and both shards' idle tails sum.
+        assert_eq!(r.stalls.bus_contention_ps, 10_000);
+        assert_eq!(r.gc_triggers, 1);
+        let way = r.totals(ResourceKind::Way);
+        assert_eq!(
+            r.stalls.queue_starvation_ps + r.stalls.link_backpressure_ps,
+            way[IDLE as usize]
         );
     }
 

@@ -27,5 +27,6 @@ pub mod sharded;
 pub use engine::{Engine, Model, RunResult, Scheduler};
 pub use queue::{EventQueue, HeapEventQueue};
 pub use sharded::{
-    Emit, EventKey, ReferenceSim, ShardModel, ShardedSim, WindowedEngine,
+    Emit, EventKey, Hub, HubEmit, ReferenceSim, ShardModel, ShardedSim,
+    WindowedEngine,
 };

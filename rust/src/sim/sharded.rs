@@ -6,13 +6,20 @@
 //!   calendar, partitioning virtual time into windows `[w, w + lookahead)`.
 //!   Dispatch order is *exactly* the `(time, seq)` order of [`Engine::run`],
 //!   so results are bit-identical to the single-threaded engine by
-//!   construction — this is the execution mode `SsdSim` selects when
-//!   `[engine] threads > 1` is configured, and its window count measures how
-//!   much batch parallelism a given lookahead exposes.
+//!   construction; its window count measures how much batch parallelism a
+//!   given lookahead exposes.
 //! * [`ShardedSim`] runs a set of *shard-local* models (one per channel) in
 //!   true parallel: each shard owns a private calendar, every window
 //!   `[w, w + lookahead)` is processed concurrently across shards, and
-//!   cross-shard events are exchanged only at window boundaries.
+//!   cross-shard events are exchanged only at window boundaries. Two
+//!   execution shapes are offered: [`ShardedSim::run`] for models that only
+//!   talk shard-to-shard, and [`ShardedSim::run_hub`] — the mode `SsdSim`
+//!   uses — which adds a serialized [`Hub`] commit step at every window
+//!   boundary for state that cannot be sharded (FTL allocation, host-link
+//!   admission, the cache): shards report completions via [`Emit::commit`],
+//!   the hub consumes them in `(time, shard, seq)` order, and injects
+//!   next-window work back through per-shard inboxes via
+//!   [`HubEmit::send_at`].
 //!
 //! # Safety argument for the lookahead bound
 //!
@@ -25,7 +32,9 @@
 //! phase, [`crate::iface::bus::BusTiming::min_phase`] — nothing crosses a
 //! channel boundary without occupying the bus for at least one command
 //! phase). [`Emit::send_at`] asserts this at emission time, so a violated
-//! bound is a loud model bug, never a silent reorder.
+//! bound is a loud model bug, never a silent reorder. The hub is held to
+//! the same bound: [`HubEmit::send_at`] rejects injections that land inside
+//! the window just committed.
 //!
 //! # Determinism
 //!
@@ -35,8 +44,12 @@
 //! handler sees only shard-local state, so the processing order — and
 //! therefore every emission counter, and therefore every key — is identical
 //! whether windows run serially, on 2 threads, on 8, or on the single
-//! global calendar of [`ReferenceSim`]. That is what the randomized oracle
-//! test in `tests/sharded_engine.rs` checks.
+//! global calendar of [`ReferenceSim`]. Hub runs stay deterministic for the
+//! same reason: the message batch handed to [`Hub::commit`] is *sorted* by
+//! key before the hub sees it, so worker scheduling cannot leak into the
+//! commit order, and hub injections carry [`HUB_SRC`] keys from a single
+//! serial counter. That is what the randomized oracle tests in
+//! `tests/sharded_engine.rs` check.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -49,6 +62,11 @@ use crate::util::time::Ps;
 
 /// Source id used for events seeded from outside any shard handler.
 pub const SEED_SRC: u32 = u32::MAX;
+
+/// Source id used for events injected by the serialized [`Hub`] commit
+/// step. Distinct from [`SEED_SRC`] so hub injections and external seeds
+/// can never collide on `(src, seq)`.
+pub const HUB_SRC: u32 = u32::MAX - 1;
 
 /// Total order over events: time, then source shard, then per-source
 /// emission sequence. Unique per event (no two emissions share
@@ -86,8 +104,9 @@ impl<P> Ord for Entry<P> {
 /// Emission collector handed to [`ShardModel::handle`]. Local events may
 /// land anywhere `≥ now` (including inside the current window); cross-shard
 /// events must land at or past the window boundary — see the module-level
-/// safety argument.
-pub struct Emit<Ev> {
+/// safety argument. Completion reports for the serialized commit step go
+/// through [`Emit::commit`] and are only legal under [`ShardedSim::run_hub`].
+pub struct Emit<Ev, Msg = ()> {
     shard: u32,
     now: Ps,
     /// End of the current window; `Ps::ZERO` disables the check (reference
@@ -96,11 +115,20 @@ pub struct Emit<Ev> {
     seq: u64,
     local: Vec<(EventKey, Ev)>,
     cross: Vec<(u32, EventKey, Ev)>,
+    commits: Vec<(EventKey, Msg)>,
 }
 
-impl<Ev> Emit<Ev> {
+impl<Ev, Msg> Emit<Ev, Msg> {
     fn new(shard: u32, now: Ps, w_end: Ps, seq: u64) -> Self {
-        Emit { shard, now, w_end, seq, local: Vec::new(), cross: Vec::new() }
+        Emit {
+            shard,
+            now,
+            w_end,
+            seq,
+            local: Vec::new(),
+            cross: Vec::new(),
+            commits: Vec::new(),
+        }
     }
 
     /// Current simulated time (the handled event's timestamp).
@@ -154,14 +182,88 @@ impl<Ev> Emit<Ev> {
         let key = self.next_key(at);
         self.cross.push((shard, key, ev));
     }
+
+    /// Report a completion message to the serialized [`Hub`] commit step,
+    /// keyed at the current event's timestamp. Messages from all shards are
+    /// merged in `(time, shard, seq)` order at the next window boundary.
+    /// Only legal under [`ShardedSim::run_hub`] — the hubless executors
+    /// treat a committed message as a model bug and panic.
+    pub fn commit(&mut self, msg: Msg) {
+        let key = self.next_key(self.now);
+        self.commits.push((key, msg));
+    }
 }
 
 /// A shard-local simulation model. Unlike [`Model`], a handler sees only
 /// this shard's state and communicates with other shards exclusively via
-/// [`Emit::send_after`]/[`Emit::send_at`].
+/// [`Emit::send_after`]/[`Emit::send_at`], and with the serialized commit
+/// step (when one is attached) via [`Emit::commit`].
 pub trait ShardModel: Send {
     type Ev: Send;
-    fn handle(&mut self, now: Ps, ev: Self::Ev, out: &mut Emit<Self::Ev>);
+    /// Completion message consumed by the [`Hub`] commit step at window
+    /// boundaries. `()` for models that run without a hub.
+    type Msg: Send;
+    fn handle(&mut self, now: Ps, ev: Self::Ev, out: &mut Emit<Self::Ev, Self::Msg>);
+}
+
+/// The serialized commit step of a hub-coupled sharded simulation
+/// ([`ShardedSim::run_hub`]): global state that cannot be sharded. Runs on
+/// the coordinating thread only — never concurrently with itself — once per
+/// window, after every shard has drained the window.
+pub trait Hub<M: ShardModel> {
+    /// Earliest pending hub-side event, if any. Drives window placement
+    /// exactly like a shard calendar: the next window starts at the minimum
+    /// over all shard calendars and this.
+    fn next_time(&mut self) -> Option<Ps>;
+
+    /// Process one window's worth of global work: `msgs` holds every
+    /// [`Emit::commit`] from the window `[w_start, w_end)`, already sorted
+    /// by `(time, shard, seq)` key; hub-internal events due before `w_end`
+    /// must be interleaved with them in time order by the implementation.
+    /// New shard work is injected via `out` and must land at or past
+    /// `w_end` (enforced by [`HubEmit::send_at`]).
+    fn commit(
+        &mut self,
+        msgs: &[(EventKey, M::Msg)],
+        w_end: Ps,
+        out: &mut HubEmit<M::Ev>,
+    );
+}
+
+/// Injection collector handed to [`Hub::commit`]. Keys use [`HUB_SRC`] with
+/// a counter that persists across windows, so hub injections have a single
+/// deterministic total order regardless of thread count.
+pub struct HubEmit<Ev> {
+    w_end: Ps,
+    seq: u64,
+    sends: Vec<(u32, EventKey, Ev)>,
+}
+
+impl<Ev> HubEmit<Ev> {
+    fn new(w_end: Ps, seq: u64) -> Self {
+        HubEmit { w_end, seq, sends: Vec::new() }
+    }
+
+    /// End of the window being committed (= earliest legal injection time).
+    #[inline]
+    pub fn w_end(&self) -> Ps {
+        self.w_end
+    }
+
+    /// Inject an event onto `shard` at absolute time `at`. Panics if `at`
+    /// lands inside the window just committed — the shards have already
+    /// advanced past it, so the injection would be a causality violation.
+    pub fn send_at(&mut self, shard: u32, at: Ps, ev: Ev) {
+        assert!(
+            at >= self.w_end,
+            "hub lookahead violation: injection at {at:?} lands inside the \
+             committed window ending at {:?} (-> shard {shard})",
+            self.w_end,
+        );
+        let key = EventKey { at, src: HUB_SRC, seq: self.seq };
+        self.seq += 1;
+        self.sends.push((shard, key, ev));
+    }
 }
 
 /// One shard's runtime state: the model plus its private calendar.
@@ -183,13 +285,15 @@ impl<M: ShardModel> ShardRt<M> {
 }
 
 /// Drain one shard's calendar up to (exclusive) `w_end`, bounded by
-/// `horizon` (inclusive). Cross-shard emissions are appended to `cross`.
+/// `horizon` (inclusive). Cross-shard emissions are appended to `cross`;
+/// commit messages for the hub (if any) to `commits`.
 fn run_window<M: ShardModel>(
     id: u32,
     s: &mut ShardRt<M>,
     w_end: Ps,
     horizon: Ps,
     cross: &mut Vec<(u32, EventKey, M::Ev)>,
+    commits: &mut Vec<(EventKey, M::Msg)>,
 ) {
     while let Some(at) = s.next_time() {
         if at >= w_end || at > horizon {
@@ -209,6 +313,7 @@ fn run_window<M: ShardModel>(
             debug_assert!(routed.1.at >= w_end, "Emit::send_at missed a violation");
             cross.push(routed);
         }
+        commits.append(&mut emit.commits);
     }
 }
 
@@ -276,6 +381,13 @@ impl<M: ShardModel> ShardedSim<M> {
         self.shards.iter().map(|s| &s.model)
     }
 
+    /// Consume the simulator, returning the shard models in shard order
+    /// (state extraction after a run). Any still-queued beyond-horizon
+    /// events are dropped with their calendars.
+    pub fn into_models(self) -> Vec<M> {
+        self.shards.into_iter().map(|s| s.model).collect()
+    }
+
     fn total_events(&self) -> u64 {
         self.shards.iter().map(|s| s.events).sum()
     }
@@ -305,6 +417,7 @@ impl<M: ShardModel> ShardedSim<M> {
     fn run_serial(&mut self, horizon: Ps) -> RunResult {
         let base = self.total_events();
         let mut cross: Vec<(u32, EventKey, M::Ev)> = Vec::new();
+        let mut no_hub: Vec<(EventKey, M::Msg)> = Vec::new();
         loop {
             let Some(w_start) = self.shards.iter().filter_map(ShardRt::next_time).min()
             else {
@@ -320,8 +433,12 @@ impl<M: ShardModel> ShardedSim<M> {
             let w_end = w_start.saturating_add(self.lookahead);
             self.windows += 1;
             for (i, s) in self.shards.iter_mut().enumerate() {
-                run_window(i as u32, s, w_end, horizon, &mut cross);
+                run_window(i as u32, s, w_end, horizon, &mut cross, &mut no_hub);
             }
+            assert!(
+                no_hub.is_empty(),
+                "model committed messages but no hub is attached: use run_hub"
+            );
             for (dest, key, ev) in cross.drain(..) {
                 self.shards[dest as usize].heap.push(Reverse(Entry { key, payload: ev }));
             }
@@ -366,6 +483,7 @@ impl<M: ShardModel> ShardedSim<M> {
                 let panicked = &panicked;
                 scope.spawn(move || {
                     let mut out: Vec<(u32, EventKey, M::Ev)> = Vec::new();
+                    let mut no_hub: Vec<(EventKey, M::Msg)> = Vec::new();
                     loop {
                         barrier.wait(); // window published
                         if done.load(Ordering::Acquire) {
@@ -374,8 +492,19 @@ impl<M: ShardModel> ShardedSim<M> {
                         let w_end = Ps::ps(w_end_ps.load(Ordering::Acquire));
                         let res = catch_unwind(AssertUnwindSafe(|| {
                             for (j, s) in shards.iter_mut().enumerate() {
-                                run_window(base_shard + j as u32, s, w_end, horizon, &mut out);
+                                run_window(
+                                    base_shard + j as u32,
+                                    s,
+                                    w_end,
+                                    horizon,
+                                    &mut out,
+                                    &mut no_hub,
+                                );
                             }
+                            assert!(
+                                no_hub.is_empty(),
+                                "model committed messages but no hub is attached: use run_hub"
+                            );
                         }));
                         if let Err(payload) = res {
                             let msg = payload
@@ -387,6 +516,7 @@ impl<M: ShardModel> ShardedSim<M> {
                                 .unwrap_or_else(|| "shard worker panicked".into());
                             panicked.lock().unwrap().get_or_insert(msg);
                             out.clear();
+                            no_hub.clear();
                         }
                         for (dest, key, ev) in out.drain(..) {
                             let owner = dest as usize / chunk;
@@ -433,6 +563,247 @@ impl<M: ShardModel> ShardedSim<M> {
                     .min()
                     .unwrap_or(IDLE);
                 t = (min != IDLE).then(|| Ps::ps(min));
+            }
+        });
+        self.windows = windows;
+
+        if let Some(msg) = panicked.lock().unwrap().take() {
+            panic!("shard worker panicked: {msg}");
+        }
+        match t {
+            None => self.drained_result(base),
+            Some(_) => RunResult {
+                end_time: horizon,
+                events: self.total_events() - base,
+                drained: false,
+            },
+        }
+    }
+
+    /// Run with a serialized [`Hub`] commit step until both the shard
+    /// calendars and the hub drain, or `horizon` is passed. Window
+    /// placement extends [`ShardedSim::run`]'s rule with the hub's own
+    /// calendar: each window starts at the minimum next event time across
+    /// all shards *and* [`Hub::next_time`]. After the shards drain a
+    /// window, the hub commits it — consuming the window's sorted
+    /// [`Emit::commit`] batch plus its own due events — and its injections
+    /// are delivered to the shard inboxes before the next window is placed.
+    ///
+    /// Horizon semantics: shards stop exactly at `horizon` like
+    /// [`ShardedSim::run`]; the hub commits through the end of the window
+    /// containing the horizon (window-quantized, identical at every thread
+    /// count and in [`ReferenceSim::run_hub`]).
+    pub fn run_hub<H: Hub<M>>(
+        &mut self,
+        horizon: Ps,
+        threads: usize,
+        hub: &mut H,
+    ) -> RunResult {
+        self.windows = 0;
+        let workers = threads.clamp(1, self.shards.len().max(1));
+        if workers <= 1 {
+            self.run_hub_serial(horizon, hub)
+        } else {
+            self.run_hub_parallel(horizon, workers, hub)
+        }
+    }
+
+    /// Next window start: earliest pending shard event or hub event.
+    fn hub_window_start<H: Hub<M>>(&self, hub: &mut H) -> Option<Ps> {
+        let shard_t = self.shards.iter().filter_map(ShardRt::next_time).min();
+        match (shard_t, hub.next_time()) {
+            (None, t) | (t, None) => t,
+            (Some(a), Some(b)) => Some(a.min(b)),
+        }
+    }
+
+    fn run_hub_serial<H: Hub<M>>(&mut self, horizon: Ps, hub: &mut H) -> RunResult {
+        let base = self.total_events();
+        let mut cross: Vec<(u32, EventKey, M::Ev)> = Vec::new();
+        let mut msgs: Vec<(EventKey, M::Msg)> = Vec::new();
+        let mut hub_seq: u64 = 0;
+        loop {
+            let Some(w_start) = self.hub_window_start(hub) else {
+                return self.drained_result(base);
+            };
+            if w_start > horizon {
+                return RunResult {
+                    end_time: horizon,
+                    events: self.total_events() - base,
+                    drained: false,
+                };
+            }
+            let w_end = w_start.saturating_add(self.lookahead);
+            self.windows += 1;
+            for (i, s) in self.shards.iter_mut().enumerate() {
+                run_window(i as u32, s, w_end, horizon, &mut cross, &mut msgs);
+            }
+            for (dest, key, ev) in cross.drain(..) {
+                self.shards[dest as usize].heap.push(Reverse(Entry { key, payload: ev }));
+            }
+            msgs.sort_unstable_by_key(|(k, _)| *k);
+            let mut out = HubEmit::new(w_end, hub_seq);
+            hub.commit(&msgs, w_end, &mut out);
+            hub_seq = out.seq;
+            msgs.clear();
+            for (dest, key, ev) in out.sends {
+                self.shards[dest as usize].heap.push(Reverse(Entry { key, payload: ev }));
+            }
+        }
+    }
+
+    /// Bulk-synchronous hub loop. Per window, four barrier rounds: the
+    /// coordinator publishes the window bound; workers drain their shards
+    /// and post cross-shard events + commit messages; the coordinator runs
+    /// the hub commit serially and posts its injections into the per-owner
+    /// inboxes; owners drain their inboxes and publish their next event
+    /// time; the coordinator picks the next window start (shards ∪ hub).
+    fn run_hub_parallel<H: Hub<M>>(
+        &mut self,
+        horizon: Ps,
+        workers: usize,
+        hub: &mut H,
+    ) -> RunResult {
+        const IDLE: i64 = i64::MAX;
+        let base = self.total_events();
+        let n = self.shards.len();
+        let chunk = n.div_ceil(workers);
+        // Size everything on the actual chunk count (see run_parallel).
+        let workers = n.div_ceil(chunk);
+        let lookahead = self.lookahead;
+
+        let barrier = Barrier::new(workers + 1);
+        let done = AtomicBool::new(false);
+        let w_end_ps = AtomicI64::new(0);
+        let next_times: Vec<AtomicI64> =
+            (0..workers).map(|_| AtomicI64::new(IDLE)).collect();
+        let inboxes: Vec<Mutex<Vec<(u32, EventKey, M::Ev)>>> =
+            (0..workers).map(|_| Mutex::new(Vec::new())).collect();
+        let commit_slot: Mutex<Vec<(EventKey, M::Msg)>> = Mutex::new(Vec::new());
+        let panicked: Mutex<Option<String>> = Mutex::new(None);
+
+        let mut t = self.hub_window_start(hub);
+        let mut windows = 0u64;
+        let mut hub_seq = 0u64;
+        let mut msgs: Vec<(EventKey, M::Msg)> = Vec::new();
+        std::thread::scope(|scope| {
+            for (wi, shards) in self.shards.chunks_mut(chunk).enumerate() {
+                let base_shard = (wi * chunk) as u32;
+                let barrier = &barrier;
+                let done = &done;
+                let w_end_ps = &w_end_ps;
+                let next_times = &next_times;
+                let inboxes = &inboxes;
+                let commit_slot = &commit_slot;
+                let panicked = &panicked;
+                scope.spawn(move || {
+                    let mut out: Vec<(u32, EventKey, M::Ev)> = Vec::new();
+                    let mut local_msgs: Vec<(EventKey, M::Msg)> = Vec::new();
+                    loop {
+                        barrier.wait(); // window published
+                        if done.load(Ordering::Acquire) {
+                            return;
+                        }
+                        let w_end = Ps::ps(w_end_ps.load(Ordering::Acquire));
+                        let res = catch_unwind(AssertUnwindSafe(|| {
+                            for (j, s) in shards.iter_mut().enumerate() {
+                                run_window(
+                                    base_shard + j as u32,
+                                    s,
+                                    w_end,
+                                    horizon,
+                                    &mut out,
+                                    &mut local_msgs,
+                                );
+                            }
+                        }));
+                        if let Err(payload) = res {
+                            let msg = payload
+                                .downcast_ref::<String>()
+                                .cloned()
+                                .or_else(|| {
+                                    payload.downcast_ref::<&str>().map(|s| s.to_string())
+                                })
+                                .unwrap_or_else(|| "shard worker panicked".into());
+                            panicked.lock().unwrap().get_or_insert(msg);
+                            out.clear();
+                            local_msgs.clear();
+                        }
+                        for (dest, key, ev) in out.drain(..) {
+                            let owner = dest as usize / chunk;
+                            inboxes[owner].lock().unwrap().push((dest, key, ev));
+                        }
+                        if !local_msgs.is_empty() {
+                            commit_slot.lock().unwrap().append(&mut local_msgs);
+                        }
+                        barrier.wait(); // cross events + commit messages posted
+                        barrier.wait(); // hub committed, injections posted
+                        for (dest, key, ev) in inboxes[wi].lock().unwrap().drain(..) {
+                            let local = (dest - base_shard) as usize;
+                            shards[local].heap.push(Reverse(Entry { key, payload: ev }));
+                        }
+                        let next = shards
+                            .iter()
+                            .filter_map(ShardRt::next_time)
+                            .fold(Ps::MAX, Ps::min);
+                        next_times[wi].store(
+                            if next == Ps::MAX { IDLE } else { next.as_ps() },
+                            Ordering::Release,
+                        );
+                        barrier.wait(); // next-times published
+                    }
+                });
+            }
+
+            // Coordinator: window placement + the serialized hub commit.
+            loop {
+                let stop = match t {
+                    None => true,
+                    Some(at) => at > horizon,
+                };
+                if stop || panicked.lock().unwrap().is_some() {
+                    done.store(true, Ordering::Release);
+                    barrier.wait();
+                    break;
+                }
+                let w_end = t.expect("checked above").saturating_add(lookahead);
+                w_end_ps.store(w_end.as_ps(), Ordering::Release);
+                windows += 1;
+                barrier.wait(); // window published
+                barrier.wait(); // cross events + commit messages posted
+                msgs.append(&mut commit_slot.lock().unwrap());
+                msgs.sort_unstable_by_key(|(k, _)| *k);
+                let mut hub_out = HubEmit::new(w_end, hub_seq);
+                let res = catch_unwind(AssertUnwindSafe(|| {
+                    hub.commit(&msgs, w_end, &mut hub_out);
+                }));
+                if let Err(payload) = res {
+                    let msg = payload
+                        .downcast_ref::<String>()
+                        .cloned()
+                        .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                        .unwrap_or_else(|| "hub commit panicked".into());
+                    panicked.lock().unwrap().get_or_insert(msg);
+                    hub_out.sends.clear();
+                }
+                hub_seq = hub_out.seq;
+                msgs.clear();
+                for (dest, key, ev) in hub_out.sends {
+                    let owner = dest as usize / chunk;
+                    inboxes[owner].lock().unwrap().push((dest, key, ev));
+                }
+                barrier.wait(); // hub committed, injections posted
+                barrier.wait(); // next-times published
+                let min = next_times
+                    .iter()
+                    .map(|a| a.load(Ordering::Acquire))
+                    .min()
+                    .unwrap_or(IDLE);
+                let shard_next = (min != IDLE).then(|| Ps::ps(min));
+                t = match (shard_next, hub.next_time()) {
+                    (None, t) | (t, None) => t,
+                    (Some(a), Some(b)) => Some(a.min(b)),
+                };
             }
         });
         self.windows = windows;
@@ -520,6 +891,10 @@ impl<M: ShardModel> ReferenceSim<M> {
             // windows, so every cross-shard latency is admissible here.
             let mut emit = Emit::new(dest, key.at, Ps::ZERO, self.seqs[d]);
             self.models[d].handle(key.at, ev, &mut emit);
+            assert!(
+                emit.commits.is_empty(),
+                "model committed messages but no hub is attached: use run_hub"
+            );
             self.seqs[d] = emit.seq;
             self.events += 1;
             self.last = key.at;
@@ -528,6 +903,75 @@ impl<M: ShardModel> ReferenceSim<M> {
             }
             for (d2, k, e) in emit.cross {
                 self.heap.push(Reverse(Entry { key: k, payload: (d2, e) }));
+            }
+        }
+    }
+
+    /// Single-heap oracle for [`ShardedSim::run_hub`]: identical window
+    /// placement and commit batching, but every shard event pops off one
+    /// global calendar in strict key order. A correct hub-coupled sharded
+    /// run matches this executor bit-for-bit at any thread count.
+    pub fn run_hub<H: Hub<M>>(
+        &mut self,
+        horizon: Ps,
+        lookahead: Ps,
+        hub: &mut H,
+    ) -> RunResult {
+        assert!(lookahead > Ps::ZERO, "lookahead must be positive");
+        let base = self.events;
+        let mut msgs: Vec<(EventKey, M::Msg)> = Vec::new();
+        let mut hub_seq: u64 = 0;
+        loop {
+            let heap_t = self.heap.peek().map(|e| e.0.key.at);
+            let w_start = match (heap_t, hub.next_time()) {
+                (None, None) => {
+                    return RunResult {
+                        end_time: self.last,
+                        events: self.events - base,
+                        drained: true,
+                    };
+                }
+                (None, t) | (t, None) => t.expect("one side pending"),
+                (Some(a), Some(b)) => a.min(b),
+            };
+            if w_start > horizon {
+                return RunResult {
+                    end_time: horizon,
+                    events: self.events - base,
+                    drained: false,
+                };
+            }
+            let w_end = w_start.saturating_add(lookahead);
+            while let Some(at) = self.heap.peek().map(|e| e.0.key.at) {
+                if at >= w_end || at > horizon {
+                    break;
+                }
+                let Reverse(Entry { key, payload: (dest, ev) }) =
+                    self.heap.pop().expect("peeked entry");
+                let d = dest as usize;
+                let mut emit = Emit::new(dest, key.at, w_end, self.seqs[d]);
+                self.models[d].handle(key.at, ev, &mut emit);
+                self.seqs[d] = emit.seq;
+                self.events += 1;
+                self.last = key.at;
+                for (k, e) in emit.local {
+                    self.heap.push(Reverse(Entry { key: k, payload: (dest, e) }));
+                }
+                for (d2, k, e) in emit.cross {
+                    self.heap.push(Reverse(Entry { key: k, payload: (d2, e) }));
+                }
+                msgs.append(&mut emit.commits);
+            }
+            // Global pop order is (time, event-src, seq) — not the
+            // (time, handler-shard, seq) order of the commit keys — so the
+            // batch still needs the sort the sharded executors apply.
+            msgs.sort_unstable_by_key(|(k, _)| *k);
+            let mut out = HubEmit::new(w_end, hub_seq);
+            hub.commit(&msgs, w_end, &mut out);
+            hub_seq = out.seq;
+            msgs.clear();
+            for (dest, key, ev) in out.sends {
+                self.heap.push(Reverse(Entry { key, payload: (dest, ev) }));
             }
         }
     }
@@ -619,6 +1063,7 @@ mod tests {
     }
     impl ShardModel for Churn {
         type Ev = CEv;
+        type Msg = ();
         fn handle(&mut self, now: Ps, ev: CEv, out: &mut Emit<CEv>) {
             match ev {
                 CEv::Tick(n) => {
@@ -711,6 +1156,7 @@ mod tests {
         struct Bad;
         impl ShardModel for Bad {
             type Ev = ();
+            type Msg = ();
             fn handle(&mut self, _now: Ps, _ev: (), out: &mut Emit<()>) {
                 // Lookahead is 100ns but the send lands 1ns out: illegal.
                 out.send_after(1, Ps::ns(1), ());
@@ -727,6 +1173,7 @@ mod tests {
         struct Bad;
         impl ShardModel for Bad {
             type Ev = ();
+            type Msg = ();
             fn handle(&mut self, _now: Ps, _ev: (), out: &mut Emit<()>) {
                 out.send_after(1, Ps::ns(1), ());
             }
@@ -745,6 +1192,7 @@ mod tests {
         }
         impl ShardModel for Local {
             type Ev = u32;
+            type Msg = ();
             fn handle(&mut self, _now: Ps, ev: u32, out: &mut Emit<u32>) {
                 self.sum += ev as u64;
                 if ev > 0 {
@@ -763,6 +1211,129 @@ mod tests {
         assert_eq!(r.events, 202);
         assert_eq!(sim.windows(), 1);
         assert_eq!(sim.model(0).sum, 5050);
+    }
+
+    // --- Hub-coupled execution: serialized commit step at boundaries ---
+
+    /// Shard-local countdown that reports every third tick to the hub.
+    #[derive(Debug, Clone, PartialEq, Eq)]
+    struct HubChurn {
+        fired: Vec<(Ps, u32)>,
+    }
+    impl ShardModel for HubChurn {
+        type Ev = u32;
+        type Msg = u32;
+        fn handle(&mut self, now: Ps, ev: u32, out: &mut Emit<u32, u32>) {
+            self.fired.push((now, ev));
+            if ev % 3 == 0 {
+                out.commit(ev);
+            }
+            if ev > 0 {
+                out.local_after(Ps::ns(7), ev - 1);
+            }
+        }
+    }
+
+    /// Toy hub: seeds initial work from its own calendar, then hands out a
+    /// bounded budget of fresh work round-robin as completions arrive.
+    struct TestHub {
+        shards: u32,
+        rr: u32,
+        budget: u32,
+        timer: Option<Ps>,
+        log: Vec<(Ps, u32, u32)>,
+    }
+    impl Hub<HubChurn> for TestHub {
+        fn next_time(&mut self) -> Option<Ps> {
+            self.timer
+        }
+        fn commit(&mut self, msgs: &[(EventKey, u32)], w_end: Ps, out: &mut HubEmit<u32>) {
+            if self.timer.is_some_and(|t| t < w_end) {
+                self.timer = None;
+                for s in 0..self.shards {
+                    out.send_at(s, w_end, 6 + s);
+                }
+            }
+            for (key, v) in msgs {
+                self.log.push((key.at, key.src, *v));
+                if self.budget > 0 {
+                    self.budget -= 1;
+                    out.send_at(self.rr % self.shards, w_end + Ps::ns(3), 5);
+                    self.rr += 1;
+                }
+            }
+        }
+    }
+
+    fn hub_models(shards: u32) -> Vec<HubChurn> {
+        (0..shards).map(|_| HubChurn { fired: vec![] }).collect()
+    }
+
+    fn test_hub(shards: u32) -> TestHub {
+        TestHub { shards, rr: 1, budget: 40, timer: Some(Ps::ns(2)), log: vec![] }
+    }
+
+    #[test]
+    fn hub_serial_matches_reference() {
+        let la = Ps::ns(25);
+        let mut sharded = ShardedSim::new(hub_models(4), la);
+        let mut h1 = test_hub(4);
+        let r1 = sharded.run_hub(Ps::ms(1), 1, &mut h1);
+        assert!(r1.drained);
+        assert!(!h1.log.is_empty(), "hub must have consumed completions");
+        assert_eq!(h1.budget, 0, "budget must drain in a 1ms run");
+
+        let mut oracle = ReferenceSim::new(hub_models(4));
+        let mut h2 = test_hub(4);
+        let r2 = oracle.run_hub(Ps::ms(1), la, &mut h2);
+        assert_eq!(r1, r2);
+        assert_eq!(h1.log, h2.log, "hub commit order diverged");
+        for s in 0..4 {
+            assert_eq!(sharded.model(s), oracle.model(s), "shard {s} state diverged");
+        }
+    }
+
+    #[test]
+    fn hub_parallel_matches_serial_bit_for_bit() {
+        let la = Ps::ns(25);
+        let mut serial = ShardedSim::new(hub_models(8), la);
+        let mut hs = test_hub(8);
+        let r_serial = serial.run_hub(Ps::ms(1), 1, &mut hs);
+        for threads in [2, 3, 4, 8] {
+            let mut par = ShardedSim::new(hub_models(8), la);
+            let mut hp = test_hub(8);
+            let r_par = par.run_hub(Ps::ms(1), threads, &mut hp);
+            assert_eq!(r_serial, r_par, "threads={threads}");
+            assert_eq!(hs.log, hp.log, "threads={threads} hub log diverged");
+            for s in 0..8 {
+                assert_eq!(serial.model(s), par.model(s), "threads={threads} shard {s}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "hub lookahead violation")]
+    fn hub_injection_inside_window_panics() {
+        struct BadHub;
+        impl Hub<HubChurn> for BadHub {
+            fn next_time(&mut self) -> Option<Ps> {
+                None
+            }
+            fn commit(&mut self, _m: &[(EventKey, u32)], w_end: Ps, out: &mut HubEmit<u32>) {
+                out.send_at(0, w_end - Ps::ns(1), 1);
+            }
+        }
+        let mut sim = ShardedSim::new(hub_models(2), Ps::ns(100));
+        sim.seed(0, Ps::ZERO, 1);
+        sim.run_hub(Ps::ms(1), 1, &mut BadHub);
+    }
+
+    #[test]
+    #[should_panic(expected = "no hub is attached")]
+    fn commit_without_hub_panics() {
+        let mut sim = ShardedSim::new(hub_models(2), Ps::ns(100));
+        sim.seed(0, Ps::ZERO, 3); // 3 % 3 == 0 -> commits
+        sim.run(Ps::ms(1), 1);
     }
 
     // --- WindowedEngine: bit-identity with Engine on an ordinary Model ---

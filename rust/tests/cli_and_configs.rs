@@ -167,8 +167,8 @@ fn cli_sweep_load_rejects_bad_flags() {
     assert_eq!(cli::run(&argv("sweep-load --mode scan")), 1);
 }
 
-/// `--threads N` selects the per-sim windowed engine on the sweep
-/// subcommands; `--jobs` sizes the sweep-level pool. Both must be
+/// `--threads N` selects the per-sim channel-sharded executor on the
+/// sweep subcommands; `--jobs` sizes the sweep-level pool. Both must be
 /// documented, accepted, and validated.
 #[test]
 fn cli_threads_flag_smoke() {

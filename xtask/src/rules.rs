@@ -8,7 +8,8 @@
 //! * `panic-in-config` (R3) — config-load paths return errors, never
 //!   panic.
 //! * `calendar-discipline` (R4) — event times are owned by `sim/`; no
-//!   direct calendar types or event-time mutation outside it.
+//!   direct calendar types, event-time mutation, or `EventKey`
+//!   construction outside it.
 
 use crate::scan::{self, AllowSite, Tok, TokKind};
 
@@ -282,9 +283,11 @@ fn rule_panic_in_config(rel: &str, toks: &[Tok], v: &mut Vec<Violation>) {
     }
 }
 
-/// R4: outside `sim/`, no direct calendar types and no assignment to an
-/// event's `.at`/`.now` time field — scheduling goes through
-/// `Scheduler`/`Emit::send_at`.
+/// R4: outside `sim/`, no direct calendar types, no assignment to an
+/// event's `.at`/`.now` time field, and no `EventKey` struct-literal
+/// construction — scheduling goes through `Scheduler`/`Emit::send_at`,
+/// and hub/shard keys are minted by the engine (`HubEmit::send_at`).
+/// Reading key fields and matching on keys stays legal.
 fn rule_calendar_discipline(rel: &str, toks: &[Tok], v: &mut Vec<Violation>) {
     if rel.starts_with("sim/") {
         return;
@@ -297,6 +300,20 @@ fn rule_calendar_discipline(rel: &str, toks: &[Tok], v: &mut Vec<Violation>) {
                 t.text
             );
             push(v, "calendar-discipline", t.line, msg);
+        }
+        // `EventKey { ... }` literal (type position `-> EventKey {` is the
+        // function body's brace, not a literal, and stays legal).
+        if t.text == "EventKey"
+            && toks.get(k + 1).is_some_and(|nx| nx.text == "{")
+            && (k == 0 || toks[k - 1].text != "->")
+        {
+            push(
+                v,
+                "calendar-discipline",
+                t.line,
+                "struct-literal construction of `EventKey` outside sim/ (keys are minted by the engine)"
+                    .to_string(),
+            );
         }
         if t.text == "."
             && k + 2 < toks.len()

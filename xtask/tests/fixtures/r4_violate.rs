@@ -2,3 +2,7 @@ pub fn reschedule(q: &mut EventQueue, ev: &mut Event, when: u64) {
     ev.at = when;
     q.push(ev.clone());
 }
+
+pub fn forge(when: Ps, src: u32) -> EventKey {
+    EventKey { at: when, src, seq: 0 }
+}

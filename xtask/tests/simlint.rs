@@ -87,6 +87,7 @@ fn r4_calendar_discipline_outside_sim() {
     let want = [
         "calendar-discipline|1|direct use of `EventQueue` outside sim/ (schedule via Scheduler/Emit)",
         "calendar-discipline|2|direct mutation of event time field `.at`",
+        "calendar-discipline|7|struct-literal construction of `EventKey` outside sim/ (keys are minted by the engine)",
     ];
     assert_eq!(diags("controller/fixture.rs", "r4_violate.rs"), want);
     // sim/ owns the calendar: the identical content is legal there.
